@@ -1,0 +1,48 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import asyncio
+from collections import deque
+
+import jax.numpy as jnp
+
+TENSOR_SIZES = {            # paper Figs 1/6/7: 4 KB .. 4 MB float32 tensors
+    "4KB": 1_000,
+    "40KB": 10_000,
+    "400KB": 100_000,
+    "4MB": 1_000_000,
+}
+
+
+def make_tensor(n: int):
+    return jnp.arange(n, dtype=jnp.float32)
+
+
+class SingleWorldChannel:
+    """The 'vanilla single world' baseline (paper's SW): a bare in-process
+    channel with the same asyncio polling discipline and the same wire cost
+    (one memcpy per hop via the codec) but none of MultiWorld's bookkeeping —
+    no store, no watchdog, no world-status checks, no fencing. The delta
+    between this and WorldCommunicator is MultiWorld's overhead."""
+
+    def __init__(self, codec=None) -> None:
+        self.buf: deque = deque()
+        self.codec = codec
+
+    async def send(self, tensor) -> None:
+        if self.codec is not None:
+            tensor = self.codec.encode(tensor)
+        self.buf.append(tensor)
+
+    async def recv(self):
+        while True:
+            if self.buf:
+                got = self.buf.popleft()
+                if self.codec is not None:
+                    got = self.codec.decode(got)
+                return got
+            await asyncio.sleep(0)
+
+
+def run_async(coro):
+    return asyncio.run(coro)

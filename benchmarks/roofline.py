@@ -1,0 +1,86 @@
+"""Roofline report: renders EXPERIMENTS.md §Roofline from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun] [--md]
+
+Per (arch × shape) on the single-pod mesh: the three roofline terms in
+seconds (compute / HBM / ICI), the dominant term, MODEL_FLOPS/HLO_FLOPS, and
+the per-device memory high-water mark vs the 16 GiB v5e budget.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(directory: str, mesh_tag: str = "pod1") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(directory, f"*__{mesh_tag}.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            rows.append(r)
+    return rows
+
+
+def bottleneck_note(r: dict) -> str:
+    dom = r["dominant"]
+    by = r.get("collectives_by_op", {})
+    if dom == "collective" and by:
+        worst = max(by, key=by.get)
+        return f"cut {worst} traffic"
+    if dom == "memory":
+        return "raise arithmetic intensity / shrink working set"
+    return "near MXU roofline; overlap collectives"
+
+
+def render(rows: list[dict], md: bool = False) -> str:
+    out = []
+    if md:
+        out.append("| arch | shape | compute_s | memory_s | collective_s | "
+                   "dominant | useful_flops | peak GiB/dev | fits 16G |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        gib = r["peak_state_bytes_per_dev"] / 2 ** 30
+        fits = "yes" if gib <= 16 else "NO"
+        if md:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{gib:.1f} | {fits} |")
+        else:
+            out.append(
+                f"roofline/{r['arch']}/{r['shape']},"
+                f"{max(r['compute_s'], r['memory_s'], r['collective_s']):.4f},"
+                f"dom={r['dominant']} c={r['compute_s']:.3f} "
+                f"m={r['memory_s']:.3f} x={r['collective_s']:.3f} "
+                f"useful={r['useful_flops_ratio']:.2f} mem={gib:.1f}GiB")
+    return "\n".join(out)
+
+
+def run() -> list[tuple[str, float, str]]:
+    """Benchmark-suite adapter: step-time bound per combo (single-pod),
+    preferring the optimized-config artifacts."""
+    rows = load("artifacts/dryrun_opt") or load("artifacts/dryrun")
+    out = []
+    for r in rows:
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append((f"roofline_bound_s/{r['arch']}/{r['shape']}", bound,
+                    f"dominant={r['dominant']} "
+                    f"useful={r['useful_flops_ratio']:.2f}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    print(render(rows, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

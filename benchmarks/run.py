@@ -1,0 +1,116 @@
+"""Benchmark driver — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,fig6]
+
+Prints ``name,value,derived`` CSV rows:
+* fig1  — message-bus strawman (serialize/IPC codecs vs zero-copy)
+* fig4  — fault-tolerance timeline (MultiWorld vs single world)
+* fig5  — online instantiation under live traffic
+* fig6/7 — MultiWorld throughput overhead vs single world, 1->1 and N->1
+* pipeline — end-to-end elastic pipeline latency (Fig. 2 scenario)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _rows_pipeline():
+    """End-to-end serving latency through the rhombus pipeline, including
+    under failure + after online replacement."""
+    import asyncio
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke
+    from repro.core import Cluster, FailureKind
+    from repro.models import DENSE, BlockGroup, build_model
+    from repro.serving import PipelineServer
+
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=4,
+                                         groups=(BlockGroup(DENSE, 4),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.1)
+        server = PipelineServer(c, model, params, [1, 2, 1])
+        await server.start()
+        toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16))
+
+        async def sample(n):
+            lat = []
+            for _ in range(n):
+                t0 = time.monotonic()
+                await server.submit(toks, timeout=20.0)
+                lat.append(time.monotonic() - t0)
+            return sum(lat) / n * 1e3
+
+        warm = await sample(3)          # includes compiles
+        healthy = await sample(10)
+        c.kill(server.replicas[1][0].worker_id, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+        degraded = await sample(10)
+        await server.add_replica(1)
+        healed = await sample(10)
+        c.shutdown()
+        return warm, healthy, degraded, healed
+
+    warm, healthy, degraded, healed = asyncio.run(scenario())
+    return [
+        ("pipeline_latency_ms/warmup", warm, "includes stage compiles"),
+        ("pipeline_latency_ms/healthy_2replica", healthy, "rhombus"),
+        ("pipeline_latency_ms/degraded_1replica", degraded,
+         "after replica death"),
+        ("pipeline_latency_ms/healed_online", healed,
+         "after online instantiation"),
+    ]
+
+
+def _rows_roofline():
+    """§Roofline terms from dry-run artifacts (skipped if absent)."""
+    from benchmarks.roofline import run as roofline_run
+
+    rows = roofline_run()
+    return rows or [("roofline", float("nan"),
+                     "no artifacts/dryrun — run repro.launch.dryrun first")]
+
+
+SUITES = {
+    "fig1": lambda: __import__("benchmarks.bench_serialize",
+                               fromlist=["run"]).run(),
+    "fig4": lambda: __import__("benchmarks.bench_fault",
+                               fromlist=["run"]).run(),
+    "fig5": lambda: __import__("benchmarks.bench_online",
+                               fromlist=["run"]).run(),
+    "fig6": lambda: __import__("benchmarks.bench_throughput",
+                               fromlist=["run"]).run(),
+    "pipeline": _rows_pipeline,
+    "roofline": _rows_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names " + str(list(SUITES)))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,value,derived")
+    failures = 0
+    for name in names:
+        try:
+            for row_name, value, derived in SUITES[name]():
+                print(f"{row_name},{value:.4f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            print(f"{name}_FAILED,nan,{type(e).__name__}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a reduced llama on synthetic Markov data.
+
+Runs a few hundred AdamW steps on CPU; loss drops from ~uniform (ln 64 ≈
+4.16 over the effective successor set) toward the bigram entropy floor.
+Checkpoints at the end and verifies a reload reproduces the logits.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.training import (
+    AdamWConfig,
+    init_opt_state,
+    make_stream,
+    make_train_step,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    cfg = get_smoke("llama3.2-1b").with_(vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.arch_id} (reduced) {n/1e6:.2f}M params")
+
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
+    opt = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    stream = make_stream(cfg, args.batch, args.seq, seed=0)
+
+    t0 = time.monotonic()
+    first = None
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        first = first or loss
+        if step % 20 == 0 or step == 1:
+            tok_s = step * args.batch * args.seq / (time.monotonic() - t0)
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  {tok_s:,.0f} tok/s")
+    print(f"loss: {first:.3f} -> {loss:.3f}")
+    assert loss < first, "training must reduce loss"
+
+    out = save_checkpoint(args.ckpt, args.steps, params)
+    print("checkpoint:", out)
+    restored = load_checkpoint(args.ckpt, latest_step(args.ckpt),
+                               model.abstract_params())
+    toks = jnp.zeros((1, 8), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(model.forward(params, toks)[0]),
+        np.asarray(model.forward(restored, toks)[0]), rtol=1e-6)
+    print("checkpoint round-trip verified")
+
+
+if __name__ == "__main__":
+    main()

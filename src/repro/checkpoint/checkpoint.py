@@ -1,0 +1,91 @@
+"""Pytree checkpointing with mesh-aware restore.
+
+Layout: ``<dir>/step_<N>/manifest.json`` + one ``.npy`` per leaf, keyed by
+its pytree path. Restore can re-place leaves under any sharding tree
+(``shardings=``) — the path MultiWorld online instantiation uses to bring a
+replacement stage up on a *different* device slice than the one that failed.
+
+bfloat16 has no numpy dtype; those leaves are stored as uint16 raw bits with
+the true dtype recorded in the manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    manifest = {"step": step, "leaves": {}}
+    for i, (path, leaf) in enumerate(flat):
+        key = _path_str(path)
+        fname = f"leaf_{i:05d}.npy"
+        arr = np.asarray(leaf)
+        stored_dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            stored_dtype = "bfloat16"
+        np.save(os.path.join(out, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "dtype": stored_dtype,
+                                   "shape": list(np.shape(arr))}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", name))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: Any,
+                    shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional congruent tree of Shardings
+    for device placement (mesh-aware reshard on restore)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(flat))
+    assert len(shard_leaves) == len(flat)
+
+    leaves = []
+    for (path, leaf), sh in zip(flat, shard_leaves):
+        key = _path_str(path)
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(src, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        want = jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+        assert tuple(arr.shape) == want.shape, (key, arr.shape, want.shape)
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jnp.asarray(arr, want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])

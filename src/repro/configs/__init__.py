@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+serving-pipeline scenario config.
+
+Usage: ``get_config("qwen3-8b")``, ``get_smoke("qwen3-8b")``,
+``--arch <id>`` in launch scripts.
+"""
+from importlib import import_module
+
+from repro.models import ModelConfig
+
+_MODULES = {
+    "mamba2-2.7b": "mamba2_2p7b",
+    "llama3.2-1b": "llama3p2_1b",
+    "qwen3-8b": "qwen3_8b",
+    "yi-34b": "yi_34b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "whisper-base": "whisper_base",
+    "gemma2-2b": "gemma2_2b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "zamba2-2.7b": "zamba2_2p7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    return import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

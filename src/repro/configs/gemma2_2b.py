@@ -1,0 +1,29 @@
+"""gemma2-2b — alternating local(SWA-4096)/global attention, logit softcaps,
+sandwich norms [arXiv:2408.00118]."""
+from repro.models import GEMMA_PAIR, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma2-2b",
+    family="dense",
+    num_layers=26,           # 13 (local, global) pairs
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    sliding_window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    gemma_norm_plus_one=True,
+    tie_embeddings=True,
+    groups=(BlockGroup(GEMMA_PAIR, 13),),
+    source_cite="arXiv:2408.00118 (Gemma 2); 2b config",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, sliding_window=16,
+    groups=(BlockGroup(GEMMA_PAIR, 1),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,24 @@
+"""llama3.2-1b — small dense llama3, GQA [hf:meta-llama/Llama-3.2-1B]."""
+from repro.models import DENSE, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    groups=(BlockGroup(DENSE, 16),),
+    tie_embeddings=True,
+    source_cite="hf:meta-llama/Llama-3.2-1B",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, groups=(BlockGroup(DENSE, 2),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,27 @@
+"""mamba2-2.7b — SSD (state-space duality), attention-free [arXiv:2405.21060]."""
+from repro.models import MAMBA2, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,          # d_inner = 5120 -> 80 SSD heads of dim 64
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    groups=(BlockGroup(MAMBA2, 64),),
+    tie_embeddings=True,
+    source_cite="arXiv:2405.21060 (Mamba2 SSD); 2.7b config",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, vocab_size=512, ssm_state=32, ssm_chunk=16,
+    groups=(BlockGroup(MAMBA2, 2),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,30 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088]."""
+from repro.models import MOE, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    num_experts=8,
+    experts_per_token=2,
+    moe_d_ff=14336,
+    sliding_window=4096,
+    rope_theta=1e6,
+    groups=(BlockGroup(MOE, 32, window=4096),),
+    source_cite="arXiv:2401.04088 (Mixtral of Experts)",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=512, moe_d_ff=512, vocab_size=512, num_experts=4,
+    experts_per_token=2, sliding_window=32,
+    groups=(BlockGroup(MOE, 2, window=32),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,26 @@
+"""qwen2-vl-7b — VLM language backbone with M-RoPE; ViT tower stubbed
+[arXiv:2409.12191]."""
+from repro.models import DENSE, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    mrope_sections=(16, 24, 24),   # (temporal, height, width): sums to hd/2
+    rope_theta=1e6,
+    groups=(BlockGroup(DENSE, 28),),
+    source_cite="arXiv:2409.12191 (Qwen2-VL); 7b config",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, mrope_sections=(8, 12, 12),
+    groups=(BlockGroup(DENSE, 2),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,24 @@
+"""qwen3-8b — dense GQA with per-head qk-norm [hf:Qwen/Qwen3-8B]."""
+from repro.models import DENSE, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    groups=(BlockGroup(DENSE, 36),),
+    source_cite="hf:Qwen/Qwen3-8B",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, groups=(BlockGroup(DENSE, 2),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,29 @@
+"""qwen3-moe-235b-a22b — 128-expert top-8 MoE, GQA kv=4, qk-norm
+[hf:Qwen/Qwen3-30B-A3B family scaled per assignment]."""
+from repro.models import MOE, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    num_experts=128,
+    experts_per_token=8,
+    moe_d_ff=1536,
+    qk_norm=True,
+    rope_theta=1e6,
+    groups=(BlockGroup(MOE, 94),),
+    source_cite="hf:Qwen/Qwen3-235B-A22B (assignment: Qwen3-30B-A3B card)",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=128, moe_d_ff=128, vocab_size=512, num_experts=4,
+    experts_per_token=2, groups=(BlockGroup(MOE, 2),),
+    param_dtype="float32", activation_dtype="float32",
+)

@@ -1,0 +1,91 @@
+"""Assigned input shapes + ShapeDtypeStruct input builders for the dry-run.
+
+``input_specs`` returns abstract stand-ins (no allocation) for every model
+input of a (config, shape, step-kind) combination — the same pattern the
+dry-run uses for params and caches. Decode shapes lower ``serve_step`` (one
+token against a seq_len-deep cache); train/prefill lower full sequences.
+
+The audio/vlm frontends are stubs per the assignment: whisper receives frame
+embeddings (B, 1500, D); qwen2-vl receives fused token+patch embeddings
+(B, S, D) plus (3, B, S) M-RoPE position streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+#: archs allowed to run long_500k (sub-quadratic context handling); see
+#: DESIGN.md §Shape-skips.
+LONG_CONTEXT_OK = {
+    "mamba2-2.7b": "SSM O(1) state",
+    "zamba2-2.7b": "SSM state + SWA shared attention",
+    "gemma2-2b": "native local/global alternation (ring caches on local)",
+    "mixtral-8x7b": "native sliding-window attention",
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.arch_id not in LONG_CONTEXT_OK:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract train/prefill batch for ``loss``/``forward``."""
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.activation_dtype)
+    batch: dict = {"tokens": _i32(b, s), "targets": _i32(b, s)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), act)
+    if cfg.family == "vlm":
+        batch["input_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), act)
+        batch["mrope_positions"] = _i32(3, b, s)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, model) -> dict:
+    """Abstract one-token decode inputs: tokens, position t, cache."""
+    b, s = shape.global_batch, shape.seq_len
+    kw: dict = {
+        "tokens": _i32(b, 1),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": model.abstract_cache(b, s),
+    }
+    if cfg.family == "vlm":
+        kw["mrope_positions"] = _i32(3, b, 1)
+    return kw
+
+
+def batch_logical_axes(cfg: ModelConfig) -> dict:
+    axes: dict = {"tokens": ("batch", "seq"), "targets": ("batch", "seq")}
+    if cfg.family == "audio":
+        axes["frames"] = ("batch", "frames", "act_embed")
+    if cfg.family == "vlm":
+        axes["input_embeds"] = ("batch", "seq", "act_embed")
+        axes["mrope_positions"] = (None, "batch", "seq")
+    return axes

@@ -1,0 +1,25 @@
+"""whisper-base — enc-dec transformer backbone; conv/mel frontend stubbed
+[arXiv:2212.04356]."""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-base",
+    family="audio",
+    num_layers=6,            # decoder layers
+    encoder_layers=6,
+    encoder_frames=1500,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    tie_embeddings=True,
+    source_cite="arXiv:2212.04356 (Whisper); base config",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, encoder_layers=2, encoder_frames=32, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+    param_dtype="float32", activation_dtype="float32",
+)

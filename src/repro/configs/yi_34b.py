@@ -1,0 +1,23 @@
+"""yi-34b — llama-architecture dense GQA at 34B [arXiv:2403.04652]."""
+from repro.models import DENSE, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5e6,
+    groups=(BlockGroup(DENSE, 60),),
+    source_cite="arXiv:2403.04652 (Yi)",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=8, num_kv_heads=2, head_dim=32,
+    d_ff=512, vocab_size=512, groups=(BlockGroup(DENSE, 2),),
+    param_dtype="float32", activation_dtype="float32",
+)

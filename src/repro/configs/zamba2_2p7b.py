@@ -1,0 +1,39 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention block with per-invocation
+LoRA deltas [arXiv:2411.15242].
+
+Adaptations recorded in DESIGN.md: the shared transformer block is invoked
+once per 6 mamba layers (9 invocations over the 54-layer backbone) with
+rank-32 LoRA q/k/v deltas per invocation; the shared attention uses a 4096
+sliding window so the arch qualifies for ``long_500k`` decode with O(window)
+attention state on top of the O(1) SSM state.
+"""
+from repro.models import HYBRID, BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,           # mamba2 layers; + 9 shared-attn invocations
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    sliding_window=4096,
+    shared_attn_every=6,
+    shared_attn_lora_rank=32,
+    groups=(BlockGroup(HYBRID, 9, mamba_per_step=6),),
+    source_cite="arXiv:2411.15242 (Zamba2)",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+    d_ff=512, vocab_size=512, ssm_state=16, ssm_chunk=16, sliding_window=32,
+    shared_attn_lora_rank=8,
+    groups=(BlockGroup(HYBRID, 2, mamba_per_step=2),),
+    param_dtype="float32", activation_dtype="float32",
+)

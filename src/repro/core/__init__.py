@@ -1,0 +1,31 @@
+"""MultiWorld core: elastic, fault-tolerant collective communication.
+
+JAX reproduction of *Enabling Elastic Model Serving with MultiWorld*
+(Lee, Jajoo, Kompella — Cisco Research, 2024).
+"""
+from .cluster import Cluster, Worker
+from .communicator import REDUCE_OPS, WorldCommunicator
+from .fault import (
+    FailureKind,
+    FaultInjector,
+    MultiWorldError,
+    RemoteError,
+    RendezvousTimeout,
+    WorldBrokenError,
+    WorldNotFoundError,
+)
+from .online import OnlineInstantiator, WorldSpec
+from .store import Store
+from .transport import Codec, CopyCodec, IPCCodec, SerializeCodec, Transport
+from .watchdog import Watchdog
+from .world import World, WorldStatus
+from .world_manager import WorldManager
+
+__all__ = [
+    "Cluster", "Worker", "WorldCommunicator", "REDUCE_OPS",
+    "FailureKind", "FaultInjector", "MultiWorldError", "RemoteError",
+    "RendezvousTimeout", "WorldBrokenError", "WorldNotFoundError",
+    "OnlineInstantiator", "WorldSpec", "Store",
+    "Codec", "CopyCodec", "IPCCodec", "SerializeCodec", "Transport",
+    "Watchdog", "World", "WorldStatus", "WorldManager",
+]

@@ -1,0 +1,94 @@
+"""Cluster: the in-process stand-in for a multi-host deployment.
+
+Owns the shared Store (control plane), the Transport (data plane), the fault
+injector, and the per-worker WorldManagers. Tests, benchmarks and examples
+create one Cluster per scenario; on real hardware the same roles are played
+by an actual TCPStore endpoint + ICI/NCCL, and workers are real processes.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Awaitable, Callable, Optional
+
+from .fault import FailureKind, FaultInjector
+from .store import Store
+from .transport import Codec, Transport
+from .world_manager import WorldManager
+
+
+class Worker:
+    """An async actor owning a WorldManager (one 'process' of the paper)."""
+
+    def __init__(self, cluster: "Cluster", worker_id: str) -> None:
+        self.cluster = cluster
+        self.worker_id = worker_id
+        self.manager = WorldManager(
+            worker_id, cluster.store, cluster.transport,
+            heartbeat_interval=cluster.heartbeat_interval,
+            heartbeat_timeout=cluster.heartbeat_timeout)
+        self.comm = self.manager.communicator()
+        self._tasks: list[asyncio.Task] = []
+        self.alive = True
+
+    def spawn(self, coro: Awaitable) -> asyncio.Task:
+        task = asyncio.ensure_future(coro)
+        self._tasks.append(task)
+        return task
+
+    def kill(self) -> None:
+        """Hard-stop this worker: cancel its tasks and silence its watchdog.
+
+        Models process death — the worker stops beating; whether peers see an
+        error on the data path depends on the FailureKind given to the
+        injector (transport handles that part).
+        """
+        self.alive = False
+        self.manager.watchdog.stop()
+        for t in self._tasks:
+            if not t.done():
+                t.cancel()
+
+    async def drain(self) -> None:
+        for t in self._tasks:
+            try:
+                await t
+            except (asyncio.CancelledError, Exception):
+                pass
+
+
+class Cluster:
+    def __init__(
+        self,
+        *,
+        codec: Codec | None = None,
+        heartbeat_interval: float = 0.02,
+        heartbeat_timeout: float = 0.25,
+    ) -> None:
+        self.store = Store()
+        self.transport = Transport(codec=codec)
+        self.injector = FaultInjector()
+        self.injector.register(self._on_kill)
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.workers: dict[str, Worker] = {}
+
+    def worker(self, worker_id: str) -> Worker:
+        w = self.workers.get(worker_id)
+        if w is None:
+            w = self.workers[worker_id] = Worker(self, worker_id)
+        return w
+
+    def kill(self, worker_id: str,
+             kind: FailureKind = FailureKind.SILENT_HANG) -> None:
+        self.injector.kill(worker_id, kind)
+
+    def _on_kill(self, worker_id: str, kind: FailureKind) -> None:
+        self.transport.mark_dead(worker_id, kind)
+        w = self.workers.get(worker_id)
+        if w is not None:
+            w.kill()
+
+    def shutdown(self) -> None:
+        for w in self.workers.values():
+            w.kill()
+            w.manager.shutdown()

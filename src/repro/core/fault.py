@@ -1,0 +1,94 @@
+"""Fault model for MultiWorld.
+
+The paper distinguishes two failure surfaces (§3.2 "Reliable fault detection"):
+
+* host-to-host NCCL failures raise ``ncclRemoteError`` -> we model this as a
+  :class:`RemoteError` raised synchronously out of a transport operation, and
+* intra-host shared-memory failures that hang silently -> we model this as a
+  worker that simply stops producing heartbeats/messages; only the watchdog
+  can detect it.
+
+``FaultInjector`` produces both kinds on demand so tests and benchmarks can
+reproduce the paper's Fig. 4 scenario deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable
+
+
+class MultiWorldError(Exception):
+    """Base class for all MultiWorld errors."""
+
+
+class WorldBrokenError(MultiWorldError):
+    """A collective op was aborted because its world was fenced as broken.
+
+    Analogue of the exception the WorldManager raises into pending collective
+    operations after the watchdog flags a world (paper §3.3, World Manager).
+    """
+
+    def __init__(self, world: str, reason: str = ""):
+        self.world = world
+        self.reason = reason
+        super().__init__(f"world '{world}' is broken{': ' + reason if reason else ''}")
+
+
+class RemoteError(MultiWorldError):
+    """Analogue of ``ncclRemoteError``: the remote end died mid-operation."""
+
+    def __init__(self, world: str, rank: int):
+        self.world = world
+        self.rank = rank
+        super().__init__(f"remote rank {rank} in world '{world}' failed")
+
+
+class WorldNotFoundError(MultiWorldError):
+    def __init__(self, world: str):
+        self.world = world
+        super().__init__(f"world '{world}' does not exist (or was removed)")
+
+
+class RendezvousTimeout(MultiWorldError):
+    def __init__(self, world: str, have: int, want: int):
+        self.world = world
+        super().__init__(
+            f"rendezvous for world '{world}' timed out: {have}/{want} ranks arrived"
+        )
+
+
+class FailureKind(enum.Enum):
+    #: Worker process dies; peers on the OS-networking path observe an error
+    #: on their next transport op (``ncclRemoteError`` analogue).
+    CRASH_DETECTABLE = "crash_detectable"
+    #: Worker wedges silently (the NCCL shared-memory case): no error is ever
+    #: raised on the data path; only heartbeat loss reveals it.
+    SILENT_HANG = "silent_hang"
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    worker_id: str
+    kind: FailureKind
+    at_time: float
+
+
+class FaultInjector:
+    """Kills workers in controlled ways.
+
+    Tests/benchmarks register the cluster's kill hooks; ``kill`` fires them.
+    """
+
+    def __init__(self) -> None:
+        self._kill_hooks: list[Callable[[str, FailureKind], None]] = []
+        self.events: list[FailureEvent] = []
+
+    def register(self, hook: Callable[[str, FailureKind], None]) -> None:
+        self._kill_hooks.append(hook)
+
+    def kill(self, worker_id: str, kind: FailureKind = FailureKind.SILENT_HANG,
+             at_time: float = 0.0) -> None:
+        self.events.append(FailureEvent(worker_id, kind, at_time))
+        for hook in self._kill_hooks:
+            hook(worker_id, kind)

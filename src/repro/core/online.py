@@ -1,0 +1,88 @@
+"""Online instantiation: adding workers to a live job (paper §3.1, Fig. 2c).
+
+"Via a controller, a new worker can be created and added back to the existing
+pipeline by configuring [it] to inherit the exact role of [the failed worker]
+and other workers to set up new worlds with [it]."
+
+The paper scopes the controller itself out ("we leave it as future work") and
+contributes the *functionalities* that make it possible. We implement those
+functionalities — concurrent multi-party world creation that never disturbs
+existing worlds — plus a minimal controller so the Fig. 2 rhombus scenario is
+runnable end to end (examples/serve_pipeline.py, benchmarks/bench_online.py).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import time
+from typing import Sequence
+
+from .cluster import Cluster
+
+
+@dataclasses.dataclass(frozen=True)
+class WorldSpec:
+    """One world to create: name + ordered (worker_id, rank) membership."""
+
+    name: str
+    members: tuple[tuple[str, int], ...]
+
+    @staticmethod
+    def pair(name: str, a: str, b: str) -> "WorldSpec":
+        """Paper default: one world per pipeline edge, ranks (0, 1)."""
+        return WorldSpec(name, ((a, 0), (b, 1)))
+
+
+class OnlineInstantiator:
+    """Minimal controller: creates worlds among live workers concurrently.
+
+    Every participant's ``initialize_world`` runs as its own coroutine; the
+    rendezvous happens through the store exactly as at cold start — existing
+    worlds keep moving traffic meanwhile (validated by bench_online.py, the
+    Fig. 5 reproduction).
+    """
+
+    def __init__(self, cluster: Cluster) -> None:
+        self.cluster = cluster
+        self._uid = itertools.count()
+        #: (t, world, join_latency_s) for Fig.5-style reporting
+        self.joins: list[tuple[float, str, float]] = []
+
+    def fresh_world_name(self, hint: str = "w") -> str:
+        return f"{hint}-online-{next(self._uid)}"
+
+    async def instantiate(self, specs: Sequence[WorldSpec],
+                          timeout: float = 10.0) -> None:
+        """Create all worlds in ``specs``; returns when every rendezvous is done."""
+        coros = []
+        for spec in specs:
+            size = len(spec.members)
+            for worker_id, rank in spec.members:
+                mgr = self.cluster.worker(worker_id).manager
+                coros.append(
+                    mgr.initialize_world(spec.name, rank, size, timeout=timeout))
+        t0 = time.monotonic()
+        await asyncio.gather(*coros)
+        dt = time.monotonic() - t0
+        for spec in specs:
+            self.joins.append((time.monotonic(), spec.name, dt))
+
+    async def replace(
+        self,
+        failed_worker: str,
+        new_worker: str,
+        peers: Sequence[str],
+        name_hint: str = "repl",
+        timeout: float = 10.0,
+    ) -> list[WorldSpec]:
+        """Fig. 2c: give ``new_worker`` the failed worker's role by creating a
+        fresh pairwise world with each peer. Returns the created specs so the
+        application can wire its stage logic onto them."""
+        specs = [
+            WorldSpec.pair(self.fresh_world_name(f"{name_hint}-{peer}"),
+                           peer, new_worker)
+            for peer in peers
+        ]
+        await self.instantiate(specs, timeout=timeout)
+        return specs

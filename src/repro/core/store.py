@@ -1,0 +1,92 @@
+"""In-process analogue of PyTorch's TCPStore.
+
+One ``Store`` instance plays the role the paper assigns to "one TCPStore
+instance ... associated with one world" (§3.3 Watchdog) — except that, being a
+single-host simulation, we use one namespaced store for the whole cluster and
+give each world its own key prefix. The API mirrors TCPStore: ``set``/``get``,
+atomic ``add``, ``wait``-for-keys, plus TTL'd keys for heartbeats.
+
+Thread-safe: the serving pipeline runs workers on one asyncio loop, but
+``initialize_world`` may run from a side thread (paper §4.2 does blocking
+world init on a separate thread), so all mutation takes a lock.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Iterator
+
+
+class Store:
+    def __init__(self, clock=time.monotonic) -> None:
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._data: dict[str, Any] = {}
+        self._expiry: dict[str, float] = {}  # key -> absolute deadline
+
+    # -- basic KV ----------------------------------------------------------
+    def set(self, key: str, value: Any, ttl: float | None = None) -> None:
+        with self._lock:
+            self._data[key] = value
+            if ttl is not None:
+                self._expiry[key] = self._clock() + ttl
+            else:
+                self._expiry.pop(key, None)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        with self._lock:
+            self._expire_locked()
+            return self._data.get(key, default)
+
+    def delete(self, key: str) -> bool:
+        with self._lock:
+            self._expiry.pop(key, None)
+            return self._data.pop(key, None) is not None
+
+    def add(self, key: str, amount: int = 1) -> int:
+        """Atomic counter, like TCPStore.add."""
+        with self._lock:
+            self._expire_locked()
+            value = int(self._data.get(key, 0)) + amount
+            self._data[key] = value
+            return value
+
+    def keys(self, prefix: str = "") -> list[str]:
+        with self._lock:
+            self._expire_locked()
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+    def items(self, prefix: str = "") -> Iterator[tuple[str, Any]]:
+        with self._lock:
+            self._expire_locked()
+            snapshot = [(k, v) for k, v in self._data.items() if k.startswith(prefix)]
+        return iter(sorted(snapshot))
+
+    # -- rendezvous helper --------------------------------------------------
+    def wait(self, keys: list[str], timeout: float = 10.0, poll: float = 0.001) -> bool:
+        """Block until all ``keys`` exist (TCPStore.wait). Returns False on timeout."""
+        deadline = self._clock() + timeout
+        while True:
+            with self._lock:
+                self._expire_locked()
+                if all(k in self._data for k in keys):
+                    return True
+            if self._clock() >= deadline:
+                return False
+            time.sleep(poll)
+
+    # -- TTL ---------------------------------------------------------------
+    def ttl_remaining(self, key: str) -> float | None:
+        """Seconds until expiry, None if key absent or non-expiring."""
+        with self._lock:
+            self._expire_locked()
+            if key not in self._data or key not in self._expiry:
+                return None
+            return max(0.0, self._expiry[key] - self._clock())
+
+    def _expire_locked(self) -> None:
+        now = self._clock()
+        dead = [k for k, t in self._expiry.items() if t <= now]
+        for k in dead:
+            self._expiry.pop(k, None)
+            self._data.pop(k, None)

@@ -1,0 +1,194 @@
+"""Transport: the simulated data plane under the communicator.
+
+On real hardware this layer is NCCL (paper) / TPU ICI transfers (our target):
+``send``/``recv`` move device buffers between workers of one world. In this
+CPU container, workers are in-process async actors, so the default transport
+passes JAX array references zero-copy through per-(world, src, dst) channels.
+
+Failure semantics mirror the paper's two NCCL paths (§3.2):
+
+* ``CRASH_DETECTABLE`` (host-to-host / OS networking): any transport op that
+  touches the dead peer raises :class:`RemoteError` — the ``ncclRemoteError``
+  analogue, catchable by the communicator.
+* ``SILENT_HANG`` (intra-host shared memory): ops involving the dead peer
+  neither fail nor complete. Only the watchdog can detect this.
+
+Codecs exist to reproduce the paper's strawmen: ``SerializeCodec`` models the
+Kafka/message-bus path of Fig. 1 (full serialize + host-copy per hop) and the
+MultiProcessing IPC path of Figs. 6-7.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+from .fault import FailureKind, RemoteError
+
+
+class Codec:
+    """Payload transformation applied on the wire. Default: zero-copy."""
+
+    name = "zero_copy"
+
+    def encode(self, payload: Any) -> Any:
+        return payload
+
+    def decode(self, wire: Any) -> Any:
+        return wire
+
+
+class CopyCodec(Codec):
+    """Wire emulation: one memcpy per hop (the cost structure of a DMA/NVLink
+    transfer, without serialization). Used by the Fig. 6/7 benchmarks so that
+    MultiWorld bookkeeping is measured against a *real* per-byte transfer
+    cost on both sides — zero-copy reference passing would make any
+    bookkeeping look infinitely expensive.
+
+    The wire buffer is persistent per (shape, dtype) — a DMA engine writes
+    into a fixed remote buffer; reallocating 4 MB per message would measure
+    the host allocator, not the transport."""
+
+    name = "copy"
+
+    def __init__(self) -> None:
+        self._bufs: dict = {}
+
+    def encode(self, payload: Any) -> Any:
+        src = np.asarray(payload)
+        key = (src.shape, src.dtype.str)
+        buf = self._bufs.get(key)
+        if buf is None:
+            buf = self._bufs[key] = np.empty_like(src)
+        np.copyto(buf, src)
+        return buf
+
+    def decode(self, wire: Any) -> Any:
+        return wire
+
+
+class SerializeCodec(Codec):
+    """Message-bus strawman: device->host copy + serialize, then the reverse.
+
+    Reproduces the overhead structure of the paper's Fig. 1 (Kafka) — "up to
+    45% of the sender's time is spent copying the tensor from GPU memory to
+    CPU memory and then serializing it" — as faithfully as a CPU container
+    allows: a forced host materialization + pickle round-trip per hop.
+    """
+
+    name = "serialize"
+
+    def encode(self, payload: Any) -> Any:
+        host = np.asarray(payload)          # device -> host copy
+        return pickle.dumps(host, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def decode(self, wire: Any) -> Any:
+        import jax.numpy as jnp
+
+        host = pickle.loads(wire)
+        return jnp.asarray(host)            # host -> device copy
+
+
+class IPCCodec(Codec):
+    """MultiProcessing strawman (paper §4.3 "MP"): tensors traverse an extra
+
+    process boundary via pickle + an extra intermediate copy. We add one more
+    host copy than :class:`SerializeCodec` to model main-process <-> sub-process
+    piping on top of serialization.
+    """
+
+    name = "ipc"
+
+    def encode(self, payload: Any) -> Any:
+        host = np.asarray(payload)
+        staged = np.copy(host)              # IPC staging buffer copy
+        return pickle.dumps(staged, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def decode(self, wire: Any) -> Any:
+        import jax.numpy as jnp
+
+        host = pickle.loads(wire)
+        staged = np.copy(host)
+        return jnp.asarray(staged)
+
+
+class _Channel:
+    """SPSC queue. deque.append/popleft are GIL-atomic, so the hot path is
+    lock-free; only channel-map mutation takes the transport lock."""
+
+    __slots__ = ("buf",)
+
+    def __init__(self) -> None:
+        self.buf: deque = deque()
+
+
+class Transport:
+    def __init__(self, codec: Codec | None = None) -> None:
+        self.codec = codec or Codec()
+        self._channels: dict[tuple[str, int, int], _Channel] = {}
+        self._lock = threading.Lock()
+        #: worker_id -> FailureKind for dead workers
+        self._dead: dict[str, FailureKind] = {}
+        self.bytes_sent = 0
+        self.messages_sent = 0
+
+    # -- fault hooks ---------------------------------------------------------
+    def mark_dead(self, worker_id: str, kind: FailureKind) -> None:
+        with self._lock:
+            self._dead[worker_id] = kind
+
+    def is_dead(self, worker_id: str) -> FailureKind | None:
+        return self._dead.get(worker_id)
+
+    def detectably_dead(self, worker_id: str) -> bool:
+        return self._dead.get(worker_id) is FailureKind.CRASH_DETECTABLE
+
+    # -- channels -------------------------------------------------------------
+    def _channel(self, world: str, src: int, dst: int) -> _Channel:
+        key = (world, src, dst)
+        ch = self._channels.get(key)          # GIL-atomic read
+        if ch is not None:
+            return ch
+        with self._lock:
+            ch = self._channels.get(key)
+            if ch is None:
+                ch = self._channels[key] = _Channel()
+            return ch
+
+    def send(self, world: str, src: int, dst: int, payload: Any,
+             dst_worker: str | None = None) -> None:
+        """Post one message. Raises RemoteError iff dst is detectably dead."""
+        if self._dead and dst_worker is not None \
+                and self._dead.get(dst_worker) is FailureKind.CRASH_DETECTABLE:
+            raise RemoteError(world, dst)
+        wire = self.codec.encode(payload)
+        self._channel(world, src, dst).buf.append(wire)
+        self.messages_sent += 1
+        self.bytes_sent += getattr(payload, "nbytes", 0)
+
+    def recv_nowait(self, world: str, src: int, dst: int,
+                    src_worker: str | None = None) -> tuple[bool, Any]:
+        """Non-blocking receive: (True, payload) or (False, None).
+
+        Raises RemoteError iff src is *detectably* dead and no data is
+        buffered (a silently-hung peer just returns (False, None) forever —
+        that is the shared-memory hang the watchdog exists for).
+        """
+        buf = self._channel(world, src, dst).buf
+        if buf:
+            return True, self.codec.decode(buf.popleft())
+        if src_worker is not None and self.detectably_dead(src_worker):
+            raise RemoteError(world, src)
+        return False, None
+
+    def drop_world(self, world: str) -> int:
+        """Discard all channels of a removed/broken world. Returns #messages dropped."""
+        dropped = 0
+        with self._lock:
+            for key in [k for k in self._channels if k[0] == world]:
+                dropped += len(self._channels[key].buf)
+                del self._channels[key]
+        return dropped

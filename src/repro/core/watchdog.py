@@ -1,0 +1,114 @@
+"""Watchdog: out-of-band liveness monitoring (paper §3.3).
+
+"It is a threaded daemon that checks whether worlds that a worker belongs to
+are broken or not. It relies on TCPStore ... A watchdog updates the worker's
+health periodically to the stores for all the worlds the worker belongs to.
+If health updates are missed for a certain duration (e.g., 3 seconds), the
+watchdog informs the world manager."
+
+Here the daemon is an asyncio task co-scheduled with the worker (workers are
+in-process actors); heartbeats are TTL'd keys in the :class:`~repro.core.store.Store`.
+The detection path is deliberately *not* on the data plane: it is the only
+mechanism that catches the silent shared-memory-style hang.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Callable
+
+from .store import Store
+from .world import World
+
+
+class Watchdog:
+    def __init__(
+        self,
+        worker_id: str,
+        store: Store,
+        *,
+        interval: float = 0.02,
+        timeout: float = 0.25,
+        clock=time.monotonic,
+    ) -> None:
+        self.worker_id = worker_id
+        self.store = store
+        self.interval = interval
+        self.timeout = timeout
+        self._clock = clock
+        #: world name -> (World, my rank, watch start time)
+        self._watched: dict[str, tuple[World, int, float]] = {}
+        self._on_broken: Callable[[str, str], None] | None = None
+        self._task: asyncio.Task | None = None
+        self._alive = False
+        #: diagnostics: world -> detection latency (s) once detected
+        self.detections: dict[str, float] = {}
+
+    def on_broken(self, cb: Callable[[str, str], None]) -> None:
+        """cb(world_name, reason) — wired to WorldManager fencing."""
+        self._on_broken = cb
+
+    # -- membership ----------------------------------------------------------
+    def watch(self, world: World, my_rank: int) -> None:
+        self._watched[world.name] = (world, my_rank, self._clock())
+        self._beat_world(world, my_rank)  # publish liveness immediately
+
+    def unwatch(self, world_name: str) -> None:
+        self._watched.pop(world_name, None)
+
+    # -- daemon ---------------------------------------------------------------
+    def start(self) -> None:
+        if self._task is None or self._task.done():
+            self._alive = True
+            self._task = asyncio.ensure_future(self._run())
+
+    def stop(self) -> None:
+        self._alive = False
+        if self._task is not None:
+            self._task.cancel()
+            self._task = None
+
+    async def _run(self) -> None:
+        last_cycle = self._clock()
+        try:
+            while self._alive:
+                now = self._clock()
+                starved = now - last_cycle > self.timeout
+                self.beat()
+                # If the event loop was starved past the heartbeat TTL (e.g.
+                # a long jit compile blocked every coroutine), peers' beats
+                # may be missing for the same local reason. Skip one check
+                # round so everyone re-beats first — suppresses false
+                # positives without weakening real detection.
+                if not starved:
+                    self.check()
+                last_cycle = self._clock()
+                await asyncio.sleep(self.interval)
+        except asyncio.CancelledError:
+            pass
+
+    # -- mechanics -------------------------------------------------------------
+    def _beat_world(self, world: World, rank: int) -> None:
+        self.store.set(world.heartbeat_key(rank), self._clock(), ttl=self.timeout)
+
+    def beat(self) -> None:
+        for world, rank, _start in self._watched.values():
+            if world.healthy or world.status.value == "initializing":
+                self._beat_world(world, rank)
+
+    def check(self) -> None:
+        now = self._clock()
+        for name, (world, my_rank, start) in list(self._watched.items()):
+            if not world.healthy:
+                continue
+            if now - start < self.timeout:
+                continue  # grace period: peers may not have beaten yet
+            for rank in range(world.size):
+                if rank == my_rank:
+                    continue
+                if self.store.get(world.heartbeat_key(rank)) is None:
+                    reason = f"rank {rank} missed heartbeats > {self.timeout}s"
+                    self.detections[name] = now - start
+                    if self._on_broken is not None:
+                        self._on_broken(name, reason)
+                    break

@@ -1,0 +1,56 @@
+"""World: a named process group with its own fault domain.
+
+The paper's central abstraction: a worker may belong to many worlds; a worker
+failure breaks only the worlds it belongs to (§3.1). Each world optionally
+carries a ``jax.sharding.Mesh`` over a device subset — that is the TPU
+analogue of "one NCCL communicator per world": collectives issued in this
+world are compiled against this mesh and never touch devices of other worlds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional
+
+
+class WorldStatus(enum.Enum):
+    INITIALIZING = "initializing"
+    HEALTHY = "healthy"
+    BROKEN = "broken"
+    REMOVED = "removed"
+
+
+@dataclasses.dataclass
+class World:
+    name: str
+    size: int
+    #: rank -> worker id. Filled in as ranks rendezvous.
+    members: dict[int, str] = dataclasses.field(default_factory=dict)
+    status: WorldStatus = WorldStatus.INITIALIZING
+    #: optional JAX mesh backing this world's on-device collectives
+    mesh: Optional[Any] = None
+    #: why the world broke (for diagnostics / Fig.4-style timelines)
+    broken_reason: str = ""
+
+    def rank_of(self, worker_id: str) -> Optional[int]:
+        for rank, wid in self.members.items():
+            if wid == worker_id:
+                return rank
+        return None
+
+    @property
+    def healthy(self) -> bool:
+        return self.status is WorldStatus.HEALTHY
+
+    def key_prefix(self) -> str:
+        return f"world/{self.name}"
+
+    # -- store key helpers (shared by manager + watchdog) --------------------
+    def member_key(self, rank: int) -> str:
+        return f"{self.key_prefix()}/members/{rank}"
+
+    def heartbeat_key(self, rank: int) -> str:
+        return f"{self.key_prefix()}/hb/{rank}"
+
+    def config_key(self) -> str:
+        return f"{self.key_prefix()}/config"

@@ -1,0 +1,147 @@
+"""WorldManager: initialization, termination and fencing of worlds (paper §3.3).
+
+One manager per worker, mirroring the paper's per-process architecture
+(Fig. 3). Provides the paper's three functions — ``initialize_world``,
+``remove_world`` and ``communicator`` — plus the fencing path: "If the
+watchdog alerts a world's failure, the manager prevents the broken world
+being accessed by the world communicator. It then helps the communicator
+abort any pending collective operation and raise an exception so that an
+inference application can handle it."
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Callable, Optional
+
+from .communicator import WorldCommunicator
+from .fault import RendezvousTimeout
+from .store import Store
+from .transport import Transport
+from .watchdog import Watchdog
+from .world import World, WorldStatus
+
+
+class WorldManager:
+    def __init__(
+        self,
+        worker_id: str,
+        store: Store,
+        transport: Transport,
+        *,
+        heartbeat_interval: float = 0.02,
+        heartbeat_timeout: float = 0.25,
+    ) -> None:
+        self.worker_id = worker_id
+        self.store = store
+        self.transport = transport
+        self.worlds: dict[str, World] = {}
+        self.watchdog = Watchdog(
+            worker_id, store, interval=heartbeat_interval, timeout=heartbeat_timeout)
+        self.watchdog.on_broken(self.report_broken)
+        self._communicator = WorldCommunicator(self)
+        #: app-level callbacks fired on world break (world_name, reason)
+        self._break_listeners: list[Callable[[str, str], None]] = []
+        #: timeline of (t, event, world) for Fig.4/5-style reporting
+        self.events: list[tuple[float, str, str]] = []
+
+    # ---------------------------------------------------------------- paper API
+    def communicator(self) -> WorldCommunicator:
+        return self._communicator
+
+    async def initialize_world(
+        self,
+        name: str,
+        rank: int,
+        size: int,
+        *,
+        timeout: float = 10.0,
+        poll: float = 0.002,
+        mesh=None,
+    ) -> World:
+        """Rendezvous-create a world; non-blocking w.r.t. other worlds.
+
+        The paper runs blocking NCCL init on a separate thread so that
+        traffic on existing worlds continues (§4.2, Fig. 5). The asyncio
+        analogue is a coroutine that polls the store and yields — other
+        worlds' ops interleave freely while this world waits for peers.
+        """
+        world = self.worlds.get(name)
+        if world is None or world.status in (WorldStatus.REMOVED, WorldStatus.BROKEN):
+            world = World(name=name, size=size, mesh=mesh)
+            self.worlds[name] = world
+        self.store.set(world.config_key(), {"size": size})
+        self.store.set(world.member_key(rank), self.worker_id)
+        self._event("init_begin", name)
+
+        deadline = time.monotonic() + timeout
+        member_keys = [world.member_key(r) for r in range(size)]
+        while True:
+            present = [k for k in member_keys if self.store.get(k) is not None]
+            if len(present) == size:
+                break
+            if time.monotonic() > deadline:
+                raise RendezvousTimeout(name, len(present), size)
+            await asyncio.sleep(poll)
+
+        for r in range(size):
+            world.members[r] = self.store.get(world.member_key(r))
+        world.status = WorldStatus.HEALTHY
+        self.watchdog.watch(world, rank)
+        self.watchdog.start()
+        self._event("init_done", name)
+        return world
+
+    def initialize_world_blocking(self, name: str, rank: int, size: int,
+                                  **kw) -> World:
+        """Thread-style blocking variant (for callers not on the event loop)."""
+        loop = asyncio.new_event_loop()
+        try:
+            return loop.run_until_complete(
+                self.initialize_world(name, rank, size, **kw))
+        finally:
+            loop.close()
+
+    def remove_world(self, name: str) -> None:
+        """Graceful teardown of one world; other worlds are untouched."""
+        world = self.worlds.get(name)
+        if world is None:
+            return
+        rank = world.rank_of(self.worker_id)
+        world.status = WorldStatus.REMOVED
+        self.watchdog.unwatch(name)
+        if rank is not None:
+            self.store.delete(world.member_key(rank))
+            self.store.delete(world.heartbeat_key(rank))
+        self.transport.drop_world(name)
+        self._event("removed", name)
+
+    # ------------------------------------------------------------------ fencing
+    def report_broken(self, name: str, reason: str) -> None:
+        """Fence a broken world: pending communicator ops abort on their next
+        poll; the world becomes inaccessible; channels are dropped."""
+        world = self.worlds.get(name)
+        if world is None or world.status is not WorldStatus.HEALTHY:
+            return
+        world.status = WorldStatus.BROKEN
+        world.broken_reason = reason
+        self.watchdog.unwatch(name)
+        self.transport.drop_world(name)
+        self._event("broken", name)
+        for cb in self._break_listeners:
+            cb(name, reason)
+
+    def on_world_broken(self, cb: Callable[[str, str], None]) -> None:
+        self._break_listeners.append(cb)
+
+    # ------------------------------------------------------------------- misc
+    def healthy_worlds(self) -> list[str]:
+        return [n for n, w in self.worlds.items() if w.healthy]
+
+    def shutdown(self) -> None:
+        self.watchdog.stop()
+        for name in list(self.worlds):
+            self.remove_world(name)
+
+    def _event(self, kind: str, world: str) -> None:
+        self.events.append((time.monotonic(), kind, world))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving/training hot spots.
+
+MultiWorld itself is a communication control plane (no kernel contribution);
+these kernels are the substrate hot spots of the assigned architectures:
+flash attention (prefill), decode attention (KV-cache streaming), the Mamba2
+SSD chunked scan, and RMSNorm. Each has a jitted wrapper in ``ops`` and a
+pure-jnp oracle in ``ref``; tests sweep shapes/dtypes and assert_allclose.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,96 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+Model code calls these with model-layout tensors ((B, S, H, hd) etc.); the
+wrappers transpose to kernel layout, choose block sizes, and run the kernel
+in interpret mode on CPU (the container target) or compiled on real TPU.
+Set ``REPRO_PALLAS_INTERPRET=0`` to force compiled mode.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_bhd
+from .flash_attention import flash_attention_bhsd
+from .rmsnorm import rmsnorm_rows
+from .ssd_scan import ssd_scan_kernel
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (prefer 128-multiples)."""
+    best = 1
+    for cand in range(1, min(n, target) + 1):
+        if n % cand == 0:
+            best = cand
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q (B,S,H,hd); k,v (B,T,K,hd) -> (B,S,H,hd). Model layout in/out."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = _pick_block(qt.shape[2], 128)
+    bk = _pick_block(kt.shape[2], 128)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=bq,
+                               block_k=bk, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     mask: jax.Array, softcap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """q (B,1,H,hd); k,v (B,T,K,hd); mask (B,1,T) or (B,T) -> (B,1,H,hd)."""
+    if mask.ndim == 3:
+        mask = mask[:, 0, :]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bk = _pick_block(kt.shape[2], 512)
+    out = decode_attention_bhd(qt, kt, vt, mask, softcap=softcap, scale=scale,
+                               block_k=bk, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Same contract as models.ssm.ssd_reference: x (B,S,H,P), dt (B,S,H),
+    a (H,), b/c (B,S,N) -> (y (B,S,H,P), final_state (B,H,P,N))."""
+    xdt = x * dt[..., None]
+    da = dt * a[None, None, :]
+    return ssd_scan_kernel(xdt.astype(jnp.float32), da.astype(jnp.float32),
+                           b, c, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "plus_one"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            plus_one: bool = False) -> jax.Array:
+    """x (..., D), w (D,)."""
+    shape = x.shape
+    rows = 1
+    for dim in shape[:-1]:
+        rows *= dim
+    x2 = x.reshape(rows, shape[-1])
+    br = _pick_block(rows, 256)
+    out = rmsnorm_rows(x2, w, eps=eps, plus_one=plus_one, block_rows=br,
+                       interpret=_interpret())
+    return out.reshape(shape)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel ground truth).
+
+The model code's reference paths reuse the same math (models/attention.py,
+models/ssm.py), so kernel == ref == model-reference by construction.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend_reference, causal_mask
+from repro.models.common import rms_norm
+from repro.models.ssm import ssd_reference
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q (B,S,H,hd); k,v (B,T,K,hd) -> (B,S,H,hd)."""
+    s, t = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    if causal:
+        mask = causal_mask(s, t, window)
+    else:
+        mask = jnp.ones((s, t), bool)
+        if window is not None:
+            mask &= causal_mask(s, t, window) | ~causal_mask(s, t, None)
+    return attend_reference(q, k, v, mask=mask, cap=softcap, scale=scale)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array, *,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q (B,1,H,hd); k,v (B,T,K,hd); mask (B,T) -> (B,1,H,hd)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    return attend_reference(q, k, v, mask=mask[:, None, :].astype(bool),
+                            cap=softcap, scale=scale)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, *, chunk: int):
+    """Same contract as models.ssm.ssd_reference."""
+    return ssd_reference(x, dt, a, b, c, chunk)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                plus_one: bool = False) -> jax.Array:
+    return rms_norm(x, w, eps, plus_one)

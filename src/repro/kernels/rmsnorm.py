@@ -1,0 +1,44 @@
+"""RMSNorm Pallas TPU kernel.
+
+Rowwise: one grid step normalizes a (BR, D) tile held in VMEM; the scale
+vector is broadcast from a single (D,)-tile. Reduction in f32 regardless of
+input dtype. Simple, but the densest norm traffic in decode (every layer,
+every token) so worth owning the tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float, plus_one: bool):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    scale = (1.0 + w) if plus_one else w
+    o_ref[...] = (y * scale[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                 plus_one: bool = False, block_rows: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """x (R, D), w (D,) -> (R, D)."""
+    r, d = x.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0, (r, block_rows)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps, plus_one=plus_one),
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture × input shape) combination against the
+production meshes — 16x16 single-pod and 2x16x16 multi-pod — and records
+memory_analysis / cost_analysis / collective schedule per combo. This is the
+deployment proof: a sharding mismatch, compile-time OOM, or unsupported
+collective fails loudly here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --out artifacts/
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax  # noqa: E402  (device count already forced above)
+
+from repro.configs import ARCH_IDS  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.lowering import SkipCombo, run_combo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", action="append", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="run ONLY the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, jax.device_count()
+    archs = args.arch or list(ARCH_IDS)
+    shapes = args.shape or list(SHAPES)
+    meshes = []
+    if args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "pod2" if multi_pod else "pod1"
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{mesh_tag}"
+                path = os.path.join(args.out, tag + ".json")
+                t0 = time.monotonic()
+                try:
+                    result = run_combo(arch, shape, mesh,
+                                       attn_impl=args.attn_impl)
+                    result["status"] = "ok"
+                    print(f"[ok]   {tag}: dominant={result['dominant']} "
+                          f"compute={result['compute_s']:.4f}s "
+                          f"memory={result['memory_s']:.4f}s "
+                          f"collective={result['collective_s']:.4f}s "
+                          f"state={result['peak_state_bytes_per_dev']/2**30:.2f}GiB "
+                          f"({time.monotonic()-t0:.0f}s)")
+                except SkipCombo as e:
+                    result = {"arch": arch, "shape": shape, "status": "skip",
+                              "reason": str(e)}
+                    print(f"[skip] {tag}: {e}")
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures += 1
+                    result = {"arch": arch, "shape": shape, "status": "fail",
+                              "error": f"{type(e).__name__}: {e}",
+                              "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=1, default=str)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,480 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count (measured: scan(1) == scan(10) flops). Every production model here
+is a scan over layers — and the jnp-flash attention is a scan over kv blocks
+— so XLA's numbers undercount by 1-3 orders of magnitude. This module walks
+the optimized HLO text instead:
+
+* ``while`` ops: body cost × trip count (parsed from the loop condition's
+  ``compare(..., constant(N))``).
+* ``dot``: 2 × numel(result) × contracted dims (from the lhs operand's shape
+  and ``lhs_contracting_dims``); fusions are recursed for dots.
+* bytes: counted at materialization boundaries (fusion/dot/copy/collective
+  operands + results) — a fusion's internals are register/VMEM traffic, its
+  operands and result are the HBM traffic.
+* collectives: per-device wire bytes by op type and replica-group size,
+  multiplied by the enclosing loops' trip counts.
+
+This is a model, not ground truth — but it is *consistent* (same rules for
+every combo) and loop-correct, which is what the roofline comparison needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_OP_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_ATTR_TOAPPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_ATTR_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_ATTR_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(s: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(s):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str                      # operands + attributes text
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    shapes: dict[str, str]         # op/param name -> shape string
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                # parameter shapes from the header
+                for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],{}]+))",
+                                      m.group(2)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is not None:
+            cur.ops.append(parsed)
+            cur.shapes[parsed.name] = parsed.shape_str
+    return comps, entry
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    """Robustly split '%name = SHAPE opcode(args), attrs' — SHAPE may be a
+    tuple containing commas and '/*index=N*/' comments (which contain '=')."""
+    m = _OP_LHS_RE.match(line)
+    if m is None:
+        return None
+    name, rest = m.group(1), m.group(2)
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        shape_str, rem = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_str, rem = rest[:sp], rest[sp + 1:].lstrip()
+    om = _OPCODE_RE.match(rem)
+    if om is None:
+        return None
+    return Op(name, shape_str, om.group(1), rem[om.end():],
+              is_root=line.lstrip().startswith("ROOT"))
+
+
+def _trip_count(comps: dict[str, Computation], cond_name: str) -> int:
+    """Trip count of a scan-style loop: the largest positive integer constant
+    in the condition computation (scan loops run 0..N with `compare LT N`)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts: list[int] = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            consts += [int(v) for v in
+                       re.findall(r"constant\((-?\d+)\)",
+                                  f"constant({op.rest}")]
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    by_coll: dict = dataclasses.field(default_factory=dict)
+    n_coll: int = 0
+
+    def __iadd__(self, other: "Cost") -> "Cost":
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.wire += other.wire
+        for k, v in other.by_coll.items():
+            self.by_coll[k] = self.by_coll.get(k, 0.0) + v
+        self.n_coll += other.n_coll
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.wire * k,
+                    {o: v * k for o, v in self.by_coll.items()},
+                    self.n_coll * int(k))
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    result = _parse_shapes(op.shape_str)
+    if not result:
+        return 0.0
+    numel = 1
+    for d in result[0][1]:
+        numel *= d
+    lhs_m = _OPERAND_RE.search(op.rest)
+    contract = _ATTR_CONTRACT.search(op.rest)
+    k = 1
+    if lhs_m and contract:
+        lhs_shape = _parse_shapes(comp.shapes.get(lhs_m.group(1), ""))
+        if lhs_shape:
+            dims = lhs_shape[0][1]
+            for idx in contract.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+    return 2.0 * numel * k
+
+
+def _operand_bytes(comp: Computation, op: Op) -> int:
+    total = 0
+    # operands are %refs before the first '),' attribute boundary
+    args = op.rest.split("),", 1)[0]
+    for ref in _OPERAND_RE.findall(args):
+        total += _shape_bytes(comp.shapes.get(ref, ""))
+    return total
+
+
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_bytes(comp: Computation, op: Op, fused: Computation) -> int:
+    """HBM read traffic of a fusion:
+
+    * a parameter consumed *only* through slicing ops inside the fusion
+      contributes its slice sizes, not its full extent (a scan that
+      dynamic-slices one KV block per step must not be charged the whole
+      cache per step);
+    * a parameter that is only the *base* of a dynamic-update-slice is an
+      in-place aliased accumulator — traffic is the update, not the base
+      (scan ys-stacking / cache writes).
+    """
+    args = op.rest.split("),", 1)[0]
+    operand_names = _OPERAND_RE.findall(args)
+    # fusion parameters are positional: parameter(i) corresponds to operand i
+    param_ops = {o.name: int(re.search(r"parameter\((\d+)", f"parameter({o.rest}")
+                              .group(1))
+                 for o in fused.ops if o.opcode == "parameter"}
+    sliced_bytes: dict[int, int] = {}
+    dus_base: set[int] = set()
+    full_params: set[int] = set()
+    root_is_dus = any(o.is_root and o.opcode == "dynamic-update-slice"
+                      for o in fused.ops)
+    for fop in fused.ops:
+        refs = _OPERAND_RE.findall(fop.rest.split("),", 1)[0])
+        for pos, ref in enumerate(refs):
+            if ref not in param_ops:
+                continue
+            idx = param_ops[ref]
+            if fop.opcode in _SLICE_OPS and pos == 0:
+                sliced_bytes[idx] = sliced_bytes.get(idx, 0) \
+                    + _shape_bytes(fop.shape_str)
+            elif fop.opcode == "dynamic-update-slice" and pos == 0:
+                dus_base.add(idx)
+            else:
+                full_params.add(idx)
+    total = 0
+    for i, name in enumerate(operand_names):
+        size = _shape_bytes(comp.shapes.get(name, ""))
+        if i in full_params:
+            total += size
+        elif i in dus_base:
+            continue                      # aliased in-place base
+        elif i in sliced_bytes:
+            total += min(size, sliced_bytes[i])
+        else:
+            total += size
+    if root_is_dus:
+        # the fusion result is the aliased accumulator; its traffic is the
+        # written slice, already approximated by the non-base operands above
+        return total
+    return total
+
+
+def _fusion_result_bytes(op: Op, fused: Computation) -> int:
+    """Result-side traffic: full result, except dus-rooted fusions, where
+    only the updated slice is written (result aliases the base operand)."""
+    for o in fused.ops:
+        if o.is_root and o.opcode == "dynamic-update-slice":
+            refs = _OPERAND_RE.findall(o.rest.split("),", 1)[0])
+            if len(refs) >= 2:
+                upd = fused.shapes.get(refs[1], "")
+                return _shape_bytes(upd)
+    return _shape_bytes(op.shape_str)
+
+
+def _collective_wire(op: Op) -> tuple[float, int]:
+    result_bytes = _shape_bytes(op.shape_str)
+    gm = _ATTR_GROUPS.search(op.rest)
+    n = int(gm.group(2)) if gm else 1
+    if n <= 1:
+        return 0.0, n
+    base = op.opcode.replace("-start", "")
+    if base == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes, n
+    if base == "all-gather":
+        return (n - 1) / n * result_bytes, n
+    if base == "reduce-scatter":
+        return float((n - 1)) * result_bytes, n
+    if base == "all-to-all":
+        return (n - 1) / n * result_bytes, n
+    return float(result_bytes), n          # collective-permute
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "bitcast-convert", "after-all", "iota",
+               "partition-id", "replica-id"}
+_HALF_BYTES = {"dynamic-update-slice", "dynamic-slice", "gather", "scatter"}
+
+
+def _flops_only(comps, comp: Computation, memo) -> float:
+    """Recursive dot-flops of a computation (for fusion internals)."""
+    key = ("f", comp.name)
+    if key in memo:
+        return memo[key]
+    total = 0.0
+    for op in comp.ops:
+        if op.opcode == "dot":
+            total += _dot_flops(comp, op)
+        cm = _ATTR_CALLS.search(op.rest) or _ATTR_TOAPPLY.search(op.rest)
+        if cm and cm.group(1) in comps:
+            total += _flops_only(comps, comps[cm.group(1)], memo)
+        if op.opcode == "while":
+            bm = _ATTR_BODY.search(op.rest)
+            cdm = _ATTR_COND.search(op.rest)
+            if bm and bm.group(1) in comps:
+                trip = _trip_count(comps, cdm.group(1)) if cdm else 1
+                total += trip * _flops_only(comps, comps[bm.group(1)], memo)
+    memo[key] = total
+    return total
+
+
+def _cost_of(comps: dict[str, Computation], comp: Computation, memo) -> Cost:
+    key = ("c", comp.name)
+    if key in memo:
+        return memo[key]
+    cost = Cost()
+    for op in comp.ops:
+        opc = op.opcode
+        base = opc.replace("-start", "")
+        if opc.endswith("-done"):
+            continue
+        if base in COLLECTIVES:
+            wire, n = _collective_wire(op)
+            cost.wire += wire
+            cost.by_coll[base] = cost.by_coll.get(base, 0.0) + wire
+            cost.n_coll += 1
+            cost.bytes += _shape_bytes(op.shape_str)
+            continue
+        if opc == "while":
+            bm = _ATTR_BODY.search(op.rest)
+            cdm = _ATTR_COND.search(op.rest)
+            if bm and bm.group(1) in comps:
+                trip = _trip_count(comps, cdm.group(1)) if cdm else 1
+                cost += _cost_of(comps, comps[bm.group(1)], memo).scaled(trip)
+            continue
+        if opc == "conditional":
+            brm = _ATTR_BRANCHES.search(op.rest)
+            if brm:
+                branches = [_cost_of(comps, comps[b.strip().lstrip("%")], memo)
+                            for b in brm.group(1).split(",")
+                            if b.strip().lstrip("%") in comps]
+                if branches:
+                    cost += max(branches, key=lambda c: c.flops + c.bytes)
+            continue
+        if opc == "call":
+            cm = _ATTR_TOAPPLY.search(op.rest) or _ATTR_CALLS.search(op.rest)
+            if cm and cm.group(1) in comps:
+                cost += _cost_of(comps, comps[cm.group(1)], memo)
+            continue
+        if opc == "dot":
+            cost.flops += _dot_flops(comp, op)
+            cost.bytes += _operand_bytes(comp, op) + _shape_bytes(op.shape_str)
+            continue
+        if opc == "fusion":
+            cm = _ATTR_CALLS.search(op.rest)
+            if cm and cm.group(1) in comps:
+                fused = comps[cm.group(1)]
+                cost.flops += _flops_only(comps, fused, memo)
+                cost.bytes += _fusion_bytes(comp, op, fused) \
+                    + _fusion_result_bytes(op, fused)
+            else:
+                cost.bytes += _operand_bytes(comp, op) \
+                    + _shape_bytes(op.shape_str)
+            continue
+        if opc in _SKIP_BYTES:
+            continue
+        if opc in _HALF_BYTES:
+            # in-place slice update / gather: traffic ~ 2x the small side,
+            # not the full base operand
+            cost.bytes += 2 * _shape_bytes(op.shape_str)
+            continue
+        # generic materializing op (copy, broadcast, reduce, sort, ...)
+        cost.bytes += _operand_bytes(comp, op) + _shape_bytes(op.shape_str)
+        cm = _ATTR_TOAPPLY.search(op.rest)
+        if cm and cm.group(1) in comps:
+            cost.flops += _flops_only(comps, comps[cm.group(1)], memo)
+    memo[key] = cost
+    return cost
+
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def top_contributors(text: str, top: int = 20) -> list[tuple[str, float, float]]:
+    """(label, bytes, wire) of the heaviest ops, loop-trip-weighted.
+
+    Labels are ``opcode @ <jax op_name tail>`` so a contributor maps straight
+    back to model code. Diagnosis tool for §Perf iterations.
+    """
+    comps, entry = parse_module(text)
+    if entry is None:
+        return []
+    acc: dict[str, list[float]] = {}
+
+    def label(op: Op) -> str:
+        m = _META_RE.search(op.rest)
+        tail = "/".join(m.group(1).split("/")[-3:]) if m else "?"
+        return f"{op.opcode} @ {tail}"
+
+    def walk(comp: Computation, scale: float, seen: tuple) -> None:
+        if comp.name in seen:
+            return
+        for op in comp.ops:
+            opc = op.opcode
+            base = opc.replace("-start", "")
+            if opc.endswith("-done"):
+                continue
+            if opc == "while":
+                bm = _ATTR_BODY.search(op.rest)
+                cdm = _ATTR_COND.search(op.rest)
+                if bm and bm.group(1) in comps:
+                    trip = _trip_count(comps, cdm.group(1)) if cdm else 1
+                    walk(comps[bm.group(1)], scale * trip,
+                         seen + (comp.name,))
+                continue
+            if base in COLLECTIVES:
+                wire, _ = _collective_wire(op)
+                ent = acc.setdefault(label(op), [0.0, 0.0])
+                ent[0] += scale * _shape_bytes(op.shape_str)
+                ent[1] += scale * wire
+                continue
+            if opc == "fusion":
+                cm = _ATTR_CALLS.search(op.rest)
+                if cm and cm.group(1) in comps:
+                    fused = comps[cm.group(1)]
+                    b = _fusion_bytes(comp, op, fused) \
+                        + _fusion_result_bytes(op, fused)
+                else:
+                    b = _operand_bytes(comp, op) + _shape_bytes(op.shape_str)
+                acc.setdefault(label(op), [0.0, 0.0])[0] += scale * b
+                continue
+            if opc in _SKIP_BYTES:
+                continue
+            if opc in _HALF_BYTES:
+                b = 2 * _shape_bytes(op.shape_str)
+            else:
+                b = _operand_bytes(comp, op) + _shape_bytes(op.shape_str)
+            acc.setdefault(label(op), [0.0, 0.0])[0] += scale * b
+
+    walk(comps[entry], 1.0, ())
+    rows = [(k, v[0], v[1]) for k, v in acc.items()]
+    rows.sort(key=lambda r: -(r[1] + 50.0 * r[2]))
+    return rows[:top]
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps, entry = parse_module(text)
+    if entry is None:
+        for name, c in comps.items():
+            if "main" in name:
+                entry = name
+                break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    cost = _cost_of(comps, comps[entry], {})
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "wire_bytes": cost.wire,
+        "collectives_by_op": dict(cost.by_coll),
+        "n_collectives": cost.n_coll,
+    }

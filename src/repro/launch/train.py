@@ -1,0 +1,72 @@
+"""Training launcher: real steps on the local device(s), or distributed
+when run under a TPU runtime (the mesh adapts to whatever jax sees).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \\
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import build_model
+from repro.training import (
+    AdamWConfig,
+    init_opt_state,
+    make_stream,
+    make_train_step,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    stream = make_stream(cfg, args.batch, args.seq, seed=args.seed)
+
+    t0 = time.monotonic()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == 1:
+            dt = time.monotonic() - t0
+            tok_s = step * args.batch * args.seq / dt
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f} "
+                  f"grad_norm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} tok/s={tok_s:.0f}")
+    if args.checkpoint_dir:
+        out = save_checkpoint(args.checkpoint_dir, args.steps,
+                              {"params": params, "opt": opt_state})
+        print(f"checkpoint -> {out}")
+
+
+if __name__ == "__main__":
+    main()

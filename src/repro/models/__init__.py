@@ -1,0 +1,26 @@
+from .common import (
+    DENSE,
+    GEMMA_PAIR,
+    HYBRID,
+    MAMBA2,
+    MOE,
+    BlockGroup,
+    ModelConfig,
+    ParamSpec,
+)
+from .transformer import LanguageModel
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig):
+    """Uniform constructor: enc-dec for audio, decoder-only otherwise."""
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    return LanguageModel(cfg)
+
+
+__all__ = [
+    "DENSE", "GEMMA_PAIR", "HYBRID", "MAMBA2", "MOE",
+    "BlockGroup", "ModelConfig", "ParamSpec",
+    "LanguageModel", "WhisperModel", "build_model",
+]

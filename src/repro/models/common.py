@@ -1,0 +1,272 @@
+"""Model substrate: configs, parameter-spec machinery, shared ops.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every leaf is
+described by a :class:`ParamSpec` carrying its *logical* sharding axes; the
+distributed layer maps logical axes to mesh axes (MaxText-style rules). The
+same spec tree yields (a) real initialized params for smoke tests/examples,
+and (b) ``ShapeDtypeStruct`` stand-ins for the multi-pod dry-run — full-size
+configs are never allocated on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------- block kinds
+
+DENSE = "dense"          # attn + swiglu mlp
+MOE = "moe"              # attn + mixture-of-experts mlp
+MAMBA2 = "mamba2"        # SSD state-space block
+HYBRID = "hybrid"        # mamba2 backbone + shared attention block (zamba2)
+GEMMA_PAIR = "gemma_pair"  # alternating local/global attention pair (gemma2)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGroup:
+    """A run of structurally-identical layers, scanned as one lax.scan."""
+
+    kind: str
+    count: int                      # number of scan steps
+    #: sliding window for local attention (None = full/causal)
+    window: Optional[int] = None
+    #: HYBRID: how many mamba layers per scan step (shared attn fires once per step)
+    mamba_per_step: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    groups: tuple[BlockGroup, ...] = ()
+
+    # attention options
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None       # gemma2: 50.0
+    final_softcap: Optional[float] = None      # gemma2: 30.0
+    sliding_window: Optional[int] = None       # uniform SWA (mixtral)
+    rope_theta: float = 1e4
+    mrope_sections: Optional[tuple[int, int, int]] = None  # qwen2-vl (t,h,w)
+
+    # MoE options
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    router_aux_coef: float = 0.01
+    #: GShard-style per-expert capacity = tokens*k/E * this factor; overflow
+    #: tokens are dropped (residual stream still carries them). Set to
+    #: num_experts/experts_per_token (or higher) for dropless behaviour.
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba2) options
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    ssm_groups: int = 1
+
+    # hybrid (zamba2) options
+    shared_attn_every: int = 6
+    shared_attn_lora_rank: int = 0   # >0: per-invocation LoRA deltas on qkv
+
+    # enc-dec (whisper) options
+    encoder_layers: int = 0
+    encoder_frames: int = 1500       # whisper-base source positions
+
+    # numerics / impl
+    param_dtype: Any = jnp.bfloat16
+    activation_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    gemma_norm_plus_one: bool = False
+    attn_impl: str = "reference"     # reference | chunked | pallas | auto
+    remat: bool = False              # activation checkpointing per scan step
+    #: "per_layer": checkpoint each scan step (stores L residuals);
+    #: "two_level": nested sqrt-N checkpointing — outer scan over layer
+    #: blocks, inner scan over layers, both checkpointed: stores
+    #: O(L/G + G) residuals at ~1 extra forward recompute. §Perf lever for
+    #: memory-bound train combos.
+    remat_policy: str = "per_layer"
+    remat_block: int = 8             # two_level: layers per outer block
+    source_cite: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Total trainable parameters (for 6ND model-FLOPs accounting)."""
+        return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+            param_specs_fn(self)))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        total = self.param_count()
+        if self.num_experts and self.experts_per_token:
+            expert_p = 3 * self.d_model * self.moe_d_ff  # per expert, per layer
+            n_moe_layers = self.num_layers
+            inactive = (self.num_experts - self.experts_per_token) * expert_p \
+                * n_moe_layers
+            return total - inactive
+        return total
+
+
+# ----------------------------------------------------------------- param specs
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    #: logical axis name per dim (None = replicated dim). See distributed/sharding.py
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"             # normal | zeros | ones
+    #: fan-in for scaled init (0 -> last-but-one dim)
+    fan_in: int = 0
+    dtype: Any = None                # None -> cfg.param_dtype
+
+    def initializer(self, key: jax.Array, cfg: ModelConfig) -> jax.Array:
+        dtype = self.dtype or cfg.param_dtype
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan = self.fan_in or (self.shape[-2] if len(self.shape) >= 2 else self.shape[-1])
+        scale = 1.0 / math.sqrt(max(fan, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_from_specs(specs, key: jax.Array, cfg: ModelConfig):
+    leaves, treedef = jax.tree.flatten(specs,
+                                       is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [s.initializer(k, cfg) for s, k in zip(leaves, keys)])
+
+
+def abstract_from_specs(specs, cfg: ModelConfig):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or cfg.param_dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_from_specs(specs):
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# late-bound to avoid circular import (transformer.py registers it)
+param_specs_fn: Callable[[ModelConfig], Any] = lambda cfg: (_ for _ in ()).throw(
+    RuntimeError("param_specs_fn not registered"))
+
+
+def register_param_specs(fn) -> None:
+    global param_specs_fn
+    param_specs_fn = fn
+
+
+# ----------------------------------------------------------------- shared ops
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float, plus_one: bool = False
+             ) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    angles = angles[..., None, :]                       # add head axis
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL §2.1): the head_dim/2 frequency slots are
+    split into (temporal, height, width) sections, each rotated by its own
+    position stream. positions: (3, ..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    assert sum(sections) == hd // 2, (sections, hd)
+    # per-frequency-slot section selector: slot i rotates by positions[sec(i)]
+    sec_id = jnp.asarray(np.repeat(np.arange(3), np.asarray(sections)))  # (hd/2,)
+    pos = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)    # (..., seq, 3)
+    pos = pos[..., sec_id]                               # (..., seq, hd/2)
+    angles = pos * freqs                                 # (..., seq, hd/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (f32)."""
+    log_timescale = math.log(10000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+           ) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w_in + b_in) @ w_out + b_out
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits (..., V) f32-accumulated; targets int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,244 @@
+"""Mamba2 block — SSD (state-space duality) per arXiv:2405.21060.
+
+Prefill uses the chunked SSD algorithm (quadratic within chunks via the
+semiseparable decay matrix, linear across chunks via state recurrence);
+decode is the O(1)-per-token recurrence on the (H, P, N) state. The chunked
+scan here (``ssd_reference``) is pure jnp and doubles as the oracle for the
+Pallas ``ssd_scan`` kernel; ``cfg.attn_impl == 'pallas'`` switches the block
+to the kernel.
+
+TPU adaptation notes:
+
+* The canonical CUDA implementation fuses one ``in_proj`` over the packed
+  (z | x | B | C | dt) output. We *split* the projection (and the depthwise
+  conv) per semantic part: the big d_inner parts shard cleanly over the
+  ``model`` mesh axis while the small B/C/dt parts stay replicated —
+  a packed matrix cannot be given a single valid PartitionSpec because its
+  output dim mixes differently-sharded segments. Depthwise conv is
+  channelwise, so splitting it is exact.
+* Heads (H = d_inner/head_dim) shard over ``model``; the decode state
+  (B, H, P, N) is tiny (mamba2-2.7b: 80·64·128 ≈ 2.6 MB/seq), which is
+  exactly why SSM stages are the best case for MultiWorld online
+  instantiation — replica spin-up moves megabytes, not a 32k KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from .common import ModelConfig, rms_norm
+
+NEG_INF = -1e30
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L): out[i, j] = sum_{j < m <= i} x[m], -inf above diag."""
+    l = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    d = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array, chunk: int,
+                  initial_state: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (ssd_minimal_discrete of the Mamba2 paper).
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative decay;
+    b, c: (B, S, N) (single group, broadcast over heads).
+    Returns y (B, S, H, P), final_state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xd = x * dt[..., None]                              # discretized input
+    da = dt * a[None, None, :]                          # (B,S,H) log-decay
+    # chunked views
+    xc = xd.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)   # (B,H,C,L)
+    bc_ = b.reshape(bsz, nc, chunk, n)
+    cc_ = c.reshape(bsz, nc, chunk, n)
+
+    da_cum = jnp.cumsum(dac, axis=-1)                   # (B,H,C,L)
+    decay = jnp.exp(segsum(dac))                        # (B,H,C,L,L)
+
+    # intra-chunk (quadratic) term
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc_, bc_, decay, xc)
+
+    # chunk-final states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)   # (B,H,C,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc_, decay_states, xc)
+
+    # inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), states.dtype)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)  # (B,C+1,H,P,N)
+    chunk_decay = jnp.exp(
+        segsum(jnp.pad(da_cum[..., -1], ((0, 0), (0, 0), (1, 0)))))     # (B,H,C+1,C+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", chunk_decay, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # inter-chunk (linear) output term
+    state_decay_out = jnp.exp(da_cum)                   # (B,H,C,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc_, prev_states,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_step(state: jax.Array, x: jax.Array, dt: jax.Array, a: jax.Array,
+             b: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state (B,H,P,N); x (B,H,P); dt (B,H); b,c (B,N)."""
+    da = jnp.exp(dt * a[None, :])                       # (B,H)
+    incr = jnp.einsum("bh,bn,bhp->bhpn", dt, b, x)
+    state = state * da[..., None, None] + incr
+    y = jnp.einsum("bhpn,bn->bhp", state, c)
+    return state, y
+
+
+# ----------------------------------------------------------------- full block
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C); w (C,W); bias (C,)."""
+    width = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(width):
+        acc = acc + pad[:, i:i + s, :].astype(jnp.float32) * \
+            w[None, None, :, i].astype(jnp.float32)
+    return (acc + bias[None, None, :].astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_step(x_new: jax.Array, conv_state: jax.Array, w: jax.Array,
+               bias: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One-token depthwise conv. x_new (B,C); conv_state (B,W-1,C)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return out.astype(x_new.dtype), window[:, 1:]
+
+
+def _proj_parts(cfg: ModelConfig, p, x: jax.Array):
+    """Split projections (see module docstring): z, x_in, b, c, dt_raw."""
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    b = x @ p["in_b"]
+    c = x @ p["in_c"]
+    dt_raw = x @ p["in_dt"]
+    return z, xr, b, c, dt_raw
+
+
+def mamba2_prefill(cfg: ModelConfig, p, x: jax.Array,
+                   return_state: bool = False):
+    """x (B,S,D) -> (B,S,D) [, decode-ready state]."""
+    bsz, s, _ = x.shape
+    h, pd, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z, xr, b_pre, c_pre, dt_raw = _proj_parts(cfg, p, x)
+    xr = constrain(xr, "batch", "seq", "ssm_inner")
+    xin = jax.nn.silu(_causal_conv(xr, p["conv_x_w"], p["conv_x_b"]))
+    b = jax.nn.silu(_causal_conv(b_pre, p["conv_b_w"], p["conv_b_b"]))
+    c = jax.nn.silu(_causal_conv(c_pre, p["conv_c_w"], p["conv_c_b"]))
+
+    xin = xin.reshape(bsz, s, h, pd)
+    xin = constrain(xin, "batch", "seq", "ssm_heads", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    chunk = min(cfg.ssm_chunk, s)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        y, final_state = kops.ssd_scan(
+            xin.astype(jnp.float32), dt, a, b.astype(jnp.float32),
+            c.astype(jnp.float32), chunk=chunk)
+    else:
+        y, final_state = ssd_reference(
+            xin.astype(jnp.float32), dt, a, b.astype(jnp.float32),
+            c.astype(jnp.float32), chunk=chunk)
+    y = y.astype(x.dtype) + p["d_skip"][None, None, :, None].astype(x.dtype) * xin
+    y = y.reshape(bsz, s, cfg.ssm_d_inner)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    # decode-ready state: SSD state + the last W-1 *pre-conv* inputs
+    w = cfg.ssm_conv_width
+    state = {
+        "ssm": final_state,
+        "conv_x": _conv_tail(xr, w, x.dtype),
+        "conv_b": _conv_tail(b_pre, w, x.dtype),
+        "conv_c": _conv_tail(c_pre, w, x.dtype),
+    }
+    return out, state
+
+
+def _conv_tail(pre: jax.Array, width: int, dtype) -> jax.Array:
+    """Last width-1 positions of the pre-conv stream (B,S,C) -> (B,W-1,C),
+    left-padded with zeros when S < W-1 (matching causal conv padding)."""
+    bsz, s, ch = pre.shape
+    if s >= width - 1:
+        return pre[:, s - (width - 1):, :].astype(dtype)
+    pad = jnp.zeros((bsz, width - 1 - s, ch), dtype)
+    return jnp.concatenate([pad, pre.astype(dtype)], axis=1)
+
+
+def mamba2_state_shapes(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, pd, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    gn = cfg.ssm_groups * n
+    w = cfg.ssm_conv_width
+    return {
+        "ssm": ((batch, h, pd, n), jnp.float32),
+        "conv_x": ((batch, w - 1, cfg.ssm_d_inner), dtype),
+        "conv_b": ((batch, w - 1, gn), dtype),
+        "conv_c": ((batch, w - 1, gn), dtype),
+    }
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {k: jnp.zeros(sh, dt)
+            for k, (sh, dt) in mamba2_state_shapes(cfg, batch, dtype).items()}
+
+
+def mamba2_abstract_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in mamba2_state_shapes(cfg, batch, dtype).items()}
+
+
+def mamba2_decode(cfg: ModelConfig, p, x: jax.Array, state: dict
+                  ) -> tuple[jax.Array, dict]:
+    """x (B,1,D) -> (y (B,1,D), new state)."""
+    bsz = x.shape[0]
+    h, pd, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z, xr, b, c, dt_raw = _proj_parts(cfg, p, x[:, 0])
+    xin, new_cx = _conv_step(xr, state["conv_x"], p["conv_x_w"], p["conv_x_b"])
+    b, new_cb = _conv_step(b, state["conv_b"], p["conv_b_w"], p["conv_b_b"])
+    c, new_cc = _conv_step(c, state["conv_c"], p["conv_c_w"], p["conv_c_b"])
+    xin, b, c = jax.nn.silu(xin), jax.nn.silu(b), jax.nn.silu(c)
+
+    xin = xin.reshape(bsz, h, pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    new_ssm, y = ssd_step(state["ssm"], xin.astype(jnp.float32), dt, a,
+                          b.astype(jnp.float32), c.astype(jnp.float32))
+    y = y.astype(x.dtype) + p["d_skip"][None, :, None].astype(x.dtype) * xin
+    y = y.reshape(bsz, cfg.ssm_d_inner)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm": new_ssm, "conv_x": new_cx, "conv_b": new_cb,
+                 "conv_c": new_cc}

@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment carve-out, the audio frontend (log-mel + conv feature
+extractor) is a stub: the model consumes precomputed frame embeddings
+(B, T_frames, d_model) from ``input_specs``. This module implements the
+transformer backbone: bidirectional encoder, causal decoder with per-layer
+cross-attention, sinusoidal positions, GELU MLPs, tied decoder embeddings.
+(Norms are RMSNorm rather than LayerNorm — uniform with the rest of the zoo;
+dims/attention structure follow whisper-base.)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from . import attention as attn
+from .common import (
+    ModelConfig,
+    ParamSpec,
+    abstract_from_specs,
+    axes_from_specs,
+    cross_entropy_loss,
+    gelu_mlp,
+    init_from_specs,
+    rms_norm,
+    sinusoidal_positions,
+)
+from .transformer import _attn_specs, _norm, _stack_tree
+
+PS = ParamSpec
+
+
+def _mlp_bias_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": PS((d, f), ("embed", "mlp")),
+        "b_in": PS((f,), ("mlp",), init="zeros"),
+        "w_out": PS((f, d), ("mlp", "embed")),
+        "b_out": PS((d,), (None,), init="zeros"),
+    }
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {"ln1": _norm(cfg.d_model), "attn": _attn_specs(cfg),
+            "ln2": _norm(cfg.d_model), "mlp": _mlp_bias_specs(cfg)}
+
+
+def _dec_layer_specs(cfg: ModelConfig) -> dict:
+    s = _enc_layer_specs(cfg)
+    s["lnx"] = _norm(cfg.d_model)
+    s["xattn"] = _attn_specs(cfg)
+    return s
+
+
+def whisper_param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": PS((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                    fan_in=cfg.d_model),
+        "enc": _stack_tree(_enc_layer_specs(cfg), cfg.encoder_layers),
+        "dec": _stack_tree(_dec_layer_specs(cfg), cfg.num_layers),
+        "enc_norm": _norm(cfg.d_model),
+        "final_norm": _norm(cfg.d_model),
+    }
+
+
+def _mlp(p, x):
+    return gelu_mlp(x, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames (B, T, D) stub-frontend embeddings -> encoder states (B, T, D)."""
+    t = frames.shape[1]
+    x = frames.astype(cfg.activation_dtype)
+    x = x + sinusoidal_positions(t, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, "batch", "frames", "act_embed")
+
+    def step(x, p):
+        h = attn.self_attention_prefill(
+            cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), None,
+            causal=False, use_rope=False)
+        x = x + h
+        x = x + _mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    if cfg.remat:
+        step = jax.checkpoint(step)
+    x, _ = jax.lax.scan(step, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg: ModelConfig, p_x, enc: jax.Array):
+    k = jnp.einsum("btd,dhk->bthk", enc, p_x["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc, p_x["wv"])
+    return k, v
+
+
+def decoder_forward(cfg: ModelConfig, params, tokens: jax.Array,
+                    enc: jax.Array) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    bsz, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, "batch", "act_seq", "act_embed")
+
+    def step(x, p):
+        h = attn.self_attention_prefill(
+            cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), None,
+            causal=True, use_rope=False)
+        x = x + h
+        xk, xv = _cross_kv(cfg, p["xattn"], enc)
+        x = x + attn.cross_attention(
+            cfg, p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), xk, xv)
+        x = x + _mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    if cfg.remat:
+        step = jax.checkpoint(step)
+    x, _ = jax.lax.scan(step, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    return constrain(logits, "batch", "act_seq", "vocab")
+
+
+class WhisperModel:
+    """Enc-dec handle mirroring the LanguageModel API where it can."""
+
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+
+    def param_specs(self):
+        return whisper_param_specs(self.cfg)
+
+    def init(self, key):
+        return init_from_specs(self.param_specs(), key, self.cfg)
+
+    def abstract_params(self):
+        return abstract_from_specs(self.param_specs(), self.cfg)
+
+    def logical_axes(self):
+        return axes_from_specs(self.param_specs())
+
+    def forward(self, params, tokens, *, frames=None, **_):
+        enc = encode(self.cfg, params, frames)
+        return decoder_forward(self.cfg, params, tokens, enc), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   frames=batch["frames"])
+        ce = cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+        return ce, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- decoding
+    def _cache_shapes(self, batch: int, max_len: int, dtype):
+        cfg = self.cfg
+        kv = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.hd)
+        xkv = (cfg.num_layers, batch, cfg.encoder_frames, cfg.num_kv_heads,
+               cfg.hd)
+        return {"self_k": (kv, dtype), "self_v": (kv, dtype),
+                "cross_k": (xkv, dtype), "cross_v": (xkv, dtype)}
+
+    def init_cache(self, batch, max_len, dtype=None):
+        dtype = dtype or self.cfg.activation_dtype
+        return {k: jnp.zeros(sh, dt) for k, (sh, dt)
+                in self._cache_shapes(batch, max_len, dtype).items()}
+
+    def abstract_cache(self, batch, max_len, dtype=None):
+        dtype = dtype or self.cfg.activation_dtype
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt)
+                in self._cache_shapes(batch, max_len, dtype).items()}
+
+    def cache_logical_axes(self, batch, max_len):
+        kv = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        xkv = ("layers", "batch", "frames", "kv_heads", "head_dim")
+        return {"self_k": kv, "self_v": kv, "cross_k": xkv, "cross_v": xkv}
+
+    def prime_cache(self, params, cache, frames):
+        """Fill cross-attention K/V from the encoder (prefill-time)."""
+        cfg = self.cfg
+        enc = encode(cfg, params, frames)
+
+        def step(_, p):
+            return None, _cross_kv(cfg, p["xattn"], enc)
+
+        _, (xk, xv) = jax.lax.scan(step, None, params["dec"])
+        return dict(cache, cross_k=xk, cross_v=xv)
+
+    def decode_step(self, params, cache, tokens, t, **_):
+        """tokens (B,1) -> (logits (B,V), new cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.activation_dtype)
+        pos_table = sinusoidal_positions(cache["self_k"].shape[2],
+                                         cfg.d_model).astype(x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pos_table, t, 1, axis=0)[None]
+
+        def step(x, layer):
+            p, ck, cv, xk, xv = layer
+            h, nc = attn.self_attention_decode(
+                cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                {"k": ck, "v": cv}, t, window=None, use_rope=False)
+            x = x + h
+            x = x + attn.cross_attention(
+                cfg, p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), xk, xv)
+            x = x + _mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            return x, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(
+            step, x, (params["dec"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0]
+        return logits.astype(jnp.float32), dict(cache, self_k=nk, self_v=nv)

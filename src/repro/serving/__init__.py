@@ -1,0 +1,19 @@
+from .engine import ServeEngine, sample_tokens
+from .partition import (
+    StageSpec,
+    split_stages,
+    stage_decode,
+    stage_forward,
+    stage_init_cache,
+    stage_params,
+    stage_prefill,
+)
+from .pipeline import CLIENT, PipelineServer
+from .router import ReplicaRouter
+
+__all__ = [
+    "ServeEngine", "sample_tokens",
+    "StageSpec", "split_stages", "stage_decode", "stage_forward",
+    "stage_init_cache", "stage_params", "stage_prefill",
+    "CLIENT", "PipelineServer", "ReplicaRouter",
+]

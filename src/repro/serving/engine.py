@@ -1,0 +1,75 @@
+"""Single-replica serving engine: batched prefill + token-by-token decode.
+
+The building block each MultiWorld pipeline stage replica runs internally;
+also usable standalone (examples/quickstart.py). Compiles one prefill and
+one decode executable per (batch, seq) bucket and reuses them across
+requests — the paper's NCCL-lazy-init throughput dip has its analogue here
+as the first-call compile, which bench_online.py measures.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float
+                  ) -> jax.Array:
+    """logits (B, V) -> (B,) int32."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_len: int = 256,
+                 temperature: float = 0.0) -> None:
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, max_len))
+        self._decode = jax.jit(
+            lambda p, c, tk, t: model.decode_step(p, c, tk, t))
+        self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "tokens_out": 0, "compile_s": 0.0}
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 key: Optional[jax.Array] = None) -> np.ndarray:
+        """prompts (B, S) int32 -> (B, max_new_tokens) int32."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        toks = jnp.asarray(prompts, jnp.int32)
+        bsz, s = toks.shape
+        assert s + max_new_tokens <= self.max_len
+
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, toks)
+        self.stats["prefill_calls"] += 1
+
+        out = []
+        key, sub = jax.random.split(key)
+        next_tok = sample_tokens(logits[:, -1], sub, self.temperature)
+        out.append(next_tok)
+        t = s
+        for _ in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache,
+                                         next_tok[:, None], jnp.int32(t))
+            next_tok = sample_tokens(logits, sub, self.temperature)
+            out.append(next_tok)
+            t += 1
+            self.stats["decode_steps"] += 1
+        self.stats["tokens_out"] += bsz * max_new_tokens
+        self.stats["compile_s"] += time.monotonic() - t0
+        return np.stack([np.asarray(o) for o in out], axis=1)
+
+    def score(self, tokens: np.ndarray) -> np.ndarray:
+        """Teacher-forced logits (B, S, V) — the pipeline's prefill payload."""
+        logits, _ = self.model.forward(self.params, jnp.asarray(tokens))
+        return np.asarray(logits)

@@ -1,0 +1,234 @@
+"""MultiWorld pipeline server — the paper's Fig. 2 with real models.
+
+Topology: the model is split into N stages (serving/partition.py); each stage
+has one or more replica workers; every (upstream replica, downstream replica)
+pair gets its own pairwise world, as does every (client, stage-0 replica) and
+(last-stage replica, client) pair. Worlds are fault domains: a replica death
+breaks only its edges; upstream routers drop the broken worlds and keep
+serving through the survivors; ``add_replica`` performs online instantiation
+(new worker + fresh worlds) without touching any existing world.
+
+Payloads are (request_id, tensor) tuples moved zero-copy by the in-process
+transport; on real hardware the same worlds carry ICI/NCCL transfers.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Cluster, WorldBrokenError, WorldSpec
+from repro.core.online import OnlineInstantiator
+from .partition import StageSpec, split_stages, stage_forward, stage_params
+from .router import ReplicaRouter
+
+CLIENT = "client"
+
+
+def _edge(name: str, up: str, down: str) -> str:
+    return f"{name}:{up}->{down}"
+
+
+class _Replica:
+    def __init__(self, server: "PipelineServer", worker_id: str,
+                 stage: int) -> None:
+        self.server = server
+        self.worker_id = worker_id
+        self.stage = stage
+        self.worker = server.cluster.worker(worker_id)
+        self.upstream: list[str] = []          # world names we recv on
+        self.router = ReplicaRouter()          # downstream worlds we send on
+        self.inbox: asyncio.Queue = asyncio.Queue()
+        self._pumps: dict[str, asyncio.Task] = {}
+        self.processed = 0
+
+    def watch_upstream(self, world: str) -> None:
+        self.upstream.append(world)
+        self._pumps[world] = self.worker.spawn(self._pump(world))
+
+    async def _pump(self, world: str) -> None:
+        comm = self.worker.comm
+        try:
+            while True:
+                payload = await comm.recv(0, world)
+                await self.inbox.put(payload)
+        except (WorldBrokenError, asyncio.CancelledError):
+            return
+
+    async def run(self) -> None:
+        spec = self.server.stage_specs[self.stage]
+        fn = self.server.stage_fns[self.stage]
+        sparams = self.server.stage_param_sets[self.stage]
+        comm = self.worker.comm
+        loop = asyncio.get_event_loop()
+        while True:
+            req_id, x = await self.inbox.get()
+            # run compute (incl. first-call jit compile) off the event loop so
+            # watchdog heartbeats keep flowing — the same reason the paper
+            # moves blocking NCCL init to a side thread (§4.2)
+            y = await loop.run_in_executor(None, fn, sparams, x)
+            self.processed += 1
+            sent = False
+            while not sent:
+                world = self.router.pick()
+                try:
+                    await comm.send((req_id, y), 1, world)
+                    sent = True
+                except WorldBrokenError:
+                    self.router.mark_broken(world)
+
+
+class PipelineServer:
+    """Build/serve/heal a replicated stage pipeline on a MultiWorld cluster."""
+
+    def __init__(self, cluster: Cluster, model, params,
+                 replicas: list[int], *, name: str = "pipe") -> None:
+        self.cluster = cluster
+        self.model = model
+        self.cfg = model.cfg
+        self.name = name
+        self.replica_counts = replicas
+        self.n_stages = len(replicas)
+        self.stage_specs = split_stages(self.cfg, self.n_stages)
+        self.stage_param_sets = [stage_params(self.cfg, params, s)
+                                 for s in self.stage_specs]
+        self.stage_fns = [self._make_stage_fn(s) for s in self.stage_specs]
+        self.instantiator = OnlineInstantiator(cluster)
+        self.replicas: list[list[_Replica]] = [[] for _ in replicas]
+        self.client = cluster.worker(CLIENT)
+        self.client_router = ReplicaRouter()   # worlds to stage-0 replicas
+        self._responses: dict[int, asyncio.Future] = {}
+        self._req_ids = itertools.count()
+        self._uid = itertools.count()
+        self._collector: Optional[asyncio.Task] = None
+        self._collector_worlds: list[str] = []
+
+    def _make_stage_fn(self, spec: StageSpec):
+        cfg = self.cfg
+
+        @jax.jit
+        def fn(sparams, x):
+            return stage_forward(cfg, spec, sparams, x,
+                                 tokens_in=spec.first)
+
+        return fn
+
+    # ------------------------------------------------------------------ build
+    async def start(self) -> None:
+        for si, count in enumerate(self.replica_counts):
+            for _ in range(count):
+                await self.add_replica(si, _initial=True)
+        self._wire_fault_listeners()
+
+    def _wire_fault_listeners(self) -> None:
+        def on_break(owner_router: ReplicaRouter):
+            def cb(world: str, reason: str) -> None:
+                owner_router.mark_broken(world)
+            return cb
+        self.client.manager.on_world_broken(on_break(self.client_router))
+
+    async def add_replica(self, stage: int, _initial: bool = False) -> str:
+        """Online instantiation of one replica (paper Fig. 2c / §4.2)."""
+        worker_id = f"{self.name}-s{stage}-r{next(self._uid)}"
+        rep = _Replica(self, worker_id, stage)
+        specs: list[WorldSpec] = []
+        upstream_edges: list[tuple[str, Any]] = []   # (world, upstream router)
+        downstream_edges: list[str] = []
+
+        if stage == 0:
+            w = _edge(self.name, CLIENT, worker_id)
+            specs.append(WorldSpec.pair(w, CLIENT, worker_id))
+            upstream_edges.append((w, self.client_router))
+        else:
+            for up in self.replicas[stage - 1]:
+                w = _edge(self.name, up.worker_id, worker_id)
+                specs.append(WorldSpec.pair(w, up.worker_id, worker_id))
+                upstream_edges.append((w, up.router))
+        down_watchers: list[tuple[str, _Replica]] = []
+        if stage == self.n_stages - 1:
+            w = _edge(self.name, worker_id, CLIENT)
+            specs.append(WorldSpec.pair(w, worker_id, CLIENT))
+            downstream_edges.append(w)
+        else:
+            for down in self.replicas[stage + 1]:
+                w = _edge(self.name, worker_id, down.worker_id)
+                specs.append(WorldSpec.pair(w, worker_id, down.worker_id))
+                downstream_edges.append(w)
+                down_watchers.append((w, down))
+
+        await self.instantiator.instantiate(specs)
+
+        for world, router in upstream_edges:
+            rep.watch_upstream(world)
+            router.add(world)
+        for world in downstream_edges:
+            rep.router.add(world)
+        for world, down in down_watchers:
+            down.watch_upstream(world)   # downstream replicas pump the new edge
+        if stage == self.n_stages - 1:
+            self._watch_client_world(
+                _edge(self.name, worker_id, CLIENT))
+
+        # replica-side fault listener: broken downstream worlds leave rotation
+        rep.worker.manager.on_world_broken(
+            lambda wn, _r, router=rep.router: router.mark_broken(wn))
+
+        rep.worker.spawn(rep.run())
+        self.replicas[stage].append(rep)
+        return worker_id
+
+    # ---------------------------------------------------------------- serving
+    def _watch_client_world(self, world: str) -> None:
+        self._collector_worlds.append(world)
+        self.client.spawn(self._collect(world))
+
+    async def _collect(self, world: str) -> None:
+        comm = self.client.comm
+        try:
+            while True:
+                req_id, logits = await comm.recv(0, world)
+                fut = self._responses.pop(req_id, None)
+                if fut is not None and not fut.done():
+                    fut.set_result(logits)
+        except (WorldBrokenError, asyncio.CancelledError):
+            return
+
+    async def submit(self, tokens: np.ndarray, *, timeout: float = 30.0,
+                     retries: int = 2) -> jax.Array:
+        """Score a token batch through the pipeline; returns logits (B,S,V).
+
+        Beyond-paper nicety: at-least-once redispatch — if a replica dies
+        with the request in flight, the client re-sends after ``timeout``.
+        """
+        x = jnp.asarray(tokens, jnp.int32)
+        last_err: Optional[Exception] = None
+        for _ in range(retries + 1):
+            req_id = next(self._req_ids)
+            fut: asyncio.Future = asyncio.get_event_loop().create_future()
+            self._responses[req_id] = fut
+            world = self.client_router.pick()
+            try:
+                await self.client.comm.send((req_id, x), 1, world)
+                return await asyncio.wait_for(fut, timeout)
+            except WorldBrokenError as e:
+                self.client_router.mark_broken(world)
+                last_err = e
+            except asyncio.TimeoutError as e:
+                last_err = e
+            finally:
+                self._responses.pop(req_id, None)
+        raise RuntimeError(f"request failed after {retries + 1} attempts: "
+                           f"{last_err}")
+
+    # ------------------------------------------------------------------ intro
+    def healthy_replicas(self, stage: int) -> list[str]:
+        out = []
+        for rep in self.replicas[stage]:
+            if not rep.worker.alive:
+                continue
+            out.append(rep.worker_id)
+        return out

@@ -1,0 +1,40 @@
+"""Replica routing with health tracking.
+
+The upstream worker of a replicated stage (paper Fig. 2: P1 feeding P2/P3)
+routes each payload to one healthy replica world. When a world breaks the
+router drops it from rotation (fault tolerance); OnlineInstantiator can
+register replacement worlds at any time (online scaling).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+
+class ReplicaRouter:
+    def __init__(self, worlds: Optional[list[str]] = None) -> None:
+        self._worlds: list[str] = list(worlds or [])
+        self._dead: set[str] = set()
+        self._rr = itertools.count()
+        self.routed: dict[str, int] = {}
+
+    # -- membership ----------------------------------------------------------
+    def add(self, world: str) -> None:
+        if world not in self._worlds:
+            self._worlds.append(world)
+        self._dead.discard(world)
+
+    def mark_broken(self, world: str) -> None:
+        self._dead.add(world)
+
+    def healthy(self) -> list[str]:
+        return [w for w in self._worlds if w not in self._dead]
+
+    # -- routing --------------------------------------------------------------
+    def pick(self) -> str:
+        live = self.healthy()
+        if not live:
+            raise RuntimeError("no healthy replica worlds")
+        world = live[next(self._rr) % len(live)]
+        self.routed[world] = self.routed.get(world, 0) + 1
+        return world

@@ -1,0 +1,18 @@
+from .data import DataConfig, MarkovStream, UniformStream, make_stream
+from .optimizer import (
+    AdamWConfig,
+    abstract_opt_state,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+    init_opt_state,
+    opt_logical_axes,
+)
+from .train_step import make_train_step, shardings_for, train_state_axes
+
+__all__ = [
+    "DataConfig", "MarkovStream", "UniformStream", "make_stream",
+    "AdamWConfig", "abstract_opt_state", "adamw_update", "cosine_schedule",
+    "global_norm", "init_opt_state", "opt_logical_axes",
+    "make_train_step", "shardings_for", "train_state_axes",
+]

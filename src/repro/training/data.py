@@ -1,0 +1,100 @@
+"""Synthetic data pipeline.
+
+Two generators:
+
+* ``MarkovStream`` — tokens from a fixed random bigram table. A language
+  model *can learn* this distribution, so training examples show a real
+  falling loss curve, not noise.
+* ``UniformStream`` — i.i.d. tokens for shape/throughput exercises.
+
+Both are shardable (rank/num_shards split by seed), infinite, and produce
+``{tokens, targets}`` batches with next-token targets — the contract of
+``model.loss``. Multimodal variants attach stub frontend embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    batch_size: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    rank: int = 0
+    num_shards: int = 1
+    branching: int = 4          # Markov: candidate successors per token
+
+
+class MarkovStream:
+    def __init__(self, cfg: DataConfig) -> None:
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)  # table shared by all shards
+        v = cfg.vocab_size
+        self.successors = rng.integers(0, v, size=(v, cfg.branching))
+        self.rng = np.random.default_rng(
+            (cfg.seed + 1) * 7919 + cfg.rank)     # per-shard sampling stream
+
+    def _sequence(self, length: int) -> np.ndarray:
+        v = self.cfg.vocab_size
+        out = np.empty(length + 1, np.int32)
+        out[0] = self.rng.integers(0, v)
+        picks = self.rng.integers(0, self.cfg.branching, size=length)
+        for i in range(length):
+            out[i + 1] = self.successors[out[i], picks[i]]
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        b, s = self.cfg.batch_size, self.cfg.seq_len
+        while True:
+            seqs = np.stack([self._sequence(s) for _ in range(b)])
+            yield {"tokens": seqs[:, :-1], "targets": seqs[:, 1:]}
+
+
+class UniformStream:
+    def __init__(self, cfg: DataConfig) -> None:
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed * 31 + cfg.rank)
+
+    def __iter__(self) -> Iterator[dict]:
+        b, s, v = self.cfg.batch_size, self.cfg.seq_len, self.cfg.vocab_size
+        while True:
+            seqs = self.rng.integers(0, v, size=(b, s + 1), dtype=np.int32)
+            yield {"tokens": seqs[:, :-1], "targets": seqs[:, 1:]}
+
+
+def attach_frontend_stubs(batch: dict, cfg: ModelConfig,
+                          rng: np.random.Generator) -> dict:
+    """Add stub-modality inputs for audio/vlm families (assignment carve-out)."""
+    b, s = batch["tokens"].shape
+    if cfg.family == "audio":
+        batch["frames"] = rng.standard_normal(
+            (b, cfg.encoder_frames, cfg.d_model)).astype(np.float32) * 0.02
+    if cfg.family == "vlm":
+        batch["input_embeds"] = rng.standard_normal(
+            (b, s, cfg.d_model)).astype(np.float32) * 0.02
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None], (b, s))
+        batch["mrope_positions"] = np.stack([pos, pos, pos])
+    return batch
+
+
+def make_stream(cfg: ModelConfig, batch_size: int, seq_len: int,
+                kind: str = "markov", seed: int = 0, rank: int = 0,
+                num_shards: int = 1):
+    dc = DataConfig(batch_size=batch_size, seq_len=seq_len,
+                    vocab_size=cfg.vocab_size, seed=seed, rank=rank,
+                    num_shards=num_shards)
+    stream = MarkovStream(dc) if kind == "markov" else UniformStream(dc)
+    rng = np.random.default_rng(seed + 1234)
+
+    def gen():
+        for batch in stream:
+            yield attach_frontend_stubs(batch, cfg, rng)
+
+    return gen()

@@ -1,0 +1,68 @@
+"""Distributed train step factory.
+
+``make_train_step`` closes over (model, optimizer config) and returns the
+pure step function ``(params, opt_state, batch) -> (params, opt_state,
+metrics)``; ``shardings_for`` maps the logical axes of every argument through
+the active rule set so launch code can hand jit explicit in/out shardings —
+the same path the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.shapes import batch_logical_axes
+from repro.distributed import tree_logical_sharding
+from .optimizer import (
+    AdamWConfig,
+    abstract_opt_state,
+    adamw_update,
+    init_opt_state,
+    opt_logical_axes,
+)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_only(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_only, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_state_axes(model) -> tuple[Any, Any]:
+    """(param logical axes, opt-state logical axes)."""
+    p_axes = model.logical_axes()
+    return p_axes, opt_logical_axes(p_axes)
+
+
+def shardings_for(model, *, include_opt: bool = True):
+    """NamedShardings for (params, opt_state, batch) under the active rules.
+
+    Returns None outside an ``axis_rules`` context (single-device paths).
+    """
+    p_axes, o_axes = train_state_axes(model)
+    p_sh = tree_logical_sharding(p_axes)
+    if p_sh is None:
+        return None
+    b_axes = batch_logical_axes(model.cfg)
+    b_sh = tree_logical_sharding(b_axes)
+    if not include_opt:
+        return p_sh, b_sh
+    o_sh = tree_logical_sharding(o_axes)
+    return p_sh, o_sh, b_sh
+
+
+__all__ = [
+    "AdamWConfig", "abstract_opt_state", "init_opt_state",
+    "make_train_step", "shardings_for", "train_state_axes",
+]

@@ -1,0 +1,22 @@
+"""Shared test helpers.
+
+NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+benchmarks must see the single real CPU device; only launch/dryrun.py forces
+512 placeholder devices (and it does so before importing jax).
+"""
+import asyncio
+
+import pytest
+
+
+def run_async(coro, timeout: float = 60.0):
+    """Drive a coroutine to completion on a fresh event loop."""
+    async def _with_timeout():
+        return await asyncio.wait_for(coro, timeout)
+
+    return asyncio.run(_with_timeout())
+
+
+@pytest.fixture
+def arun():
+    return run_async

@@ -1,0 +1,42 @@
+"""Checkpointing: save/load round trip, bf16 leaves, latest-step discovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_smoke
+from repro.models import build_model
+
+
+def test_roundtrip_simple(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": [jnp.int32(3), jnp.zeros((2, 2))]}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    out = load_checkpoint(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = get_smoke("qwen3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 0, params)
+    out = load_checkpoint(str(tmp_path), 0, model.abstract_params())
+    toks = jnp.zeros((1, 8), jnp.int32)
+    l1, _ = model.forward(params, toks)
+    l2, _ = model.forward(out, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+
+
+def test_latest_step_multiple(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 5, 3):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 5
+    assert latest_step(str(tmp_path / "missing")) is None

@@ -1,0 +1,201 @@
+"""The paper's 8 collective operations, plus ordering and non-blocking props."""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Cluster
+
+
+async def make_world(c: Cluster, name: str, workers: list[str]):
+    await asyncio.gather(*[
+        c.worker(w).manager.initialize_world(name, r, len(workers))
+        for r, w in enumerate(workers)
+    ])
+
+
+def t(v):
+    return jnp.asarray(v, dtype=jnp.float32)
+
+
+def test_send_recv(arun):
+    async def scenario():
+        c = Cluster()
+        await make_world(c, "w", ["A", "B"])
+        x = t([1.0, 2.0, 3.0])
+
+        async def sender():
+            await c.worker("A").comm.send(x, dst=1, world_name="w")
+
+        async def receiver():
+            return await c.worker("B").comm.recv(src=0, world_name="w")
+
+        _, got = await asyncio.gather(sender(), receiver())
+        np.testing.assert_allclose(got, x)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_p2p_fifo_ordering(arun):
+    async def scenario():
+        c = Cluster()
+        await make_world(c, "w", ["A", "B"])
+        for i in range(20):
+            await c.worker("A").comm.send(t([float(i)]), 1, "w")
+        got = [float((await c.worker("B").comm.recv(0, "w"))[0]) for _ in range(20)]
+        assert got == [float(i) for i in range(20)]
+        c.shutdown()
+
+    arun(scenario())
+
+
+@pytest.mark.parametrize("op,expect", [
+    ("sum", 0 + 1 + 2), ("prod", 0), ("max", 2), ("min", 0),
+])
+def test_all_reduce_ops(arun, op, expect):
+    async def scenario():
+        c = Cluster()
+        ws = ["A", "B", "C"]
+        await make_world(c, "w", ws)
+        outs = await asyncio.gather(*[
+            c.worker(w).comm.all_reduce(t([float(r)]), "w", op=op)
+            for r, w in enumerate(ws)
+        ])
+        for o in outs:
+            np.testing.assert_allclose(o, [float(expect)])
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_broadcast(arun):
+    async def scenario():
+        c = Cluster()
+        ws = ["A", "B", "C"]
+        await make_world(c, "w", ws)
+        payload = t([7.0, 8.0])
+        outs = await asyncio.gather(
+            c.worker("A").comm.broadcast(payload, 0, "w"),
+            c.worker("B").comm.broadcast(None, 0, "w"),
+            c.worker("C").comm.broadcast(None, 0, "w"),
+        )
+        for o in outs:
+            np.testing.assert_allclose(o, payload)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_reduce_only_root_gets_result(arun):
+    async def scenario():
+        c = Cluster()
+        ws = ["A", "B", "C"]
+        await make_world(c, "w", ws)
+        outs = await asyncio.gather(*[
+            c.worker(w).comm.reduce(t([1.0]), root=1, world_name="w")
+            for r, w in enumerate(ws)
+        ])
+        np.testing.assert_allclose(outs[1], [3.0])  # root accumulated
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_gather_and_all_gather(arun):
+    async def scenario():
+        c = Cluster()
+        ws = ["A", "B", "C"]
+        await make_world(c, "w", ws)
+        gathered = await asyncio.gather(*[
+            c.worker(w).comm.gather(t([float(r)]), root=0, world_name="w")
+            for r, w in enumerate(ws)
+        ])
+        assert gathered[1] is None and gathered[2] is None
+        np.testing.assert_allclose(jnp.concatenate(gathered[0]), [0.0, 1.0, 2.0])
+
+        all_g = await asyncio.gather(*[
+            c.worker(w).comm.all_gather(t([float(r) * 10]), "w")
+            for r, w in enumerate(ws)
+        ])
+        for lst in all_g:
+            np.testing.assert_allclose(jnp.concatenate(lst), [0.0, 10.0, 20.0])
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_scatter(arun):
+    async def scenario():
+        c = Cluster()
+        ws = ["A", "B", "C"]
+        await make_world(c, "w", ws)
+        chunks = [t([float(i)]) for i in range(3)]
+        outs = await asyncio.gather(
+            c.worker("A").comm.scatter(chunks, 0, "w"),
+            c.worker("B").comm.scatter(None, 0, "w"),
+            c.worker("C").comm.scatter(None, 0, "w"),
+        )
+        for i, o in enumerate(outs):
+            np.testing.assert_allclose(o, [float(i)])
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_nonblocking_interleave_rhombus(arun):
+    """Fig. 2 deadlock-freedom: P4 receives from P2 and P3 in arbitrary order.
+
+    P4 posts recv(P2-world) *first* but P3's tensor arrives first; the pending
+    recv must not block the other world's recv (async + busy-wait polling)."""
+    async def scenario():
+        c = Cluster()
+        await make_world(c, "e24", ["P2", "P4"])
+        await make_world(c, "e34", ["P3", "P4"])
+        p4 = c.worker("P4").comm
+        order = []
+
+        async def recv_from(world, tag):
+            got = await p4.recv(0, world)
+            order.append((tag, float(got[0])))
+            return got
+
+        r2 = asyncio.ensure_future(recv_from("e24", "p2"))
+        r3 = asyncio.ensure_future(recv_from("e34", "p3"))
+        await asyncio.sleep(0.01)  # both recvs pending now
+        await c.worker("P3").comm.send(t([3.0]), 1, "e34")
+        await asyncio.sleep(0.01)
+        await c.worker("P2").comm.send(t([2.0]), 1, "e24")
+        await asyncio.gather(r2, r3)
+        assert order[0] == ("p3", 3.0), "late sender must not deadlock early recv"
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_recv_timeout(arun):
+    async def scenario():
+        c = Cluster()
+        await make_world(c, "w", ["A", "B"])
+        with pytest.raises(TimeoutError):
+            await c.worker("B").comm.recv(0, "w", timeout=0.05)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_big_tensor_roundtrip_multiple_dtypes(arun):
+    async def scenario():
+        c = Cluster()
+        await make_world(c, "w", ["A", "B"])
+        for dtype in (jnp.float32, jnp.bfloat16, jnp.int32):
+            x = jnp.arange(1 << 12, dtype=dtype).reshape(64, 64)
+            await c.worker("A").comm.send(x, 1, "w")
+            got = await c.worker("B").comm.recv(0, "w")
+            assert got.dtype == dtype
+            np.testing.assert_allclose(np.asarray(got, np.float64),
+                                       np.asarray(x, np.float64))
+        c.shutdown()
+
+    arun(scenario())

@@ -1,0 +1,185 @@
+"""Fault tolerance: watchdog detection, fencing, fault-domain isolation.
+
+Includes the paper's Fig. 4 scenario as a test (the timed benchmark version
+lives in benchmarks/bench_fault.py).
+"""
+import asyncio
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Cluster,
+    FailureKind,
+    WorldBrokenError,
+    WorldStatus,
+)
+
+
+def t(v):
+    return jnp.asarray(v, dtype=jnp.float32)
+
+
+async def make_world(c: Cluster, name: str, workers: list[str]):
+    await asyncio.gather(*[
+        c.worker(w).manager.initialize_world(name, r, len(workers))
+        for r, w in enumerate(workers)
+    ])
+
+
+def fast_cluster() -> Cluster:
+    return Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+
+
+def test_watchdog_detects_silent_hang(arun):
+    """The NCCL shared-memory case: no data-path error, only heartbeat loss."""
+    async def scenario():
+        c = fast_cluster()
+        await make_world(c, "w", ["A", "B"])
+        c.kill("B", FailureKind.SILENT_HANG)
+        # wait for A's watchdog to fence the world
+        for _ in range(200):
+            if c.worker("A").manager.worlds["w"].status is WorldStatus.BROKEN:
+                break
+            await asyncio.sleep(0.01)
+        assert c.worker("A").manager.worlds["w"].status is WorldStatus.BROKEN
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_pending_recv_aborts_on_world_break(arun):
+    async def scenario():
+        c = fast_cluster()
+        await make_world(c, "w", ["A", "B"])
+        pending = asyncio.ensure_future(c.worker("A").comm.recv(1, "w"))
+        await asyncio.sleep(0.02)
+        assert not pending.done()
+        c.kill("B", FailureKind.SILENT_HANG)
+        with pytest.raises(WorldBrokenError):
+            await asyncio.wait_for(pending, timeout=2.0)
+        assert c.worker("A").comm.ops_aborted == 1
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_detectable_crash_fails_fast(arun):
+    """ncclRemoteError analogue: data-path op converts to WorldBrokenError
+    without waiting a heartbeat timeout."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.02, heartbeat_timeout=10.0)  # slow watchdog
+        await make_world(c, "w", ["A", "B"])
+        c.kill("B", FailureKind.CRASH_DETECTABLE)
+        with pytest.raises(WorldBrokenError):
+            await c.worker("A").comm.recv(1, "w")
+        assert c.worker("A").manager.worlds["w"].status is WorldStatus.BROKEN
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_fault_domain_isolation(arun):
+    """Paper Fig. 2b: P3 dies; worlds without P3 keep working, and a worker
+    sharing no world with P3 never even notices."""
+    async def scenario():
+        c = fast_cluster()
+        # rhombus: P1->P2 (w12), P1->P3 (w13), P2->P4 (w24), P3->P4 (w34)
+        await make_world(c, "w12", ["P1", "P2"])
+        await make_world(c, "w13", ["P1", "P3"])
+        await make_world(c, "w24", ["P2", "P4"])
+        await make_world(c, "w34", ["P3", "P4"])
+        c.kill("P3", FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+
+        p1, p2, p4 = (c.worker(w).manager for w in ("P1", "P2", "P4"))
+        assert p1.worlds["w13"].status is WorldStatus.BROKEN
+        assert p4.worlds["w34"].status is WorldStatus.BROKEN
+        # healthy worlds untouched
+        assert p1.worlds["w12"].status is WorldStatus.HEALTHY
+        assert p2.worlds["w24"].status is WorldStatus.HEALTHY
+        # P2 shares no world with P3: completely unaffected
+        assert set(p2.healthy_worlds()) == {"w12", "w24"}
+
+        # traffic still flows end-to-end through the surviving path
+        await c.worker("P1").comm.send(t([1.0]), 1, "w12")
+        x = await c.worker("P2").comm.recv(0, "w12")
+        await c.worker("P2").comm.send(x + 1, 1, "w24")
+        y = await c.worker("P4").comm.recv(0, "w24")
+        assert float(y[0]) == 2.0
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_fig4_leader_continues_with_surviving_worker(arun):
+    """Paper Fig. 4b: leader is W1-R0 and W2-R0; W1-R1 keeps sending, W2-R1
+    dies after its 10th tensor; leader keeps receiving from W1-R1."""
+    async def scenario():
+        c = fast_cluster()
+        await make_world(c, "w1", ["L", "S1"])
+        await make_world(c, "w2", ["L", "S2"])
+        leader = c.worker("L").comm
+        received = {"w1": 0, "w2": 0}
+
+        async def sender(worker, world, n, die_after=None):
+            for i in range(n):
+                await c.worker(worker).comm.send(t([float(i)]), 0, world)
+                await asyncio.sleep(0.002)
+            if die_after is not None:
+                c.kill(worker, FailureKind.SILENT_HANG)
+
+        async def leader_recv(world, n):
+            for _ in range(n):
+                try:
+                    await leader.recv(1, world)
+                    received[world] += 1
+                except WorldBrokenError:
+                    return
+
+        await asyncio.gather(
+            sender("S1", "w1", 30),
+            sender("S2", "w2", 10, die_after=True),
+            leader_recv("w1", 30),
+            leader_recv("w2", 30),
+        )
+        assert received["w1"] == 30          # unaffected world drained fully
+        assert received["w2"] <= 10          # broken world aborted cleanly
+        assert c.worker("L").manager.worlds["w2"].status is WorldStatus.BROKEN
+        assert c.worker("L").manager.worlds["w1"].status is WorldStatus.HEALTHY
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_break_listener_fires_once(arun):
+    async def scenario():
+        c = fast_cluster()
+        await make_world(c, "w", ["A", "B"])
+        hits = []
+        c.worker("A").manager.on_world_broken(lambda n, r: hits.append((n, r)))
+        c.kill("B")
+        await asyncio.sleep(0.3)
+        assert len(hits) == 1 and hits[0][0] == "w"
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_node_failure_as_multiple_worker_failures(arun):
+    """Paper §3.1: 'node failure can be translated into failures of workers
+    running in the node'."""
+    async def scenario():
+        c = fast_cluster()
+        # node X hosts B and C; A is elsewhere
+        await make_world(c, "wab", ["A", "B"])
+        await make_world(c, "wac", ["A", "C"])
+        for w in ("B", "C"):
+            c.kill(w, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+        mgr = c.worker("A").manager
+        assert mgr.worlds["wab"].status is WorldStatus.BROKEN
+        assert mgr.worlds["wac"].status is WorldStatus.BROKEN
+        c.shutdown()
+
+    arun(scenario())

@@ -1,0 +1,124 @@
+"""Online instantiation (paper §3.1 Fig. 2c, §4.2): join without restart."""
+import asyncio
+
+import jax.numpy as jnp
+
+from repro.core import (
+    Cluster,
+    FailureKind,
+    OnlineInstantiator,
+    WorldSpec,
+    WorldStatus,
+)
+
+
+def t(v):
+    return jnp.asarray(v, dtype=jnp.float32)
+
+
+async def make_world(c, name, workers):
+    await asyncio.gather(*[
+        c.worker(w).manager.initialize_world(name, r, len(workers))
+        for r, w in enumerate(workers)
+    ])
+
+
+def test_join_does_not_disturb_existing_traffic(arun):
+    """Fig. 5 property: while the leader waits for W2-R1 to arrive, W1-R1's
+    traffic continues (init is non-blocking w.r.t. existing worlds)."""
+    async def scenario():
+        c = Cluster()
+        await make_world(c, "w1", ["L", "S1"])
+        leader = c.worker("L")
+        received = []
+
+        async def traffic():
+            for i in range(50):
+                await c.worker("S1").comm.send(t([float(i)]), 0, "w1")
+                got = await leader.comm.recv(1, "w1")
+                received.append(float(got[0]))
+
+        async def late_joiner():
+            await asyncio.sleep(0.05)  # join mid-traffic
+            await c.worker("S2").manager.initialize_world("w2", 1, 2)
+
+        # leader begins w2 init immediately; S2 arrives only later
+        traffic_task = asyncio.ensure_future(traffic())
+        await asyncio.gather(
+            leader.manager.initialize_world("w2", 0, 2, timeout=5.0),
+            late_joiner(),
+        )
+        await traffic_task
+        assert received == [float(i) for i in range(50)]
+        assert leader.manager.worlds["w2"].status is WorldStatus.HEALTHY
+        # and the new world is immediately usable
+        await c.worker("S2").comm.send(t([99.0]), 0, "w2")
+        got = await leader.comm.recv(1, "w2")
+        assert float(got[0]) == 99.0
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_instantiator_creates_pairwise_worlds(arun):
+    async def scenario():
+        c = Cluster()
+        inst = OnlineInstantiator(c)
+        specs = [
+            WorldSpec.pair("e15", "P1", "P5"),
+            WorldSpec.pair("e54", "P5", "P4"),
+        ]
+        await inst.instantiate(specs)
+        assert c.worker("P5").manager.worlds["e15"].rank_of("P5") == 1
+        assert c.worker("P5").manager.worlds["e54"].rank_of("P5") == 0
+        assert c.worker("P1").manager.worlds["e15"].status is WorldStatus.HEALTHY
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_full_fig2_cycle_fail_then_replace(arun):
+    """Fig. 2 end-to-end: rhombus -> P3 dies -> P5 replaces it with fresh
+    worlds -> data flows P1->P5->P4 on the new path."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        await make_world(c, "w1", ["P1", "P2"])   # paper Fig. 2 world numbering
+        await make_world(c, "w2", ["P1", "P3"])
+        await make_world(c, "w3", ["P2", "P4"])
+        await make_world(c, "w4", ["P3", "P4"])
+
+        c.kill("P3", FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+        assert c.worker("P1").manager.worlds["w2"].status is WorldStatus.BROKEN
+
+        inst = OnlineInstantiator(c)
+        specs = await inst.replace("P3", "P5", peers=["P1", "P4"])
+        (w_p1, w_p4) = specs
+        # P5 inherits P3's role: recv from P1, forward to P4
+        async def p5_stage():
+            x = await c.worker("P5").comm.recv(0, w_p1.name)
+            await c.worker("P5").comm.send(x * 2, 0, w_p4.name)
+
+        task = asyncio.ensure_future(p5_stage())
+        await c.worker("P1").comm.send(t([21.0]), 1, w_p1.name)
+        got = await c.worker("P4").comm.recv(1, w_p4.name)
+        await task
+        assert float(got[0]) == 42.0
+        # old healthy worlds still healthy
+        assert c.worker("P1").manager.worlds["w1"].status is WorldStatus.HEALTHY
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_join_latency_is_recorded(arun):
+    async def scenario():
+        c = Cluster()
+        inst = OnlineInstantiator(c)
+        await inst.instantiate([WorldSpec.pair("e", "A", "B")])
+        assert len(inst.joins) == 1
+        _, name, dt = inst.joins[0]
+        assert name == "e" and dt < 5.0
+        c.shutdown()
+
+    arun(scenario())

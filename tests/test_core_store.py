@@ -1,0 +1,70 @@
+"""Store (TCPStore analogue): KV, atomic add, wait, TTL expiry."""
+import threading
+import time
+
+from repro.core import Store
+
+
+def test_set_get_delete():
+    s = Store()
+    s.set("a", 1)
+    assert s.get("a") == 1
+    assert s.get("missing", "dflt") == "dflt"
+    assert s.delete("a") is True
+    assert s.delete("a") is False
+    assert s.get("a") is None
+
+
+def test_add_is_atomic_under_threads():
+    s = Store()
+    n_threads, n_incr = 8, 200
+
+    def worker():
+        for _ in range(n_incr):
+            s.add("ctr")
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert s.get("ctr") == n_threads * n_incr
+
+
+def test_keys_prefix():
+    s = Store()
+    s.set("world/w1/members/0", "a")
+    s.set("world/w1/members/1", "b")
+    s.set("world/w2/members/0", "c")
+    assert s.keys("world/w1/") == ["world/w1/members/0", "world/w1/members/1"]
+
+
+def test_ttl_expiry():
+    s = Store()
+    s.set("hb", time.monotonic(), ttl=0.05)
+    assert s.get("hb") is not None
+    assert 0 < s.ttl_remaining("hb") <= 0.05
+    time.sleep(0.08)
+    assert s.get("hb") is None
+    assert s.ttl_remaining("hb") is None
+
+
+def test_ttl_refresh_keeps_key_alive():
+    s = Store()
+    for _ in range(5):
+        s.set("hb", 1, ttl=0.08)
+        time.sleep(0.04)
+        assert s.get("hb") is not None
+
+
+def test_wait_success_and_timeout():
+    s = Store()
+
+    def later():
+        time.sleep(0.05)
+        s.set("k1", 1)
+        s.set("k2", 2)
+
+    t = threading.Thread(target=later)
+    t.start()
+    assert s.wait(["k1", "k2"], timeout=2.0) is True
+    t.join()
+    assert s.wait(["never"], timeout=0.05) is False

@@ -1,0 +1,96 @@
+"""World lifecycle: rendezvous, multiple worlds per worker, removal."""
+import asyncio
+
+import pytest
+
+from repro.core import Cluster, RendezvousTimeout, WorldStatus
+
+
+def test_two_worker_rendezvous(arun):
+    async def scenario():
+        c = Cluster()
+        a, b = c.worker("A"), c.worker("B")
+        wa, wb = await asyncio.gather(
+            a.manager.initialize_world("w1", 0, 2),
+            b.manager.initialize_world("w1", 1, 2),
+        )
+        assert wa.status is WorldStatus.HEALTHY
+        assert wb.members == {0: "A", 1: "B"}
+        assert wa.rank_of("A") == 0 and wa.rank_of("B") == 1
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_worker_in_multiple_worlds_with_different_ranks(arun):
+    """Paper §4.1: 'a process can be a leader for one world but a worker for
+    another' — W1-R0 / W2-R0 style multi-membership."""
+    async def scenario():
+        c = Cluster()
+        leader, w1, w2 = c.worker("L"), c.worker("P1"), c.worker("P2")
+        await asyncio.gather(
+            leader.manager.initialize_world("w1", 0, 2),
+            w1.manager.initialize_world("w1", 1, 2),
+            leader.manager.initialize_world("w2", 0, 2),
+            w2.manager.initialize_world("w2", 1, 2),
+        )
+        assert set(leader.manager.healthy_worlds()) == {"w1", "w2"}
+        assert leader.manager.worlds["w1"].rank_of("L") == 0
+        assert leader.manager.worlds["w2"].rank_of("L") == 0
+        assert w1.manager.healthy_worlds() == ["w1"]
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_rendezvous_timeout(arun):
+    async def scenario():
+        c = Cluster()
+        a = c.worker("A")
+        with pytest.raises(RendezvousTimeout):
+            await a.manager.initialize_world("lonely", 0, 2, timeout=0.1)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_remove_world_leaves_others_alone(arun):
+    async def scenario():
+        c = Cluster()
+        a, b = c.worker("A"), c.worker("B")
+        await asyncio.gather(
+            a.manager.initialize_world("w1", 0, 2),
+            b.manager.initialize_world("w1", 1, 2),
+            a.manager.initialize_world("w2", 0, 2),
+            b.manager.initialize_world("w2", 1, 2),
+        )
+        a.manager.remove_world("w1")
+        assert a.manager.worlds["w1"].status is WorldStatus.REMOVED
+        assert a.manager.worlds["w2"].status is WorldStatus.HEALTHY
+        # the store no longer advertises A's membership of w1
+        assert c.store.get("world/w1/members/0") is None
+        assert c.store.get("world/w2/members/0") == "A"
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_reinitialize_after_removal(arun):
+    """A removed world's name can be reused (fresh fault domain)."""
+    async def scenario():
+        c = Cluster()
+        a, b = c.worker("A"), c.worker("B")
+        await asyncio.gather(
+            a.manager.initialize_world("w", 0, 2),
+            b.manager.initialize_world("w", 1, 2),
+        )
+        a.manager.remove_world("w")
+        b.manager.remove_world("w")
+        wa, _ = await asyncio.gather(
+            a.manager.initialize_world("w", 0, 2),
+            b.manager.initialize_world("w", 1, 2),
+        )
+        assert wa.status is WorldStatus.HEALTHY
+        c.shutdown()
+
+    arun(scenario())

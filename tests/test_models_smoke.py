@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step +
+one decode step on CPU; assert output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import build_model
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key):
+    kt, kf = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(kf, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            kf, (B, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["input_embeds"] = jax.random.normal(
+            kf, (B, S, cfg.d_model), jnp.float32) * 0.02
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        batch["mrope_positions"] = jnp.stack([pos, pos, pos])
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(metrics["ce"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_grads_finite(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_only(p):
+        return model.loss(p, batch)[0]
+
+    grads = jax.jit(jax.grad(loss_only))(params)
+    flat = jax.tree.leaves(grads)
+    assert flat, "no grads produced"
+    for g in flat:
+        assert np.all(np.isfinite(np.asarray(g, np.float64))), \
+            f"{arch}: non-finite grad"
+    # at least some gradient signal
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in flat)
+    assert total > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = 32
+    cache = model.init_cache(B, max_len, jnp.float32)
+    if cfg.family == "audio":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_frames, cfg.d_model),
+            jnp.float32)
+        cache = model.prime_cache(params, cache, frames)
+
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(lambda p, c, tk, t: model.decode_step(
+        p, c, tk, t,
+        **({"mrope_positions": jnp.full((3, B, 1), t, jnp.int32)}
+           if cfg.family == "vlm" else {})))
+
+    for t in range(3):
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits, np.float64))), \
+            f"{arch}: non-finite logits at t={t}"
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
+def test_decode_matches_prefill_dense():
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_smoke("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 8), 0, cfg.vocab_size)
+
+    full_logits, _ = model.forward(params, toks)
+
+    cache = model.init_cache(B, 8, jnp.float32)
+    for t in range(8):
+        logits, cache = model.decode_step(
+            params, cache, toks[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill_ssm():
+    cfg = get_smoke("mamba2-2.7b").with_(ssm_chunk=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 8), 0, cfg.vocab_size)
+
+    full_logits, _ = model.forward(params, toks)
+
+    cache = model.init_cache(B, 8, jnp.float32)
+    for t in range(8):
+        logits, cache = model.decode_step(
+            params, cache, toks[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]),
+            rtol=5e-3, atol=5e-3)
+
+
+def test_sliding_window_ring_cache_matches_full():
+    """Ring-buffer SWA decode == full-cache decode with window mask."""
+    cfg = get_smoke("mixtral-8x7b")   # window 32 > test len -> also test short
+    # dropless capacity: prefill vs decode parity requires no capacity drops
+    cfg = cfg.with_(sliding_window=4, moe_capacity_factor=float(cfg.num_experts),
+                    groups=(type(cfg.groups[0])(
+                        cfg.groups[0].kind, cfg.groups[0].count, window=4),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 10), 0, cfg.vocab_size)
+
+    full_logits, _ = model.forward(params, toks)
+    cache = model.init_cache(B, 4, jnp.float32)   # ring cache of window size
+    for t in range(10):
+        logits, cache = model.decode_step(
+            params, cache, toks[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]),
+            rtol=5e-3, atol=5e-3, err_msg=f"t={t}")
+
+
+def test_param_counts_sane():
+    cfg = get_smoke("llama3.2-1b")
+    n = cfg.param_count()
+    assert n > 0
+    moe = get_smoke("mixtral-8x7b")
+    assert moe.active_param_count() < moe.param_count()

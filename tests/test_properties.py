@@ -1,0 +1,169 @@
+"""Hypothesis property tests on system invariants."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import Cluster, Store
+from repro.models.moe import _local_moe
+from repro.models.ssm import ssd_reference
+from repro.serving import ReplicaRouter
+
+FAST = settings(max_examples=15, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ------------------------------------------------------------------- store
+
+@FAST
+@given(st.dictionaries(st.text(min_size=1, max_size=8),
+                       st.integers(), max_size=16))
+def test_store_set_get_roundtrip(d):
+    s = Store()
+    for k, v in d.items():
+        s.set(k, v)
+    for k, v in d.items():
+        assert s.get(k) == v
+    assert set(s.keys()) == set(d)
+
+
+@FAST
+@given(st.lists(st.integers(min_value=-100, max_value=100), min_size=1,
+                max_size=30))
+def test_store_add_sums(increments):
+    s = Store()
+    for inc in increments:
+        s.add("ctr", inc)
+    assert s.get("ctr") == sum(increments)
+
+
+# ------------------------------------------------------------- communicator
+
+@FAST
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False), min_size=1, max_size=8),
+       st.integers(min_value=2, max_value=4))
+def test_all_reduce_equals_sum(values, world_size):
+    """all_reduce(sum) over any world size == elementwise sum of inputs."""
+    async def scenario():
+        c = Cluster()
+        workers = [c.worker(f"W{i}") for i in range(world_size)]
+        await asyncio.gather(*[
+            w.manager.initialize_world("w", i, world_size)
+            for i, w in enumerate(workers)])
+        inputs = [jnp.asarray(values, jnp.float32) * (i + 1)
+                  for i in range(world_size)]
+        outs = await asyncio.gather(*[
+            w.comm.all_reduce(inputs[i], "w")
+            for i, w in enumerate(workers)])
+        want = sum(np.asarray(x, np.float64) for x in inputs)
+        for o in outs:
+            np.testing.assert_allclose(np.asarray(o, np.float64), want,
+                                       rtol=1e-5)
+        c.shutdown()
+
+    asyncio.run(asyncio.wait_for(scenario(), 30))
+
+
+@FAST
+@given(st.integers(min_value=1, max_value=20),
+       st.integers(min_value=2, max_value=4))
+def test_scatter_gather_inverse(n_per_rank, world_size):
+    """gather(scatter(chunks)) == chunks, any sizes."""
+    async def scenario():
+        c = Cluster()
+        workers = [c.worker(f"W{i}") for i in range(world_size)]
+        await asyncio.gather(*[
+            w.manager.initialize_world("w", i, world_size)
+            for i, w in enumerate(workers)])
+        chunks = [jnp.full((n_per_rank,), float(i)) for i in range(world_size)]
+
+        async def rank(i):
+            got = await workers[i].comm.scatter(
+                chunks if i == 0 else None, 0, "w")
+            return await workers[i].comm.gather(got, 0, "w")
+
+        results = await asyncio.gather(*[rank(i) for i in range(world_size)])
+        for i, chunk in enumerate(chunks):
+            np.testing.assert_allclose(results[0][i], chunk)
+        c.shutdown()
+
+    asyncio.run(asyncio.wait_for(scenario(), 30))
+
+
+# ------------------------------------------------------------------ router
+
+@FAST
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=60))
+def test_router_conserves_and_balances(n_replicas, n_requests):
+    r = ReplicaRouter([f"w{i}" for i in range(n_replicas)])
+    picks = [r.pick() for _ in range(n_requests)]
+    assert sum(r.routed.get(f"w{i}", 0) for i in range(n_replicas)) \
+        == n_requests
+    counts = [picks.count(f"w{i}") for i in range(n_replicas)]
+    assert max(counts) - min(counts) <= 1   # round robin fairness
+
+
+# -------------------------------------------------------------------- moe
+
+@FAST
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_moe_dropless_capacity_processes_every_choice(seed):
+    """With capacity >= T*k, no token is dropped: output == dense mixture."""
+    key = jax.random.PRNGKey(seed)
+    t, d, e, k = 12, 8, 4, 2
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, t, d))
+    router = jax.random.normal(ks[1], (d, e))
+    wg = jax.random.normal(ks[2], (e, d, 16)) * 0.1
+    wu = jax.random.normal(ks[3], (e, d, 16)) * 0.1
+    wd = jax.random.normal(ks[4], (e, 16, d)) * 0.1
+
+    class Cfg:
+        experts_per_token = k
+        num_experts = e
+        moe_capacity_factor = float(e)
+
+    y, _ = _local_moe(Cfg, x, router, wg, wu, wd, e_offset=0, e_local=e,
+                      capacity=t * k, model_axis=None)
+    # dense reference: full softmax-top-k mixture
+    logits = (x.reshape(t, d) @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    w, ids = jax.lax.top_k(probs, k)
+    w = w / w.sum(-1, keepdims=True)
+    want = np.zeros((t, d), np.float32)
+    xf = np.asarray(x.reshape(t, d))
+    for i in range(t):
+        for j in range(k):
+            eidx = int(ids[i, j])
+            h = np.asarray(jax.nn.silu(xf[i] @ wg[eidx]) * (xf[i] @ wu[eidx]))
+            want[i] += float(w[i, j]) * (h @ np.asarray(wd[eidx]))
+    np.testing.assert_allclose(np.asarray(y.reshape(t, d)), want,
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------------- ssd
+
+@FAST
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from([8, 16, 32]))
+def test_ssd_chunk_size_invariance(seed, chunk):
+    """SSD output must not depend on chunking (recurrence associativity)."""
+    key = jax.random.PRNGKey(seed)
+    b, s, h, p, n = 1, 32, 2, 8, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    y1, s1 = ssd_reference(x, dt, a, bm, cm, chunk=chunk)
+    y2, s2 = ssd_reference(x, dt, a, bm, cm, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,74 @@
+"""Two-level (sqrt-N) remat must be numerically identical to per-layer
+remat — it only changes what is stored vs recomputed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import DENSE, BlockGroup, build_model
+
+
+def test_forward_bitwise_identical_across_policies():
+    """Remat changes what is stored vs recomputed, never the forward math:
+    outputs must be bitwise equal for no-remat / per-layer / two-level."""
+    from repro.models import transformer as tfm
+
+    base = get_smoke("llama3.2-1b").with_(
+        num_layers=8, groups=(BlockGroup(DENSE, 8),))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, base.d_model)) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (2, 16))
+    outs = []
+    for cfg in (base.with_(remat=False),
+                base.with_(remat=True, remat_policy="per_layer"),
+                base.with_(remat=True, remat_policy="two_level",
+                           remat_block=4)):
+        y, _ = tfm._group_prefill(cfg, base.groups[0], params["groups"][0],
+                                  x, pos, mrope=None, shared=None)
+        outs.append(np.asarray(y))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_two_level_remat_matches_per_layer():
+    """Gradients agree up to f32 recompute-reordering noise: same loss, and
+    per-leaf gradients aligned in norm and direction. (Bitwise equality is
+    not guaranteed — the VJP recompute schedules differ, reassociating f32
+    reductions; the forward IS bitwise equal, see above.)"""
+    base = get_smoke("llama3.2-1b").with_(
+        num_layers=8, groups=(BlockGroup(DENSE, 8),), remat=True)
+    cfg_a = base.with_(remat_policy="per_layer")
+    cfg_b = base.with_(remat_policy="two_level", remat_block=4)
+    model_a, model_b = build_model(cfg_a), build_model(cfg_b)
+    params = model_a.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg_a.vocab_size, (2, 16))),
+        "targets": jnp.asarray(rng.integers(0, cfg_a.vocab_size, (2, 16))),
+    }
+
+    la, ga = jax.value_and_grad(lambda p: model_a.loss(p, batch)[0])(params)
+    lb, gb = jax.value_and_grad(lambda p: model_b.loss(p, batch)[0])(params)
+    np.testing.assert_allclose(float(la), float(lb), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        a64 = np.asarray(a, np.float64).ravel()
+        b64 = np.asarray(b, np.float64).ravel()
+        na, nb = np.linalg.norm(a64), np.linalg.norm(b64)
+        if na < 1e-9 and nb < 1e-9:
+            continue
+        assert abs(na - nb) / max(na, nb) < 1e-2, (na, nb)
+        cos = float(a64 @ b64 / (na * nb))
+        assert cos > 0.999, cos
+
+
+def test_two_level_falls_back_when_indivisible():
+    """94 % 8 != 0 -> silently uses per-layer; forward must still work."""
+    cfg = get_smoke("llama3.2-1b").with_(
+        num_layers=6, groups=(BlockGroup(DENSE, 6),), remat=True,
+        remat_policy="two_level", remat_block=4)   # 6 % 4 != 0
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = model.forward(params, toks)
+    assert np.all(np.isfinite(np.asarray(logits)))

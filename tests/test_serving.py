@@ -1,0 +1,203 @@
+"""Serving substrate: engine generate, stage partitioning, pipeline e2e
+with fault tolerance + online scaling (paper Fig. 2 with a real model)."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import Cluster, FailureKind
+from repro.models import build_model
+from repro.serving import (
+    PipelineServer,
+    ReplicaRouter,
+    ServeEngine,
+    split_stages,
+    stage_forward,
+    stage_params,
+)
+
+from repro.models import DENSE, BlockGroup
+
+# 4 layers so 3-stage pipelines have enough scan units to split
+CFG = get_smoke("llama3.2-1b").with_(num_layers=4,
+                                     groups=(BlockGroup(DENSE, 4),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------- engine
+
+def test_engine_generate_deterministic():
+    eng = ServeEngine(MODEL, PARAMS, max_len=48, temperature=0.0)
+    prompts = np.random.default_rng(0).integers(0, CFG.vocab_size, (2, 8))
+    out1 = eng.generate(prompts, 8)
+    out2 = eng.generate(prompts, 8)
+    assert out1.shape == (2, 8)
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_engine_prefill_cache_matches_stepwise():
+    """generate() with prefill cache == pure decode_step replay."""
+    eng = ServeEngine(MODEL, PARAMS, max_len=32, temperature=0.0)
+    prompts = np.random.default_rng(1).integers(0, CFG.vocab_size, (1, 6))
+    out = eng.generate(prompts, 4)
+
+    # replay with decode_step from scratch
+    cache = MODEL.init_cache(1, 32, jnp.float32)
+    toks = jnp.asarray(prompts, jnp.int32)
+    for t in range(6):
+        logits, cache = MODEL.decode_step(PARAMS, cache, toks[:, t:t + 1],
+                                          jnp.int32(t))
+    want = [int(jnp.argmax(logits[0]))]
+    for t in range(6, 9):
+        nxt = jnp.asarray([[want[-1]]], jnp.int32)
+        logits, cache = MODEL.decode_step(PARAMS, cache, nxt, jnp.int32(t))
+        want.append(int(jnp.argmax(logits[0])))
+    np.testing.assert_array_equal(out[0], np.asarray(want))
+
+
+# ------------------------------------------------------------------ partition
+
+@pytest.mark.parametrize("n_stages", [1, 2, 3])
+def test_stage_partition_matches_monolith(n_stages):
+    toks = jnp.asarray(
+        np.random.default_rng(2).integers(0, CFG.vocab_size, (2, 16)))
+    want, _ = MODEL.forward(PARAMS, toks)
+    specs = split_stages(CFG, n_stages)
+    x = toks
+    for spec in specs:
+        sp = stage_params(CFG, PARAMS, spec)
+        x = stage_forward(CFG, spec, sp, x, tokens_in=spec.first)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stage_partition_hybrid_arch():
+    cfg = get_smoke("zamba2-2.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    toks = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab_size, (1, 16)))
+    want, _ = model.forward(params, toks)
+    specs = split_stages(cfg, 2)
+    x = toks
+    for spec in specs:
+        sp = stage_params(cfg, params, spec)
+        x = stage_forward(cfg, spec, sp, x, tokens_in=spec.first)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_router_rotation_and_health():
+    r = ReplicaRouter(["a", "b", "c"])
+    picks = [r.pick() for _ in range(6)]
+    assert picks == ["a", "b", "c", "a", "b", "c"]
+    r.mark_broken("b")
+    assert set(r.pick() for _ in range(4)) == {"a", "c"}
+    r.add("d")
+    assert "d" in r.healthy()
+    with pytest.raises(RuntimeError):
+        for w in list(r.healthy()):
+            r.mark_broken(w)
+        r.pick()
+
+
+# ------------------------------------------------------------------ pipeline
+
+def _tokens(batch=1, seq=12, seed=0):
+    return np.random.default_rng(seed).integers(0, CFG.vocab_size,
+                                                (batch, seq))
+
+
+def test_pipeline_end_to_end(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2, 1])
+        await server.start()
+        toks = _tokens()
+        want, _ = MODEL.forward(PARAMS, jnp.asarray(toks))
+        got = await server.submit(toks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        # middle-stage replicas share load over repeated requests
+        for _ in range(5):
+            await server.submit(toks)
+        counts = [r.processed for r in server.replicas[1]]
+        assert sum(counts) == 6 and min(counts) >= 1
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_pipeline_survives_replica_death(arun):
+    """Fig. 2b: kill one replica of the replicated stage; serving continues."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2, 1])
+        await server.start()
+        toks = _tokens(seed=4)
+        want, _ = MODEL.forward(PARAMS, jnp.asarray(toks))
+        await server.submit(toks)
+
+        victim = server.replicas[1][0]
+        c.kill(victim.worker_id, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)   # watchdogs fence the broken worlds
+
+        for seed in range(3):      # requests keep succeeding
+            got = await server.submit(_tokens(seed=4), timeout=5.0)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+        survivor = server.replicas[1][1]
+        assert survivor.processed >= 3
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_pipeline_online_scale_out(arun):
+    """Fig. 2c: add a replica to a live pipeline; it absorbs traffic."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1, 1])
+        await server.start()
+        toks = _tokens(seed=5)
+        await server.submit(toks)
+
+        new_id = await server.add_replica(1)
+        assert new_id in server.healthy_replicas(1)
+        for _ in range(6):
+            await server.submit(toks)
+        counts = {r.worker_id: r.processed for r in server.replicas[1]}
+        assert counts[new_id] >= 2, counts
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_pipeline_fail_then_online_replace(arun):
+    """Full cycle: death -> degraded serving -> online replacement -> healthy."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2, 1])
+        await server.start()
+        toks = _tokens(seed=6)
+        want, _ = MODEL.forward(PARAMS, jnp.asarray(toks))
+
+        c.kill(server.replicas[1][0].worker_id, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+        got = await server.submit(toks, timeout=5.0)   # degraded but alive
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+        new_id = await server.add_replica(1)           # heal
+        for _ in range(4):
+            await server.submit(toks)
+        counts = {r.worker_id: r.processed for r in server.replicas[1]
+                  if r.worker.alive}
+        assert counts.get(new_id, 0) >= 1, counts
+        c.shutdown()
+
+    arun(scenario())

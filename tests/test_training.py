@@ -1,0 +1,89 @@
+"""Training substrate: optimizer math, data pipeline, loss-goes-down."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.training import (
+    AdamWConfig,
+    DataConfig,
+    MarkovStream,
+    adamw_update,
+    cosine_schedule,
+    init_opt_state,
+    make_stream,
+    make_train_step,
+)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lr = cosine_schedule(cfg)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.int32(100))) <= 1e-3 * cfg.min_lr_ratio + 1e-9
+    # monotone decay after warmup
+    vals = [float(lr(jnp.int32(s))) for s in range(10, 101, 10)]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, grad_clip=1e9)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=0, total_steps=10, grad_clip=1.0,
+                      weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    _, _, metrics = adamw_update(cfg, params, {"w": jnp.full(4, 1e6)}, state)
+    assert float(metrics["grad_norm"]) > 1e5  # measured pre-clip
+
+
+def test_markov_stream_is_learnable_structure():
+    dc = DataConfig(batch_size=4, seq_len=32, vocab_size=64, seed=0)
+    stream = iter(MarkovStream(dc))
+    batch = next(stream)
+    assert batch["tokens"].shape == (4, 32)
+    # targets are tokens shifted by one
+    b2 = next(stream)
+    assert not np.array_equal(batch["tokens"], b2["tokens"])
+    # every transition must come from the successor table
+    ms = MarkovStream(dc)
+    seq = ms._sequence(100)
+    for i in range(100):
+        assert seq[i + 1] in ms.successors[seq[i]]
+
+
+def test_data_shards_differ():
+    cfg = get_smoke("llama3.2-1b")
+    s0 = next(make_stream(cfg, 2, 16, seed=1, rank=0, num_shards=2))
+    s1 = next(make_stream(cfg, 2, 16, seed=1, rank=1, num_shards=2))
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_loss_goes_down_small_model():
+    """~30 steps of AdamW on Markov data must beat the initial loss clearly."""
+    cfg = get_smoke("llama3.2-1b").with_(vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100,
+                          weight_decay=0.01)
+    state = init_opt_state(params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    stream = make_stream(cfg, 16, 32, seed=0)
+
+    losses = []
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.85, losses[::5]
