@@ -8,6 +8,7 @@ Prints ``name,value,derived`` CSV rows:
 * fig5  — online instantiation under live traffic
 * fig6/7 — MultiWorld throughput overhead vs single world, 1->1 and N->1
 * pipeline — end-to-end elastic pipeline latency (Fig. 2 scenario)
+* elastic — closed-loop autoscale/heal/drain scenario (control plane)
 """
 from __future__ import annotations
 
@@ -88,6 +89,8 @@ SUITES = {
     "fig6": lambda: __import__("benchmarks.bench_throughput",
                                fromlist=["run"]).run(),
     "pipeline": _rows_pipeline,
+    "elastic": lambda: __import__("benchmarks.bench_elastic",
+                                  fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

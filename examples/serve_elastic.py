@@ -1,0 +1,107 @@
+"""End-to-end driver: the elastic control plane, live.
+
+Where examples/serve_pipeline.py performs the paper's Fig. 2 scenario *by
+hand* (you kill, you add), this script hands the pipeline to the
+ElasticController and only injects traffic and one failure:
+
+  1. a 2-stage pipeline starts at [1, 1] replicas under calm Poisson traffic
+  2. a flash crowd arrives -> per-replica backlog crosses the policy target
+     -> the controller scales stages out via online instantiation
+  3. one scaled replica is killed (silent hang) -> watchdogs fence its
+     worlds -> the controller replaces it, no operator involved
+  4. the crowd leaves -> the controller drains-and-removes surplus replicas
+     back to the floor, with zero in-flight request loss
+
+  PYTHONPATH=src python examples/serve_elastic.py
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.control import (
+    BurstProfile,
+    ElasticController,
+    HysteresisPolicy,
+    OpenLoopGenerator,
+    TargetQueueDepthPolicy,
+)
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer
+
+
+async def main() -> None:
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                         groups=(BlockGroup(DENSE, 2),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    cluster = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.1)
+    server = PipelineServer(cluster, model, params, replicas=[1, 1],
+                            least_loaded=True)
+    await server.start()
+    print("pipeline up: stage0 x1 -> stage1 x1 (floor)")
+
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (8, 64))
+    await server.submit(toks)                       # warm compiles
+    t0 = time.monotonic()
+    for _ in range(10):
+        await server.submit(toks)
+    capacity = 10 / (time.monotonic() - t0)
+    print(f"single-replica capacity ~{capacity:.0f} req/s")
+
+    ctrl = ElasticController(
+        server,
+        HysteresisPolicy(
+            TargetQueueDepthPolicy(target=3.0, scale_down_at=0.3,
+                                   min_replicas=1, max_replicas=4),
+            confirm=2, cooldown_s=0.8),
+        interval=0.05)
+    ctrl.start()
+    print("controller on: observe -> decide -> act every 50 ms\n")
+
+    gen = OpenLoopGenerator(
+        lambda: server.submit(toks, timeout=4.0, retries=3),
+        BurstProfile(base=max(1.0, 0.15 * capacity),
+                     burst=min(100.0, 1.35 * capacity), t0=1.0, t1=3.0),
+        seed=1)
+
+    async def chaos():
+        # wait for the controller to scale out, then kill a scaled replica
+        while True:
+            await asyncio.sleep(0.05)
+            scaled = [s for s in range(server.n_stages)
+                      if len(server.healthy_replicas(s)) > 1]
+            if scaled:
+                victim = server.healthy_replicas(scaled[0])[0]
+                print(f"-- killing {victim} (silent hang) --")
+                cluster.kill(victim, FailureKind.SILENT_HANG)
+                return
+
+    chaos_task = asyncio.ensure_future(chaos())
+    summary = await gen.run(8.0)
+    await asyncio.sleep(1.5)                        # let scale-down finish
+    await ctrl.step()
+    await ctrl.stop()
+    chaos_task.cancel()
+
+    start = min(e.t for e in ctrl.timeline) if ctrl.timeline else 0.0
+    print("\ncontrol timeline:")
+    for e in ctrl.timeline:
+        print(f"  {e.t - start:6.2f}s  {e.kind:<11} stage{e.stage}  {e.detail}")
+    print(f"\ntraffic: {summary['ok']} ok / {summary['failed']} failed "
+          f"(p50 {summary['p50_s'] * 1e3:.0f} ms, "
+          f"p95 {summary['p95_s'] * 1e3:.0f} ms)")
+    print(f"controller: {ctrl.scale_ups} scale-ups, {ctrl.heals} heals, "
+          f"{ctrl.scale_downs} drain-and-removes; "
+          f"final replicas {ctrl.replica_counts()}")
+    assert summary["failed"] == 0
+    cluster.shutdown()
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

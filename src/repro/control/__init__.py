@@ -1,0 +1,36 @@
+"""Elastic control plane: the closed loop over MultiWorld's mechanisms.
+
+core/ gives worker-granular fault domains (worlds), out-of-band failure
+detection (watchdog) and online instantiation; serving/ gives a replicated
+stage pipeline with drain-and-remove. This package closes the loop the
+paper leaves as future work: observe (MetricsHub) -> decide (policies) ->
+act (ElasticController: scale up / drain down / heal), plus an open-loop
+workload generator to drive elastic scenarios.
+"""
+from .controller import ControlEvent, ElasticController
+from .metrics import Ewma, MetricsHub, ReplicaSample, StageSnapshot
+from .policy import (
+    HysteresisPolicy,
+    LatencySLOPolicy,
+    ScaleDecision,
+    ScalingPolicy,
+    TargetQueueDepthPolicy,
+)
+from .workload import (
+    BurstProfile,
+    ConstantProfile,
+    DiurnalProfile,
+    OpenLoopGenerator,
+    RampProfile,
+    RateProfile,
+    RequestRecord,
+)
+
+__all__ = [
+    "ControlEvent", "ElasticController",
+    "Ewma", "MetricsHub", "ReplicaSample", "StageSnapshot",
+    "HysteresisPolicy", "LatencySLOPolicy", "ScaleDecision",
+    "ScalingPolicy", "TargetQueueDepthPolicy",
+    "BurstProfile", "ConstantProfile", "DiurnalProfile",
+    "OpenLoopGenerator", "RampProfile", "RateProfile", "RequestRecord",
+]

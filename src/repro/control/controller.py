@@ -1,0 +1,176 @@
+"""ElasticController: the closed loop the paper leaves as future work.
+
+    "Via a controller, a new worker can be created and added back ...
+     we leave it as future work."  (§3.1)
+
+One asyncio task per pipeline: each tick it (1) polls MetricsHub, (2) heals
+— every watchdog-fenced replica is unhooked (``remove_replica(drain=False)``)
+and replaced via online instantiation, the paper's Fig. 2c rhombus with the
+human taken out of the loop — and (3) executes the scaling policy: scale-up
+through ``add_replica`` (fresh worlds, zero disturbance to live traffic),
+scale-down through the drain-and-remove path (zero request loss).
+
+Healing outranks scaling: a fenced replica distorts the load signal, so the
+loop restores capacity first and lets policies see the healed state next
+tick. Every action lands in ``timeline`` for Fig. 5-style reporting.
+"""
+from __future__ import annotations
+
+import asyncio
+import copy
+import dataclasses
+import time
+from typing import Optional, Union
+
+from .metrics import MetricsHub, StageSnapshot
+from .policy import ScalingPolicy, TargetQueueDepthPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlEvent:
+    t: float
+    kind: str          # scale_up | scale_down | heal | error
+    stage: int
+    detail: str
+
+
+class ElasticController:
+    def __init__(
+        self,
+        server,
+        policy: Union[ScalingPolicy, list[ScalingPolicy], None] = None,
+        *,
+        hub: Optional[MetricsHub] = None,
+        interval: float = 0.1,
+        heal: bool = True,
+        scale_stages: Optional[list[int]] = None,
+    ) -> None:
+        self.server = server
+        self.hub = hub or MetricsHub(server)
+        n = server.n_stages
+        if policy is None:
+            policy = [TargetQueueDepthPolicy() for _ in range(n)]
+        elif not isinstance(policy, list):
+            # one independent policy object per stage — policies (and their
+            # wrapped inners) carry hysteresis state, so a shallow copy
+            # would cross-contaminate stages
+            policy = [copy.deepcopy(policy) for _ in range(n)]
+        if len(policy) != n:
+            raise ValueError(f"need one policy per stage: got {len(policy)} "
+                             f"for {n} stages")
+        self.policies: list[ScalingPolicy] = policy
+        self.interval = interval
+        self.heal = heal
+        #: stages the policy may resize (healing covers all stages always);
+        #: default: every stage
+        self.scale_stages = (list(range(n)) if scale_stages is None
+                             else scale_stages)
+        self.timeline: list[ControlEvent] = []
+        self.ticks = 0
+        self.heals = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self._task: Optional[asyncio.Task] = None
+        self._stop = asyncio.Event()
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        if self._task is None or self._task.done():
+            self._stop.clear()
+            self._task = asyncio.ensure_future(self.run())
+
+    async def stop(self) -> None:
+        self._stop.set()
+        if self._task is not None:
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    async def run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                await self.step()
+            except asyncio.CancelledError:
+                raise
+            except Exception as e:  # noqa: BLE001 — a raising policy or
+                # observation pass must not silently end healing forever
+                self._record("error", -1, f"control tick failed: {e!r}")
+            try:
+                await asyncio.wait_for(self._stop.wait(), self.interval)
+            except asyncio.TimeoutError:
+                pass
+
+    # ------------------------------------------------------------- one tick
+    async def step(self) -> list[StageSnapshot]:
+        self.ticks += 1
+        snaps = self.hub.poll()
+        if self.heal:
+            await self._heal_failed()
+        for snap in snaps:
+            if snap.stage not in self.scale_stages:
+                continue
+            decision = self.policies[snap.stage].decide(snap)
+            if decision.hold:
+                continue
+            await self._apply(decision)
+        return snaps
+
+    async def _heal_failed(self) -> None:
+        for stage in range(self.server.n_stages):
+            for worker_id in self.server.failed_replicas(stage):
+                # A dead worker can't drain; an alive-but-cut-off replica
+                # (every upstream edge fenced) still can — instantiate the
+                # successor first (capacity never dips), then drain the old
+                # one so its queued payloads reach downstream before
+                # teardown.
+                worker = self.server.cluster.workers.get(worker_id)
+                alive = worker is not None and worker.alive
+                try:
+                    if alive:
+                        new_id = await self.server.add_replica(stage)
+                        try:
+                            await self.server.remove_replica(
+                                stage, worker_id, drain=True, timeout=10.0)
+                        except TimeoutError:
+                            await self.server.remove_replica(
+                                stage, worker_id, drain=False)
+                    else:
+                        await self.server.remove_replica(
+                            stage, worker_id, drain=False)
+                        new_id = await self.server.add_replica(stage)
+                except Exception as e:  # noqa: BLE001 — keep the loop alive
+                    self._record("error", stage, f"heal failed: {e!r}")
+                    continue
+                self.heals += 1
+                self._record("heal", stage,
+                             f"{worker_id} fenced -> replaced by {new_id}")
+
+    async def _apply(self, decision) -> None:
+        stage, delta = decision.stage, decision.delta
+        try:
+            if delta > 0:
+                for _ in range(delta):
+                    new_id = await self.server.add_replica(stage)
+                    self.scale_ups += 1
+                    self._record("scale_up", stage,
+                                 f"+{new_id} ({decision.reason})")
+            else:
+                for _ in range(-delta):
+                    gone = await self.server.remove_replica(stage, drain=True)
+                    self.scale_downs += 1
+                    self._record("scale_down", stage,
+                                 f"-{gone} ({decision.reason})")
+        except Exception as e:  # noqa: BLE001 — a failed action must not
+            # kill the control loop; next tick re-observes and retries
+            self._record("error", stage, f"{decision.reason}: {e!r}")
+
+    def _record(self, kind: str, stage: int, detail: str) -> None:
+        self.timeline.append(
+            ControlEvent(time.monotonic(), kind, stage, detail))
+
+    # ------------------------------------------------------------ reporting
+    def replica_counts(self) -> list[int]:
+        return [len(self.server.healthy_replicas(s))
+                for s in range(self.server.n_stages)]

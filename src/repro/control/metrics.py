@@ -1,0 +1,171 @@
+"""MetricsHub: the observation half of the elastic control loop.
+
+The paper contributes the *mechanisms* (worlds, watchdog, online
+instantiation) and leaves the controller as future work (§3.1). A controller
+needs eyes before hands: this module turns the pipeline's raw per-replica
+counters (queue depth, processed count, wait/service sums — see
+``_Replica`` in serving/pipeline.py) and the WorldManager structured event
+stream into smoothed per-stage signals a scaling policy can act on.
+
+Design notes:
+
+* EWMAs, not windows — O(1) state per signal, and the smoothing constant is
+  the single knob that trades reactivity against flapping (the policy layer
+  adds hysteresis on top).
+* Break events arrive via ``WorldManager.on_event`` subscription, not by
+  re-scanning ``manager.events`` each poll; managers appear dynamically as
+  the controller scales, so the hub re-sweeps the cluster for unseen
+  managers on every poll (idempotent).
+* The hub never *acts* — it is a pure observer, so it can also back
+  dashboards/benchmark timelines without dragging in controller state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+class Ewma:
+    """Exponentially weighted moving average; seeded by the first sample."""
+
+    def __init__(self, alpha: float = 0.3) -> None:
+        self.alpha = alpha
+        self.value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        if self.value is None:
+            self.value = float(x)
+        else:
+            self.value += self.alpha * (float(x) - self.value)
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return default if self.value is None else self.value
+
+
+@dataclasses.dataclass
+class ReplicaSample:
+    worker_id: str
+    stage: int
+    alive: bool
+    draining: bool
+    queue_depth: int
+    inflight: int
+    processed: int
+    throughput: float       # completed req/s, EWMA
+    latency_s: float        # wait + service per request, EWMA
+
+
+@dataclasses.dataclass
+class StageSnapshot:
+    """What a scaling policy sees for one pipeline stage."""
+
+    stage: int
+    t: float
+    n_replicas: int                 # healthy (alive, not draining)
+    n_failed: int                   # watchdog-fenced heal candidates
+    queue_total: int
+    queue_per_replica: float
+    throughput: float               # stage-total completed req/s, EWMA
+    latency_s: float                # mean request sojourn in stage, EWMA
+    replicas: list[ReplicaSample] = dataclasses.field(default_factory=list)
+
+
+class MetricsHub:
+    def __init__(self, server, *, alpha: float = 0.3) -> None:
+        self.server = server
+        self.alpha = alpha
+        #: (t, kind, world) world-lifecycle events from every manager
+        self.world_events: list[tuple[float, str, str]] = []
+        self.breaks_seen = 0
+        self._prev: dict[str, tuple[float, int, float, float]] = {}
+        self._tput: dict[str, Ewma] = {}
+        self._lat: dict[str, Ewma] = {}
+        self._qdepth: dict[int, Ewma] = {}
+        self._subscribed: set[str] = set()
+        self._subscribe_new_managers()
+
+    # ----------------------------------------------------------- subscription
+    def _subscribe_new_managers(self) -> None:
+        for worker in list(self.server.cluster.workers.values()):
+            mgr = worker.manager
+            if mgr.worker_id in self._subscribed:
+                continue
+            self._subscribed.add(mgr.worker_id)
+            mgr.on_event(self._on_world_event)
+            # replay history so late subscription misses nothing
+            for t, kind, world in mgr.events:
+                self._on_world_event(t, kind, world, replay=True)
+
+    #: soft cap on the retained event timeline (a days-long elastic run
+    #: would otherwise grow it without bound); oldest half is dropped
+    MAX_EVENTS = 100_000
+
+    def _on_world_event(self, t: float, kind: str, world: str,
+                        replay: bool = False) -> None:
+        self.world_events.append((t, kind, world))
+        if len(self.world_events) > self.MAX_EVENTS:
+            del self.world_events[:self.MAX_EVENTS // 2]
+        if kind == "broken":
+            self.breaks_seen += 1
+
+    # ----------------------------------------------------------------- polling
+    def _replica_sample(self, rep, now: float) -> ReplicaSample:
+        wid = rep.worker_id
+        prev = self._prev.get(wid)
+        processed = rep.processed
+        lat_sum = rep.wait_s_sum + rep.service_s_sum
+        tput = self._tput.setdefault(wid, Ewma(self.alpha))
+        lat = self._lat.setdefault(wid, Ewma(self.alpha))
+        if prev is not None:
+            t0, done0, lat0, _ = prev
+            dt = max(now - t0, 1e-9)
+            dn = processed - done0
+            tput.update(dn / dt)
+            if dn > 0:
+                lat.update((lat_sum - lat0) / dn)
+        self._prev[wid] = (now, processed, lat_sum, 0.0)
+        return ReplicaSample(
+            worker_id=wid, stage=rep.stage, alive=rep.worker.alive,
+            draining=rep.draining, queue_depth=rep.queue_depth(),
+            inflight=rep.inflight, processed=processed,
+            throughput=tput.get(), latency_s=lat.get())
+
+    def _prune_retired(self) -> None:
+        """Worker ids are never reused, so per-replica state for retired
+        replicas is garbage — drop it or a long-lived elastic cluster leaks
+        one entry set per scale/heal cycle."""
+        live = {r.worker_id for reps in self.server.replicas for r in reps}
+        for d in (self._prev, self._tput, self._lat):
+            for wid in [w for w in d if w not in live]:
+                del d[wid]
+        # retired workers leave the cluster registry too (teardown reclaims
+        # them) — keep the subscription set in step
+        self._subscribed &= set(self.server.cluster.workers)
+
+    def poll(self) -> list[StageSnapshot]:
+        """One observation pass: returns a snapshot per pipeline stage."""
+        self._subscribe_new_managers()
+        self._prune_retired()
+        now = time.monotonic()
+        snaps: list[StageSnapshot] = []
+        for stage, reps in enumerate(self.server.replicas):
+            samples = [self._replica_sample(r, now) for r in reps]
+            failed = set(self.server.failed_replicas(stage))
+            healthy = [s for s in samples
+                       if s.alive and not s.draining
+                       and s.worker_id not in failed]
+            n = len(healthy)
+            queue_total = sum(s.queue_depth for s in healthy)
+            qd = self._qdepth.setdefault(stage, Ewma(self.alpha))
+            qd.update(queue_total / max(n, 1))
+            snaps.append(StageSnapshot(
+                stage=stage, t=now, n_replicas=n, n_failed=len(failed),
+                queue_total=queue_total,
+                queue_per_replica=qd.get(),
+                throughput=sum(s.throughput for s in healthy),
+                latency_s=(sum(s.latency_s for s in healthy) / n
+                           if n else 0.0),
+                replicas=samples))
+        return snaps

@@ -1,0 +1,148 @@
+"""Scaling policies: StageSnapshot in, ScaleDecision out.
+
+Pure functions of observed state — no cluster access, no side effects — so
+they are unit-testable without an event loop and swappable at runtime. The
+controller composes one policy per stage (or one shared policy) with the
+executor that actually adds/drains replicas.
+
+Provided policies:
+
+* :class:`TargetQueueDepthPolicy` — classic queue-proportional sizing: keep
+  per-replica backlog near a target (the serving-survey "load-adaptive
+  replica management" axis).
+* :class:`LatencySLOPolicy` — scale on the user-visible signal: grow when
+  the stage latency EWMA breaches the SLO, shrink when it is comfortably
+  under and the queue is near-empty.
+* :class:`HysteresisPolicy` — a wrapper adding the stability knobs every
+  real autoscaler needs: K-consecutive-votes confirmation, post-action
+  cooldown, and ±1 step clamping. Wrap either policy above with it to stop
+  flapping on noisy load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Protocol
+
+from .metrics import StageSnapshot
+
+HOLD_REASON = "hold"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    stage: int
+    delta: int            # >0 scale up, <0 scale down, 0 hold
+    reason: str
+
+    @property
+    def hold(self) -> bool:
+        return self.delta == 0
+
+
+def hold(stage: int, reason: str = HOLD_REASON) -> ScaleDecision:
+    return ScaleDecision(stage, 0, reason)
+
+
+class ScalingPolicy(Protocol):
+    def decide(self, snap: StageSnapshot) -> ScaleDecision: ...
+
+
+@dataclasses.dataclass
+class TargetQueueDepthPolicy:
+    """Size the stage so per-replica queue depth sits near ``target``.
+
+    desired = ceil(total_backlog / target); the dead band between
+    ``scale_down_at`` and ``target`` prevents shrink/grow oscillation at
+    the boundary.
+    """
+
+    target: float = 4.0
+    scale_down_at: float = 0.5     # shrink only when backlog/replica < this
+    min_replicas: int = 1
+    max_replicas: int = 8
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        n = max(snap.n_replicas, 1)
+        per = snap.queue_per_replica
+        if per > self.target:
+            desired = min(math.ceil(snap.queue_total / self.target),
+                          self.max_replicas)
+            if desired > n:
+                return ScaleDecision(
+                    snap.stage, desired - n,
+                    f"queue/replica {per:.1f} > target {self.target:g}")
+        elif per < self.scale_down_at and n > self.min_replicas:
+            return ScaleDecision(
+                snap.stage, -1,
+                f"queue/replica {per:.2f} < {self.scale_down_at:g}")
+        return hold(snap.stage)
+
+
+@dataclasses.dataclass
+class LatencySLOPolicy:
+    """Grow when stage latency breaches ``slo_s``; shrink when it is under
+    ``shrink_frac * slo_s`` *and* the queue is nearly empty (latency alone
+    is not a safe shrink signal — an idle stage has great latency)."""
+
+    slo_s: float
+    shrink_frac: float = 0.3
+    idle_queue: float = 0.5
+    min_replicas: int = 1
+    max_replicas: int = 8
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        n = max(snap.n_replicas, 1)
+        lat = snap.latency_s
+        if lat > self.slo_s and n < self.max_replicas:
+            return ScaleDecision(
+                snap.stage, 1, f"latency {lat * 1e3:.0f}ms > SLO "
+                               f"{self.slo_s * 1e3:.0f}ms")
+        if (lat < self.shrink_frac * self.slo_s
+                and snap.queue_per_replica < self.idle_queue
+                and n > self.min_replicas):
+            return ScaleDecision(
+                snap.stage, -1,
+                f"latency {lat * 1e3:.0f}ms well under SLO, queue idle")
+        return hold(snap.stage)
+
+
+@dataclasses.dataclass
+class HysteresisPolicy:
+    """Stability wrapper: act only after ``confirm`` consecutive same-sign
+    votes from ``inner``, wait out ``cooldown_s`` after every action, and
+    clamp each action to ±``max_step``."""
+
+    inner: ScalingPolicy
+    confirm: int = 2
+    cooldown_s: float = 1.0
+    max_step: int = 1
+    clock: object = time.monotonic
+
+    def __post_init__(self) -> None:
+        self._streak_sign = 0
+        self._streak = 0
+        self._last_action_t: Optional[float] = None
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        want = self.inner.decide(snap)
+        now = self.clock()
+        if want.hold:
+            self._streak_sign, self._streak = 0, 0
+            return want
+        sign = 1 if want.delta > 0 else -1
+        if sign == self._streak_sign:
+            self._streak += 1
+        else:
+            self._streak_sign, self._streak = sign, 1
+        if self._last_action_t is not None \
+                and now - self._last_action_t < self.cooldown_s:
+            return hold(snap.stage, "cooldown")
+        if self._streak < self.confirm:
+            return hold(snap.stage,
+                        f"awaiting confirmation {self._streak}/{self.confirm}")
+        self._streak_sign, self._streak = 0, 0
+        self._last_action_t = now
+        delta = max(-self.max_step, min(self.max_step, want.delta))
+        return ScaleDecision(snap.stage, delta, want.reason)

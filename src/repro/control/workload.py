@@ -1,0 +1,167 @@
+"""Open-loop traffic generation for elastic-serving scenarios.
+
+Closed-loop drivers (send, await, send) self-throttle when the system slows
+down and therefore can't exercise autoscaling — backlog never builds. An
+*open-loop* generator samples Poisson arrivals from a time-varying rate
+profile and fires each request as its own task, exactly like independent
+users: when the pipeline falls behind, queues grow and the controller must
+react. Profiles cover the canonical elasticity shapes: constant, burst
+(flash crowd), ramp, and diurnal (sinusoidal day/night).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import math
+import random
+import time
+from typing import Awaitable, Callable, Optional
+
+
+class RateProfile:
+    """req/s as a function of elapsed seconds."""
+
+    def rate(self, t: float) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class ConstantProfile(RateProfile):
+    rps: float
+
+    def rate(self, t: float) -> float:
+        return self.rps
+
+
+@dataclasses.dataclass
+class BurstProfile(RateProfile):
+    """Flash crowd: ``base`` rps with a [t0, t1) window at ``burst`` rps."""
+
+    base: float
+    burst: float
+    t0: float
+    t1: float
+
+    def rate(self, t: float) -> float:
+        return self.burst if self.t0 <= t < self.t1 else self.base
+
+
+@dataclasses.dataclass
+class RampProfile(RateProfile):
+    """Linear growth from ``start`` to ``end`` rps over ``duration``."""
+
+    start: float
+    end: float
+    duration: float
+
+    def rate(self, t: float) -> float:
+        if t >= self.duration:
+            return self.end
+        return self.start + (self.end - self.start) * t / self.duration
+
+
+@dataclasses.dataclass
+class DiurnalProfile(RateProfile):
+    """Sinusoidal day/night cycle: mean ± amplitude over ``period_s``."""
+
+    mean: float
+    amplitude: float
+    period_s: float
+
+    def rate(self, t: float) -> float:
+        return max(0.0, self.mean + self.amplitude
+                   * math.sin(2 * math.pi * t / self.period_s))
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    t_sent: float        # seconds since generator start
+    latency_s: float     # -1.0 on failure
+    ok: bool
+    error: str = ""
+
+
+class OpenLoopGenerator:
+    """Fire-and-record Poisson arrivals against an async ``submit`` callable.
+
+    ``submit`` is any coroutine function taking no arguments and returning
+    when the request completes (e.g. ``lambda: server.submit(toks)``); the
+    generator never waits for one request before sending the next.
+    """
+
+    def __init__(self, submit: Callable[[], Awaitable],
+                 profile: RateProfile, *, seed: int = 0,
+                 max_inflight: int = 256) -> None:
+        self.submit = submit
+        self.profile = profile
+        self.rng = random.Random(seed)
+        self.max_inflight = max_inflight
+        self.records: list[RequestRecord] = []
+        self.sent = 0
+        self.ok = 0
+        self.failed = 0
+        self.shed = 0            # dropped by the generator's inflight cap
+        self._inflight = 0
+
+    async def _one(self, t_rel: float) -> None:
+        # _inflight was incremented at spawn time (run()): counting here
+        # would let a catch-up batch blow straight through max_inflight,
+        # since none of the spawned tasks has run yet
+        t0 = time.monotonic()
+        try:
+            await self.submit()
+            self.ok += 1
+            self.records.append(
+                RequestRecord(t_rel, time.monotonic() - t0, True))
+        except Exception as e:  # noqa: BLE001 — record, don't crash the run
+            self.failed += 1
+            self.records.append(
+                RequestRecord(t_rel, -1.0, False, f"{type(e).__name__}: {e}"))
+        finally:
+            self._inflight -= 1
+
+    async def run(self, duration_s: float) -> dict:
+        """Drive traffic for ``duration_s``; returns summary stats.
+
+        Arrival times are pre-sampled on an absolute clock and fired with
+        catch-up: if the event loop is busy (exactly when elasticity is
+        being exercised), every arrival that came due during the stall is
+        dispatched immediately instead of being silently rate-limited —
+        sleeping one inter-arrival gap at a time would make the generator
+        closed-loop in disguise.
+        """
+        start = time.monotonic()
+        tasks: list[asyncio.Task] = []
+        t_next = self.rng.expovariate(max(self.profile.rate(0.0), 1e-3))
+        while t_next < duration_s:
+            now = time.monotonic() - start
+            if now < t_next:
+                await asyncio.sleep(t_next - now)
+                now = time.monotonic() - start
+            while t_next <= now and t_next < duration_s:
+                if self._inflight >= self.max_inflight:
+                    self.shed += 1
+                else:
+                    self.sent += 1
+                    self._inflight += 1
+                    tasks.append(asyncio.ensure_future(self._one(t_next)))
+                t_next += self.rng.expovariate(
+                    max(self.profile.rate(t_next), 1e-3))
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)
+        return self.summary()
+
+    def summary(self) -> dict:
+        lats = sorted(r.latency_s for r in self.records if r.ok)
+
+        def pct(p: float) -> float:
+            if not lats:
+                return float("nan")
+            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
+
+        return {
+            "sent": self.sent, "ok": self.ok, "failed": self.failed,
+            "shed": self.shed,
+            "p50_s": pct(50), "p95_s": pct(95), "p99_s": pct(99),
+            "mean_s": (sum(lats) / len(lats)) if lats else float("nan"),
+        }

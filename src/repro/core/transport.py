@@ -184,6 +184,14 @@ class Transport:
             raise RemoteError(world, src)
         return False, None
 
+    def pending(self, world: str) -> int:
+        """Messages buffered across all channels of one world. The drain path
+        of scale-down polls this to guarantee no payload is dropped between
+        an upstream send and the downstream pump."""
+        with self._lock:
+            return sum(len(ch.buf) for (w, _s, _d), ch in
+                       self._channels.items() if w == world)
+
     def drop_world(self, world: str) -> int:
         """Discard all channels of a removed/broken world. Returns #messages dropped."""
         dropped = 0

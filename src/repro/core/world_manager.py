@@ -44,6 +44,10 @@ class WorldManager:
         self._break_listeners: list[Callable[[str, str], None]] = []
         #: timeline of (t, event, world) for Fig.4/5-style reporting
         self.events: list[tuple[float, str, str]] = []
+        #: structured subscribers fired on every event: cb(t, kind, world).
+        #: The elastic control plane's MetricsHub subscribes here instead of
+        #: re-scanning ``events`` each poll.
+        self._event_listeners: list[Callable[[float, str, str], None]] = []
 
     # ---------------------------------------------------------------- paper API
     def communicator(self) -> WorldCommunicator:
@@ -103,16 +107,30 @@ class WorldManager:
             loop.close()
 
     def remove_world(self, name: str) -> None:
-        """Graceful teardown of one world; other worlds are untouched."""
+        """Graceful teardown of one world; other worlds are untouched.
+
+        Store hygiene: besides its own member/heartbeat keys, the last member
+        out also deletes the world's ``config`` key and any stale peer keys —
+        without this a long-lived elastic cluster leaks one key set per
+        retired world. A *broken* world is purged outright: its dead peer can
+        never delete its own keys, and every live member has already fenced
+        (or will, once our heartbeat key vanishes).
+        """
         world = self.worlds.get(name)
         if world is None:
             return
+        was_broken = world.status is WorldStatus.BROKEN
         rank = world.rank_of(self.worker_id)
         world.status = WorldStatus.REMOVED
         self.watchdog.unwatch(name)
         if rank is not None:
             self.store.delete(world.member_key(rank))
             self.store.delete(world.heartbeat_key(rank))
+        # note the trailing "/": world "x" must not purge sibling "x2"
+        remaining = self.store.keys(f"{world.key_prefix()}/members/")
+        if was_broken or not remaining:
+            for key in self.store.keys(f"{world.key_prefix()}/"):
+                self.store.delete(key)
         self.transport.drop_world(name)
         self._event("removed", name)
 
@@ -134,6 +152,11 @@ class WorldManager:
     def on_world_broken(self, cb: Callable[[str, str], None]) -> None:
         self._break_listeners.append(cb)
 
+    def on_event(self, cb: Callable[[float, str, str], None]) -> None:
+        """Subscribe to the structured event stream: cb(t, kind, world) for
+        every init_begin/init_done/broken/removed transition."""
+        self._event_listeners.append(cb)
+
     # ------------------------------------------------------------------- misc
     def healthy_worlds(self) -> list[str]:
         return [n for n, w in self.worlds.items() if w.healthy]
@@ -144,4 +167,7 @@ class WorldManager:
             self.remove_world(name)
 
     def _event(self, kind: str, world: str) -> None:
-        self.events.append((time.monotonic(), kind, world))
+        t = time.monotonic()
+        self.events.append((t, kind, world))
+        for cb in self._event_listeners:
+            cb(t, kind, world)

@@ -1,0 +1,10 @@
+"""Pallas API compatibility across jax versions.
+
+Newer jax exposes ``pltpu.CompilerParams``; jax <= 0.4.x ships the same
+dataclass as ``pltpu.TPUCompilerParams``. Kernels import the name from here
+so they run on either.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -153,7 +153,12 @@ def _flash_sharded(q, k, v, *, causal, window, cap, scale):
     across ``model`` even when head counts don't divide the axis."""
     from jax.sharding import PartitionSpec as P
 
-    from repro.distributed.sharding import _CTX, _axis_size, _resolve
+    from repro.distributed.sharding import (
+        _CTX,
+        _axis_size,
+        _resolve,
+        shard_map_compat,
+    )
 
     mesh, rules = _CTX.mesh, _CTX.rules
     if mesh is None or rules is None:
@@ -179,7 +184,7 @@ def _flash_sharded(q, k, v, *, causal, window, cap, scale):
         return attend_flash_jnp(ql, kl, vl, causal=causal, window=window,
                                 cap=cap, scale=scale, q_offset=offset)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(bspec, sspec, None, None), P(bspec, None, None, None),
                   P(bspec, None, None, None)),

@@ -8,6 +8,18 @@ breaks only its edges; upstream routers drop the broken worlds and keep
 serving through the survivors; ``add_replica`` performs online instantiation
 (new worker + fresh worlds) without touching any existing world.
 
+Elastic control hooks (consumed by repro.control):
+
+* ``remove_replica`` — the scale-down path the paper leaves open: stop
+  routing to the replica, drain its inbox and in-flight work to zero, then
+  tear down its worlds on every member in one event-loop tick (no spurious
+  watchdog breaks, no dropped payloads).
+* per-replica load counters (queue depth, in-flight, wait/service time) —
+  the raw signals MetricsHub turns into EWMAs for the scaling policies.
+* ``failed_replicas`` — watchdog-sourced failure view: a replica whose
+  upstream edges have *all* been fenced can no longer receive traffic and
+  is a heal candidate (paper Fig. 2c, but triggered by the watchdog).
+
 Payloads are (request_id, tensor) tuples moved zero-copy by the in-process
 transport; on real hardware the same worlds carry ICI/NCCL transfers.
 """
@@ -15,13 +27,19 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import time
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Cluster, WorldBrokenError, WorldSpec
+from repro.core import (
+    Cluster,
+    WorldBrokenError,
+    WorldNotFoundError,
+    WorldSpec,
+)
 from repro.core.online import OnlineInstantiator
 from .partition import StageSpec, split_stages, stage_forward, stage_params
 from .router import ReplicaRouter
@@ -41,58 +59,101 @@ class _Replica:
         self.stage = stage
         self.worker = server.cluster.worker(worker_id)
         self.upstream: list[str] = []          # world names we recv on
+        #: (world, upstream router that routes onto it) — scale-down needs to
+        #: know exactly which rotation each inbound edge lives in
+        self.upstream_edges: list[tuple[str, ReplicaRouter]] = []
         self.router = ReplicaRouter()          # downstream worlds we send on
+        self.router.set_load_probe(server._edge_load)
         self.inbox: asyncio.Queue = asyncio.Queue()
         self._pumps: dict[str, asyncio.Task] = {}
+        self._run_task: Optional[asyncio.Task] = None
+        self.draining = False
+        # -- load/latency counters polled by control.MetricsHub ------------
         self.processed = 0
+        self.inflight = 0
+        self.wait_s_sum = 0.0        # inbox sojourn
+        self.service_s_sum = 0.0     # compute + downstream send
+        self.parked = 0              # sends parked on an empty rotation
 
-    def watch_upstream(self, world: str) -> None:
+    def queue_depth(self) -> int:
+        return self.inbox.qsize() + self.inflight
+
+    def watch_upstream(self, world: str, router: ReplicaRouter) -> None:
         self.upstream.append(world)
+        self.upstream_edges.append((world, router))
         self._pumps[world] = self.worker.spawn(self._pump(world))
+
+    def drop_upstream(self, world: str) -> None:
+        task = self._pumps.pop(world, None)
+        if task is not None and not task.done():
+            task.cancel()
+        if world in self.upstream:
+            self.upstream.remove(world)
+        self.upstream_edges = [(w, r) for w, r in self.upstream_edges
+                               if w != world]
 
     async def _pump(self, world: str) -> None:
         comm = self.worker.comm
         try:
             while True:
                 payload = await comm.recv(0, world)
-                await self.inbox.put(payload)
-        except (WorldBrokenError, asyncio.CancelledError):
+                await self.inbox.put((payload, time.monotonic()))
+        except (WorldBrokenError, WorldNotFoundError, asyncio.CancelledError):
             return
 
     async def run(self) -> None:
-        spec = self.server.stage_specs[self.stage]
         fn = self.server.stage_fns[self.stage]
         sparams = self.server.stage_param_sets[self.stage]
         comm = self.worker.comm
         loop = asyncio.get_event_loop()
         while True:
-            req_id, x = await self.inbox.get()
-            # run compute (incl. first-call jit compile) off the event loop so
-            # watchdog heartbeats keep flowing — the same reason the paper
-            # moves blocking NCCL init to a side thread (§4.2)
-            y = await loop.run_in_executor(None, fn, sparams, x)
-            self.processed += 1
-            sent = False
-            while not sent:
-                world = self.router.pick()
-                try:
-                    await comm.send((req_id, y), 1, world)
-                    sent = True
-                except WorldBrokenError:
-                    self.router.mark_broken(world)
+            (req_id, x), t_enq = await self.inbox.get()
+            t0 = time.monotonic()
+            self.wait_s_sum += t0 - t_enq
+            self.inflight += 1
+            try:
+                # run compute (incl. first-call jit compile) off the event
+                # loop so watchdog heartbeats keep flowing — the same reason
+                # the paper moves blocking NCCL init to a side thread (§4.2)
+                y = await loop.run_in_executor(None, fn, sparams, x)
+                sent = False
+                while not sent:
+                    world = self.router.try_pick(
+                        least_loaded=self.server.least_loaded)
+                    if world is None:
+                        # Every downstream world is gone. Dying here would
+                        # drop the in-flight payload and kill this serve loop
+                        # for good — park instead and retry once the
+                        # controller adds/heals a downstream replica.
+                        self.parked += 1
+                        await self.router.wait_healthy()
+                        continue
+                    try:
+                        await comm.send((req_id, y), 1, world)
+                        sent = True
+                    except WorldBrokenError:
+                        self.router.mark_broken(world)
+                    except WorldNotFoundError:
+                        self.router.remove(world)
+                self.processed += 1
+                self.service_s_sum += time.monotonic() - t0
+            finally:
+                self.inflight -= 1
 
 
 class PipelineServer:
     """Build/serve/heal a replicated stage pipeline on a MultiWorld cluster."""
 
     def __init__(self, cluster: Cluster, model, params,
-                 replicas: list[int], *, name: str = "pipe") -> None:
+                 replicas: list[int], *, name: str = "pipe",
+                 least_loaded: bool = False) -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
         self.name = name
         self.replica_counts = replicas
         self.n_stages = len(replicas)
+        self.least_loaded = least_loaded
         self.stage_specs = split_stages(self.cfg, self.n_stages)
         self.stage_param_sets = [stage_params(self.cfg, params, s)
                                  for s in self.stage_specs]
@@ -101,11 +162,19 @@ class PipelineServer:
         self.replicas: list[list[_Replica]] = [[] for _ in replicas]
         self.client = cluster.worker(CLIENT)
         self.client_router = ReplicaRouter()   # worlds to stage-0 replicas
+        self.client_router.set_load_probe(self._edge_load)
         self._responses: dict[int, asyncio.Future] = {}
         self._req_ids = itertools.count()
         self._uid = itertools.count()
-        self._collector: Optional[asyncio.Task] = None
-        self._collector_worlds: list[str] = []
+        self._collectors: dict[str, asyncio.Task] = {}
+        #: downstream edge world -> receiving replica (load probing, drain)
+        self._world_to_replica: dict[str, _Replica] = {}
+        #: worlds the watchdog has fenced anywhere in the pipeline
+        self.broken_worlds: set[str] = set()
+        #: (t, kind, detail) scale/heal/drain timeline for Fig.5-style plots
+        self.events: list[tuple[float, str, str]] = []
+        self._wired_managers: set[str] = set()
+        self._wire_manager(self.client.manager, self.client_router)
 
     def _make_stage_fn(self, spec: StageSpec):
         cfg = self.cfg
@@ -117,74 +186,212 @@ class PipelineServer:
 
         return fn
 
+    def _edge_load(self, world: str) -> float:
+        """Router load probe: queue depth of the replica behind an edge."""
+        rep = self._world_to_replica.get(world)
+        return float(rep.queue_depth()) if rep is not None else 0.0
+
+    def _event(self, kind: str, detail: str) -> None:
+        self.events.append((time.monotonic(), kind, detail))
+
     # ------------------------------------------------------------------ build
     async def start(self) -> None:
         for si, count in enumerate(self.replica_counts):
             for _ in range(count):
-                await self.add_replica(si, _initial=True)
-        self._wire_fault_listeners()
+                await self.add_replica(si)
 
-    def _wire_fault_listeners(self) -> None:
-        def on_break(owner_router: ReplicaRouter):
-            def cb(world: str, reason: str) -> None:
-                owner_router.mark_broken(world)
-            return cb
-        self.client.manager.on_world_broken(on_break(self.client_router))
+    def _wire_manager(self, manager, router: Optional[ReplicaRouter]) -> None:
+        """Fault listeners: fenced worlds leave the router rotation and are
+        recorded in ``broken_worlds`` (the controller's failure signal)."""
+        if manager.worker_id in self._wired_managers:
+            return
+        self._wired_managers.add(manager.worker_id)
 
-    async def add_replica(self, stage: int, _initial: bool = False) -> str:
+        def cb(world: str, reason: str) -> None:
+            if router is not None:
+                router.mark_broken(world)
+            self.broken_worlds.add(world)
+            self._event("world_broken", world)
+
+        manager.on_world_broken(cb)
+
+    async def add_replica(self, stage: int) -> str:
         """Online instantiation of one replica (paper Fig. 2c / §4.2)."""
         worker_id = f"{self.name}-s{stage}-r{next(self._uid)}"
         rep = _Replica(self, worker_id, stage)
         specs: list[WorldSpec] = []
-        upstream_edges: list[tuple[str, Any]] = []   # (world, upstream router)
-        downstream_edges: list[str] = []
+        #: (world, router to register it in, peer replica or None for client)
+        upstream_edges: list[tuple[str, ReplicaRouter, Optional[_Replica]]] = []
+        down_watchers: list[tuple[str, Optional[_Replica]]] = []
 
         if stage == 0:
             w = _edge(self.name, CLIENT, worker_id)
             specs.append(WorldSpec.pair(w, CLIENT, worker_id))
-            upstream_edges.append((w, self.client_router))
+            upstream_edges.append((w, self.client_router, None))
         else:
             for up in self.replicas[stage - 1]:
+                if not up.worker.alive or up.draining:
+                    continue
                 w = _edge(self.name, up.worker_id, worker_id)
                 specs.append(WorldSpec.pair(w, up.worker_id, worker_id))
-                upstream_edges.append((w, up.router))
-        down_watchers: list[tuple[str, _Replica]] = []
+                upstream_edges.append((w, up.router, up))
         if stage == self.n_stages - 1:
             w = _edge(self.name, worker_id, CLIENT)
             specs.append(WorldSpec.pair(w, worker_id, CLIENT))
-            downstream_edges.append(w)
+            down_watchers.append((w, None))
         else:
             for down in self.replicas[stage + 1]:
+                if not down.worker.alive or down.draining:
+                    continue
                 w = _edge(self.name, worker_id, down.worker_id)
                 specs.append(WorldSpec.pair(w, worker_id, down.worker_id))
-                downstream_edges.append(w)
                 down_watchers.append((w, down))
 
         await self.instantiator.instantiate(specs)
 
-        for world, router in upstream_edges:
-            rep.watch_upstream(world)
+        # A peer snapshotted above may have been drained/healed away while
+        # the rendezvous was in flight — wiring it now would route payloads
+        # into a torn-down replica. Re-check and discard the fresh world
+        # instead (None peer = the client, which never goes away).
+        def _gone(peer: Optional[_Replica], adjacent: list[_Replica]) -> bool:
+            return peer is not None and (peer not in adjacent
+                                         or not peer.worker.alive
+                                         or peer.draining)
+
+        for world, router, up in upstream_edges:
+            if _gone(up, self.replicas[stage - 1] if stage else []):
+                self._remove_world_everywhere(world)
+                continue
+            rep.watch_upstream(world, router)
+            self._world_to_replica[world] = rep
             router.add(world)
-        for world in downstream_edges:
-            rep.router.add(world)
         for world, down in down_watchers:
-            down.watch_upstream(world)   # downstream replicas pump the new edge
-        if stage == self.n_stages - 1:
-            self._watch_client_world(
-                _edge(self.name, worker_id, CLIENT))
+            if _gone(down, self.replicas[stage + 1]
+                     if stage < self.n_stages - 1 else []):
+                self._remove_world_everywhere(world)
+                continue
+            rep.router.add(world)
+            if down is None:
+                self._watch_client_world(world)
+            else:
+                down.watch_upstream(world, rep.router)
+                self._world_to_replica[world] = down
 
         # replica-side fault listener: broken downstream worlds leave rotation
-        rep.worker.manager.on_world_broken(
-            lambda wn, _r, router=rep.router: router.mark_broken(wn))
+        self._wire_manager(rep.worker.manager, rep.router)
 
-        rep.worker.spawn(rep.run())
+        rep._run_task = rep.worker.spawn(rep.run())
         self.replicas[stage].append(rep)
+        self._event("add_replica", worker_id)
         return worker_id
+
+    # ------------------------------------------------------------- scale-down
+    async def remove_replica(self, stage: int,
+                             worker_id: Optional[str] = None, *,
+                             drain: bool = True,
+                             timeout: float = 30.0) -> str:
+        """Retire one replica of ``stage``.
+
+        ``drain=True`` (scale-down): stop routing to it, wait until its inbox,
+        in-flight work, and adjacent transport channels are all empty, then
+        tear its worlds down — zero request loss by construction.
+        ``drain=False`` (heal): the replica is already dead; just unhook the
+        bookkeeping and purge its (broken) worlds so a replacement can be
+        instantiated cleanly.
+        """
+        reps = self.replicas[stage]
+        if worker_id is not None:
+            rep = next((r for r in reps if r.worker_id == worker_id), None)
+            if rep is None:
+                raise KeyError(f"no replica {worker_id} in stage {stage}")
+        else:
+            live = [r for r in reps if r.worker.alive and not r.draining]
+            if not live:
+                raise RuntimeError(f"stage {stage} has no removable replica")
+            rep = min(live, key=lambda r: r.queue_depth())
+        if drain and len([r for r in reps
+                          if r.worker.alive and not r.draining]) <= 1:
+            raise RuntimeError(
+                f"refusing to drain the last healthy replica of stage {stage}")
+
+        rep.draining = True
+        self._event("drain_begin", rep.worker_id)
+        # 1. stop routing new work to it (no new picks can reach these
+        #    worlds once removed; an already-picked send has already been
+        #    appended to the channel — the drain wait below flushes it)
+        for world, router in rep.upstream_edges:
+            router.remove(world)
+        # 2. drain to zero
+        if drain:
+            await self._drain(rep, timeout)
+        # 3. teardown in one event-loop tick
+        self._teardown_replica(rep)
+        self._event("remove_replica", rep.worker_id)
+        return rep.worker_id
+
+    async def _drain(self, rep: _Replica, timeout: float) -> None:
+        transport = self.cluster.transport
+        deadline = time.monotonic() + timeout
+
+        def flushed() -> bool:
+            return (rep.inbox.empty() and rep.inflight == 0
+                    and all(transport.pending(w) == 0
+                            for w in rep.upstream)
+                    and all(transport.pending(w) == 0
+                            for w in rep.router.worlds))
+
+        while True:
+            # A pump can be suspended on a fairness yield *between* popping a
+            # payload off the channel and enqueueing it (neither place counts
+            # it) — one scheduler pass lets any such pump land its payload,
+            # so only two consecutive flushed observations prove empty.
+            if flushed():
+                await asyncio.sleep(0)
+                if flushed():
+                    return
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"drain of {rep.worker_id} exceeded {timeout}s "
+                    f"(queue={rep.queue_depth()})")
+            await asyncio.sleep(0.005)
+
+    def _teardown_replica(self, rep: _Replica) -> None:
+        """Unhook a replica and remove its worlds on every member in one
+        synchronous pass — no await between key deletions, so no watchdog
+        cycle can observe a half-removed world and fence it spuriously."""
+        if rep._run_task is not None and not rep._run_task.done():
+            rep._run_task.cancel()
+        for world in list(rep.upstream):
+            rep.drop_upstream(world)
+            self._world_to_replica.pop(world, None)
+            self._remove_world_everywhere(world)
+        for world in list(rep.router.worlds):
+            down = self._world_to_replica.pop(world, None)
+            if down is not None:
+                down.drop_upstream(world)
+            collector = self._collectors.pop(world, None)
+            if collector is not None and not collector.done():
+                collector.cancel()
+            rep.router.remove(world)
+            self._remove_world_everywhere(world)
+        if rep in self.replicas[rep.stage]:
+            self.replicas[rep.stage].remove(rep)
+        # reclaim the worker: stop its watchdog task and drop it from the
+        # cluster registry, or every scale/heal cycle leaks one worker whose
+        # heartbeat loop ticks forever
+        worker = self.cluster.workers.pop(rep.worker_id, None)
+        if worker is not None:
+            worker.kill()
+            worker.manager.shutdown()
+
+    def _remove_world_everywhere(self, world: str) -> None:
+        for worker in list(self.cluster.workers.values()):
+            if world in worker.manager.worlds:
+                worker.manager.remove_world(world)
 
     # ---------------------------------------------------------------- serving
     def _watch_client_world(self, world: str) -> None:
-        self._collector_worlds.append(world)
-        self.client.spawn(self._collect(world))
+        self._collectors[world] = self.client.spawn(self._collect(world))
 
     async def _collect(self, world: str) -> None:
         comm = self.client.comm
@@ -194,7 +401,7 @@ class PipelineServer:
                 fut = self._responses.pop(req_id, None)
                 if fut is not None and not fut.done():
                     fut.set_result(logits)
-        except (WorldBrokenError, asyncio.CancelledError):
+        except (WorldBrokenError, WorldNotFoundError, asyncio.CancelledError):
             return
 
     async def submit(self, tokens: np.ndarray, *, timeout: float = 30.0,
@@ -203,19 +410,34 @@ class PipelineServer:
 
         Beyond-paper nicety: at-least-once redispatch — if a replica dies
         with the request in flight, the client re-sends after ``timeout``.
+        A fully-empty stage-0 rotation (every entry replica down) parks the
+        attempt until the controller heals one, instead of failing fast.
         """
         x = jnp.asarray(tokens, jnp.int32)
         last_err: Optional[Exception] = None
         for _ in range(retries + 1):
+            world = self.client_router.try_pick(self.least_loaded)
+            if world is None:
+                try:
+                    await asyncio.wait_for(
+                        self.client_router.wait_healthy(), timeout)
+                except asyncio.TimeoutError as e:
+                    last_err = e
+                    continue
+                world = self.client_router.try_pick(self.least_loaded)
+                if world is None:
+                    continue
             req_id = next(self._req_ids)
             fut: asyncio.Future = asyncio.get_event_loop().create_future()
             self._responses[req_id] = fut
-            world = self.client_router.pick()
             try:
                 await self.client.comm.send((req_id, x), 1, world)
                 return await asyncio.wait_for(fut, timeout)
             except WorldBrokenError as e:
                 self.client_router.mark_broken(world)
+                last_err = e
+            except WorldNotFoundError as e:
+                self.client_router.remove(world)
                 last_err = e
             except asyncio.TimeoutError as e:
                 last_err = e
@@ -228,7 +450,42 @@ class PipelineServer:
     def healthy_replicas(self, stage: int) -> list[str]:
         out = []
         for rep in self.replicas[stage]:
-            if not rep.worker.alive:
+            if not rep.worker.alive or rep.draining:
                 continue
             out.append(rep.worker_id)
+        return out
+
+    def failed_replicas(self, stage: int) -> list[str]:
+        """Heal candidates: replicas the watchdog has cut off — every
+        upstream edge fenced, so no traffic can reach them (or the worker
+        is outright dead)."""
+        out = []
+        for rep in self.replicas[stage]:
+            if rep.draining:
+                continue
+            dead = not rep.worker.alive
+            cut_off = bool(rep.upstream) and all(
+                w in self.broken_worlds for w in rep.upstream)
+            if dead or cut_off:
+                out.append(rep.worker_id)
+        return out
+
+    def replica_stats(self) -> dict[str, dict[str, Any]]:
+        """Introspection snapshot of the raw per-replica load counters
+        (MetricsHub reads the ``_Replica`` attributes directly; this is the
+        public debugging/dashboard view of the same signals)."""
+        out: dict[str, dict[str, Any]] = {}
+        for stage, reps in enumerate(self.replicas):
+            for rep in reps:
+                out[rep.worker_id] = {
+                    "stage": stage,
+                    "alive": rep.worker.alive,
+                    "draining": rep.draining,
+                    "queue_depth": rep.queue_depth(),
+                    "inflight": rep.inflight,
+                    "processed": rep.processed,
+                    "wait_s_sum": rep.wait_s_sum,
+                    "service_s_sum": rep.service_s_sum,
+                    "parked": rep.parked,
+                }
         return out

@@ -3,12 +3,29 @@
 The upstream worker of a replicated stage (paper Fig. 2: P1 feeding P2/P3)
 routes each payload to one healthy replica world. When a world breaks the
 router drops it from rotation (fault tolerance); OnlineInstantiator can
-register replacement worlds at any time (online scaling).
+register replacement worlds at any time (online scaling); the elastic
+controller can *gracefully* retire a world with :meth:`remove` (scale-down
+drain) — unlike ``mark_broken``, removal forgets the world entirely so a
+later replica reusing the name starts clean.
+
+Two pick disciplines:
+
+* :meth:`pick` — round robin over the healthy set (the paper's default).
+* :meth:`pick_least_loaded` — joins the shortest downstream queue, via a
+  load probe installed with :meth:`set_load_probe` (the elastic control
+  plane wires this to per-replica inbox depth); falls back to
+  fewest-routed-so-far when no probe is installed.
+
+Empty-rotation safety: ``pick`` raises (legacy behavior, callers that can't
+wait), while ``try_pick``/``wait_healthy`` let a sender park a payload until
+a world is added instead of dying — a replica must survive the window where
+every downstream replica is gone and the controller is still healing.
 """
 from __future__ import annotations
 
+import asyncio
 import itertools
-from typing import Optional
+from typing import Callable, Optional
 
 
 class ReplicaRouter:
@@ -17,20 +34,46 @@ class ReplicaRouter:
         self._dead: set[str] = set()
         self._rr = itertools.count()
         self.routed: dict[str, int] = {}
+        #: optional world -> load metric (lower is better); see set_load_probe
+        self._load_probe: Optional[Callable[[str], float]] = None
+        self._nonempty = asyncio.Event()
+        if self._worlds:
+            self._nonempty.set()
 
     # -- membership ----------------------------------------------------------
     def add(self, world: str) -> None:
         if world not in self._worlds:
             self._worlds.append(world)
         self._dead.discard(world)
+        self._nonempty.set()
 
     def mark_broken(self, world: str) -> None:
         self._dead.add(world)
+        if not self.healthy():
+            self._nonempty.clear()
+
+    def remove(self, world: str) -> None:
+        """Graceful retirement: forget the world entirely (scale-down path)."""
+        if world in self._worlds:
+            self._worlds.remove(world)
+        self._dead.discard(world)
+        self.routed.pop(world, None)
+        if not self.healthy():
+            self._nonempty.clear()
 
     def healthy(self) -> list[str]:
         return [w for w in self._worlds if w not in self._dead]
 
+    @property
+    def worlds(self) -> list[str]:
+        """All worlds in rotation, healthy or broken (teardown iterates this)."""
+        return list(self._worlds)
+
     # -- routing --------------------------------------------------------------
+    def set_load_probe(self, probe: Optional[Callable[[str], float]]) -> None:
+        """Install a world -> current-load function used by pick_least_loaded."""
+        self._load_probe = probe
+
     def pick(self) -> str:
         live = self.healthy()
         if not live:
@@ -38,3 +81,27 @@ class ReplicaRouter:
         world = live[next(self._rr) % len(live)]
         self.routed[world] = self.routed.get(world, 0) + 1
         return world
+
+    def pick_least_loaded(self) -> str:
+        live = self.healthy()
+        if not live:
+            raise RuntimeError("no healthy replica worlds")
+        if self._load_probe is not None:
+            world = min(live, key=self._load_probe)
+        else:
+            world = min(live, key=lambda w: self.routed.get(w, 0))
+        self.routed[world] = self.routed.get(world, 0) + 1
+        return world
+
+    def try_pick(self, least_loaded: bool = False) -> Optional[str]:
+        """Like pick()/pick_least_loaded() but returns None when rotation is
+        empty, so callers can park instead of crash."""
+        if not self.healthy():
+            return None
+        return self.pick_least_loaded() if least_loaded else self.pick()
+
+    async def wait_healthy(self) -> None:
+        """Park until at least one healthy world is in rotation."""
+        while not self.healthy():
+            self._nonempty.clear()
+            await self._nonempty.wait()

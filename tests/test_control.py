@@ -1,0 +1,396 @@
+"""Elastic control plane: policies, healing, drain-and-remove, plus
+regressions for the empty-router park fix and the store-key leak fix."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.control import (
+    ElasticController,
+    HysteresisPolicy,
+    LatencySLOPolicy,
+    MetricsHub,
+    ScaleDecision,
+    StageSnapshot,
+    TargetQueueDepthPolicy,
+)
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer, ReplicaRouter
+
+CFG = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                     groups=(BlockGroup(DENSE, 2),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+
+
+def _snap(stage=0, n=1, queue_total=0, queue_per_replica=0.0,
+          latency_s=0.0, throughput=0.0):
+    return StageSnapshot(stage=stage, t=0.0, n_replicas=n, n_failed=0,
+                         queue_total=queue_total,
+                         queue_per_replica=queue_per_replica,
+                         throughput=throughput, latency_s=latency_s)
+
+
+def _tokens(seed=0):
+    return np.random.default_rng(seed).integers(0, CFG.vocab_size, (1, 12))
+
+
+# ------------------------------------------------------------------ policies
+
+def test_target_queue_policy_up_down_hold():
+    p = TargetQueueDepthPolicy(target=4.0, scale_down_at=0.5,
+                               min_replicas=1, max_replicas=8)
+    up = p.decide(_snap(n=1, queue_total=12, queue_per_replica=12.0))
+    assert up.delta == 2   # ceil(12/4) = 3 desired
+    hold = p.decide(_snap(n=2, queue_total=4, queue_per_replica=2.0))
+    assert hold.delta == 0
+    down = p.decide(_snap(n=2, queue_total=0, queue_per_replica=0.1))
+    assert down.delta == -1
+    floor = p.decide(_snap(n=1, queue_total=0, queue_per_replica=0.0))
+    assert floor.delta == 0   # never below min_replicas
+
+
+def test_target_queue_policy_respects_max():
+    p = TargetQueueDepthPolicy(target=1.0, max_replicas=3)
+    d = p.decide(_snap(n=2, queue_total=50, queue_per_replica=25.0))
+    assert d.delta == 1   # desired clamped to max_replicas=3
+
+
+def test_latency_slo_policy():
+    p = LatencySLOPolicy(slo_s=0.1, shrink_frac=0.3, max_replicas=4)
+    assert p.decide(_snap(n=1, latency_s=0.25)).delta == 1
+    # low latency alone is not enough to shrink — queue must be idle too
+    busy = _snap(n=2, latency_s=0.01, queue_per_replica=3.0)
+    assert p.decide(busy).delta == 0
+    idle = _snap(n=2, latency_s=0.01, queue_per_replica=0.0)
+    assert p.decide(idle).delta == -1
+
+
+def test_hysteresis_confirmation_and_cooldown():
+    clock = [0.0]
+
+    class AlwaysUp:
+        def decide(self, snap):
+            return ScaleDecision(snap.stage, 1, "up")
+
+    p = HysteresisPolicy(AlwaysUp(), confirm=3, cooldown_s=5.0,
+                         clock=lambda: clock[0])
+    s = _snap()
+    assert p.decide(s).delta == 0      # vote 1/3
+    assert p.decide(s).delta == 0      # vote 2/3
+    assert p.decide(s).delta == 1      # confirmed
+    clock[0] = 1.0
+    for _ in range(4):                 # cooldown blocks even confirmed votes
+        assert p.decide(s).delta == 0
+    clock[0] = 6.0
+    # demand persisted through cooldown, so action fires on expiry
+    assert p.decide(s).delta == 1
+    assert p.decide(s).delta == 0      # streak reset + fresh cooldown
+
+
+def test_hysteresis_direction_flip_resets_streak():
+    votes = [1, -1, 1, 1, 1]
+
+    class Scripted:
+        def decide(self, snap):
+            return ScaleDecision(snap.stage, votes.pop(0), "v")
+
+    p = HysteresisPolicy(Scripted(), confirm=2, cooldown_s=0.0)
+    s = _snap()
+    got = [p.decide(s).delta for _ in range(5)]
+    # flips reset the streak; the action at vote 4 resets it again, so the
+    # fifth +1 vote is only 1/2 confirmed
+    assert got == [0, 0, 0, 1, 0]
+
+
+# ------------------------------------------------- router empty-safe (regression)
+
+def test_router_try_pick_and_wait(arun):
+    async def scenario():
+        r = ReplicaRouter(["a"])
+        r.mark_broken("a")
+        assert r.try_pick() is None
+        with pytest.raises(RuntimeError):
+            r.pick()
+
+        async def waiter():
+            await r.wait_healthy()
+            return r.try_pick()
+
+        task = asyncio.ensure_future(waiter())
+        await asyncio.sleep(0.01)
+        assert not task.done()     # parked, not crashed
+        r.add("b")
+        assert await asyncio.wait_for(task, 1.0) == "b"
+
+    arun(scenario())
+
+
+def test_router_least_loaded():
+    r = ReplicaRouter(["a", "b"])
+    loads = {"a": 5.0, "b": 1.0}
+    r.set_load_probe(lambda w: loads[w])
+    assert r.pick_least_loaded() == "b"
+    loads["b"] = 9.0
+    assert r.pick_least_loaded() == "a"
+
+
+def test_replica_parks_payload_until_world_added(arun):
+    """A replica whose entire downstream rotation broke must hold the
+    in-flight payload and deliver it once a replacement world appears
+    (previously: RuntimeError killed the serve loop and dropped the
+    request)."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1])
+        await server.start()
+        toks = _tokens(seed=1)
+        want, _ = MODEL.forward(PARAMS, jnp.asarray(toks))
+        await server.submit(toks)                      # warm compile
+
+        c.kill(server.replicas[1][0].worker_id, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)                       # watchdog fences
+
+        # the request reaches stage 0, computes, then has nowhere to go
+        req = asyncio.ensure_future(server.submit(toks, timeout=10.0))
+        await asyncio.sleep(0.3)
+        stage0 = server.replicas[0][0]
+        assert not stage0._run_task.done()             # serve loop survived
+        assert stage0.parked >= 1
+
+        await server.add_replica(1)                    # manual heal
+        got = await asyncio.wait_for(req, 10.0)        # parked payload lands
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ------------------------------------------------- store-key leak (regression)
+
+def test_remove_world_leaves_no_store_keys(arun):
+    async def scenario():
+        c = Cluster()
+        a, b = c.worker("a"), c.worker("b")
+        await asyncio.gather(a.manager.initialize_world("w", 0, 2),
+                             b.manager.initialize_world("w", 1, 2))
+        assert c.store.keys("world/w")
+        a.manager.remove_world("w")
+        b.manager.remove_world("w")
+        assert c.store.keys("world/w") == []   # config + member keys purged
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_remove_broken_world_purges_dead_peer_keys(arun):
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        a, b = c.worker("a"), c.worker("b")
+        await asyncio.gather(a.manager.initialize_world("w", 0, 2),
+                            b.manager.initialize_world("w", 1, 2))
+        c.kill("b", FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)               # a's watchdog fences w
+        assert not a.manager.worlds["w"].healthy
+        a.manager.remove_world("w")            # survivor cleans up for both
+        assert c.store.keys("world/w") == []
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_remove_world_purge_spares_prefix_sibling(arun):
+    """Purging world "w" must not touch world "w2" — world names are
+    routinely string-prefixes of each other (replica uid 1 vs 10)."""
+    async def scenario():
+        c = Cluster()
+        a, b = c.worker("a"), c.worker("b")
+        await asyncio.gather(a.manager.initialize_world("w", 0, 2),
+                             b.manager.initialize_world("w", 1, 2),
+                             a.manager.initialize_world("w2", 0, 2),
+                             b.manager.initialize_world("w2", 1, 2))
+        a.manager.remove_world("w")
+        b.manager.remove_world("w")
+        assert c.store.keys("world/w/") == []
+        assert c.store.keys("world/w2/")       # sibling untouched
+        assert a.manager.worlds["w2"].healthy
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_pipeline_drain_leaves_no_world_keys(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2])
+        await server.start()
+        await server.submit(_tokens())
+        victim = server.replicas[1][0].worker_id
+        n_keys_before = len(c.store.keys("world/"))
+        await server.remove_replica(1, victim)
+        # every key of the removed replica's worlds is gone
+        assert not [k for k in c.store.keys("world/") if victim in k]
+        assert len(c.store.keys("world/")) < n_keys_before
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ------------------------------------------------------------- drain-and-remove
+
+def test_drain_and_remove_zero_loss(arun):
+    """Scale down a replicated stage while a burst of requests is in flight:
+    every request must complete correctly."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2])
+        await server.start()
+        toks = _tokens(seed=7)
+        want, _ = MODEL.forward(PARAMS, jnp.asarray(toks))
+        await server.submit(toks)                      # warm compile
+
+        reqs = [asyncio.ensure_future(server.submit(toks, timeout=15.0))
+                for _ in range(10)]
+        await asyncio.sleep(0.01)                      # let some dispatch
+        removed = await server.remove_replica(1)       # least-loaded victim
+        results = await asyncio.gather(*reqs)
+        for got in results:                            # zero in-flight losses
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+        assert len(server.replicas[1]) == 1
+        assert removed not in server.healthy_replicas(1)
+        # survivor still serves
+        await server.submit(toks)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_remove_replica_refuses_last_healthy(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1])
+        await server.start()
+        with pytest.raises(RuntimeError):
+            await server.remove_replica(1)
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ------------------------------------------------------------------ controller
+
+def test_controller_heals_killed_replica(arun):
+    """Fig. 2c closed-loop: the watchdog fences a killed replica's worlds and
+    the controller replaces it without operator involvement."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1])
+        await server.start()
+        toks = _tokens(seed=9)
+        want, _ = MODEL.forward(PARAMS, jnp.asarray(toks))
+        await server.submit(toks)
+
+        ctrl = ElasticController(server, interval=0.05)
+        victim = server.replicas[1][0].worker_id
+        c.kill(victim, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)                       # watchdog fences
+        assert server.broken_worlds                    # detection happened
+        assert victim in server.failed_replicas(1)
+
+        await ctrl.step()                              # one control tick heals
+        assert ctrl.heals == 1
+        assert any(e.kind == "heal" for e in ctrl.timeline)
+        healed = server.healthy_replicas(1)
+        assert healed and victim not in healed
+
+        got = await server.submit(toks, timeout=10.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_controller_heal_replaces_alive_cutoff_replica(arun):
+    """An alive replica reported as failed (all upstream edges fenced) is
+    replaced add-first (capacity never dips) and drained, not discarded."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2])
+        await server.start()
+        await server.submit(_tokens())
+        victim = server.replicas[1][0].worker_id
+        ctrl = ElasticController(server, interval=0.05)
+
+        orig = server.failed_replicas
+
+        def fake(stage):
+            if stage == 1 and any(r.worker_id == victim
+                                  for r in server.replicas[1]):
+                return [victim]
+            return orig(stage)
+
+        server.failed_replicas = fake
+        await ctrl.step()
+        assert ctrl.heals == 1
+        ids = server.healthy_replicas(1)
+        assert victim not in ids and len(ids) == 2
+        await server.submit(_tokens())
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_controller_executes_scale_decisions(arun):
+    """Policy deltas drive add_replica / drain-and-remove end to end."""
+    class Scripted:
+        def __init__(self):
+            self.votes = {1: [1, -1]}    # stage 1: up once, then down once
+
+        def decide(self, snap):
+            votes = self.votes.get(snap.stage, [])
+            delta = votes.pop(0) if votes else 0
+            return ScaleDecision(snap.stage, delta, "scripted")
+
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1])
+        await server.start()
+        await server.submit(_tokens())
+        policy = Scripted()
+        ctrl = ElasticController(server, [policy, policy], interval=0.05)
+
+        await ctrl.step()
+        assert len(server.healthy_replicas(1)) == 2 and ctrl.scale_ups == 1
+        await ctrl.step()
+        assert len(server.healthy_replicas(1)) == 1 and ctrl.scale_downs == 1
+        await server.submit(_tokens())
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_metrics_hub_polls_load_and_events(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1])
+        await server.start()
+        hub = MetricsHub(server)
+        await server.submit(_tokens())
+        await asyncio.sleep(0.05)
+        hub.poll()
+        await server.submit(_tokens())
+        snaps = hub.poll()
+        assert len(snaps) == 2
+        assert all(s.n_replicas == 1 for s in snaps)
+        assert sum(s.replicas[0].processed for s in snaps) == 4
+        assert any(k == "init_done" for _, k, _w in hub.world_events)
+        c.shutdown()
+
+    arun(scenario())

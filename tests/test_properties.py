@@ -4,8 +4,11 @@ import asyncio
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly if absent
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import Cluster, Store
 from repro.models.moe import _local_moe
