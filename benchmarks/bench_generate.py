@@ -1,0 +1,224 @@
+"""Generative serving benchmark: continuous batching + the elastic scenario.
+
+Phase A — continuous batching lever: N concurrent sessions generate through
+the same 2-stage pipeline twice, once with one-dispatch-per-request decode
+(``microbatch_max=1``) and once with the continuous-batching micro-scheduler
+(``microbatch_max=8``). The acceptance bar (ISSUE 2) is >= 2x tokens/s at
+8+ concurrent sessions.
+
+Phase B — the full elastic generative scenario: a ramp of generation
+sessions arrives; the pipeline scales up under load; one replica is killed
+mid-generation (the controller auto-heals it and every affected session
+re-prefills its history on a survivor); finally a replica is drained away
+while sessions are still open. Reports tokens/s and per-token latency
+percentiles; zero client-visible failures is asserted — redispatch, RETRY
+bounce, session re-prefill, and drain-unpinning together must hide every
+transition from the clients.
+
+  PYTHONPATH=src python -m benchmarks.bench_generate [--tiny]
+
+``--tiny`` shrinks the scenario for CI smoke (fewer sessions/tokens, no
+2x assertion — CI machines are too noisy to gate on a throughput ratio).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.control import ElasticController
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer
+
+from .common import run_async
+
+PROMPT_LEN = 8
+
+
+def _build():
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                         groups=(BlockGroup(DENSE, 2),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (1, PROMPT_LEN))
+            for _ in range(n)]
+
+
+async def _phase_batching(tiny: bool) -> dict:
+    """tokens/s: one-dispatch-per-request vs continuous microbatching."""
+    cfg, model, params = _build()
+    sessions = 4 if tiny else 8
+    new_tokens = 4 if tiny else 8
+    out = {"sessions": sessions, "new_tokens": new_tokens}
+    for label, mb in (("single_dispatch", 1), ("continuous", 8)):
+        cluster = Cluster()
+        server = PipelineServer(cluster, model, params, [1, 1],
+                                max_len=64, microbatch_max=mb)
+        await server.start()
+        prompts = _prompts(cfg, sessions, seed=1)
+
+        async def round_() -> float:
+            t0 = time.monotonic()
+            await asyncio.gather(*(server.generate(p, new_tokens,
+                                                   step_timeout=120.0)
+                                   for p in prompts))
+            return time.monotonic() - t0
+
+        await round_()          # absorb prefill/decode compiles
+        await round_()          # ...including every convoy-width variant
+        dt = min(await round_(), await round_())
+        out[label] = sessions * new_tokens / dt
+        stats = server.replica_stats()
+        out[f"{label}_batches"] = sum(s["decode_batches"]
+                                      for s in stats.values())
+        out[f"{label}_steps"] = sum(s["decode_steps"]
+                                    for s in stats.values())
+        cluster.shutdown()
+    out["speedup"] = out["continuous"] / max(out["single_dispatch"], 1e-9)
+    return out
+
+
+async def _phase_elastic(tiny: bool) -> dict:
+    """ramp -> scale-up -> kill mid-generation -> heal/re-prefill ->
+    drain-based scale-down with open sessions."""
+    cfg, model, params = _build()
+    cluster = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.1)
+    server = PipelineServer(cluster, model, params, [1, 1],
+                            least_loaded=True, max_len=64)
+    await server.start()
+    # controller in heal-only mode: the scenario beats are scripted so the
+    # bench is deterministic; the kill recovery is the controller's job
+    ctrl = ElasticController(server, interval=0.05, scale_stages=[])
+    ctrl.start()
+
+    new_tokens = 4 if tiny else 8
+    waves = 2 if tiny else 4
+    per_wave = 3 if tiny else 4
+    ok = failed = 0
+    step_lat: list[float] = []
+
+    async def one(p) -> None:
+        nonlocal ok, failed
+        times: list[float] = []
+        try:
+            await server.generate(p, new_tokens, step_timeout=10.0,
+                                  token_times=times)
+            ok += 1
+            step_lat.extend(b - a for a, b in zip(times, times[1:]))
+        except Exception as e:  # noqa: BLE001 — a failure is data, not a crash
+            failed += 1
+            print(f"# session failed: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+
+    # warm the compiles off-clock
+    await server.generate(_prompts(cfg, 1, seed=9)[0], 2, step_timeout=120.0)
+
+    t_start = time.monotonic()
+    tasks: list[asyncio.Task] = []
+    killed = None
+    for wave in range(waves):
+        for p in _prompts(cfg, per_wave, seed=10 + wave):
+            tasks.append(asyncio.ensure_future(one(p)))
+        if wave == 0:
+            # ramp crosses one replica's capacity: scale the decode stage up
+            await server.add_replica(1)
+        if wave == 1:
+            # kill a replica that holds live sessions, mid-generation
+            await asyncio.sleep(0.02)
+            victims = [r for r in server.replicas[1]
+                       if r.worker.alive and not r.draining]
+            victim = max(victims, key=lambda r: r.open_sessions())
+            killed = victim.worker_id
+            cluster.kill(killed, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.1)
+    await asyncio.gather(*tasks)
+    gen_wall = time.monotonic() - t_start
+
+    # scale-down while sessions are open: drain must relocate, not lose them
+    tail = [asyncio.ensure_future(one(p))
+            for p in _prompts(cfg, per_wave, seed=99)]
+    await asyncio.sleep(0.05)
+    drained = None
+    if len(server.healthy_replicas(1)) > 1:
+        drained = await server.remove_replica(1, drain=True, timeout=20.0)
+    await asyncio.gather(*tail)
+
+    await ctrl.stop()
+    stats = server.replica_stats()
+    total_sessions = waves * per_wave + per_wave
+    lat = sorted(step_lat)
+
+    def pct(p):
+        return lat[min(int(p / 100 * len(lat)), len(lat) - 1)] if lat \
+            else float("nan")
+
+    result = {
+        "ok": ok, "failed": failed, "sessions": total_sessions,
+        "tokens_per_s": waves * per_wave * new_tokens / gen_wall,
+        "p50_token_s": pct(50), "p95_token_s": pct(95),
+        "heals": ctrl.heals, "killed": killed, "drained": drained,
+        "retries": sum(s["retries_sent"] for s in stats.values()),
+    }
+    cluster.shutdown()
+    return result
+
+
+async def _scenario(tiny: bool) -> dict:
+    return {"batching": await _phase_batching(tiny),
+            "elastic": await _phase_elastic(tiny)}
+
+
+def run(tiny: bool = False) -> list[tuple[str, float, str]]:
+    r = run_async(_scenario(tiny))
+    b, e = r["batching"], r["elastic"]
+    rows = [
+        ("generate_tokens_per_s/single_dispatch", b["single_dispatch"],
+         f"{b['sessions']} sessions, microbatch off"),
+        ("generate_tokens_per_s/continuous", b["continuous"],
+         f"{b['sessions']} sessions, fused decode dispatches"),
+        ("generate_batching_speedup", b["speedup"],
+         "continuous vs one-dispatch-per-request"),
+        ("generate_fused_batches", float(b["continuous_batches"]),
+         f"dispatches for {b['continuous_steps']} decode steps"),
+        ("elastic_generate_ok", float(e["ok"]),
+         "sessions completed (ramp+kill+drain scenario)"),
+        ("elastic_generate_failed", float(e["failed"]),
+         "must be 0 — transitions hidden from clients"),
+        ("elastic_generate_tokens_per_s", e["tokens_per_s"],
+         "across ramp + kill + heal"),
+        ("elastic_generate_p50_token_ms", e["p50_token_s"] * 1e3,
+         "per-token latency"),
+        ("elastic_generate_p95_token_ms", e["p95_token_s"] * 1e3,
+         "includes kill/re-prefill window"),
+        ("elastic_generate_heals", float(e["heals"]),
+         f"killed={e['killed']} auto-replaced"),
+        ("elastic_generate_retries", float(e["retries"]),
+         "RETRY bounces (sessions relocated)"),
+    ]
+    assert e["failed"] == 0, f"client-visible failures: {e}"
+    assert e["ok"] == e["sessions"], e
+    assert e["heals"] >= 1, "controller never healed the killed replica"
+    if not tiny:
+        assert b["speedup"] >= 2.0, \
+            f"continuous batching speedup {b['speedup']:.2f} < 2x"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small scenario, no throughput gate")
+    args = ap.parse_args()
+    for name, value, derived in run(tiny=args.tiny):
+        print(f"{name},{value:.4f},{derived}")

@@ -9,6 +9,8 @@ Prints ``name,value,derived`` CSV rows:
 * fig6/7 — MultiWorld throughput overhead vs single world, 1->1 and N->1
 * pipeline — end-to-end elastic pipeline latency (Fig. 2 scenario)
 * elastic — closed-loop autoscale/heal/drain scenario (control plane)
+* generate — generative data plane: continuous batching + kill/drain
+  recovery of in-flight sessions
 """
 from __future__ import annotations
 
@@ -91,6 +93,8 @@ SUITES = {
     "pipeline": _rows_pipeline,
     "elastic": lambda: __import__("benchmarks.bench_elastic",
                                   fromlist=["run"]).run(),
+    "generate": lambda: __import__("benchmarks.bench_generate",
+                                   fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

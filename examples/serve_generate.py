@@ -1,0 +1,73 @@
+"""End-to-end driver: elastic *generative* serving (the paper's Fig. 2
+topology carrying real autoregressive decode traffic).
+
+A llama-family model is split into 2 pipeline stages, the decode stage
+replicated. Eight concurrent sessions stream tokens through the pipeline —
+each stage holds a per-session KV cache over its own layer slice, decode
+steps follow the session's pinned route, and the per-replica micro-scheduler
+fuses compatible steps into batched dispatches. Mid-generation one replica
+is killed: the watchdog fences its worlds, every affected session re-prefills
+its full history (prompt + tokens generated so far) on a survivor, and all
+outputs stay token-identical to a single-engine greedy decode.
+
+  PYTHONPATH=src python examples/serve_generate.py
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer, ServeEngine
+
+
+async def main() -> None:
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=4,
+                                         groups=(BlockGroup(DENSE, 4),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    cluster = Cluster(heartbeat_interval=0.02, heartbeat_timeout=0.2)
+    server = PipelineServer(cluster, model, params, replicas=[1, 2],
+                            max_len=64, least_loaded=True)
+    await server.start()
+    print("pipeline: stage0 x1 -> stage1 x2 (replicated decode stage)")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (1, 8)) for _ in range(8)]
+    engine = ServeEngine(model, params, max_len=64)
+    wants = [engine.generate(p, 8) for p in prompts]
+    print("reference single-engine greedy decodes computed")
+
+    async def one(p):
+        return await server.generate(p, 8, step_timeout=10.0)
+
+    t0 = time.monotonic()
+    tasks = [asyncio.ensure_future(one(p)) for p in prompts]
+    await asyncio.sleep(0.1)
+    victim = server.replicas[1][0].worker_id
+    print(f"-- killing {victim} mid-generation (silent hang) --")
+    cluster.kill(victim, FailureKind.SILENT_HANG)
+    outs = await asyncio.gather(*tasks)
+    dt = time.monotonic() - t0
+
+    exact = sum(bool(np.array_equal(o, w)) for o, w in zip(outs, wants))
+    print(f"  8 sessions x 8 tokens in {dt:.2f}s "
+          f"({8 * 8 / dt:.1f} tok/s), {exact}/8 token-identical to the "
+          f"single engine")
+    assert exact == 8
+
+    stats = server.replica_stats()
+    for wid, s in stats.items():
+        if s["decode_steps"]:
+            print(f"  {wid}: {s['decode_steps']} decode steps in "
+                  f"{s['decode_batches']} fused dispatches, "
+                  f"{s['retries_sent']} sessions bounced for re-prefill")
+    cluster.shutdown()
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

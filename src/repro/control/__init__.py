@@ -15,6 +15,7 @@ from .policy import (
     ScaleDecision,
     ScalingPolicy,
     TargetQueueDepthPolicy,
+    TokenRatePolicy,
 )
 from .workload import (
     BurstProfile,
@@ -30,7 +31,7 @@ __all__ = [
     "ControlEvent", "ElasticController",
     "Ewma", "MetricsHub", "ReplicaSample", "StageSnapshot",
     "HysteresisPolicy", "LatencySLOPolicy", "ScaleDecision",
-    "ScalingPolicy", "TargetQueueDepthPolicy",
+    "ScalingPolicy", "TargetQueueDepthPolicy", "TokenRatePolicy",
     "BurstProfile", "ConstantProfile", "DiurnalProfile",
     "OpenLoopGenerator", "RampProfile", "RateProfile", "RequestRecord",
 ]

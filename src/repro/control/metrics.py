@@ -55,6 +55,8 @@ class ReplicaSample:
     processed: int
     throughput: float       # completed req/s, EWMA
     latency_s: float        # wait + service per request, EWMA
+    tokens_per_s: float = 0.0   # decode tokens/s, EWMA (generative plane)
+    open_sessions: int = 0      # sessions whose KV cache lives here
 
 
 @dataclasses.dataclass
@@ -70,6 +72,8 @@ class StageSnapshot:
     throughput: float               # stage-total completed req/s, EWMA
     latency_s: float                # mean request sojourn in stage, EWMA
     replicas: list[ReplicaSample] = dataclasses.field(default_factory=list)
+    tokens_per_s: float = 0.0       # stage-total decode tokens/s, EWMA
+    open_sessions: int = 0          # live sessions across healthy replicas
 
 
 class MetricsHub:
@@ -79,9 +83,10 @@ class MetricsHub:
         #: (t, kind, world) world-lifecycle events from every manager
         self.world_events: list[tuple[float, str, str]] = []
         self.breaks_seen = 0
-        self._prev: dict[str, tuple[float, int, float, float]] = {}
+        self._prev: dict[str, tuple[float, int, float, int]] = {}
         self._tput: dict[str, Ewma] = {}
         self._lat: dict[str, Ewma] = {}
+        self._toks: dict[str, Ewma] = {}
         self._qdepth: dict[int, Ewma] = {}
         self._subscribed: set[str] = set()
         self._subscribe_new_managers()
@@ -116,28 +121,33 @@ class MetricsHub:
         prev = self._prev.get(wid)
         processed = rep.processed
         lat_sum = rep.wait_s_sum + rep.service_s_sum
+        tokens = rep.tokens_out
         tput = self._tput.setdefault(wid, Ewma(self.alpha))
         lat = self._lat.setdefault(wid, Ewma(self.alpha))
+        toks = self._toks.setdefault(wid, Ewma(self.alpha))
         if prev is not None:
-            t0, done0, lat0, _ = prev
+            t0, done0, lat0, tok0 = prev
             dt = max(now - t0, 1e-9)
             dn = processed - done0
             tput.update(dn / dt)
+            toks.update((tokens - tok0) / dt)
             if dn > 0:
                 lat.update((lat_sum - lat0) / dn)
-        self._prev[wid] = (now, processed, lat_sum, 0.0)
+        self._prev[wid] = (now, processed, lat_sum, tokens)
+        open_sessions = rep.open_sessions()
         return ReplicaSample(
             worker_id=wid, stage=rep.stage, alive=rep.worker.alive,
             draining=rep.draining, queue_depth=rep.queue_depth(),
             inflight=rep.inflight, processed=processed,
-            throughput=tput.get(), latency_s=lat.get())
+            throughput=tput.get(), latency_s=lat.get(),
+            tokens_per_s=toks.get(), open_sessions=open_sessions)
 
     def _prune_retired(self) -> None:
         """Worker ids are never reused, so per-replica state for retired
         replicas is garbage — drop it or a long-lived elastic cluster leaks
         one entry set per scale/heal cycle."""
         live = {r.worker_id for reps in self.server.replicas for r in reps}
-        for d in (self._prev, self._tput, self._lat):
+        for d in (self._prev, self._tput, self._lat, self._toks):
             for wid in [w for w in d if w not in live]:
                 del d[wid]
         # retired workers leave the cluster registry too (teardown reclaims
@@ -167,5 +177,7 @@ class MetricsHub:
                 throughput=sum(s.throughput for s in healthy),
                 latency_s=(sum(s.latency_s for s in healthy) / n
                            if n else 0.0),
-                replicas=samples))
+                replicas=samples,
+                tokens_per_s=sum(s.tokens_per_s for s in healthy),
+                open_sessions=sum(s.open_sessions for s in healthy)))
         return snaps

@@ -13,10 +13,18 @@ Provided policies:
 * :class:`LatencySLOPolicy` — scale on the user-visible signal: grow when
   the stage latency EWMA breaches the SLO, shrink when it is comfortably
   under and the queue is near-empty.
+* :class:`TokenRatePolicy` — the generative-plane signal: size the stage by
+  decode tokens/s against a per-replica capacity target, and never shrink
+  while open sessions would have to relocate en masse.
 * :class:`HysteresisPolicy` — a wrapper adding the stability knobs every
   real autoscaler needs: K-consecutive-votes confirmation, post-action
-  cooldown, and ±1 step clamping. Wrap either policy above with it to stop
+  cooldown, and ±1 step clamping. Wrap any policy above with it to stop
   flapping on noisy load.
+
+Generative serving makes scale-down stateful: draining a replica relocates
+every session pinned to it (each one re-prefills its full history on a
+survivor). ``shrink_open_sessions`` on the queue/latency policies caps how
+many open sessions per replica a voluntary shrink may displace.
 """
 from __future__ import annotations
 
@@ -62,6 +70,9 @@ class TargetQueueDepthPolicy:
     scale_down_at: float = 0.5     # shrink only when backlog/replica < this
     min_replicas: int = 1
     max_replicas: int = 8
+    #: refuse voluntary shrink while it would displace more than this many
+    #: open sessions per replica (None = session-blind, legacy behavior)
+    shrink_open_sessions: Optional[float] = None
 
     def decide(self, snap: StageSnapshot) -> ScaleDecision:
         n = max(snap.n_replicas, 1)
@@ -74,6 +85,10 @@ class TargetQueueDepthPolicy:
                     snap.stage, desired - n,
                     f"queue/replica {per:.1f} > target {self.target:g}")
         elif per < self.scale_down_at and n > self.min_replicas:
+            if (self.shrink_open_sessions is not None
+                    and snap.open_sessions / n > self.shrink_open_sessions):
+                return hold(snap.stage,
+                            f"{snap.open_sessions} open sessions pin capacity")
             return ScaleDecision(
                 snap.stage, -1,
                 f"queue/replica {per:.2f} < {self.scale_down_at:g}")
@@ -105,6 +120,44 @@ class LatencySLOPolicy:
             return ScaleDecision(
                 snap.stage, -1,
                 f"latency {lat * 1e3:.0f}ms well under SLO, queue idle")
+        return hold(snap.stage)
+
+
+@dataclasses.dataclass
+class TokenRatePolicy:
+    """Size a stage by decode throughput: grow when the per-replica token
+    rate exceeds ``target_tokens_per_s`` (the replica's measured or budgeted
+    decode capacity), shrink when the stage is well under capacity *and*
+    few enough sessions would have to relocate.
+
+    This is the policy that watches the generative data plane directly —
+    queue depth lags token demand because one queued DECODE envelope is one
+    *step*, not one request.
+    """
+
+    target_tokens_per_s: float
+    shrink_frac: float = 0.25
+    shrink_open_sessions: float = 2.0
+    min_replicas: int = 1
+    max_replicas: int = 8
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        n = max(snap.n_replicas, 1)
+        per = snap.tokens_per_s / n
+        if per > self.target_tokens_per_s and n < self.max_replicas:
+            desired = min(
+                math.ceil(snap.tokens_per_s / self.target_tokens_per_s),
+                self.max_replicas)
+            return ScaleDecision(
+                snap.stage, max(desired - n, 1),
+                f"{per:.0f} tok/s/replica > target "
+                f"{self.target_tokens_per_s:g}")
+        if (per < self.shrink_frac * self.target_tokens_per_s
+                and n > self.min_replicas
+                and snap.open_sessions / n <= self.shrink_open_sessions):
+            return ScaleDecision(
+                snap.stage, -1,
+                f"{per:.0f} tok/s/replica well under target")
         return hold(snap.stage)
 
 

@@ -71,6 +71,9 @@ class WorldCommunicator:
         world = self._manager.worlds.get(name)
         if world is None or world.status is WorldStatus.REMOVED:
             self._rank_cache.pop(name, None)
+            # removed worlds never see another op: drop their pending counter
+            # too, or every scale/heal cycle leaks one dict entry per world
+            self.pending.pop(name, None)
             raise WorldNotFoundError(name)
         cached = self._rank_cache.get(name)
         if cached is not None and cached[0] is world:
@@ -130,7 +133,14 @@ class WorldCommunicator:
                             f"op on world '{world.name}' timed out after "
                             f"{timeout}s")
             finally:
-                self.pending[world.name] -= 1
+                # prune on zero: ``pending`` holds only worlds with in-flight
+                # ops, instead of growing one permanent key per world ever
+                # used across every scale/heal cycle
+                n = self.pending.get(world.name, 1) - 1
+                if n <= 0:
+                    self.pending.pop(world.name, None)
+                else:
+                    self.pending[world.name] = n
         except WorldBrokenError:
             self.ops_aborted += 1
             raise

@@ -29,6 +29,32 @@ import numpy as np
 from .fault import FailureKind, RemoteError
 
 
+def payload_nbytes(obj: Any) -> int:
+    """Bytes moved by one payload, whatever shape it takes.
+
+    Accepts raw arrays (``nbytes``), encoded wire buffers (``len``), objects
+    exposing an ``nbytes`` property (serving envelopes), and containers of
+    any of those. The old ``getattr(payload, "nbytes", 0)`` recorded 0 for
+    every pipeline payload — tuples have no ``nbytes`` — so ``bytes_sent``
+    was silently zero for all pipeline traffic.
+    """
+    if obj is None:
+        return 0
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        return len(obj)
+    n = getattr(obj, "nbytes", None)
+    if n is not None and not callable(n):
+        try:
+            return int(n)
+        except TypeError:
+            pass
+    if isinstance(obj, (tuple, list)):
+        return sum(payload_nbytes(o) for o in obj)
+    if isinstance(obj, dict):
+        return sum(payload_nbytes(v) for v in obj.values())
+    return 0
+
+
 class Codec:
     """Payload transformation applied on the wire. Default: zero-copy."""
 
@@ -167,7 +193,9 @@ class Transport:
         wire = self.codec.encode(payload)
         self._channel(world, src, dst).buf.append(wire)
         self.messages_sent += 1
-        self.bytes_sent += getattr(payload, "nbytes", 0)
+        # count what actually crosses the wire: the encoded size under a
+        # serializing codec (pickle bytes), the leaf-tensor bytes otherwise
+        self.bytes_sent += payload_nbytes(wire)
 
     def recv_nowait(self, world: str, src: int, dst: int,
                     src_worker: str | None = None) -> tuple[bool, Any]:

@@ -1,4 +1,6 @@
 from .engine import ServeEngine, sample_tokens
+from .envelope import Envelope, Kind, payload_nbytes
+from .executor import StageExecutor
 from .partition import (
     StageSpec,
     split_stages,
@@ -13,6 +15,8 @@ from .router import ReplicaRouter
 
 __all__ = [
     "ServeEngine", "sample_tokens",
+    "Envelope", "Kind", "payload_nbytes",
+    "StageExecutor",
     "StageSpec", "split_stages", "stage_decode", "stage_forward",
     "stage_init_cache", "stage_params", "stage_prefill",
     "CLIENT", "PipelineServer", "ReplicaRouter",

@@ -1,9 +1,11 @@
 """Single-replica serving engine: batched prefill + token-by-token decode.
 
 The building block each MultiWorld pipeline stage replica runs internally;
-also usable standalone (examples/quickstart.py). Compiles one prefill and
-one decode executable per (batch, seq) bucket and reuses them across
-requests — the paper's NCCL-lazy-init throughput dip has its analogue here
+also usable standalone (examples/quickstart.py). All compute — shape
+bucketing, compile reuse, prefill/decode dispatch — lives in the shared
+:class:`~repro.serving.executor.StageExecutor` (the whole model treated as a
+single stage), the same executor every pipeline replica runs its own layer
+slice on. The paper's NCCL-lazy-init throughput dip has its analogue here
 as the first-call compile, which bench_online.py measures.
 """
 from __future__ import annotations
@@ -14,6 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .executor import StageExecutor
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float
@@ -33,14 +37,12 @@ class ServeEngine:
         self.params = params
         self.max_len = max_len
         self.temperature = temperature
-        self._prefill = jax.jit(
-            lambda p, toks: model.prefill(p, toks, max_len))
-        self._decode = jax.jit(
-            lambda p, c, tk, t: model.decode_step(p, c, tk, t))
+        self.executor = StageExecutor.for_model(model, params,
+                                                max_len=max_len)
         # first_call_compile_s: wall time of the very first prefill + decode
         # dispatch (dominated by jit compilation — the analogue of the
         # paper's NCCL lazy-init dip). generate_s: total generate() wall
-        # time across all calls. Formerly one misnamed "compile_s" stat.
+        # time across all calls.
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
                       "tokens_out": 0, "first_call_compile_s": 0.0,
                       "generate_s": 0.0}
@@ -54,11 +56,7 @@ class ServeEngine:
         assert s + max_new_tokens <= self.max_len
 
         t0 = time.monotonic()
-        first_prefill = self.stats["prefill_calls"] == 0
-        logits, cache = self._prefill(self.params, toks)
-        if first_prefill:
-            jax.block_until_ready(logits)
-            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        logits, cache = self.executor.prefill(toks)
         self.stats["prefill_calls"] += 1
 
         out = []
@@ -68,22 +66,17 @@ class ServeEngine:
         t = s
         for _ in range(max_new_tokens - 1):
             key, sub = jax.random.split(key)
-            first_decode = self.stats["decode_steps"] == 0
-            td = time.monotonic()
-            logits, cache = self._decode(self.params, cache,
-                                         next_tok[:, None], jnp.int32(t))
-            if first_decode:
-                jax.block_until_ready(logits)
-                self.stats["first_call_compile_s"] += time.monotonic() - td
+            logits, cache = self.executor.decode(cache, next_tok[:, None], t)
             next_tok = sample_tokens(logits, sub, self.temperature)
             out.append(next_tok)
             t += 1
             self.stats["decode_steps"] += 1
         self.stats["tokens_out"] += bsz * max_new_tokens
+        self.stats["first_call_compile_s"] = \
+            self.executor.stats["first_call_compile_s"]
         self.stats["generate_s"] += time.monotonic() - t0
         return np.stack([np.asarray(o) for o in out], axis=1)
 
     def score(self, tokens: np.ndarray) -> np.ndarray:
-        """Teacher-forced logits (B, S, V) — the pipeline's prefill payload."""
-        logits, _ = self.model.forward(self.params, jnp.asarray(tokens))
-        return np.asarray(logits)
+        """Teacher-forced logits (B, S, V) — the pipeline's scoring payload."""
+        return np.asarray(self.executor.score(jnp.asarray(tokens, jnp.int32)))

@@ -1,0 +1,68 @@
+"""Typed request envelopes: what the pipeline wires actually carry.
+
+The original data plane moved anonymous ``(req_id, tensor)`` tuples, which
+was enough for one-shot scoring but made every other layer blind: routers
+could not distinguish a prefill from a decode step (so no session affinity),
+drain could not see open sessions, and transport byte accounting saw an
+object with no ``nbytes``. The :class:`Envelope` gives every hop the request
+identity, the session it belongs to, what kind of work it is, where in the
+sequence it sits, and how long the client will still wait for it.
+
+Lifecycle of a generative request (client-side loop in
+``PipelineServer.generate``):
+
+    PREFILL(history) -> stage0 .. stageN build per-session KV caches,
+                        each pins the downstream world it chose
+    DECODE(token, t) -> follows the pinned route; replicas coalesce
+                        compatible steps into one batched dispatch
+    FINISH           -> dropped-state marker along the pinned route
+    RETRY            -> any replica that lost the session's state (death,
+                        drain, fenced edge) answers with this; the client
+                        re-prefills the full history on a survivor
+
+``SCORE`` keeps the legacy stateless teacher-forced path alive under the
+same typed wire format.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+from repro.core.transport import payload_nbytes
+
+
+class Kind(enum.IntEnum):
+    SCORE = 0     # stateless teacher-forced batch (legacy submit() path)
+    PREFILL = 1   # build a session's per-stage KV cache from token history
+    DECODE = 2    # one autoregressive step against an open session
+    FINISH = 3    # client done: drop session state along the pinned route
+    RETRY = 4     # session state lost; client must re-prefill on a survivor
+
+
+@dataclasses.dataclass
+class Envelope:
+    """One unit of pipeline traffic.
+
+    ``step`` is the decode position ``t`` of the carried token (DECODE) or
+    the last history position (PREFILL). ``deadline`` is an absolute
+    ``time.monotonic`` instant after which the client has given up — replicas
+    drop expired envelopes instead of burning compute on them; 0 means no
+    deadline. ``payload`` is tokens entering stage 0, hidden states between
+    stages, logits toward the client, or None (FINISH/RETRY).
+    """
+
+    req_id: int
+    session_id: int
+    kind: Kind
+    step: int = 0
+    deadline: float = 0.0
+    payload: Any = None
+
+    @property
+    def nbytes(self) -> int:
+        """Wire size of the tensor payload (transport byte accounting)."""
+        return payload_nbytes(self.payload)
+
+    def expired(self, now: float) -> bool:
+        return self.deadline > 0.0 and now > self.deadline

@@ -1,0 +1,187 @@
+"""StageExecutor: shared compile-reuse prefill/decode execution.
+
+One instance serves one pipeline stage (all replicas of the stage share it,
+and therefore share its jit cache) or the whole model as a single stage
+(``ServeEngine``). It owns the three compute paths of the generative data
+plane:
+
+* :meth:`score`   — stateless teacher-forced forward (legacy submit path)
+* :meth:`prefill` — build a per-session decode cache from a token history
+* :meth:`decode` / :meth:`decode_many` — one autoregressive step for a
+  single session, or one fused dispatch over N stacked sessions at
+  *heterogeneous* positions (the continuous-batching hot path)
+
+Compile reuse: jit already caches one executable per input shape; the
+executor additionally right-pads prefill sequence lengths up to power-of-two
+buckets so arbitrary history lengths (which re-prefill after a failure makes
+common) hit a small set of executables instead of compiling per length.
+Padding is only applied when every group in the stage slice uses a full
+(non-ring, non-SSM) cache: causal masking makes right-padding invisible to
+real positions there, while ring buffers would evict real keys and SSM
+states would integrate the garbage tail.
+
+``decode_many`` batches sessions by stacking their caches along a fresh
+leading axis and ``vmap``-ing the single-step stage decode over it — each
+session keeps its own position ``t``, so sessions that started at different
+times still coalesce into one dispatch (same-``t``-only batching would never
+converge once sessions drift).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import DENSE, MOE, ModelConfig
+from .partition import (
+    StageSpec,
+    stage_decode,
+    stage_forward,
+    stage_params,
+    stage_prefill,
+    split_stages,
+)
+
+
+class StageExecutor:
+    def __init__(self, cfg: ModelConfig, spec: StageSpec, sparams: Any, *,
+                 max_len: int = 256, pad_seq: bool = True) -> None:
+        self.cfg = cfg
+        self.spec = spec
+        self.sparams = sparams
+        self.max_len = max_len
+        groups = [cfg.groups[gi] for gi, _, _ in spec.slices]
+        #: right-padding is a pure win only for full-cache attention stages
+        self.pad_seq = pad_seq and all(
+            g.kind in (DENSE, MOE) and g.window is None for g in groups)
+        tokens_in = spec.first
+
+        self._score = jax.jit(
+            lambda sp, x: stage_forward(cfg, spec, sp, x, tokens_in=tokens_in))
+        self._prefill = jax.jit(
+            lambda sp, x: stage_prefill(cfg, spec, sp, x, max_len,
+                                        tokens_in=tokens_in))
+        self._decode = jax.jit(
+            lambda sp, c, x, t: stage_decode(cfg, spec, sp, c, x, t,
+                                             tokens_in=tokens_in))
+        # N sessions, each with its own cache and position, in one dispatch:
+        # vmap over a stacked leading axis keeps every per-session batch dim
+        # intact, so the inner stage_decode is byte-for-byte the single path.
+        # Stacking N caches and splitting the N results back apart happens
+        # INSIDE the jitted function — done on the host it costs dozens of
+        # tiny dispatches per fused batch and erases the batching win.
+        def _many(sp, caches, xs, ts):
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+            x = jnp.stack(xs)
+            outs, new_stacked = jax.vmap(
+                lambda c, xi, ti: stage_decode(cfg, spec, sp, c, xi, ti,
+                                               tokens_in=tokens_in),
+                in_axes=(0, 0, 0))(stacked, x, ts)
+            n = len(caches)
+            return (tuple(outs[i] for i in range(n)),
+                    tuple(jax.tree.map(lambda l: l[i], new_stacked)
+                          for i in range(n)))
+
+        self._decode_many = jax.jit(_many)
+
+        self.stats = {"score_calls": 0, "prefill_calls": 0,
+                      "decode_batches": 0, "decode_steps": 0,
+                      "first_call_compile_s": 0.0}
+        #: fused convoy widths already compiled (first-dispatch timing)
+        self._widths_seen: set[int] = set()
+
+    @classmethod
+    def for_model(cls, model, params, *, max_len: int = 256,
+                  pad_seq: bool = True) -> "StageExecutor":
+        """Whole model as a single stage (the standalone-engine case)."""
+        spec = split_stages(model.cfg, 1)[0]
+        return cls(model.cfg, spec, stage_params(model.cfg, params, spec),
+                   max_len=max_len, pad_seq=pad_seq)
+
+    # ------------------------------------------------------------------ shapes
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    @staticmethod
+    def _width_bucket(n: int) -> int:
+        b = 2
+        while b < n:
+            b *= 2
+        return b
+
+    def _timed(self, key: str, fn, *args):
+        """Record first-dispatch wall time (dominated by jit compile — the
+        analogue of the paper's NCCL lazy-init dip) per executor."""
+        first = self.stats[key] == 0
+        t0 = time.monotonic()
+        out = fn(self.sparams, *args)
+        if first:
+            jax.block_until_ready(out)
+            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        self.stats[key] += 1
+        return out
+
+    # ----------------------------------------------------------------- compute
+    def score(self, x: jax.Array) -> jax.Array:
+        """Teacher-forced forward: tokens/hidden (B,S[,D]) -> full output."""
+        return self._timed("score_calls", self._score, x)
+
+    def prefill(self, x: jax.Array) -> tuple[jax.Array, Any]:
+        """History (B,S[,D]) -> (output sliced back to S, session cache)."""
+        s = x.shape[1]
+        if self.pad_seq:
+            sp = min(self._bucket(s), self.max_len)
+            if sp > s:
+                pad = [(0, 0), (0, sp - s)] + [(0, 0)] * (x.ndim - 2)
+                x = jnp.pad(x, pad)
+        out, cache = self._timed("prefill_calls", self._prefill, x)
+        if out.shape[1] != s:
+            out = out[:, :s]
+        return out, cache
+
+    def decode(self, cache: Any, x: jax.Array, t) -> tuple[jax.Array, Any]:
+        """Single-session step: token/hidden (B,1[,D]) at position ``t``."""
+        out, new_cache = self._timed(
+            "decode_steps", self._decode, cache, x, jnp.int32(t))
+        self.stats["decode_batches"] += 1
+        return out, new_cache
+
+    def decode_many(self, caches: list[Any], xs: list[jax.Array],
+                    ts: list[int]) -> list[tuple[jax.Array, Any]]:
+        """One fused dispatch over N sessions (own cache + position each).
+
+        All ``xs`` must share one shape (same per-session batch); positions
+        are free. Returns per-session (output, new_cache) in input order.
+
+        Convoy widths are bucketed to powers of two by duplicating lane 0
+        (results discarded): otherwise every distinct width 2..max compiles
+        its own executable mid-serving, a compile stall per new width — the
+        decode-path analogue of the prefill sequence buckets.
+        """
+        n = len(caches)
+        if n == 1:
+            return [self.decode(caches[0], xs[0], ts[0])]
+        width = self._width_bucket(n)
+        if width > n:
+            pad = width - n
+            caches = list(caches) + [caches[0]] * pad
+            xs = list(xs) + [xs[0]] * pad
+            ts = list(ts) + [ts[0]] * pad
+        t = jnp.asarray(ts, jnp.int32)
+        first = width not in self._widths_seen
+        self._widths_seen.add(width)
+        t0 = time.monotonic()
+        outs, new_caches = self._decode_many(
+            self.sparams, tuple(caches), tuple(xs), t)
+        if first:
+            jax.block_until_ready(outs)
+            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        self.stats["decode_batches"] += 1
+        self.stats["decode_steps"] += n
+        return list(zip(outs[:n], new_caches[:n]))

@@ -8,26 +8,42 @@ breaks only its edges; upstream routers drop the broken worlds and keep
 serving through the survivors; ``add_replica`` performs online instantiation
 (new worker + fresh worlds) without touching any existing world.
 
+Generative data plane (beyond the paper's one-shot batches): every payload on
+every edge is a typed :class:`~repro.serving.envelope.Envelope`. The client
+drives autoregressive generation with ``generate()``:
+
+* PREFILL carries the full token history through the pipeline; each stage
+  builds a per-session KV cache over its own layer slice and *pins* the
+  downstream world it picked, so the session's decode steps follow one route.
+* DECODE carries one token per step along the pinned route. Each replica runs
+  a continuous-batching micro-scheduler: compatible queued decode steps (same
+  per-session batch shape, arbitrary positions) coalesce into one fused
+  ``decode_many`` dispatch, with a max-wait knob (``microbatch_wait_s``)
+  bounding the latency paid for batching.
+* A replica that has lost a session's state — it is draining, the session
+  was never prefilled here, or its pinned downstream edge died — answers
+  RETRY toward the client, which re-prefills the full history (prompt + all
+  tokens generated so far) on a survivor: at-least-once, state rebuilt,
+  zero client-visible token loss.
+* FINISH releases per-stage session state along the pinned route.
+
 Elastic control hooks (consumed by repro.control):
 
-* ``remove_replica`` — the scale-down path the paper leaves open: stop
-  routing to the replica, drain its inbox and in-flight work to zero, then
-  tear down its worlds on every member in one event-loop tick (no spurious
-  watchdog breaks, no dropped payloads).
-* per-replica load counters (queue depth, in-flight, wait/service time) —
-  the raw signals MetricsHub turns into EWMAs for the scaling policies.
-* ``failed_replicas`` — watchdog-sourced failure view: a replica whose
-  upstream edges have *all* been fenced can no longer receive traffic and
-  is a heal candidate (paper Fig. 2c, but triggered by the watchdog).
-
-Payloads are (request_id, tensor) tuples moved zero-copy by the in-process
-transport; on real hardware the same worlds carry ICI/NCCL transfers.
+* ``remove_replica`` — scale-down: stop routing to the replica, *unpin* its
+  sessions (their next decode step triggers relocation via RETRY or the
+  client's own pin check), drain its inbox/in-flight work/adjacent channels
+  to zero, then tear down its worlds in one event-loop tick.
+* per-replica load counters (queue depth, in-flight, wait/service time,
+  tokens out, open sessions) — the raw signals MetricsHub turns into EWMAs.
+* ``failed_replicas`` — watchdog-sourced failure view for the heal loop.
 """
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 import itertools
 import time
+from collections import deque
 from typing import Any, Optional
 
 import jax
@@ -41,7 +57,9 @@ from repro.core import (
     WorldSpec,
 )
 from repro.core.online import OnlineInstantiator
-from .partition import StageSpec, split_stages, stage_forward, stage_params
+from .envelope import Envelope, Kind
+from .executor import StageExecutor
+from .partition import split_stages, stage_params
 from .router import ReplicaRouter
 
 CLIENT = "client"
@@ -49,6 +67,20 @@ CLIENT = "client"
 
 def _edge(name: str, up: str, down: str) -> str:
     return f"{name}:{up}->{down}"
+
+
+@dataclasses.dataclass
+class _Session:
+    """Per-stage decode state for one open generation request."""
+
+    cache: Any
+    batch: int
+    step: int            # last position decoded at this stage
+    touched: float       # monotonic; TTL reaping of orphaned state
+
+
+class _SessionLost(Exception):
+    """Client-side marker: pinned state gone; re-prefill on a survivor."""
 
 
 class _Replica:
@@ -65,18 +97,33 @@ class _Replica:
         self.router = ReplicaRouter()          # downstream worlds we send on
         self.router.set_load_probe(server._edge_load)
         self.inbox: asyncio.Queue = asyncio.Queue()
+        #: envelopes popped during decode coalescing that must be served
+        #: before the next inbox read (ordering across kinds)
+        self._stash: deque = deque()
+        #: open generation sessions whose stage-slice KV cache lives here
+        self.sessions: dict[int, _Session] = {}
         self._pumps: dict[str, asyncio.Task] = {}
         self._run_task: Optional[asyncio.Task] = None
+        self._reap_task: Optional[asyncio.Task] = None
         self.draining = False
+        self._last_reap = time.monotonic()
         # -- load/latency counters polled by control.MetricsHub ------------
         self.processed = 0
         self.inflight = 0
         self.wait_s_sum = 0.0        # inbox sojourn
         self.service_s_sum = 0.0     # compute + downstream send
         self.parked = 0              # sends parked on an empty rotation
+        self.tokens_out = 0          # decode tokens produced (B per step)
+        self.decode_batches = 0      # fused decode dispatches
+        self.decode_steps = 0        # decode envelopes served
+        self.retries_sent = 0        # sessions bounced back for re-prefill
+        self.expired = 0             # envelopes dropped past their deadline
 
     def queue_depth(self) -> int:
-        return self.inbox.qsize() + self.inflight
+        return self.inbox.qsize() + len(self._stash) + self.inflight
+
+    def open_sessions(self) -> int:
+        return len(self.sessions)
 
     def watch_upstream(self, world: str, router: ReplicaRouter) -> None:
         self.upstream.append(world)
@@ -101,44 +148,255 @@ class _Replica:
         except (WorldBrokenError, WorldNotFoundError, asyncio.CancelledError):
             return
 
+    # ------------------------------------------------------------- serve loop
     async def run(self) -> None:
-        fn = self.server.stage_fns[self.stage]
-        sparams = self.server.stage_param_sets[self.stage]
-        comm = self.worker.comm
+        ex = self.server.stage_executors[self.stage]
         loop = asyncio.get_event_loop()
         while True:
-            (req_id, x), t_enq = await self.inbox.get()
+            if self._stash:
+                env, t_enq = self._stash.popleft()
+            else:
+                env, t_enq = await self.inbox.get()
             t0 = time.monotonic()
             self.wait_s_sum += t0 - t_enq
             self.inflight += 1
             try:
-                # run compute (incl. first-call jit compile) off the event
-                # loop so watchdog heartbeats keep flowing — the same reason
-                # the paper moves blocking NCCL init to a side thread (§4.2)
-                y = await loop.run_in_executor(None, fn, sparams, x)
-                sent = False
-                while not sent:
-                    world = self.router.try_pick(
-                        least_loaded=self.server.least_loaded)
-                    if world is None:
-                        # Every downstream world is gone. Dying here would
-                        # drop the in-flight payload and kill this serve loop
-                        # for good — park instead and retry once the
-                        # controller adds/heals a downstream replica.
-                        self.parked += 1
-                        await self.router.wait_healthy()
-                        continue
-                    try:
-                        await comm.send((req_id, y), 1, world)
-                        sent = True
-                    except WorldBrokenError:
-                        self.router.mark_broken(world)
-                    except WorldNotFoundError:
-                        self.router.remove(world)
-                self.processed += 1
-                self.service_s_sum += time.monotonic() - t0
+                await self._dispatch(ex, loop, env, t0)
+            except asyncio.CancelledError:
+                raise
+            except (WorldBrokenError, WorldNotFoundError):
+                pass   # per-send handling already rerouted or retried
+            except Exception:  # noqa: BLE001 — a failed stage dispatch must
+                # not kill the serve loop; bounce the session so the client
+                # rebuilds state elsewhere
+                self.sessions.pop(env.session_id, None)
+                if env.kind in (Kind.PREFILL, Kind.DECODE):
+                    await self._send_retry(env)
             finally:
                 self.inflight -= 1
+            self._maybe_reap(t0)
+
+    async def _dispatch(self, ex: StageExecutor, loop, env: Envelope,
+                        t0: float) -> None:
+        if env.expired(t0):
+            self.expired += 1
+            return
+        kind = env.kind
+        if kind is Kind.RETRY:
+            # stateless pass-through toward the client — any healthy path
+            await self._forward_routed(env)
+        elif kind is Kind.FINISH:
+            await self._finish_session(env)
+        elif kind is Kind.SCORE:
+            y = await loop.run_in_executor(None, ex.score, env.payload)
+            if await self._forward_routed(
+                    dataclasses.replace(env, payload=y)) is not None:
+                self.processed += 1
+                self.service_s_sum += time.monotonic() - t0
+        elif kind is Kind.PREFILL:
+            await self._handle_prefill(ex, loop, env, t0)
+        else:
+            await self._handle_decode(ex, loop, env, t0)
+
+    async def _handle_prefill(self, ex: StageExecutor, loop, env: Envelope,
+                              t0: float) -> None:
+        if self.draining:
+            await self._send_retry(env)
+            return
+        y, cache = await loop.run_in_executor(None, ex.prefill, env.payload)
+        if self.server._is_last(self.stage):
+            y = y[:, -1]              # client only needs last-position logits
+        self.sessions[env.session_id] = _Session(
+            cache=cache, batch=int(env.payload.shape[0]),
+            step=env.step, touched=time.monotonic())
+        world = await self._forward_routed(
+            dataclasses.replace(env, payload=y))
+        if world is None:            # expired while parked — orphan reaped
+            self.sessions.pop(env.session_id, None)
+            return
+        self.router.pin(env.session_id, world)
+        self.processed += 1
+        self.service_s_sum += time.monotonic() - t0
+
+    async def _handle_decode(self, ex: StageExecutor, loop, env: Envelope,
+                             t0: float) -> None:
+        """Continuous-batching micro-scheduler: serve this decode step fused
+        with every compatible queued step (same per-session shape, any
+        position), waiting up to ``microbatch_wait_s`` for stragglers when
+        more sessions are open than are in hand."""
+        if self.draining or env.session_id not in self.sessions:
+            self.sessions.pop(env.session_id, None)
+            await self._send_retry(env)
+            return
+        batch: list[Envelope] = [env]
+        max_n = self.server.microbatch_max
+        deadline = t0 + self.server.microbatch_wait_s
+        try:
+            while len(batch) < max_n:
+                pulled = self._pull_compatible(env, max_n - len(batch), batch)
+                if pulled:
+                    continue
+                if (len(self.sessions) <= len(batch)
+                        or time.monotonic() >= deadline):
+                    break
+                await asyncio.sleep(0)
+
+            # a concurrent teardown/reap may have dropped a session between
+            # the compatibility check and now — bounce those, fuse the rest
+            live: list[tuple[Envelope, _Session]] = []
+            for e in batch:
+                sess = self.sessions.get(e.session_id)
+                if sess is None:
+                    await self._send_retry(e)
+                else:
+                    live.append((e, sess))
+            if not live:
+                return
+            try:
+                outs = await loop.run_in_executor(
+                    None, ex.decode_many,
+                    [s.cache for _, s in live],
+                    [e.payload for e, _ in live],
+                    [e.step for e, _ in live])
+            except Exception:  # noqa: BLE001 — a failed fused dispatch must
+                # bounce EVERY coalesced session, not just the first: the
+                # batch-mates were already pulled off the inbox and would
+                # otherwise stall their clients a full step_timeout
+                for e, _ in live:
+                    self.sessions.pop(e.session_id, None)
+                    await self._send_retry(e)
+                return
+            now = time.monotonic()
+            self.decode_batches += 1
+            for (e, sess), (y, new_cache) in zip(live, outs):
+                sess.cache = new_cache
+                sess.step = e.step
+                sess.touched = now
+                self.decode_steps += 1
+                self.tokens_out += sess.batch
+                await self._forward_pinned(dataclasses.replace(e, payload=y))
+                self.processed += 1
+            self.service_s_sum += time.monotonic() - t0
+        finally:
+            # coalesced extras were pulled out of the inbox by this handler;
+            # the run loop only balances the first envelope's inflight count
+            self.inflight -= len(batch) - 1
+
+    def _pull_compatible(self, proto: Envelope, n: int,
+                         batch: list[Envelope]) -> int:
+        """Drain queued envelopes: coalesce compatible DECODEs into ``batch``
+        (counting them in-flight so drain can't observe a false empty),
+        stash everything else in arrival order."""
+        pulled = 0
+        in_batch = {e.session_id for e in batch}
+        while pulled < n:
+            try:
+                item = self.inbox.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            env, t_enq = item
+            sess = self.sessions.get(env.session_id)
+            if (env.kind is Kind.DECODE and sess is not None
+                    and env.session_id not in in_batch
+                    and env.payload.shape == proto.payload.shape
+                    and not env.expired(time.monotonic())):
+                self.wait_s_sum += time.monotonic() - t_enq
+                self.inflight += 1
+                batch.append(env)
+                in_batch.add(env.session_id)
+                pulled += 1
+            else:
+                self._stash.append(item)
+        return pulled
+
+    # ------------------------------------------------------------ forwarding
+    async def _forward_routed(self, env: Envelope) -> Optional[str]:
+        """Send via the rotation (SCORE/PREFILL/RETRY). Parks on an empty
+        rotation until the controller heals a downstream replica; drops the
+        envelope if its deadline passes while parked. Returns the world used
+        (None if dropped)."""
+        comm = self.worker.comm
+        while True:
+            if env.expired(time.monotonic()):
+                self.expired += 1
+                return None
+            world = self.router.try_pick(least_loaded=self.server.least_loaded)
+            if world is None:
+                # Every downstream world is gone. Dying here would drop the
+                # in-flight payload and kill this serve loop for good — park
+                # instead and retry once the controller adds/heals a
+                # downstream replica.
+                self.parked += 1
+                await self.router.wait_healthy()
+                continue
+            try:
+                await comm.send(env, 1, world)
+                return world
+            except WorldBrokenError:
+                self.router.mark_broken(world)
+            except WorldNotFoundError:
+                self.router.remove(world)
+
+    async def _forward_pinned(self, env: Envelope) -> None:
+        """Send a decode result along the session's pinned route; if the pin
+        is gone (downstream death or drain), the downstream state is lost —
+        bounce the session back to the client."""
+        world = self.router.pinned(env.session_id)
+        if world is None:
+            self.sessions.pop(env.session_id, None)
+            await self._send_retry(env)
+            return
+        try:
+            await self.worker.comm.send(env, 1, world)
+        except WorldBrokenError:
+            self.router.mark_broken(world)
+            self.sessions.pop(env.session_id, None)
+            await self._send_retry(env)
+        except WorldNotFoundError:
+            self.router.remove(world)
+            self.sessions.pop(env.session_id, None)
+            await self._send_retry(env)
+
+    async def _send_retry(self, env: Envelope) -> None:
+        self.retries_sent += 1
+        self.router.unpin(env.session_id)
+        await self._forward_routed(Envelope(
+            req_id=env.req_id, session_id=env.session_id, kind=Kind.RETRY,
+            step=env.step))
+
+    async def _finish_session(self, env: Envelope) -> None:
+        self.sessions.pop(env.session_id, None)
+        world = self.router.pinned(env.session_id)
+        self.router.unpin(env.session_id)
+        if world is None or self.server._is_last(self.stage):
+            return
+        try:
+            # best-effort: a lost FINISH only delays reaping to the TTL sweep
+            await self.worker.comm.send(env, 1, world)
+        except (WorldBrokenError, WorldNotFoundError):
+            pass
+
+    def _maybe_reap(self, now: float) -> None:
+        """Drop session state orphaned by lost FINISHes or dead clients."""
+        if now - self._last_reap < 1.0:
+            return
+        self._last_reap = now
+        ttl = self.server.session_ttl_s
+        for sid in [s for s, sess in self.sessions.items()
+                    if now - sess.touched > ttl]:
+            del self.sessions[sid]
+            self.router.unpin(sid)
+
+    async def reap_loop(self) -> None:
+        """Periodic TTL sweep: an *idle* replica (rerouted traffic, fenced
+        upstream) never re-enters run()'s dispatch path, so without this its
+        orphaned per-session KV caches would be held forever."""
+        try:
+            while True:
+                await asyncio.sleep(1.0)
+                self._maybe_reap(time.monotonic())
+        except asyncio.CancelledError:
+            return
 
 
 class PipelineServer:
@@ -146,7 +404,9 @@ class PipelineServer:
 
     def __init__(self, cluster: Cluster, model, params,
                  replicas: list[int], *, name: str = "pipe",
-                 least_loaded: bool = False) -> None:
+                 least_loaded: bool = False, max_len: int = 256,
+                 microbatch_max: int = 8, microbatch_wait_s: float = 0.002,
+                 session_ttl_s: float = 60.0) -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
@@ -154,10 +414,20 @@ class PipelineServer:
         self.replica_counts = replicas
         self.n_stages = len(replicas)
         self.least_loaded = least_loaded
+        self.max_len = max_len
+        #: continuous-batching knobs: how many decode steps one dispatch may
+        #: fuse, and how long to hold the first step for stragglers
+        self.microbatch_max = microbatch_max
+        self.microbatch_wait_s = microbatch_wait_s
+        self.session_ttl_s = session_ttl_s
         self.stage_specs = split_stages(self.cfg, self.n_stages)
         self.stage_param_sets = [stage_params(self.cfg, params, s)
                                  for s in self.stage_specs]
-        self.stage_fns = [self._make_stage_fn(s) for s in self.stage_specs]
+        #: one executor per stage, shared by the stage's replicas so they
+        #: share one jit cache (compile once, serve everywhere)
+        self.stage_executors = [
+            StageExecutor(self.cfg, spec, sp, max_len=max_len)
+            for spec, sp in zip(self.stage_specs, self.stage_param_sets)]
         self.instantiator = OnlineInstantiator(cluster)
         self.replicas: list[list[_Replica]] = [[] for _ in replicas]
         self.client = cluster.worker(CLIENT)
@@ -165,6 +435,7 @@ class PipelineServer:
         self.client_router.set_load_probe(self._edge_load)
         self._responses: dict[int, asyncio.Future] = {}
         self._req_ids = itertools.count()
+        self._session_ids = itertools.count(1)
         self._uid = itertools.count()
         self._collectors: dict[str, asyncio.Task] = {}
         #: downstream edge world -> receiving replica (load probing, drain)
@@ -176,15 +447,8 @@ class PipelineServer:
         self._wired_managers: set[str] = set()
         self._wire_manager(self.client.manager, self.client_router)
 
-    def _make_stage_fn(self, spec: StageSpec):
-        cfg = self.cfg
-
-        @jax.jit
-        def fn(sparams, x):
-            return stage_forward(cfg, spec, sparams, x,
-                                 tokens_in=spec.first)
-
-        return fn
+    def _is_last(self, stage: int) -> bool:
+        return stage == self.n_stages - 1
 
     def _edge_load(self, world: str) -> float:
         """Router load probe: queue depth of the replica behind an edge."""
@@ -201,8 +465,9 @@ class PipelineServer:
                 await self.add_replica(si)
 
     def _wire_manager(self, manager, router: Optional[ReplicaRouter]) -> None:
-        """Fault listeners: fenced worlds leave the router rotation and are
-        recorded in ``broken_worlds`` (the controller's failure signal)."""
+        """Fault listeners: fenced worlds leave the router rotation (dropping
+        any session pins) and are recorded in ``broken_worlds`` (the
+        controller's failure signal)."""
         if manager.worker_id in self._wired_managers:
             return
         self._wired_managers.add(manager.worker_id)
@@ -281,6 +546,7 @@ class PipelineServer:
         self._wire_manager(rep.worker.manager, rep.router)
 
         rep._run_task = rep.worker.spawn(rep.run())
+        rep._reap_task = rep.worker.spawn(rep.reap_loop())
         self.replicas[stage].append(rep)
         self._event("add_replica", worker_id)
         return worker_id
@@ -292,9 +558,12 @@ class PipelineServer:
                              timeout: float = 30.0) -> str:
         """Retire one replica of ``stage``.
 
-        ``drain=True`` (scale-down): stop routing to it, wait until its inbox,
-        in-flight work, and adjacent transport channels are all empty, then
-        tear its worlds down — zero request loss by construction.
+        ``drain=True`` (scale-down): stop routing to it — which also unpins
+        every session stuck to it, so open sessions relocate: the client's
+        next decode step re-prefills on a survivor (stage-0 pins) or bounces
+        back as RETRY (upstream pins) — then wait until its inbox, in-flight
+        work, and adjacent transport channels are all empty, then tear its
+        worlds down. Zero request/token loss by construction.
         ``drain=False`` (heal): the replica is already dead; just unhook the
         bookkeeping and purge its (broken) worlds so a replacement can be
         instantiated cleanly.
@@ -308,7 +577,8 @@ class PipelineServer:
             live = [r for r in reps if r.worker.alive and not r.draining]
             if not live:
                 raise RuntimeError(f"stage {stage} has no removable replica")
-            rep = min(live, key=lambda r: r.queue_depth())
+            rep = min(live, key=lambda r: (r.open_sessions(),
+                                           r.queue_depth()))
         if drain and len([r for r in reps
                           if r.worker.alive and not r.draining]) <= 1:
             raise RuntimeError(
@@ -318,7 +588,9 @@ class PipelineServer:
         self._event("drain_begin", rep.worker_id)
         # 1. stop routing new work to it (no new picks can reach these
         #    worlds once removed; an already-picked send has already been
-        #    appended to the channel — the drain wait below flushes it)
+        #    appended to the channel — the drain wait below flushes it).
+        #    Removing also drops session pins: open sessions relocate via
+        #    the client's re-prefill path instead of waiting forever.
         for world, router in rep.upstream_edges:
             router.remove(world)
         # 2. drain to zero
@@ -334,7 +606,8 @@ class PipelineServer:
         deadline = time.monotonic() + timeout
 
         def flushed() -> bool:
-            return (rep.inbox.empty() and rep.inflight == 0
+            return (rep.inbox.empty() and not rep._stash
+                    and rep.inflight == 0
                     and all(transport.pending(w) == 0
                             for w in rep.upstream)
                     and all(transport.pending(w) == 0
@@ -359,8 +632,10 @@ class PipelineServer:
         """Unhook a replica and remove its worlds on every member in one
         synchronous pass — no await between key deletions, so no watchdog
         cycle can observe a half-removed world and fence it spuriously."""
-        if rep._run_task is not None and not rep._run_task.done():
-            rep._run_task.cancel()
+        for task in (rep._run_task, rep._reap_task):
+            if task is not None and not task.done():
+                task.cancel()
+        rep.sessions.clear()
         for world in list(rep.upstream):
             rep.drop_upstream(world)
             self._world_to_replica.pop(world, None)
@@ -397,12 +672,41 @@ class PipelineServer:
         comm = self.client.comm
         try:
             while True:
-                req_id, logits = await comm.recv(0, world)
-                fut = self._responses.pop(req_id, None)
+                env = await comm.recv(0, world)
+                fut = self._responses.pop(env.req_id, None)
                 if fut is not None and not fut.done():
-                    fut.set_result(logits)
+                    fut.set_result(env)
         except (WorldBrokenError, WorldNotFoundError, asyncio.CancelledError):
             return
+
+    async def _roundtrip(self, env: Envelope, world: str,
+                         timeout: float) -> Envelope:
+        """Send one envelope to an entry world, await its response envelope.
+        Marks the world broken/removed in the client rotation on send
+        failure before re-raising."""
+        fut: asyncio.Future = asyncio.get_event_loop().create_future()
+        self._responses[env.req_id] = fut
+        try:
+            await self.client.comm.send(env, 1, world)
+            return await asyncio.wait_for(fut, timeout)
+        except WorldBrokenError:
+            self.client_router.mark_broken(world)
+            raise
+        except WorldNotFoundError:
+            self.client_router.remove(world)
+            raise
+        finally:
+            self._responses.pop(env.req_id, None)
+
+    async def _pick_entry(self, timeout: float) -> Optional[str]:
+        world = self.client_router.try_pick(self.least_loaded)
+        if world is not None:
+            return world
+        try:
+            await asyncio.wait_for(self.client_router.wait_healthy(), timeout)
+        except asyncio.TimeoutError:
+            return None
+        return self.client_router.try_pick(self.least_loaded)
 
     async def submit(self, tokens: np.ndarray, *, timeout: float = 30.0,
                      retries: int = 2) -> jax.Array:
@@ -416,35 +720,108 @@ class PipelineServer:
         x = jnp.asarray(tokens, jnp.int32)
         last_err: Optional[Exception] = None
         for _ in range(retries + 1):
-            world = self.client_router.try_pick(self.least_loaded)
+            world = await self._pick_entry(timeout)
             if world is None:
-                try:
-                    await asyncio.wait_for(
-                        self.client_router.wait_healthy(), timeout)
-                except asyncio.TimeoutError as e:
-                    last_err = e
-                    continue
-                world = self.client_router.try_pick(self.least_loaded)
-                if world is None:
-                    continue
-            req_id = next(self._req_ids)
-            fut: asyncio.Future = asyncio.get_event_loop().create_future()
-            self._responses[req_id] = fut
+                last_err = asyncio.TimeoutError("no healthy entry replica")
+                continue
+            env = Envelope(next(self._req_ids), -1, Kind.SCORE, payload=x)
             try:
-                await self.client.comm.send((req_id, x), 1, world)
-                return await asyncio.wait_for(fut, timeout)
-            except WorldBrokenError as e:
-                self.client_router.mark_broken(world)
+                resp = await self._roundtrip(env, world, timeout)
+                return resp.payload
+            except (WorldBrokenError, WorldNotFoundError,
+                    asyncio.TimeoutError) as e:
                 last_err = e
-            except WorldNotFoundError as e:
-                self.client_router.remove(world)
-                last_err = e
-            except asyncio.TimeoutError as e:
-                last_err = e
-            finally:
-                self._responses.pop(req_id, None)
         raise RuntimeError(f"request failed after {retries + 1} attempts: "
                            f"{last_err}")
+
+    async def generate(self, prompts: np.ndarray, max_new_tokens: int, *,
+                       step_timeout: float = 10.0, max_restarts: int = 32,
+                       token_times: Optional[list] = None) -> np.ndarray:
+        """Greedy autoregressive generation through the pipeline.
+
+        prompts (B, S) int32 -> (B, max_new_tokens) int32, token-identical
+        to single-engine ``ServeEngine.generate`` at temperature 0.
+
+        Fault story: the session's per-stage KV caches live on the replicas
+        that prefilled it. If any of them dies or drains mid-generation, the
+        pipeline answers RETRY (or the client's pin check fails, or the step
+        times out) and the client re-prefills prompt + everything generated
+        so far on surviving replicas — at-least-once recovery with zero
+        token loss, since generated tokens only ever live client-side.
+        """
+        seq = jnp.asarray(prompts, jnp.int32)
+        bsz, s0 = seq.shape
+        assert s0 + max_new_tokens <= self.max_len, \
+            f"{s0}+{max_new_tokens} exceeds pipeline max_len {self.max_len}"
+        out: list[np.ndarray] = []
+        sid: Optional[int] = None
+        hist_len = s0
+        base = 0        # tokens already inside the current prefill history
+        restarts = 0
+        while len(out) < max_new_tokens:
+            try:
+                if sid is None:
+                    # (re-)prefill the full history on any healthy entry
+                    hist = (seq if not out else
+                            jnp.concatenate([seq, jnp.stack(out, 1)], 1))
+                    hist_len = hist.shape[1]
+                    base = len(out)
+                    world = await self._pick_entry(step_timeout)
+                    if world is None:
+                        raise _SessionLost("no healthy entry replica")
+                    sid = next(self._session_ids)
+                    env = Envelope(
+                        next(self._req_ids), sid, Kind.PREFILL,
+                        step=hist_len - 1,
+                        deadline=time.monotonic() + step_timeout,
+                        payload=hist)
+                    resp = await self._roundtrip(env, world, step_timeout)
+                    if resp.kind is Kind.RETRY:
+                        raise _SessionLost("prefill bounced")
+                    self.client_router.pin(sid, world)
+                else:
+                    world = self.client_router.pinned(sid)
+                    if world is None:
+                        raise _SessionLost("entry replica gone")
+                    # position of the fed token: history end + tokens
+                    # generated since that history was prefilled
+                    env = Envelope(
+                        next(self._req_ids), sid, Kind.DECODE,
+                        step=hist_len + (len(out) - base) - 1,
+                        deadline=time.monotonic() + step_timeout,
+                        payload=out[-1][:, None])
+                    resp = await self._roundtrip(env, world, step_timeout)
+                    if resp.kind is Kind.RETRY:
+                        raise _SessionLost("decode bounced")
+                # greedy pick on the host: the logits are tiny (B,V) and a
+                # jax dispatch per token per session would dominate the
+                # client loop at smoke scale
+                tok = np.argmax(np.asarray(resp.payload), axis=-1) \
+                    .astype(np.int32)
+                out.append(tok)
+                if token_times is not None:
+                    token_times.append(time.monotonic())
+            except (_SessionLost, asyncio.TimeoutError,
+                    WorldBrokenError, WorldNotFoundError) as e:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise RuntimeError(
+                        f"generation failed after {max_restarts} session "
+                        f"restarts: {e}") from e
+                if sid is not None:
+                    self.client_router.unpin(sid)
+                sid = None           # forces re-prefill with full history
+        if sid is not None:
+            world = self.client_router.pinned(sid)
+            self.client_router.unpin(sid)
+            if world is not None:
+                env = Envelope(next(self._req_ids), sid, Kind.FINISH,
+                               step=hist_len + (len(out) - base) - 1)
+                try:
+                    await self.client.comm.send(env, 1, world)
+                except (WorldBrokenError, WorldNotFoundError):
+                    pass
+        return np.stack([np.asarray(t) for t in out], axis=1)
 
     # ------------------------------------------------------------------ intro
     def healthy_replicas(self, stage: int) -> list[str]:
@@ -470,6 +847,10 @@ class PipelineServer:
                 out.append(rep.worker_id)
         return out
 
+    def open_sessions(self, stage: int) -> int:
+        return sum(r.open_sessions() for r in self.replicas[stage]
+                   if r.worker.alive)
+
     def replica_stats(self) -> dict[str, dict[str, Any]]:
         """Introspection snapshot of the raw per-replica load counters
         (MetricsHub reads the ``_Replica`` attributes directly; this is the
@@ -487,5 +868,11 @@ class PipelineServer:
                     "wait_s_sum": rep.wait_s_sum,
                     "service_s_sum": rep.service_s_sum,
                     "parked": rep.parked,
+                    "tokens_out": rep.tokens_out,
+                    "open_sessions": rep.open_sessions(),
+                    "decode_batches": rep.decode_batches,
+                    "decode_steps": rep.decode_steps,
+                    "retries_sent": rep.retries_sent,
+                    "expired": rep.expired,
                 }
         return out

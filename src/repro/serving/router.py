@@ -20,12 +20,21 @@ Empty-rotation safety: ``pick`` raises (legacy behavior, callers that can't
 wait), while ``try_pick``/``wait_healthy`` let a sender park a payload until
 a world is added instead of dying — a replica must survive the window where
 every downstream replica is gone and the controller is still healing.
+
+Sticky session affinity (the generative data plane): a decode step must
+return to the replica holding its KV cache, so the sender pins (:meth:`pin`)
+the world chosen at prefill time and later routes the session's steps through
+:meth:`pinned`. Pins are health-aware: a world leaving rotation — fenced by
+the watchdog (``mark_broken``) or gracefully retired (``remove``, the drain
+path) — drops every session pinned to it, and ``pinned`` returns ``None``,
+which is the sender's signal that the session state is gone and the client
+must re-prefill on a survivor.
 """
 from __future__ import annotations
 
 import asyncio
 import itertools
-from typing import Callable, Optional
+from typing import Callable, Hashable, Optional
 
 
 class ReplicaRouter:
@@ -34,6 +43,8 @@ class ReplicaRouter:
         self._dead: set[str] = set()
         self._rr = itertools.count()
         self.routed: dict[str, int] = {}
+        #: session id -> world holding that session's downstream state
+        self._pins: dict[Hashable, str] = {}
         #: optional world -> load metric (lower is better); see set_load_probe
         self._load_probe: Optional[Callable[[str], float]] = None
         self._nonempty = asyncio.Event()
@@ -49,6 +60,7 @@ class ReplicaRouter:
 
     def mark_broken(self, world: str) -> None:
         self._dead.add(world)
+        self._drop_pins(world)
         if not self.healthy():
             self._nonempty.clear()
 
@@ -58,8 +70,36 @@ class ReplicaRouter:
             self._worlds.remove(world)
         self._dead.discard(world)
         self.routed.pop(world, None)
+        self._drop_pins(world)
         if not self.healthy():
             self._nonempty.clear()
+
+    # -- session affinity -----------------------------------------------------
+    def pin(self, session_id: Hashable, world: str) -> None:
+        """Stick a session to the world that holds its decode state."""
+        self._pins[session_id] = world
+
+    def pinned(self, session_id: Hashable) -> Optional[str]:
+        """The session's world while it is still healthy, else None (state
+        lost — caller must trigger re-prefill)."""
+        world = self._pins.get(session_id)
+        if world is None:
+            return None
+        if world not in self._worlds or world in self._dead:
+            del self._pins[session_id]
+            return None
+        return world
+
+    def unpin(self, session_id: Hashable) -> None:
+        self._pins.pop(session_id, None)
+
+    @property
+    def pinned_sessions(self) -> int:
+        return len(self._pins)
+
+    def _drop_pins(self, world: str) -> None:
+        for sid in [s for s, w in self._pins.items() if w == world]:
+            del self._pins[sid]
 
     def healthy(self) -> list[str]:
         return [w for w in self._worlds if w not in self._dead]

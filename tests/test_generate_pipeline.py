@@ -1,0 +1,236 @@
+"""Generative data plane: typed envelopes, per-stage KV sessions, continuous
+microbatched decode, and state-aware fault/drain recovery.
+
+The acceptance bar (ISSUE 2): pipelined greedy ``generate()`` is
+token-identical to single-engine ``ServeEngine.generate``; a mid-generation
+replica kill and a drain-with-open-sessions both complete every session with
+the correct final tokens and zero client-visible failures.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.control import MetricsHub, StageSnapshot, TokenRatePolicy
+from repro.core import Cluster, FailureKind
+from repro.core.transport import SerializeCodec, Transport, payload_nbytes
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import (
+    Envelope,
+    Kind,
+    PipelineServer,
+    ReplicaRouter,
+    ServeEngine,
+    StageExecutor,
+)
+
+CFG = get_smoke("llama3.2-1b").with_(num_layers=4,
+                                     groups=(BlockGroup(DENSE, 4),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+ENGINE = ServeEngine(MODEL, PARAMS, max_len=64)
+
+
+def _prompts(n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, (1, seq)) for _ in range(n)]
+
+
+# ---------------------------------------------------------------- envelopes
+
+def test_envelope_byte_accounting():
+    x = jnp.ones((4, 8), jnp.float32)
+    env = Envelope(1, 2, Kind.DECODE, payload=x)
+    assert env.nbytes == x.nbytes
+    assert payload_nbytes((7, x)) == x.nbytes            # legacy tuple
+    assert payload_nbytes([x, {"a": x}]) == 2 * x.nbytes
+    assert payload_nbytes(None) == 0
+
+    t = Transport()
+    t.send("w", 0, 1, env)
+    t.send("w", 0, 1, (3, x))
+    assert t.bytes_sent == 2 * x.nbytes                  # was 0 before
+
+    ser = Transport(codec=SerializeCodec())
+    ser.send("w", 0, 1, np.ones(16, np.float32))
+    # encoded wire size: pickle bytes, strictly more than the raw tensor
+    assert ser.bytes_sent > 16 * 4
+
+
+def test_router_session_pins():
+    r = ReplicaRouter(["a", "b"])
+    r.pin(1, "a")
+    r.pin(2, "b")
+    assert r.pinned(1) == "a" and r.pinned_sessions == 2
+    r.mark_broken("a")                   # fenced world drops its pins
+    assert r.pinned(1) is None
+    r.remove("b")                        # graceful retirement too
+    assert r.pinned(2) is None and r.pinned_sessions == 0
+
+
+def test_communicator_pending_prunes_to_empty(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64)
+        await server.start()
+        await server.generate(_prompts(1)[0], 3, step_timeout=30.0)
+        await asyncio.sleep(0.05)
+        # every op completed: the pending dict must not retain zero entries
+        for worker in c.workers.values():
+            assert all(v > 0 for v in worker.comm.pending.values()), \
+                worker.comm.pending
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ----------------------------------------------------------------- executor
+
+def test_stage_executor_decode_many_matches_single():
+    """Fused multi-session decode at heterogeneous positions == single."""
+    ex = StageExecutor.for_model(MODEL, PARAMS, max_len=32)
+    rng = np.random.default_rng(7)
+    caches, xs, ts, singles = [], [], [], []
+    for i, s in enumerate((4, 6)):       # sessions at different positions
+        toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, s)), jnp.int32)
+        logits, cache = ex.prefill(toks)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        caches.append(cache)
+        xs.append(nxt)
+        ts.append(s)
+        singles.append(ex.decode(cache, nxt, s)[0])
+    fused = ex.decode_many(caches, xs, ts)
+    # vmapped-batch vs single execution reorders float accumulations; the
+    # drift is <5e-5 absolute on O(1) logits — the greedy argmax (what the
+    # token-parity acceptance actually rides on) must be identical
+    for (y, _), want in zip(fused, singles):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-2, atol=1e-3)
+        np.testing.assert_array_equal(np.argmax(np.asarray(y), -1),
+                                      np.argmax(np.asarray(want), -1))
+
+
+# ----------------------------------------------------------------- pipeline
+
+def test_pipeline_generate_matches_engine(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2, 1], max_len=64)
+        await server.start()
+        p = _prompts(1, seed=1)[0]
+        want = ENGINE.generate(p, 6)
+        got = await server.generate(p, 6, step_timeout=30.0)
+        np.testing.assert_array_equal(got, want)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_pipeline_generate_concurrent_microbatched(arun):
+    """8 concurrent sessions: all token-identical to the single engine, and
+    the decode micro-scheduler fuses steps (fewer dispatches than steps)."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64)
+        await server.start()
+        ps = _prompts(8, seed=2)
+        wants = [ENGINE.generate(p, 5) for p in ps]
+        outs = await asyncio.gather(
+            *[server.generate(p, 5, step_timeout=30.0) for p in ps])
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        stats = server.replica_stats()
+        steps = sum(s["decode_steps"] for s in stats.values())
+        batches = sum(s["decode_batches"] for s in stats.values())
+        assert steps == 2 * 8 * 4        # 2 stages x 8 sessions x 4 decodes
+        assert batches < steps, (batches, steps)
+        c.shutdown()
+
+    arun(scenario())
+
+
+def test_generate_survives_replica_kill(arun):
+    """Kill a middle replica mid-generation: every affected session re-prefills
+    on the survivor and finishes with the exact greedy tokens."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2, 1], max_len=64)
+        await server.start()
+        ps = _prompts(5, seed=3)
+        wants = [ENGINE.generate(p, 6) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 6, step_timeout=8.0)) for p in ps]
+        await asyncio.sleep(0.05)
+        c.kill(server.replicas[1][0].worker_id, FailureKind.SILENT_HANG)
+        outs = await asyncio.gather(*tasks)   # zero client-visible failures
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_generate_drain_with_open_sessions(arun):
+    """Scale down a replica holding live KV sessions: drain unpins them, the
+    clients relocate via re-prefill, and no token is lost."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2, 1], max_len=64)
+        await server.start()
+        ps = _prompts(5, seed=4)
+        wants = [ENGINE.generate(p, 6) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 6, step_timeout=8.0)) for p in ps]
+        await asyncio.sleep(0.05)
+        gone = await server.remove_replica(1, drain=True, timeout=60.0)
+        outs = await asyncio.gather(*tasks)
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        assert gone not in server.replica_stats()
+        assert len(server.healthy_replicas(1)) == 1
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_metrics_see_tokens_and_sessions(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64)
+        await server.start()
+        hub = MetricsHub(server, alpha=1.0)
+        hub.poll()
+        await server.generate(_prompts(1, seed=5)[0], 5, step_timeout=30.0)
+        await asyncio.sleep(0.05)        # let in-flight FINISHes land
+        snaps = hub.poll()
+        assert all(s.tokens_per_s > 0 for s in snaps), snaps
+        assert all(s.open_sessions == 0 for s in snaps)
+        stats = server.replica_stats()
+        assert all(s["tokens_out"] == 4 for s in stats.values())
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ------------------------------------------------------------------ policy
+
+def _snap(**kw):
+    base = dict(stage=0, t=0.0, n_replicas=2, n_failed=0, queue_total=0,
+                queue_per_replica=0.0, throughput=0.0, latency_s=0.0,
+                replicas=[], tokens_per_s=0.0, open_sessions=0)
+    base.update(kw)
+    return StageSnapshot(**base)
+
+
+def test_token_rate_policy():
+    pol = TokenRatePolicy(target_tokens_per_s=100.0, shrink_frac=0.25,
+                          shrink_open_sessions=2.0)
+    up = pol.decide(_snap(tokens_per_s=500.0))
+    assert up.delta > 0
+    # under capacity but too many open sessions to displace -> hold
+    held = pol.decide(_snap(tokens_per_s=10.0, open_sessions=9))
+    assert held.hold
+    down = pol.decide(_snap(tokens_per_s=10.0, open_sessions=2))
+    assert down.delta == -1
