@@ -1,0 +1,296 @@
+"""State-transfer benchmark: live handoff vs re-prefill, snapshot restore,
+and warm bootstrap.
+
+Phase A — planned drain with open mid-decode sessions, run twice on the
+identical scenario: once with the PR 2 recovery path (``migrate=False``:
+drain unpins, every displaced session re-prefills its full history on a
+survivor) and once with live handoff (``migrate=True``: KV state streams to
+a survivor, pins flip, decode resumes). The acceptance bar (ISSUE 3): the
+handoff path does **zero re-prefill** and completes the drain scenario
+strictly faster than the re-prefill path.
+
+Phase B — unplanned kill with background snapshots: sessions rebuild from
+the SnapshotStore and replay only the suffix since the latest snapshot;
+asserted strictly less than the full history the PR 2 path recomputes.
+
+Phase C — warm bootstrap: a fresh-process executor's first dispatch cost,
+cold vs pre-warmed from a peer's shape profile (plus the weight-transfer
+cost, which rides the same chunked bulk path as migrations).
+
+  PYTHONPATH=src python -m benchmarks.bench_migrate [--tiny] [--json OUT]
+
+``--tiny`` shrinks the scenario for CI smoke; ``--json`` writes the rows +
+raw scenario dict as a machine-readable artifact (BENCH_migrate.json in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer
+
+from .common import run_async
+
+PROMPT_LEN = 16
+
+
+def _build():
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                         groups=(BlockGroup(DENSE, 2),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, seed, seq=PROMPT_LEN):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (1, seq)) for _ in range(n)]
+
+
+async def _warm(cfg, server, sessions: int) -> None:
+    """Compile everything both recovery paths can touch off-clock: decode
+    convoy widths up to ``sessions`` (two rounds, like bench_generate) and
+    the longer prefill bucket that full-history re-prefill lands in."""
+    ps = _prompts(cfg, sessions, seed=9)
+    for _ in range(2):
+        await asyncio.gather(*(server.generate(p, 3, step_timeout=120.0)
+                               for p in ps))
+    await server.generate(_prompts(cfg, 1, seed=8, seq=24)[0], 2,
+                          step_timeout=120.0)
+
+
+async def _wait_open(server, stage: int, n: int, timeout=20.0) -> None:
+    """Every session's prefill has landed — the drain/kill below then hits
+    genuinely mid-decode sessions, deterministically."""
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        if time.monotonic() > deadline:
+            break
+        await asyncio.sleep(0.005)
+
+
+async def _drain_scenario(migrate: bool, tiny: bool) -> dict:
+    """Open N mid-decode sessions, drain the loaded stage-1 replica, time
+    the drain + every session's completion."""
+    cfg, model, params = _build()
+    cluster = Cluster()
+    server = PipelineServer(cluster, model, params, [1, 2], max_len=64)
+    await server.start()
+    sessions = 4 if tiny else 8
+    new_tokens = 8 if tiny else 16
+    await _warm(cfg, server, sessions)
+    ps = _prompts(cfg, sessions, seed=1)
+    tasks = [asyncio.ensure_future(server.generate(p, new_tokens,
+                                                   step_timeout=30.0))
+             for p in ps]
+    await _wait_open(server, 1, sessions)
+    victims = [r for r in server.replicas[1]
+               if r.worker.alive and not r.draining]
+    victim = max(victims, key=lambda r: r.open_sessions())
+    open_at_drain = victim.open_sessions()
+    t0 = time.monotonic()
+    await server.remove_replica(1, victim.worker_id, drain=True,
+                                timeout=60.0, migrate=migrate)
+    drain_s = time.monotonic() - t0
+    await asyncio.gather(*tasks)
+    complete_s = time.monotonic() - t0
+    m = server.migrations.stats()
+    stats = server.replica_stats()
+    out = {
+        "migrate": migrate,
+        "sessions": sessions,
+        "open_at_drain": open_at_drain,
+        "drain_s": drain_s,
+        "complete_s": complete_s,       # drain + all sessions finished
+        "migrations": m["migrations_total"],
+        "migration_p50_s": m["migration_p50_s"],
+        "migration_bytes": m["migration_bytes_total"],
+        "reprefills": m["reprefills_total"],
+        "recovered_tokens": m["recovered_tokens"],
+        "recomputed_tokens": m["recomputed_tokens"],
+        "retries": sum(s["retries_sent"] for s in stats.values()),
+    }
+    cluster.shutdown()
+    return out
+
+
+async def _kill_restore_scenario(tiny: bool) -> dict:
+    """Kill a loaded replica with background snapshots on; sessions restore
+    and replay only the post-snapshot suffix."""
+    cfg, model, params = _build()
+    cluster = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+    server = PipelineServer(cluster, model, params, [1, 2], max_len=64,
+                            snapshot_interval_s=0.05)
+    await server.start()
+    sessions = 3 if tiny else 6
+    new_tokens = 8 if tiny else 16
+    await _warm(cfg, server, sessions)
+    ps = _prompts(cfg, sessions, seed=2)
+    # a silently-hung replica is only detectable for an *in-flight* step via
+    # the client timeout (PR 2 semantics), so step_timeout bounds recovery
+    # latency; everything is pre-warmed, so 3s >> any real service time
+    tasks = [asyncio.ensure_future(server.generate(p, new_tokens,
+                                                   step_timeout=3.0))
+             for p in ps]
+    await _wait_open(server, 1, sessions)
+    # ensure every open session has a snapshot before the "unplanned" kill
+    # (the background task snapshots too; this pins down the worst case)
+    await server.snapshots.sweep()
+    victims = [r for r in server.replicas[1] if r.worker.alive]
+    victim = max(victims, key=lambda r: r.open_sessions())
+    t0 = time.monotonic()
+    cluster.kill(victim.worker_id, FailureKind.SILENT_HANG)
+    await asyncio.gather(*tasks)
+    recover_s = time.monotonic() - t0
+    m = server.migrations.stats()
+    out = {
+        "sessions": sessions,
+        "full_history_tokens": sessions * (PROMPT_LEN + new_tokens),
+        "recover_s": recover_s,
+        "restores": m["restores_total"],
+        "restore_failures": m["restore_failures"],
+        "reprefills": m["reprefills_total"],
+        "recovered_tokens": m["recovered_tokens"],
+        "recomputed_tokens": m["recomputed_tokens"],
+        "snapshots_taken": server.snapshots.snapshots_taken,
+        "snapshot_bytes_total": server.snapshots.snapshot_bytes_total,
+    }
+    cluster.shutdown()
+    return out
+
+
+async def _bootstrap_scenario(tiny: bool) -> dict:
+    """First-dispatch cost of a fresh-process stage executor, cold vs
+    warm-bootstrapped from a peer, plus the weight-transfer bill."""
+    from repro.serving.executor import StageExecutor
+
+    import jax.numpy as jnp
+
+    cfg, model, params = _build()
+    cluster = Cluster()
+    server = PipelineServer(cluster, model, params, [1, 1], max_len=64)
+    await server.start()
+    p = _prompts(cfg, 1, seed=3, seq=8)[0]
+    await server.generate(p, 4, step_timeout=120.0)   # peer serves traffic
+    peer = server.replicas[1][0]
+    # the new replica's first real dispatch has the shapes its peer serves
+    shape, dtype = peer.executor.warm_profile()["prefill"][0]
+
+    def first_dispatch_s(ex) -> float:
+        t0 = time.monotonic()
+        x = jnp.zeros(shape, jnp.dtype(dtype))
+        out, cache = ex.prefill(x)
+        step = jnp.zeros((shape[0], 1) + tuple(shape[2:]), jnp.dtype(dtype))
+        y, _ = ex.decode(cache, step, min(shape[1], ex.max_len - 1))
+        jax.block_until_ready(y)
+        return time.monotonic() - t0
+
+    # cold: a brand-new executor (fresh jit cache), no warmup
+    cold = StageExecutor(server.cfg, server.stage_specs[1],
+                         server.stage_param_sets[1], max_len=server.max_len)
+    cold_s = first_dispatch_s(cold)
+
+    # warm: the real pipeline path — add_replica(warm=True) fetches weights
+    # from the peer and replays its shape profile into the fresh executor
+    t0 = time.monotonic()
+    wid = await server.add_replica(1, warm=True, fresh_executor=True)
+    add_s = time.monotonic() - t0
+    rep = next(r for r in server.replicas[1] if r.worker_id == wid)
+    warm_s = first_dispatch_s(rep.executor)
+
+    out = {
+        "cold_first_dispatch_s": cold_s,
+        "warm_first_dispatch_s": warm_s,
+        "warm_add_replica_s": add_s,
+        "weight_bytes": (server.bootstrap.weight_bytes or [0])[-1],
+        "weight_transfer_s": (server.bootstrap.transfer_s or [0.0])[-1],
+        "profile_warm_s": (server.bootstrap.warm_s or [0.0])[-1],
+        "warmed_dispatches": rep.executor.stats["warmed_dispatches"],
+    }
+    cluster.shutdown()
+    return out
+
+
+async def _scenario(tiny: bool) -> dict:
+    return {
+        "drain_reprefill": await _drain_scenario(migrate=False, tiny=tiny),
+        "drain_migrate": await _drain_scenario(migrate=True, tiny=tiny),
+        "kill_restore": await _kill_restore_scenario(tiny),
+        "bootstrap": await _bootstrap_scenario(tiny),
+    }
+
+
+def run(tiny: bool = False, json_path: str | None = None
+        ) -> list[tuple[str, float, str]]:
+    r = run_async(_scenario(tiny))
+    dm, dr = r["drain_migrate"], r["drain_reprefill"]
+    k, b = r["kill_restore"], r["bootstrap"]
+    rows = [
+        ("migrate_drain_complete_s/live_handoff", dm["complete_s"],
+         f"{dm['open_at_drain']} open sessions moved, "
+         f"{dm['migrations']} migrations"),
+        ("migrate_drain_complete_s/reprefill", dr["complete_s"],
+         f"{dr['open_at_drain']} open sessions bounced, "
+         f"{dr['reprefills']} re-prefills"),
+        ("migrate_drain_speedup", dr["complete_s"] / max(dm["complete_s"],
+                                                         1e-9),
+         "re-prefill wall / live-handoff wall (same scenario)"),
+        ("migrate_handoff_p50_ms", dm["migration_p50_s"] * 1e3,
+         "per-session pause->stream->install->resume"),
+        ("migrate_handoff_bytes", float(dm["migration_bytes"]),
+         "KV snapshot bytes over the wire"),
+        ("migrate_reprefills/live_handoff", float(dm["reprefills"]),
+         "must be 0 — zero re-prefill drain"),
+        ("restore_replayed_tokens", float(k["recomputed_tokens"]),
+         f"vs {k['full_history_tokens']} full-history tokens "
+         f"(PR 2 path recomputes all)"),
+        ("restore_recovered_tokens", float(k["recovered_tokens"]),
+         f"{k['restores']} sessions restored from snapshots"),
+        ("restore_recover_s", k["recover_s"],
+         "kill -> every session finished"),
+        ("snapshot_bytes_total", float(k["snapshot_bytes_total"]),
+         f"{k['snapshots_taken']} background snapshots"),
+        ("bootstrap_first_dispatch_s/cold", b["cold_first_dispatch_s"],
+         "fresh executor, no warmup"),
+        ("bootstrap_first_dispatch_s/warm", b["warm_first_dispatch_s"],
+         f"after peer warm ({b['warmed_dispatches']} warm dispatches)"),
+        ("bootstrap_weight_bytes", float(b["weight_bytes"]),
+         f"stage weights streamed in {b['weight_transfer_s']:.3f}s"),
+    ]
+    # acceptance gates (ISSUE 3)
+    assert dm["reprefills"] == 0 and dm["retries"] == 0, \
+        f"live-handoff drain was not re-prefill-free: {dm}"
+    assert dm["migrations"] >= dm["open_at_drain"] >= 1, dm
+    if not tiny:
+        assert dm["open_at_drain"] >= 4, dm
+        assert dm["complete_s"] < dr["complete_s"], \
+            (f"live handoff ({dm['complete_s']:.3f}s) not faster than "
+             f"re-prefill ({dr['complete_s']:.3f}s)")
+        assert b["warm_first_dispatch_s"] < b["cold_first_dispatch_s"], b
+    assert k["restores"] >= 1, k
+    assert k["recomputed_tokens"] < k["full_history_tokens"], k
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": [{"name": n, "value": v, "derived": d}
+                                for n, v, d in rows],
+                       "raw": r, "tiny": tiny}, f, indent=2, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small scenario, no wall-clock gates")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write rows + raw results as JSON artifact")
+    args = ap.parse_args()
+    for name, value, derived in run(tiny=args.tiny, json_path=args.json):
+        print(f"{name},{value:.4f},{derived}")

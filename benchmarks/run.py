@@ -11,6 +11,8 @@ Prints ``name,value,derived`` CSV rows:
 * elastic — closed-loop autoscale/heal/drain scenario (control plane)
 * generate — generative data plane: continuous batching + kill/drain
   recovery of in-flight sessions
+* migrate — state transfer: live KV-session handoff vs re-prefill on
+  drain, snapshot restore after a kill, warm scale-up bootstrap
 """
 from __future__ import annotations
 
@@ -95,6 +97,8 @@ SUITES = {
                                   fromlist=["run"]).run(),
     "generate": lambda: __import__("benchmarks.bench_generate",
                                    fromlist=["run"]).run(),
+    "migrate": lambda: __import__("benchmarks.bench_migrate",
+                                  fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -12,6 +12,11 @@ ElasticController and only injects traffic and one failure:
   4. the crowd leaves -> the controller drains-and-removes surplus replicas
      back to the floor, with zero in-flight request loss
 
+Generative sessions run throughout (with background snapshots on), so the
+scale-down drains are *live handoffs*: open KV sessions migrate to
+survivors instead of re-prefilling — the state-transfer metrics printed at
+the end show moved-vs-recomputed work.
+
   PYTHONPATH=src python examples/serve_elastic.py
 """
 import asyncio
@@ -41,9 +46,9 @@ async def main() -> None:
 
     cluster = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.1)
     server = PipelineServer(cluster, model, params, replicas=[1, 1],
-                            least_loaded=True)
+                            least_loaded=True, snapshot_interval_s=0.1)
     await server.start()
-    print("pipeline up: stage0 x1 -> stage1 x1 (floor)")
+    print("pipeline up: stage0 x1 -> stage1 x1 (floor), snapshots on")
 
     rng = np.random.default_rng(0)
     toks = rng.integers(0, cfg.vocab_size, (8, 64))
@@ -82,12 +87,42 @@ async def main() -> None:
                 cluster.kill(victim, FailureKind.SILENT_HANG)
                 return
 
+    async def generate_sessions():
+        # a trickle of open generative sessions rides through every scale
+        # event; drains hand their KV state off live instead of re-prefilling
+        # (short step timeout: a session wedged by the kill recovers via
+        # snapshot restore instead of stalling out the trickle)
+        while True:
+            p = rng.integers(0, cfg.vocab_size, (1, 12))
+            await server.generate(p, 8, step_timeout=5.0)
+            await asyncio.sleep(0.05)
+
     chaos_task = asyncio.ensure_future(chaos())
+    sessions_task = asyncio.ensure_future(generate_sessions())
     summary = await gen.run(8.0)
     await asyncio.sleep(1.5)                        # let scale-down finish
     await ctrl.step()
     await ctrl.stop()
     chaos_task.cancel()
+    sessions_task.cancel()
+
+    # explicit live-handoff beat: scale the decode stage out, open sessions
+    # across both replicas, then drain one *while they are mid-decode* — the
+    # sessions move, they do not re-prefill
+    await server.add_replica(1)
+    open_tasks = [
+        asyncio.ensure_future(server.generate(
+            rng.integers(0, cfg.vocab_size, (1, 12)), 16, step_timeout=10.0))
+        for _ in range(4)]
+    while sum(r.open_sessions() for r in server.replicas[1]) < 4:
+        await asyncio.sleep(0.005)
+    victim = max((r for r in server.replicas[1]
+                  if r.worker.alive and not r.draining),
+                 key=lambda r: r.open_sessions())
+    print(f"\n-- draining {victim.worker_id} with "
+          f"{victim.open_sessions()} open sessions (live handoff) --")
+    await server.remove_replica(1, victim.worker_id, drain=True)
+    await asyncio.gather(*open_tasks)
 
     start = min(e.t for e in ctrl.timeline) if ctrl.timeline else 0.0
     print("\ncontrol timeline:")
@@ -99,6 +134,15 @@ async def main() -> None:
     print(f"controller: {ctrl.scale_ups} scale-ups, {ctrl.heals} heals, "
           f"{ctrl.scale_downs} drain-and-removes; "
           f"final replicas {ctrl.replica_counts()}")
+    mm = ctrl.hub.migration_metrics()
+    print(f"state transfer: {mm['migrations_total']} live handoffs "
+          f"(p50 {mm['migration_p50_s'] * 1e3:.1f} ms), "
+          f"{mm['restores_total']} snapshot restores, "
+          f"{mm['reprefills_total']} re-prefill fallbacks; "
+          f"snapshot ~{mm['snapshot_bytes_ewma'] / 1e3:.0f} KB; "
+          f"tokens recovered/recomputed "
+          f"{mm['recovered_tokens']}/{mm['recomputed_tokens']}; "
+          f"deadline drops {mm['deadline_expired_total']}")
     assert summary["failed"] == 0
     cluster.shutdown()
 

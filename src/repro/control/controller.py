@@ -44,6 +44,7 @@ class ElasticController:
         interval: float = 0.1,
         heal: bool = True,
         scale_stages: Optional[list[int]] = None,
+        migrate_on_drain: bool = True,
     ) -> None:
         self.server = server
         self.hub = hub or MetricsHub(server)
@@ -61,6 +62,10 @@ class ElasticController:
         self.policies: list[ScalingPolicy] = policy
         self.interval = interval
         self.heal = heal
+        #: scale-down discipline: live-migrate open sessions to survivors
+        #: (state transfer) instead of bouncing them into re-prefill; False
+        #: restores the PR 2 drain for A/B benchmarking
+        self.migrate_on_drain = migrate_on_drain
         #: stages the policy may resize (healing covers all stages always);
         #: default: every stage
         self.scale_stages = (list(range(n)) if scale_stages is None
@@ -158,7 +163,8 @@ class ElasticController:
                                  f"+{new_id} ({decision.reason})")
             else:
                 for _ in range(-delta):
-                    gone = await self.server.remove_replica(stage, drain=True)
+                    gone = await self.server.remove_replica(
+                        stage, drain=True, migrate=self.migrate_on_drain)
                     self.scale_downs += 1
                     self._record("scale_down", stage,
                                  f"-{gone} ({decision.reason})")

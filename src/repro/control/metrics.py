@@ -57,6 +57,7 @@ class ReplicaSample:
     latency_s: float        # wait + service per request, EWMA
     tokens_per_s: float = 0.0   # decode tokens/s, EWMA (generative plane)
     open_sessions: int = 0      # sessions whose KV cache lives here
+    expired: int = 0            # deadline-expired envelopes dropped here
 
 
 @dataclasses.dataclass
@@ -74,6 +75,10 @@ class StageSnapshot:
     replicas: list[ReplicaSample] = dataclasses.field(default_factory=list)
     tokens_per_s: float = 0.0       # stage-total decode tokens/s, EWMA
     open_sessions: int = 0          # live sessions across healthy replicas
+    expired: int = 0                # deadline drops summed over replicas
+    #                                 currently in the stage (retired
+    #                                 replicas' counts live in the hub's
+    #                                 deadline_expired_total accumulator)
 
 
 class MetricsHub:
@@ -88,6 +93,7 @@ class MetricsHub:
         self._lat: dict[str, Ewma] = {}
         self._toks: dict[str, Ewma] = {}
         self._qdepth: dict[int, Ewma] = {}
+        self._snap_bytes = Ewma(alpha)
         self._subscribed: set[str] = set()
         self._subscribe_new_managers()
 
@@ -140,7 +146,8 @@ class MetricsHub:
             draining=rep.draining, queue_depth=rep.queue_depth(),
             inflight=rep.inflight, processed=processed,
             throughput=tput.get(), latency_s=lat.get(),
-            tokens_per_s=toks.get(), open_sessions=open_sessions)
+            tokens_per_s=toks.get(), open_sessions=open_sessions,
+            expired=rep.expired)
 
     def _prune_retired(self) -> None:
         """Worker ids are never reused, so per-replica state for retired
@@ -179,5 +186,46 @@ class MetricsHub:
                            if n else 0.0),
                 replicas=samples,
                 tokens_per_s=sum(s.tokens_per_s for s in healthy),
-                open_sessions=sum(s.open_sessions for s in healthy)))
+                open_sessions=sum(s.open_sessions for s in healthy),
+                expired=sum(s.expired for s in samples)))
+        self._update_migration_ewmas()
         return snaps
+
+    # ------------------------------------------------------- state transfer
+    def _update_migration_ewmas(self) -> None:
+        snaps = getattr(self.server, "snapshots", None)
+        if snaps is not None:
+            # consume sizes logged since the last poll; the EWMA smooths
+            # over sessions of different history lengths
+            for nbytes in snaps.bytes_log:
+                self._snap_bytes.update(float(nbytes))
+            snaps.bytes_log.clear()
+
+    def migration_metrics(self) -> dict:
+        """State-transfer counters for dashboards/benchmarks: how often
+        state moved instead of being recomputed, how long a handoff takes,
+        how big snapshots run, and the recovered-vs-recomputed token split.
+        """
+        mig = getattr(self.server, "migrations", None)
+        out = {
+            "migrations_total": 0, "migration_p50_s": 0.0,
+            "snapshot_bytes_ewma": self._snap_bytes.get(),
+            "recovered_tokens": 0, "recomputed_tokens": 0,
+            "restores_total": 0, "reprefills_total": 0,
+            # exact across scale-down: teardown folds each retiring
+            # replica's count into the server-side accumulator
+            "deadline_expired_total": (
+                getattr(self.server, "expired_retired", 0)
+                + sum(r.expired
+                      for reps in self.server.replicas for r in reps)),
+        }
+        if mig is not None:
+            out.update({
+                "migrations_total": mig.migrations_total,
+                "migration_p50_s": mig.migration_p50_s(),
+                "recovered_tokens": mig.recovered_tokens,
+                "recomputed_tokens": mig.recomputed_tokens,
+                "restores_total": mig.restores_total,
+                "reprefills_total": mig.reprefills_total,
+            })
+        return out

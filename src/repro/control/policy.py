@@ -133,6 +133,13 @@ class TokenRatePolicy:
     This is the policy that watches the generative data plane directly —
     queue depth lags token demand because one queued DECODE envelope is one
     *step*, not one request.
+
+    ``migration_aware=True`` removes the open-sessions scale-down guard: with
+    the state-transfer subsystem, draining a replica hands its sessions off
+    live (no re-prefill storm), so displaced sessions are no longer a reason
+    to keep surplus capacity around. Without migration each displaced
+    session pays a full-history re-prefill, which is why the guard defaults
+    on.
     """
 
     target_tokens_per_s: float
@@ -140,6 +147,7 @@ class TokenRatePolicy:
     shrink_open_sessions: float = 2.0
     min_replicas: int = 1
     max_replicas: int = 8
+    migration_aware: bool = False
 
     def decide(self, snap: StageSnapshot) -> ScaleDecision:
         n = max(snap.n_replicas, 1)
@@ -154,10 +162,13 @@ class TokenRatePolicy:
                 f"{self.target_tokens_per_s:g}")
         if (per < self.shrink_frac * self.target_tokens_per_s
                 and n > self.min_replicas
-                and snap.open_sessions / n <= self.shrink_open_sessions):
+                and (self.migration_aware
+                     or snap.open_sessions / n <= self.shrink_open_sessions)):
             return ScaleDecision(
                 snap.stage, -1,
-                f"{per:.0f} tok/s/replica well under target")
+                f"{per:.0f} tok/s/replica well under target"
+                + (" (sessions migrate live)" if self.migration_aware
+                   else ""))
         return hold(snap.stage)
 
 

@@ -43,6 +43,23 @@ class Store:
             self._expiry.pop(key, None)
             return self._data.pop(key, None) is not None
 
+    def delete_prefix(self, prefix: str) -> int:
+        """Drop every key under ``prefix``; returns the number deleted.
+
+        Namespace GC primitive: long-lived elastic clusters accumulate
+        per-session / per-world key families (snapshots, heartbeats), and
+        deleting them key-by-key from call sites is exactly how the PR 1
+        world-state leak happened. Callers must pass a trailing delimiter
+        (e.g. ``"snap/pipe/7/"``) so sibling namespaces sharing a textual
+        prefix are not swept along.
+        """
+        with self._lock:
+            dead = [k for k in self._data if k.startswith(prefix)]
+            for k in dead:
+                self._data.pop(k, None)
+                self._expiry.pop(k, None)
+            return len(dead)
+
     def add(self, key: str, amount: int = 1) -> int:
         """Atomic counter, like TCPStore.add."""
         with self._lock:

@@ -160,6 +160,11 @@ class Transport:
         self._dead: dict[str, FailureKind] = {}
         self.bytes_sent = 0
         self.messages_sent = 0
+        #: bulk-transfer slice of bytes_sent: payloads tagged ``bulk=True``
+        #: (snapshot/weight chunks) — lets dashboards separate state-transfer
+        #: traffic from serving traffic on the same wires
+        self.bulk_bytes_sent = 0
+        self.bulk_messages_sent = 0
 
     # -- fault hooks ---------------------------------------------------------
     def mark_dead(self, worker_id: str, kind: FailureKind) -> None:
@@ -195,7 +200,11 @@ class Transport:
         self.messages_sent += 1
         # count what actually crosses the wire: the encoded size under a
         # serializing codec (pickle bytes), the leaf-tensor bytes otherwise
-        self.bytes_sent += payload_nbytes(wire)
+        nbytes = payload_nbytes(wire)
+        self.bytes_sent += nbytes
+        if getattr(payload, "bulk", False):
+            self.bulk_bytes_sent += nbytes
+            self.bulk_messages_sent += 1
 
     def recv_nowait(self, world: str, src: int, dst: int,
                     src_worker: str | None = None) -> tuple[bool, Any]:
@@ -219,6 +228,16 @@ class Transport:
         with self._lock:
             return sum(len(ch.buf) for (w, _s, _d), ch in
                        self._channels.items() if w == world)
+
+    def pending_bytes(self, world: str) -> int:
+        """Bytes buffered across all channels of one world. Bulk senders
+        (snapshot/weight streaming) poll this for backpressure: pause when
+        the receiver has fallen more than a window behind, instead of
+        dumping a whole KV cache into the channel in one burst."""
+        with self._lock:
+            return sum(payload_nbytes(wire)
+                       for (w, _s, _d), ch in self._channels.items()
+                       if w == world for wire in ch.buf)
 
     def drop_world(self, world: str) -> int:
         """Discard all channels of a removed/broken world. Returns #messages dropped."""

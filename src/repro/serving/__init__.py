@@ -1,4 +1,4 @@
-from .engine import ServeEngine, sample_tokens
+from .engine import EngineSession, ServeEngine, sample_tokens
 from .envelope import Envelope, Kind, payload_nbytes
 from .executor import StageExecutor
 from .partition import (
@@ -14,7 +14,7 @@ from .pipeline import CLIENT, PipelineServer
 from .router import ReplicaRouter
 
 __all__ = [
-    "ServeEngine", "sample_tokens",
+    "EngineSession", "ServeEngine", "sample_tokens",
     "Envelope", "Kind", "payload_nbytes",
     "StageExecutor",
     "StageSpec", "split_stages", "stage_decode", "stage_forward",

@@ -10,8 +10,9 @@ as the first-call compile, which bench_online.py measures.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -80,3 +81,59 @@ class ServeEngine:
     def score(self, tokens: np.ndarray) -> np.ndarray:
         """Teacher-forced logits (B, S, V) — the pipeline's scoring payload."""
         return np.asarray(self.executor.score(jnp.asarray(tokens, jnp.int32)))
+
+    # -------------------------------------------------- resumable sessions
+    # Step-at-a-time greedy decoding with state that can leave the engine:
+    # export_session/import_session move a mid-decode session across engine
+    # restarts (or hosts) through the statexfer codec — the single-engine
+    # proof of the pipeline's live-migration story, and the harness the
+    # codec round-trip tests assert token parity on.
+
+    def start_session(self, prompts: np.ndarray) -> "EngineSession":
+        """Prefill a prompt batch; the session sits at a step boundary with
+        its first generated token pending in ``next_tok``."""
+        toks = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self.executor.prefill(toks)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        self.stats["prefill_calls"] += 1
+        return EngineSession(cache=cache, next_tok=nxt, t=int(toks.shape[1]))
+
+    def step_session(self, sess: "EngineSession") -> np.ndarray:
+        """One greedy decode step; returns the (B,) token just consumed —
+        i.e. the next generated token in order."""
+        tok = np.asarray(sess.next_tok)
+        logits, sess.cache = self.executor.decode(
+            sess.cache, sess.next_tok[:, None], sess.t)
+        sess.next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        sess.t += 1
+        self.stats["decode_steps"] += 1
+        return tok
+
+    def export_session(self, sess: "EngineSession", *,
+                       codec: str = "fp") -> bytes:
+        """Serialize a session at its step boundary to a snapshot blob."""
+        from repro.statexfer import SessionSnapshot, snapshot_to_blob
+
+        state = {"cache": sess.cache, "next_tok": sess.next_tok}
+        snap = SessionSnapshot(session_id=0, stage=0, step=sess.t,
+                               batch=int(sess.next_tok.shape[0]), cache=state)
+        return snapshot_to_blob(snap, codec=codec)
+
+    def import_session(self, blob: bytes) -> "EngineSession":
+        """Adopt an exported session; decoding resumes exactly where the
+        exporter stopped (bit-identically under the fp codec)."""
+        from repro.statexfer import snapshot_from_blob
+
+        snap = snapshot_from_blob(blob)
+        return EngineSession(cache=snap.cache["cache"],
+                             next_tok=snap.cache["next_tok"], t=snap.step)
+
+
+@dataclasses.dataclass
+class EngineSession:
+    """A resumable greedy decode: cache + the pending token and its
+    position. Always at a step boundary, so always exportable."""
+
+    cache: Any
+    next_tok: jax.Array   # (B,) int32 token to feed at position ``t``
+    t: int

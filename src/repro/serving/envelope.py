@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any
+from typing import Any, Optional
 
 from repro.core.transport import payload_nbytes
 
@@ -36,7 +36,9 @@ class Kind(enum.IntEnum):
     SCORE = 0     # stateless teacher-forced batch (legacy submit() path)
     PREFILL = 1   # build a session's per-stage KV cache from token history
     DECODE = 2    # one autoregressive step against an open session
-    FINISH = 3    # client done: drop session state along the pinned route
+    FINISH = 3    # session over: client done (state dropped along the pinned
+    #               route) or, with ``error`` set, server-initiated — e.g. a
+    #               deadline-expired step dropped at a stage boundary
     RETRY = 4     # session state lost; client must re-prefill on a survivor
 
 
@@ -58,6 +60,9 @@ class Envelope:
     step: int = 0
     deadline: float = 0.0
     payload: Any = None
+    #: FINISH only: why the server ended the session (e.g. a deadline-
+    #: expired step dropped at a stage boundary). None for client FINISHes.
+    error: Optional[str] = None
 
     @property
     def nbytes(self) -> int:

@@ -53,9 +53,14 @@ class StageExecutor:
         self.sparams = sparams
         self.max_len = max_len
         groups = [cfg.groups[gi] for gi, _, _ in spec.slices]
-        #: right-padding is a pure win only for full-cache attention stages
-        self.pad_seq = pad_seq and all(
+        #: every group uses a full (non-ring, non-SSM) attention cache —
+        #: gates right-padding here and replay-idempotent snapshot restore
+        #: in statexfer (rewriting position t with the same inputs is an
+        #: exact no-op only for full caches)
+        self.full_cache = all(
             g.kind in (DENSE, MOE) and g.window is None for g in groups)
+        #: right-padding is a pure win only for full-cache attention stages
+        self.pad_seq = pad_seq and self.full_cache
         tokens_in = spec.first
 
         self._score = jax.jit(
@@ -88,9 +93,13 @@ class StageExecutor:
 
         self.stats = {"score_calls": 0, "prefill_calls": 0,
                       "decode_batches": 0, "decode_steps": 0,
-                      "first_call_compile_s": 0.0}
+                      "first_call_compile_s": 0.0, "warmed_dispatches": 0}
         #: fused convoy widths already compiled (first-dispatch timing)
         self._widths_seen: set[int] = set()
+        #: post-bucketing prefill input shapes served so far — together with
+        #: the widths this is the executor's *warm profile*: exactly the
+        #: executables a same-role executor needs compiled (WarmBootstrap)
+        self._prefill_shapes_seen: set[tuple] = set()
 
     @classmethod
     def for_model(cls, model, params, *, max_len: int = 256,
@@ -140,6 +149,7 @@ class StageExecutor:
             if sp > s:
                 pad = [(0, 0), (0, sp - s)] + [(0, 0)] * (x.ndim - 2)
                 x = jnp.pad(x, pad)
+        self._prefill_shapes_seen.add((tuple(x.shape), str(x.dtype)))
         out, cache = self._timed("prefill_calls", self._prefill, x)
         if out.shape[1] != s:
             out = out[:, :s]
@@ -185,3 +195,45 @@ class StageExecutor:
         self.stats["decode_batches"] += 1
         self.stats["decode_steps"] += n
         return list(zip(outs[:n], new_caches[:n]))
+
+    # ---------------------------------------------------------- warm profile
+    def warm_profile(self) -> dict:
+        """What a same-role executor must compile to serve like this one:
+        the bucketed prefill shapes served so far and the fused decode
+        convoy widths dispatched so far (WarmBootstrap ships this from a
+        peer replica to a fresh one)."""
+        return {"prefill": sorted(self._prefill_shapes_seen),
+                "widths": sorted(self._widths_seen)}
+
+    def warm(self, profile: dict) -> int:
+        """Replay a peer's warm profile with dummy inputs so every listed
+        executable is compiled before real traffic arrives. Returns the
+        number of warm dispatches issued. Dummy results are discarded; the
+        dispatches land in the shared jit cache, which is the entire point.
+        """
+        dispatches = 0
+        widths = list(profile.get("widths", []))
+        for shape, dtype in profile.get("prefill", []):
+            x = jnp.zeros(shape, dtype=jnp.dtype(dtype))
+            # go through the jitted callable directly: prefill() would
+            # re-bucket (already-bucketed shapes pass through unchanged) and
+            # pollute the first-call timing stats
+            out, cache = self._prefill(self.sparams, x)
+            jax.block_until_ready(out)
+            self._prefill_shapes_seen.add((tuple(shape), str(dtype)))
+            dispatches += 1
+            # decode warmup needs a live cache of the right batch; reuse the
+            # one this prefill just built
+            step_x = jnp.zeros((shape[0], 1) + tuple(shape[2:]),
+                               dtype=jnp.dtype(dtype))
+            t = min(shape[1], self.max_len - 1)
+            for w in widths:
+                outs = self.decode_many([cache] * w, [step_x] * w, [t] * w)
+                jax.block_until_ready(outs[0][0])
+                dispatches += 1
+            if not widths:
+                out2, _ = self.decode(cache, step_x, t)
+                jax.block_until_ready(out2)
+                dispatches += 1
+        self.stats["warmed_dispatches"] += dispatches
+        return dispatches

@@ -27,6 +27,18 @@ drives autoregressive generation with ``generate()``:
   zero client-visible token loss.
 * FINISH releases per-stage session state along the pinned route.
 
+State transfer (repro.statexfer) upgrades the recovery paths so RETRY +
+full re-prefill is the *fallback*, not the norm:
+
+* planned drain hands every open session off live — the MigrationManager
+  freezes it at a step boundary (new steps pile into ``held``), streams its
+  KV snapshot to a same-stage survivor, flips the pins, and releases the
+  held steps into the survivor's inbox: zero re-prefill, token-identical;
+* an unplanned kill restores from the SnapshotStore's background snapshots
+  and the client replays only the tokens since the latest snapshot;
+* a deadline-expired envelope is dropped at the stage boundary with a
+  FINISH(error) propagated to the client instead of being served late.
+
 Elastic control hooks (consumed by repro.control):
 
 * ``remove_replica`` — scale-down: stop routing to the replica, *unpin* its
@@ -57,6 +69,7 @@ from repro.core import (
     WorldSpec,
 )
 from repro.core.online import OnlineInstantiator
+from repro.statexfer import MigrationManager, SnapshotStore, WarmBootstrap
 from .envelope import Envelope, Kind
 from .executor import StageExecutor
 from .partition import split_stages, stage_params
@@ -90,6 +103,9 @@ class _Replica:
         self.worker_id = worker_id
         self.stage = stage
         self.worker = server.cluster.worker(worker_id)
+        #: compute executor — the stage-shared one unless WarmBootstrap
+        #: installed a fresh per-replica executor (new-process simulation)
+        self.executor = server.stage_executors[stage]
         self.upstream: list[str] = []          # world names we recv on
         #: (world, upstream router that routes onto it) — scale-down needs to
         #: know exactly which rotation each inbound edge lives in
@@ -102,6 +118,16 @@ class _Replica:
         self._stash: deque = deque()
         #: open generation sessions whose stage-slice KV cache lives here
         self.sessions: dict[int, _Session] = {}
+        #: sessions frozen mid-migration: sid -> held (env, t_enq) items,
+        #: released into the survivor's inbox once the handoff installs
+        self.held: dict[int, list] = {}
+        #: sessions handed off from here: sid -> survivor replica; late
+        #: arrivals (already in our channels when the pins flipped) are
+        #: forwarded instead of bounced into a useless re-prefill
+        self.migrated: dict[int, "_Replica"] = {}
+        #: sessions with a decode step currently executing/coalescing — the
+        #: MigrationManager waits for a step boundary before snapshotting
+        self.active: set[int] = set()
         self._pumps: dict[str, asyncio.Task] = {}
         self._run_task: Optional[asyncio.Task] = None
         self._reap_task: Optional[asyncio.Task] = None
@@ -120,7 +146,14 @@ class _Replica:
         self.expired = 0             # envelopes dropped past their deadline
 
     def queue_depth(self) -> int:
-        return self.inbox.qsize() + len(self._stash) + self.inflight
+        return (self.inbox.qsize() + len(self._stash) + self.inflight
+                + sum(len(h) for h in self.held.values()))
+
+    def install_session(self, sid: int, cache: Any, batch: int,
+                        step: int) -> None:
+        """Adopt migrated/restored decode state at a step boundary."""
+        self.sessions[sid] = _Session(cache=cache, batch=batch, step=step,
+                                      touched=time.monotonic())
 
     def open_sessions(self) -> int:
         return len(self.sessions)
@@ -150,7 +183,7 @@ class _Replica:
 
     # ------------------------------------------------------------- serve loop
     async def run(self) -> None:
-        ex = self.server.stage_executors[self.stage]
+        ex = self.executor
         loop = asyncio.get_event_loop()
         while True:
             if self._stash:
@@ -178,8 +211,21 @@ class _Replica:
 
     async def _dispatch(self, ex: StageExecutor, loop, env: Envelope,
                         t0: float) -> None:
+        sid = env.session_id
+        if env.kind in (Kind.DECODE, Kind.FINISH):
+            target = self.migrated.get(sid)
+            if target is not None:
+                # session handed off after this envelope was already sent
+                # toward us — forward to its new home instead of bouncing
+                if env.kind is Kind.FINISH:
+                    self.migrated.pop(sid, None)
+                target.inbox.put_nowait((env, t0))
+                return
+            if sid in self.held:
+                self.held[sid].append((env, t0))
+                return
         if env.expired(t0):
-            self.expired += 1
+            await self._expire(env)
             return
         kind = env.kind
         if kind is Kind.RETRY:
@@ -229,6 +275,7 @@ class _Replica:
             await self._send_retry(env)
             return
         batch: list[Envelope] = [env]
+        self.active.add(env.session_id)
         max_n = self.server.microbatch_max
         deadline = t0 + self.server.microbatch_wait_s
         try:
@@ -281,6 +328,8 @@ class _Replica:
             # coalesced extras were pulled out of the inbox by this handler;
             # the run loop only balances the first envelope's inflight count
             self.inflight -= len(batch) - 1
+            for e in batch:
+                self.active.discard(e.session_id)
 
     def _pull_compatible(self, proto: Envelope, n: int,
                          batch: list[Envelope]) -> int:
@@ -298,12 +347,15 @@ class _Replica:
             sess = self.sessions.get(env.session_id)
             if (env.kind is Kind.DECODE and sess is not None
                     and env.session_id not in in_batch
+                    and env.session_id not in self.held
+                    and env.session_id not in self.migrated
                     and env.payload.shape == proto.payload.shape
                     and not env.expired(time.monotonic())):
                 self.wait_s_sum += time.monotonic() - t_enq
                 self.inflight += 1
                 batch.append(env)
                 in_batch.add(env.session_id)
+                self.active.add(env.session_id)
                 pulled += 1
             else:
                 self._stash.append(item)
@@ -357,6 +409,29 @@ class _Replica:
             self.sessions.pop(env.session_id, None)
             await self._send_retry(env)
 
+    async def _expire(self, env: Envelope) -> None:
+        """Deadline enforcement at the stage boundary: the client has given
+        up on this step, so burn no compute on it — drop local session
+        state and propagate FINISH(error) toward the client (cleaning up
+        downstream stage state on the way) instead of silently eating it."""
+        self.expired += 1
+        if env.kind not in (Kind.PREFILL, Kind.DECODE) or env.session_id < 0:
+            return
+        self.sessions.pop(env.session_id, None)
+        fin = Envelope(req_id=env.req_id, session_id=env.session_id,
+                       kind=Kind.FINISH, step=env.step,
+                       error=f"deadline exceeded at {self.worker_id} "
+                             f"(step {env.step})")
+        world = self.router.pinned(env.session_id)
+        self.router.unpin(env.session_id)
+        if world is not None:
+            try:
+                await self.worker.comm.send(fin, 1, world)
+                return
+            except (WorldBrokenError, WorldNotFoundError):
+                pass
+        await self._forward_routed(fin)
+
     async def _send_retry(self, env: Envelope) -> None:
         self.retries_sent += 1
         self.router.unpin(env.session_id)
@@ -368,6 +443,18 @@ class _Replica:
         self.sessions.pop(env.session_id, None)
         world = self.router.pinned(env.session_id)
         self.router.unpin(env.session_id)
+        if env.error is not None:
+            # server-initiated FINISH (deadline drop): must reach the client,
+            # not stop at the last stage like a client FINISH does — route it
+            # on even when this stage never pinned the session
+            if world is not None:
+                try:
+                    await self.worker.comm.send(env, 1, world)
+                    return
+                except (WorldBrokenError, WorldNotFoundError):
+                    pass
+            await self._forward_routed(env)
+            return
         if world is None or self.server._is_last(self.stage):
             return
         try:
@@ -406,7 +493,9 @@ class PipelineServer:
                  replicas: list[int], *, name: str = "pipe",
                  least_loaded: bool = False, max_len: int = 256,
                  microbatch_max: int = 8, microbatch_wait_s: float = 0.002,
-                 session_ttl_s: float = 60.0) -> None:
+                 session_ttl_s: float = 60.0,
+                 snapshot_interval_s: Optional[float] = None,
+                 snapshot_codec: str = "fp") -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
@@ -429,6 +518,14 @@ class PipelineServer:
             StageExecutor(self.cfg, spec, sp, max_len=max_len)
             for spec, sp in zip(self.stage_specs, self.stage_param_sets)]
         self.instantiator = OnlineInstantiator(cluster)
+        #: state-transfer subsystem: live handoff + restore, background
+        #: snapshots (opt-in via snapshot_interval_s), warm scale-up
+        self.migrations = MigrationManager(self)
+        self.snapshots: Optional[SnapshotStore] = (
+            SnapshotStore(self, interval_s=snapshot_interval_s,
+                          codec=snapshot_codec)
+            if snapshot_interval_s is not None else None)
+        self.bootstrap = WarmBootstrap(self)
         self.replicas: list[list[_Replica]] = [[] for _ in replicas]
         self.client = cluster.worker(CLIENT)
         self.client_router = ReplicaRouter()   # worlds to stage-0 replicas
@@ -444,6 +541,9 @@ class PipelineServer:
         self.broken_worlds: set[str] = set()
         #: (t, kind, detail) scale/heal/drain timeline for Fig.5-style plots
         self.events: list[tuple[float, str, str]] = []
+        #: deadline drops carried over from retired replicas — folded in at
+        #: teardown so cumulative counters survive scale-down exactly
+        self.expired_retired = 0
         self._wired_managers: set[str] = set()
         self._wire_manager(self.client.manager, self.client_router)
 
@@ -463,6 +563,9 @@ class PipelineServer:
         for si, count in enumerate(self.replica_counts):
             for _ in range(count):
                 await self.add_replica(si)
+        if self.snapshots is not None:
+            # ride on the client worker so Cluster.shutdown reaps the task
+            self.snapshots.start(spawn=self.client.spawn)
 
     def _wire_manager(self, manager, router: Optional[ReplicaRouter]) -> None:
         """Fault listeners: fenced worlds leave the router rotation (dropping
@@ -480,10 +583,27 @@ class PipelineServer:
 
         manager.on_world_broken(cb)
 
-    async def add_replica(self, stage: int) -> str:
-        """Online instantiation of one replica (paper Fig. 2c / §4.2)."""
+    async def add_replica(self, stage: int, *, warm: bool = False,
+                          fresh_executor: bool = False) -> str:
+        """Online instantiation of one replica (paper Fig. 2c / §4.2).
+
+        ``warm=True`` runs the WarmBootstrap first: stage weights are
+        fetched from a peer replica over the wire and the peer's served
+        shape profile is pre-compiled, all before the replica enters any
+        routing rotation — so its first real request hits warm caches.
+        ``fresh_executor=True`` additionally gives it its own
+        :class:`StageExecutor` (a new worker process would not share the
+        peers' jit cache; this models that).
+        """
         worker_id = f"{self.name}-s{stage}-r{next(self._uid)}"
         rep = _Replica(self, worker_id, stage)
+        if warm:
+            report = await self.bootstrap.bootstrap(
+                stage, worker_id, fresh_executor=fresh_executor)
+            rep.executor = report["executor"]
+            self._event("warm_bootstrap",
+                        f"{worker_id} <- {report['peer']} "
+                        f"({report['bytes']}B, warm {report['warm_s']:.3f}s)")
         specs: list[WorldSpec] = []
         #: (world, router to register it in, peer replica or None for client)
         upstream_edges: list[tuple[str, ReplicaRouter, Optional[_Replica]]] = []
@@ -555,15 +675,20 @@ class PipelineServer:
     async def remove_replica(self, stage: int,
                              worker_id: Optional[str] = None, *,
                              drain: bool = True,
-                             timeout: float = 30.0) -> str:
+                             timeout: float = 30.0,
+                             migrate: bool = True) -> str:
         """Retire one replica of ``stage``.
 
-        ``drain=True`` (scale-down): stop routing to it — which also unpins
-        every session stuck to it, so open sessions relocate: the client's
-        next decode step re-prefills on a survivor (stage-0 pins) or bounces
-        back as RETRY (upstream pins) — then wait until its inbox, in-flight
+        ``drain=True`` (scale-down): first hand every open session off live
+        to a same-stage survivor (``migrate=True``, the state-transfer
+        path: zero re-prefill, steps held during the handoff and released
+        on the survivor), then stop routing to it — which also unpins any
+        session that could *not* be migrated, so those relocate through the
+        client's re-prefill fallback — then wait until its inbox, in-flight
         work, and adjacent transport channels are all empty, then tear its
         worlds down. Zero request/token loss by construction.
+        ``migrate=False`` restores the PR 2 behavior (every open session
+        pays a full re-prefill); bench_migrate measures the difference.
         ``drain=False`` (heal): the replica is already dead; just unhook the
         bookkeeping and purge its (broken) worlds so a replacement can be
         instantiated cleanly.
@@ -586,7 +711,13 @@ class PipelineServer:
 
         rep.draining = True
         self._event("drain_begin", rep.worker_id)
-        # 1. stop routing new work to it (no new picks can reach these
+        # 1. live handoff: move every open session's KV state to a survivor
+        #    and flip its pins — the client never notices. Sessions that
+        #    can't move (no survivor, transfer failure) fall through to the
+        #    re-prefill path when their pins drop in step 2.
+        if drain and migrate and rep.sessions:
+            await self.migrations.migrate_replica_sessions(rep)
+        # 2. stop routing new work to it (no new picks can reach these
         #    worlds once removed; an already-picked send has already been
         #    appended to the channel — the drain wait below flushes it).
         #    Removing also drops session pins: open sessions relocate via
@@ -636,6 +767,9 @@ class PipelineServer:
             if task is not None and not task.done():
                 task.cancel()
         rep.sessions.clear()
+        rep.held.clear()
+        rep.migrated.clear()
+        self.expired_retired += rep.expired
         for world in list(rep.upstream):
             rep.drop_upstream(world)
             self._world_to_replica.pop(world, None)
@@ -697,6 +831,40 @@ class PipelineServer:
             raise
         finally:
             self._responses.pop(env.req_id, None)
+
+    async def _restore_replay(self, sid: int, out: list, s0: int,
+                              step_timeout: float) -> bool:
+        """Unplanned-loss recovery, cheap path: rebuild the session's route
+        from live survivor state + background snapshots
+        (``MigrationManager.restore_session``), then replay only the decode
+        steps since the oldest restored cursor — the client still holds
+        every generated token, and greedy decode is deterministic, so the
+        replayed responses are discarded. Returns True when the session is
+        live and caught up; False sends the caller to full re-prefill."""
+        t0 = await self.migrations.restore_session(sid)
+        if t0 is None:
+            return False
+        replayed = 0
+        try:
+            # positions t0+1 .. s0+len(out)-2 were generated but lost from
+            # every cache; feeding out[k] at position s0+k re-integrates it
+            for k in range(t0 + 1 - s0, len(out) - 1):
+                world = self.client_router.pinned(sid)
+                if world is None:
+                    return False
+                env = Envelope(
+                    next(self._req_ids), sid, Kind.DECODE, step=s0 + k,
+                    deadline=time.monotonic() + step_timeout,
+                    payload=out[k][:, None])
+                resp = await self._roundtrip(env, world, step_timeout)
+                if resp.kind is not Kind.DECODE:
+                    return False
+                replayed += 1
+        except (WorldBrokenError, WorldNotFoundError, asyncio.TimeoutError):
+            return False
+        finally:
+            self.migrations.recomputed_tokens += replayed
+        return True
 
     async def _pick_entry(self, timeout: float) -> Optional[str]:
         world = self.client_router.try_pick(self.least_loaded)
@@ -778,6 +946,8 @@ class PipelineServer:
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
                         raise _SessionLost("prefill bounced")
+                    if resp.kind is Kind.FINISH:
+                        raise _SessionLost(resp.error or "server finished")
                     self.client_router.pin(sid, world)
                 else:
                     world = self.client_router.pinned(sid)
@@ -793,6 +963,8 @@ class PipelineServer:
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
                         raise _SessionLost("decode bounced")
+                    if resp.kind is Kind.FINISH:
+                        raise _SessionLost(resp.error or "server finished")
                 # greedy pick on the host: the logits are tiny (B,V) and a
                 # jax dispatch per token per session would dominate the
                 # client loop at smoke scale
@@ -809,7 +981,16 @@ class PipelineServer:
                         f"generation failed after {max_restarts} session "
                         f"restarts: {e}") from e
                 if sid is not None:
+                    if out and await self._restore_replay(
+                            sid, out, s0, step_timeout):
+                        # session restored + caught up: resume decoding with
+                        # the step arithmetic re-anchored to the raw prompt
+                        hist_len, base = s0, 0
+                        continue
                     self.client_router.unpin(sid)
+                    if out:
+                        self.migrations.reprefills_total += 1
+                        self.migrations.recomputed_tokens += s0 + len(out)
                 sid = None           # forces re-prefill with full history
         if sid is not None:
             world = self.client_router.pinned(sid)
@@ -821,6 +1002,9 @@ class PipelineServer:
                     await self.client.comm.send(env, 1, world)
                 except (WorldBrokenError, WorldNotFoundError):
                     pass
+            if self.snapshots is not None:
+                # eager snapshot GC; the background sweep + TTL are backstops
+                self.snapshots.drop_session(sid)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
     # ------------------------------------------------------------------ intro
@@ -874,5 +1058,7 @@ class PipelineServer:
                     "decode_steps": rep.decode_steps,
                     "retries_sent": rep.retries_sent,
                     "expired": rep.expired,
+                    "held_sessions": len(rep.held),
+                    "migrated_away": len(rep.migrated),
                 }
         return out

@@ -1,0 +1,51 @@
+"""State-transfer subsystem: move decode state, don't recompute it.
+
+PR 2's only recovery path was RETRY + full-history re-prefill: every planned
+drain and unplanned kill paid O(prompt + generated) recompute. This package
+makes state itself a first-class transferable object, next to send/recv:
+
+* :mod:`codec`     — SessionSnapshot wire format: chunked, versioned,
+  CRC-validated blobs of per-stage KV cache + decode cursor (fp exact /
+  int8 quantized).
+* :mod:`manager`   — MigrationManager: planned live handoff (pause at a
+  step boundary, stream to a survivor, flip pins, resume — zero re-prefill)
+  and snapshot restore (rebuild a killed session's route and replay only
+  the suffix).
+* :mod:`snapstore` — SnapshotStore: periodic background snapshots into the
+  cluster store with TTL + eager GC, bounding unplanned-kill replay.
+* :mod:`bootstrap` — WarmBootstrap: new replicas fetch stage weights from a
+  peer and pre-compile the peer's served shape profile before entering
+  rotation.
+"""
+from .bootstrap import WarmBootstrap
+from .codec import (
+    FP,
+    INT8,
+    SessionSnapshot,
+    SnapshotChunk,
+    SnapshotHeader,
+    SnapshotTransferError,
+    blob_step,
+    decode_cache,
+    encode_cache,
+    params_assemble,
+    params_encode,
+    snapshot_assemble,
+    snapshot_encode,
+    snapshot_from_blob,
+    snapshot_to_blob,
+    tree_equal,
+)
+from .manager import MigrationManager
+from .snapstore import SnapshotStore
+
+__all__ = [
+    "FP", "INT8",
+    "SessionSnapshot", "SnapshotChunk", "SnapshotHeader",
+    "SnapshotTransferError",
+    "blob_step", "decode_cache", "encode_cache",
+    "params_assemble", "params_encode",
+    "snapshot_assemble", "snapshot_encode",
+    "snapshot_from_blob", "snapshot_to_blob", "tree_equal",
+    "MigrationManager", "SnapshotStore", "WarmBootstrap",
+]

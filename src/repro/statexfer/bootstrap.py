@@ -1,0 +1,107 @@
+"""WarmBootstrap: fast first-token for a freshly added replica.
+
+A cold scale-up pays twice before its first token: the stage weights have to
+reach the new worker, and every (shape, width) executable its traffic will
+hit has to compile. On real hardware both costs are material (the paper's
+NCCL lazy-init dip is the same phenomenon one layer down). This module
+front-loads both, *before* the replica enters the routing rotation:
+
+* **weight fetch**: the stage's parameter pytree is streamed from a peer
+  replica over a fresh pairwise world using the snapshot chunk format (bulk
+  byte-accounted, backpressured) — the peer, not a central coordinator, is
+  the source, so scale-up bandwidth scales with the fleet;
+* **compiled-shape warmup**: the peer's executor reports which prefill
+  shapes and fused decode widths it has served (its *warm profile*), and
+  the new executor replays dummy dispatches over exactly that profile, so
+  the first real request hits a warm jit cache.
+
+With the default shared per-stage executor the compile warmup is a no-op by
+construction (replicas share one jit cache); ``fresh_executor=True`` models
+the real-deployment case of a new worker process with its own caches.
+"""
+from __future__ import annotations
+
+import asyncio
+import functools
+import itertools
+import time
+
+from .codec import DEFAULT_CHUNK_BYTES, params_assemble, params_encode
+from .manager import stream_chunks
+
+
+class WarmBootstrap:
+    def __init__(self, server, *,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 backpressure_bytes: int = 4 * 1024 * 1024,
+                 transfer_timeout_s: float = 30.0) -> None:
+        self.server = server
+        self.chunk_bytes = chunk_bytes
+        self.backpressure_bytes = backpressure_bytes
+        self.transfer_timeout_s = transfer_timeout_s
+        self._uid = itertools.count()
+        self.bootstraps_total = 0
+        self.weight_bytes: list[int] = []
+        self.transfer_s: list[float] = []
+        self.warm_s: list[float] = []
+
+    async def bootstrap(self, stage: int, worker_id: str, *,
+                        fresh_executor: bool = False) -> dict:
+        """Fetch weights + warm compiles for a new replica of ``stage``.
+        Returns a report dict whose ``executor`` the caller installs on the
+        replica before it starts serving. The weight fetch only happens for
+        a fresh executor — the shared per-stage executor already holds the
+        stage params, and streaming a pytree nobody will use is pure wire
+        cost."""
+        from repro.serving.executor import StageExecutor
+
+        server = self.server
+        peers = [r for r in server.replicas[stage]
+                 if r.worker.alive and not r.draining]
+        peer = min(peers, key=lambda r: r.queue_depth()) if peers else None
+        report: dict = {"stage": stage, "peer": peer.worker_id if peer
+                        else None, "bytes": 0, "transfer_s": 0.0,
+                        "warm_s": 0.0, "fresh_executor": fresh_executor}
+
+        if fresh_executor:
+            sparams = server.stage_param_sets[stage]
+            if peer is not None:
+                t0 = time.monotonic()
+                sparams = await self._fetch_weights(peer, worker_id, sparams)
+                report["transfer_s"] = time.monotonic() - t0
+                report["bytes"] = self.weight_bytes[-1]
+            executor = StageExecutor(
+                server.cfg, server.stage_specs[stage], sparams,
+                max_len=server.max_len)
+        else:
+            executor = server.stage_executors[stage]
+
+        if peer is not None:
+            profile = peer.executor.warm_profile()
+            t0 = time.monotonic()
+            # jit compiles are blocking host work — keep them off the loop
+            await asyncio.get_event_loop().run_in_executor(
+                None, executor.warm, profile)
+            report["warm_s"] = time.monotonic() - t0
+            report["profile"] = profile
+        self.bootstraps_total += 1
+        self.transfer_s.append(report["transfer_s"])
+        self.warm_s.append(report["warm_s"])
+        report["executor"] = executor
+        return report
+
+    async def _fetch_weights(self, peer, worker_id: str, sparams):
+        """Stream the stage weight pytree peer -> new worker over the shared
+        bounded bulk path; returns the reassembled (bit-identical) pytree."""
+        server = self.server
+        loop = asyncio.get_event_loop()
+        chunks = await loop.run_in_executor(
+            None, functools.partial(params_encode, sparams,
+                                    chunk_bytes=self.chunk_bytes))
+        world = f"boot:{server.name}:{worker_id}:{next(self._uid)}"
+        received = await stream_chunks(
+            server, peer.worker, server.cluster.worker(worker_id), world,
+            chunks, backpressure_bytes=self.backpressure_bytes,
+            timeout_s=self.transfer_timeout_s)
+        self.weight_bytes.append(sum(c.nbytes for c in received))
+        return await loop.run_in_executor(None, params_assemble, received)

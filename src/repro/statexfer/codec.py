@@ -1,0 +1,255 @@
+"""SessionSnapshot codec: per-stage decode state as chunked, versioned blobs.
+
+The state-transfer subsystem moves a live generation session between
+replicas (planned handoff), into the snapshot store (periodic background
+snapshots), or across engine restarts (export/import). All three paths share
+one wire format produced here:
+
+* a :class:`SessionSnapshot` captures one stage's per-session decode state —
+  the stage-slice KV cache pytree plus the decode cursor (last processed
+  position), session batch, and identity;
+* :func:`snapshot_encode` serializes it into an ordered list of
+  :class:`SnapshotChunk` wire messages sized for streaming with backpressure
+  (the header rides on chunk 0: version, codec, byte count, CRC);
+* :func:`snapshot_assemble` validates and reassembles — out-of-order chunks
+  are re-sorted by sequence number, while missing/duplicated/corrupted
+  chunks raise :class:`SnapshotTransferError` so the caller can fall back to
+  the re-prefill recovery path instead of resuming from torn state.
+
+Two cache codecs:
+
+* ``fp``   — exact: leaves cross the wire bit-identically (the token-parity
+  path; fp restore is byte-identical, so greedy decode continues exactly).
+* ``int8`` — per-last-axis absmax quantization of float leaves, ~4x smaller
+  snapshots for bf16/fp32 KV caches. Greedy continuation is token-identical
+  in practice for well-margined logits but not guaranteed bit-exact — use
+  fp wherever parity is asserted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SNAPSHOT_VERSION = 1
+DEFAULT_CHUNK_BYTES = 256 * 1024
+
+FP = "fp"
+INT8 = "int8"
+
+
+class SnapshotTransferError(RuntimeError):
+    """A snapshot could not be (re)assembled: missing/duplicate/corrupt
+    chunks, version skew, or CRC mismatch. Callers fall back to re-prefill."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotHeader:
+    """Chunk-0 metadata describing the whole transfer."""
+
+    version: int
+    session_id: int
+    stage: int
+    step: int            # last decode position integrated into the cache
+    batch: int           # per-session batch dimension
+    codec: str           # FP | INT8
+    nbytes: int          # total payload bytes across all chunks
+    n_chunks: int
+    crc32: int           # over the full reassembled payload
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotChunk:
+    """One wire message of a streamed snapshot. ``header`` rides on seq 0."""
+
+    session_id: int
+    stage: int
+    seq: int
+    data: bytes
+    header: Optional[SnapshotHeader] = None
+    #: transport marks bulk-tagged payloads in its bulk byte counters
+    bulk: bool = True
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.data)
+
+
+@dataclasses.dataclass
+class SessionSnapshot:
+    """One stage's decode state for one session, host-side and codec-free."""
+
+    session_id: int
+    stage: int
+    step: int
+    batch: int
+    cache: Any           # stage-slice cache pytree (numpy or jax leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class _QLeaf:
+    """An int8-quantized float leaf: q * scale reconstructs the original,
+    scale is per-last-axis absmax/127."""
+
+    q: np.ndarray        # int8
+    scale: np.ndarray    # float32, shape = leaf.shape[:-1] + (1,)
+    dtype: Any           # original np.dtype (dtype objects pickle cleanly;
+    #                      string round-trips break for ml_dtypes like bf16)
+
+
+def _quantize_leaf(leaf: np.ndarray) -> Any:
+    # jnp.issubdtype also recognizes ml_dtypes floats (bf16), which numpy
+    # classifies as void — those are exactly the KV dtypes worth compressing
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return leaf
+    x = leaf.astype(np.float32)
+    scale = np.abs(x).max(axis=-1, keepdims=True) / 127.0
+    scale = np.where(scale == 0.0, 1.0, scale).astype(np.float32)
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return _QLeaf(q=q, scale=scale, dtype=leaf.dtype)
+
+
+def _dequantize_leaf(leaf: Any) -> np.ndarray:
+    if isinstance(leaf, _QLeaf):
+        return (leaf.q.astype(np.float32) * leaf.scale).astype(leaf.dtype)
+    return leaf
+
+
+def _host_cache(cache: Any) -> Any:
+    return jax.tree.map(lambda a: np.asarray(a), cache)
+
+
+def encode_cache(cache: Any, codec: str = FP) -> bytes:
+    """Serialize a cache pytree to one payload byte string."""
+    host = _host_cache(cache)
+    if codec == INT8:
+        host = jax.tree.map(_quantize_leaf, host)
+    elif codec != FP:
+        raise ValueError(f"unknown snapshot codec {codec!r}")
+    return pickle.dumps(host, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode_cache(payload: bytes, codec: str = FP, *,
+                 device: bool = True) -> Any:
+    """Inverse of :func:`encode_cache`; returns jax leaves when ``device``."""
+    host = pickle.loads(payload)
+    if codec == INT8:
+        host = jax.tree.map(_dequantize_leaf, host,
+                            is_leaf=lambda x: isinstance(x, _QLeaf))
+    if device:
+        return jax.tree.map(jnp.asarray, host)
+    return host
+
+
+def snapshot_encode(snap: SessionSnapshot, *, codec: str = FP,
+                    chunk_bytes: int = DEFAULT_CHUNK_BYTES
+                    ) -> list[SnapshotChunk]:
+    """Serialize one session-stage snapshot into ordered wire chunks."""
+    payload = encode_cache(snap.cache, codec)
+    n = max(1, -(-len(payload) // chunk_bytes))
+    header = SnapshotHeader(
+        version=SNAPSHOT_VERSION, session_id=snap.session_id,
+        stage=snap.stage, step=snap.step, batch=snap.batch, codec=codec,
+        nbytes=len(payload), n_chunks=n, crc32=zlib.crc32(payload))
+    return [
+        SnapshotChunk(
+            session_id=snap.session_id, stage=snap.stage, seq=i,
+            data=payload[i * chunk_bytes:(i + 1) * chunk_bytes],
+            header=header if i == 0 else None)
+        for i in range(n)
+    ]
+
+
+def snapshot_assemble(chunks: list[SnapshotChunk]) -> SessionSnapshot:
+    """Validate + reassemble chunks (any arrival order) into a snapshot.
+
+    Raises :class:`SnapshotTransferError` on anything short of a perfect
+    transfer: no header, version skew, missing/duplicate sequence numbers,
+    truncated payload, or CRC mismatch.
+    """
+    if not chunks:
+        raise SnapshotTransferError("empty transfer")
+    ordered = sorted(chunks, key=lambda c: c.seq)
+    header = ordered[0].header
+    if header is None or ordered[0].seq != 0:
+        raise SnapshotTransferError("transfer lost its header chunk")
+    if header.version != SNAPSHOT_VERSION:
+        raise SnapshotTransferError(
+            f"snapshot version {header.version} != {SNAPSHOT_VERSION}")
+    seqs = [c.seq for c in ordered]
+    if seqs != list(range(header.n_chunks)):
+        raise SnapshotTransferError(
+            f"chunk sequence {seqs} != 0..{header.n_chunks - 1}")
+    payload = b"".join(c.data for c in ordered)
+    if len(payload) != header.nbytes:
+        raise SnapshotTransferError(
+            f"payload {len(payload)}B != header {header.nbytes}B")
+    if zlib.crc32(payload) != header.crc32:
+        raise SnapshotTransferError("payload CRC mismatch")
+    return SessionSnapshot(
+        session_id=header.session_id, stage=header.stage, step=header.step,
+        batch=header.batch, cache=decode_cache(payload, header.codec))
+
+
+# ---------------------------------------------------------------- blob form
+def snapshot_to_blob(snap: SessionSnapshot, *, codec: str = FP) -> bytes:
+    """Single-buffer form (header || payload) for the snapshot store, where
+    chunk streaming adds nothing — the store is already in-memory."""
+    payload = encode_cache(snap.cache, codec)
+    header = SnapshotHeader(
+        version=SNAPSHOT_VERSION, session_id=snap.session_id,
+        stage=snap.stage, step=snap.step, batch=snap.batch, codec=codec,
+        nbytes=len(payload), n_chunks=1, crc32=zlib.crc32(payload))
+    return pickle.dumps((header, payload), protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def snapshot_from_blob(blob: bytes) -> SessionSnapshot:
+    try:
+        header, payload = pickle.loads(blob)
+    except Exception as e:  # noqa: BLE001 — any unpickle failure is torn state
+        raise SnapshotTransferError(f"undecodable snapshot blob: {e!r}") from e
+    if header.version != SNAPSHOT_VERSION:
+        raise SnapshotTransferError(
+            f"snapshot version {header.version} != {SNAPSHOT_VERSION}")
+    if len(payload) != header.nbytes or zlib.crc32(payload) != header.crc32:
+        raise SnapshotTransferError("snapshot blob failed integrity check")
+    return SessionSnapshot(
+        session_id=header.session_id, stage=header.stage, step=header.step,
+        batch=header.batch, cache=decode_cache(payload, header.codec))
+
+
+def blob_step(blob: bytes) -> int:
+    """Decode cursor of a stored blob without materializing the cache."""
+    header, _ = pickle.loads(blob)
+    return header.step
+
+
+# ------------------------------------------------------------ param transfer
+def params_encode(params: Any, *, chunk_bytes: int = DEFAULT_CHUNK_BYTES
+                  ) -> list[SnapshotChunk]:
+    """Chunk a stage's weight pytree for the warm-bootstrap transfer. Reuses
+    the snapshot wire format with the reserved session id -1 (weights are a
+    'session' of stage state that never decodes)."""
+    return snapshot_encode(
+        SessionSnapshot(session_id=-1, stage=-1, step=-1, batch=0,
+                        cache=params),
+        codec=FP, chunk_bytes=chunk_bytes)
+
+
+def params_assemble(chunks: list[SnapshotChunk]) -> Any:
+    return snapshot_assemble(chunks).cache
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    """Exact structural + bitwise equality of two pytrees (test helper)."""
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))

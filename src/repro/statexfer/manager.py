@@ -1,0 +1,351 @@
+"""MigrationManager: move live decode state instead of recomputing it.
+
+Two recovery paths share this manager, mirroring the planned/unplanned split
+of the README recovery matrix:
+
+* **Planned live handoff** (:meth:`migrate_session`): scale-down or
+  rebalance knows in advance which replica is going away. The session is
+  paused at a step boundary (new decode steps are *held*, an in-flight fused
+  step is awaited), its stage-slice KV cache + cursor is serialized into
+  chunked wire blobs and streamed to a survivor replica of the same stage
+  over a fresh pairwise world — with byte-level backpressure so a multi-MB
+  cache never floods the channel — then installed, the upstream and
+  downstream session pins are flipped to the survivor, held steps are
+  released into the survivor's inbox, and decode resumes. Zero re-prefill;
+  greedy decode is token-identical because the fp codec is byte-exact.
+
+* **Snapshot restore** (:meth:`restore_session`): an unplanned kill left no
+  handoff window. The client's recovery path calls this before falling back
+  to full re-prefill: each stage either still holds the session live (the
+  kill only destroyed one replica) or re-installs the latest background
+  snapshot from the :class:`~repro.statexfer.snapstore.SnapshotStore`; pins
+  are wired along the rebuilt route and the caller replays only the decode
+  steps since the oldest restored cursor. Any gap — no snapshot for a
+  stage, no healthy replica, torn blob — returns ``None`` and the caller
+  re-prefills (at-least-once semantics are never weakened).
+
+Anything that goes wrong mid-handoff (transfer error, vanished survivor,
+missing pin) unwinds to the PR 2 behavior: the session is bounced via RETRY
+and the client re-prefills. State transfer is an optimization, never a new
+failure mode.
+"""
+from __future__ import annotations
+
+import asyncio
+import functools
+import itertools
+import time
+from typing import Optional
+
+from repro.core import WorldBrokenError, WorldNotFoundError, WorldSpec
+
+from .codec import (
+    FP,
+    DEFAULT_CHUNK_BYTES,
+    SessionSnapshot,
+    SnapshotTransferError,
+    snapshot_assemble,
+    snapshot_encode,
+)
+
+
+async def stream_chunks(server, src_worker, dst_worker, world: str,
+                        chunks: list, *, backpressure_bytes: int,
+                        timeout_s: float) -> list:
+    """Stream wire chunks src -> dst over a fresh pairwise world with
+    byte-level backpressure and a hard receive deadline, then tear the
+    world down. Shared by session migration and warm bootstrap — any bulk
+    state transfer between two live workers takes this path, so a silently
+    hung peer costs ``timeout_s``, never a wedged coroutine."""
+    await server.instantiator.instantiate(
+        [WorldSpec.pair(world, src_worker.worker_id, dst_worker.worker_id)])
+    transport = server.cluster.transport
+    deadline = time.monotonic() + timeout_s
+
+    async def _recv_all() -> list:
+        return [await dst_worker.comm.recv(0, world) for _ in range(len(chunks))]
+
+    try:
+        recv_task = asyncio.ensure_future(_recv_all())
+        try:
+            for chunk in chunks:
+                # the backpressure wait shares the transfer deadline: a
+                # receiver that died mid-transfer stops draining the
+                # channel, and without the bound this loop would spin
+                # forever before ever reaching the wait_for below
+                while transport.pending_bytes(world) > backpressure_bytes:
+                    if recv_task.done() or time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"bulk transfer on {world} stalled")
+                    await asyncio.sleep(0)
+                await src_worker.comm.send(chunk, 1, world)
+            return await asyncio.wait_for(
+                recv_task, max(0.001, deadline - time.monotonic()))
+        except BaseException:
+            recv_task.cancel()
+            raise
+    finally:
+        server._remove_world_everywhere(world)
+
+
+class MigrationManager:
+    def __init__(self, server, *, codec: str = FP,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 backpressure_bytes: int = 4 * 1024 * 1024,
+                 freeze_timeout_s: float = 5.0,
+                 transfer_timeout_s: float = 10.0) -> None:
+        self.server = server
+        self.codec = codec
+        self.chunk_bytes = chunk_bytes
+        self.backpressure_bytes = backpressure_bytes
+        self.freeze_timeout_s = freeze_timeout_s
+        self.transfer_timeout_s = transfer_timeout_s
+        self._uid = itertools.count()
+        # -- counters (MetricsHub / bench_migrate read these) --------------
+        self.migrations_total = 0
+        self.migration_failures = 0
+        self.restores_total = 0
+        self.restore_failures = 0
+        self.reprefills_total = 0        # full-history fallbacks (state lost)
+        self.migration_s: list[float] = []
+        self.migration_bytes: list[int] = []
+        #: token-position accounting: positions resumed from moved/restored
+        #: state vs positions recomputed (replayed suffix or re-prefill)
+        self.recovered_tokens = 0
+        self.recomputed_tokens = 0
+
+    # ------------------------------------------------------------ reporting
+    def migration_p50_s(self) -> float:
+        if not self.migration_s:
+            return 0.0
+        s = sorted(self.migration_s)
+        return s[len(s) // 2]
+
+    def stats(self) -> dict:
+        return {
+            "migrations_total": self.migrations_total,
+            "migration_failures": self.migration_failures,
+            "migration_p50_s": self.migration_p50_s(),
+            "migration_bytes_total": sum(self.migration_bytes),
+            "restores_total": self.restores_total,
+            "restore_failures": self.restore_failures,
+            "reprefills_total": self.reprefills_total,
+            "recovered_tokens": self.recovered_tokens,
+            "recomputed_tokens": self.recomputed_tokens,
+        }
+
+    # ------------------------------------------------------- planned handoff
+    async def migrate_replica_sessions(self, rep) -> dict[int, bool]:
+        """Drain-time bulk handoff: freeze every open session first (so no
+        step sneaks past into the RETRY path), then hand them off one by
+        one. Returns sid -> migrated?; failures fall back to re-prefill."""
+        for sid in list(rep.sessions):
+            rep.held.setdefault(sid, [])
+        results: dict[int, bool] = {}
+        for sid in list(rep.sessions):
+            results[sid] = await self.migrate_session(rep, sid)
+        return results
+
+    async def migrate_session(self, rep, sid: int,
+                              survivor=None) -> bool:
+        """Live handoff of one session from ``rep`` to a same-stage survivor.
+        Returns True on success; on any failure the session is released
+        locally (the RETRY/re-prefill fallback takes over) and False is
+        returned."""
+        server = self.server
+        t_begin = time.monotonic()
+        if survivor is None:
+            peers = [r for r in server.replicas[rep.stage]
+                     if r is not rep and r.worker.alive and not r.draining]
+            if not peers:
+                self.migration_failures += 1
+                self._release(rep, sid)
+                return False
+            survivor = min(peers, key=lambda r: (r.open_sessions(),
+                                                 r.queue_depth()))
+        rep.held.setdefault(sid, [])          # freeze: hold new steps
+        try:
+            snap = await self._freeze_snapshot(rep, sid)
+            moved, nbytes = await self._transfer(rep, survivor, snap)
+            self._install(rep, survivor, sid, moved)
+        except (SnapshotTransferError, WorldBrokenError, WorldNotFoundError,
+                asyncio.TimeoutError, TimeoutError):
+            self.migration_failures += 1
+            self._release(rep, sid)
+            return False
+        self.migrations_total += 1
+        # appended pairwise only on success, so the lists stay in step and
+        # the window trim below never deletes mismatched entries
+        self.migration_s.append(time.monotonic() - t_begin)
+        self.migration_bytes.append(nbytes)
+        if len(self.migration_s) > 1024:      # p50 over the recent window;
+            del self.migration_s[:512]        # never grows unbounded
+            del self.migration_bytes[:512]
+        self.recovered_tokens += max(0, snap.step + 1)
+        server._event("migrate", f"{sid}: {rep.worker_id}->"
+                                 f"{survivor.worker_id}")
+        return True
+
+    async def _freeze_snapshot(self, rep, sid: int) -> SessionSnapshot:
+        """Wait for the session's in-flight step (if any) to land, then
+        capture (cache, step) at the step boundary."""
+        deadline = time.monotonic() + self.freeze_timeout_s
+        while sid in rep.active:
+            if time.monotonic() > deadline:
+                raise SnapshotTransferError(f"freeze of {sid} timed out")
+            await asyncio.sleep(0.001)
+        sess = rep.sessions.get(sid)
+        if sess is None:
+            raise SnapshotTransferError(f"session {sid} vanished mid-freeze")
+        return SessionSnapshot(session_id=sid, stage=rep.stage,
+                               step=sess.step, batch=sess.batch,
+                               cache=sess.cache)
+
+    async def _transfer(self, rep, survivor,
+                        snap: SessionSnapshot) -> tuple[SessionSnapshot, int]:
+        """Stream the snapshot rep -> survivor over a fresh pairwise world,
+        with byte-level backpressure; returns the reassembled snapshot and
+        the bytes that crossed the wire."""
+        server = self.server
+        loop = asyncio.get_event_loop()
+        chunks = await loop.run_in_executor(
+            None, functools.partial(snapshot_encode, snap, codec=self.codec,
+                                    chunk_bytes=self.chunk_bytes))
+        world = f"mig:{server.name}:{snap.session_id}:{next(self._uid)}"
+        received = await self._stream(rep.worker, survivor.worker, world,
+                                      chunks)
+        assembled = await loop.run_in_executor(None, snapshot_assemble,
+                                               received)
+        return assembled, sum(c.nbytes for c in received)
+
+    async def _stream(self, src_worker, dst_worker, world: str,
+                      chunks: list) -> list:
+        # seam for tests (torn-transfer injection) and subclasses
+        return await stream_chunks(
+            self.server, src_worker, dst_worker, world, chunks,
+            backpressure_bytes=self.backpressure_bytes,
+            timeout_s=self.transfer_timeout_s)
+
+    def _install(self, rep, survivor, sid: int,
+                 snap: SessionSnapshot) -> None:
+        """Install on the survivor, flip pins, release held steps. Runs
+        without awaits so no envelope can interleave half-flipped state."""
+        from repro.serving.pipeline import CLIENT, _edge
+
+        server = self.server
+        sess = rep.sessions.get(sid)
+        if sess is None or not survivor.worker.alive or survivor.draining:
+            raise SnapshotTransferError("endpoint vanished before install")
+        # downstream pin: same next-hop replica (or the client), new edge
+        down_world = rep.router.pinned(sid)
+        if down_world is None:
+            raise SnapshotTransferError(f"session {sid} has no route pin")
+        down = server._world_to_replica.get(down_world)   # None -> client
+        new_down = _edge(server.name, survivor.worker_id,
+                         CLIENT if down is None else down.worker_id)
+        if new_down not in survivor.router.healthy():
+            raise SnapshotTransferError(
+                f"survivor lacks downstream edge {new_down}")
+        # upstream pin: the router (client's or an upstream replica's) that
+        # pinned this session onto rep must repin onto survivor
+        flips = []
+        for world_u, router in rep.upstream_edges:
+            if router.pinned(sid) == world_u:
+                new_up = next((w for w, r2 in survivor.upstream_edges
+                               if r2 is router), None)
+                if new_up is None:
+                    raise SnapshotTransferError(
+                        "no survivor edge for the pinning upstream router")
+                flips.append((router, new_up))
+        if not flips:
+            raise SnapshotTransferError(f"session {sid} has no upstream pin")
+
+        survivor.install_session(sid, snap.cache, snap.batch, snap.step)
+        survivor.router.pin(sid, new_down)
+        for router, new_up in flips:
+            router.pin(sid, new_up)
+        rep.sessions.pop(sid, None)
+        rep.router.unpin(sid)
+        # release: held steps first (FIFO), then any straggler that is still
+        # in rep's channels/pumps gets forwarded via the migrated map
+        rep.migrated[sid] = survivor
+        for item in rep.held.pop(sid, []):
+            survivor.inbox.put_nowait(item)
+
+    def _release(self, rep, sid: int) -> None:
+        """Failed handoff: un-freeze and hand held steps back to the local
+        serve loop (which will serve them, or RETRY them if draining).
+
+        They go back through the *inbox*, not the stash: the serve loop only
+        re-checks its stash after waking from ``inbox.get()``, so a
+        stash-only release would strand the steps (and their clients) until
+        unrelated traffic happened to arrive. Per-session order is safe —
+        the protocol allows one in-flight step per session, and held items
+        re-enqueue in held order."""
+        for item in rep.held.pop(sid, []):
+            rep.inbox.put_nowait(item)
+
+    # ------------------------------------------------------ snapshot restore
+    async def restore_session(self, sid: int) -> Optional[int]:
+        """Rebuild a lost session from live survivor state + stored
+        snapshots. Returns the oldest restored decode position ``t0`` (the
+        caller replays positions ``t0+1..``), or None if any stage cannot be
+        restored — the caller then falls back to full re-prefill."""
+        from repro.serving.pipeline import CLIENT, _edge
+
+        server = self.server
+        route, installs, steps = [], [], []
+        for stage in range(server.n_stages):
+            live = [r for r in server.replicas[stage]
+                    if r.worker.alive and not r.draining
+                    and sid in r.sessions and sid not in r.held]
+            if live:
+                rep = live[0]
+                route.append(rep)
+                installs.append(None)
+                steps.append(rep.sessions[sid].step)
+                continue
+            snap = (server.snapshots.latest(sid, stage)
+                    if server.snapshots is not None else None)
+            healthy = [r for r in server.replicas[stage]
+                       if r.worker.alive and not r.draining]
+            if snap is None or not healthy:
+                self.restore_failures += 1
+                return None
+            rep = min(healthy, key=lambda r: (r.open_sessions(),
+                                              r.queue_depth()))
+            route.append(rep)
+            installs.append(snap)
+            steps.append(snap.step)
+        t0 = min(steps)
+        # replay idempotence: the resumed client re-feeds positions from
+        # t0+1 AND re-feeds its pending token at the old cursor when the
+        # lost step had already been integrated everywhere — an exact
+        # overwrite for full attention caches, but a double-integration for
+        # SSM/ring state. Restore therefore requires full caches throughout;
+        # SSM/windowed pipelines take the re-prefill fallback.
+        if not all(server.stage_executors[i].full_cache
+                   for i in range(server.n_stages)):
+            self.restore_failures += 1
+            return None
+        # the route must be fully wired before any pin flips
+        entry = _edge(server.name, CLIENT, route[0].worker_id)
+        hops = [entry]
+        for i, rep in enumerate(route):
+            nxt = (CLIENT if i == len(route) - 1
+                   else route[i + 1].worker_id)
+            hops.append(_edge(server.name, rep.worker_id, nxt))
+        routers = [server.client_router] + [r.router for r in route]
+        if any(h not in router.healthy()
+               for h, router in zip(hops, routers)):
+            self.restore_failures += 1
+            return None
+        for rep, snap in zip(route, installs):
+            if snap is not None:
+                rep.install_session(sid, snap.cache, snap.batch, snap.step)
+        for router, hop in zip(routers, hops):
+            router.pin(sid, hop)
+        self.restores_total += 1
+        self.recovered_tokens += max(0, t0 + 1)
+        server._event("restore", f"{sid} from snapshots@t<={t0}")
+        return t0

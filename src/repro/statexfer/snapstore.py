@@ -1,0 +1,193 @@
+"""SnapshotStore: periodic background snapshots of open decode sessions.
+
+Planned transitions (drain, rebalance) move live state directly via
+:class:`~repro.statexfer.manager.MigrationManager`; an *unplanned* kill gives
+no such window — whatever state the dead replica held is simply gone. The
+SnapshotStore bounds that loss: a background task walks every healthy
+replica's open sessions and writes each one's stage snapshot into the
+cluster :class:`~repro.core.store.Store` under a per-pipeline namespace.
+After a kill, restore replays only the tokens generated since the latest
+snapshot instead of re-prefilling the whole history.
+
+Key hygiene (the PR 1 store-key leak, snapshot edition): every key carries a
+TTL (a dead SnapshotStore can never leak keys forever), finished sessions
+are dropped eagerly via :meth:`drop_session`, and each sweep prunes keys for
+sessions no longer open on any replica — a replica teardown (world removal)
+therefore reclaims its sessions' keys within one sweep once their FINISH
+lands, without any teardown-path coupling.
+
+Encoding cost rides on a worker thread (`run_in_executor`): the device→host
+copy + pickle of a KV cache must not stall the serve loop. The (cache,
+step) pair is captured synchronously before handing off, so a concurrent
+decode step — which *replaces* ``sess.cache`` rather than mutating it —
+can never tear a snapshot.
+"""
+from __future__ import annotations
+
+import asyncio
+import functools
+import time
+from typing import Optional
+
+from .codec import (
+    FP,
+    SessionSnapshot,
+    SnapshotTransferError,
+    blob_step,
+    snapshot_from_blob,
+    snapshot_to_blob,
+)
+
+
+class SnapshotStore:
+    def __init__(self, server, *, interval_s: float = 0.05,
+                 ttl_s: float = 60.0, codec: str = FP,
+                 gc_grace_s: float = 15.0) -> None:
+        self.server = server
+        self.store = server.cluster.store
+        self.interval_s = interval_s
+        self.ttl_s = ttl_s
+        self.codec = codec
+        #: how long a session must be absent from every *alive* replica
+        #: before the sweep reclaims its keys. A killed replica's sessions
+        #: vanish from the alive view instantly, but the client only learns
+        #: of the loss at its step timeout — eager deletion here would
+        #: destroy exactly the snapshots restore is about to need. FINISH
+        #: still reclaims immediately via drop_session; TTL is the backstop.
+        self.gc_grace_s = gc_grace_s
+        self._missing_since: dict[int, float] = {}
+        self._task: Optional[asyncio.Task] = None
+        self._stop = asyncio.Event()
+        #: (sid, stage) -> last snapshotted step, to skip unchanged sessions
+        self._last_step: dict[tuple[int, int], int] = {}
+        # -- counters (MetricsHub reads these) -----------------------------
+        self.snapshots_taken = 0
+        self.snapshot_bytes_total = 0
+        #: per-snapshot byte sizes not yet folded into the hub's EWMA
+        self.bytes_log: list[int] = []
+        self.pruned_keys = 0
+
+    # ------------------------------------------------------------- namespace
+    def prefix(self) -> str:
+        return f"snap/{self.server.name}/"
+
+    def key(self, sid: int, stage: int) -> str:
+        return f"{self.prefix()}{sid}/{stage}"
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self, spawn=None) -> None:
+        """Start the background sweep. ``spawn`` lets the owner tie the
+        task to a worker's lifecycle (PipelineServer passes the client
+        worker's spawn so Cluster.shutdown reaps it)."""
+        if self._task is None or self._task.done():
+            self._stop = asyncio.Event()
+            coro = self.run()
+            self._task = (spawn(coro) if spawn is not None
+                          else asyncio.ensure_future(coro))
+
+    async def stop(self) -> None:
+        self._stop.set()
+        if self._task is not None:
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    async def run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                await self.sweep()
+            except asyncio.CancelledError:
+                raise
+            except Exception:  # noqa: BLE001 — a torn snapshot pass must not
+                pass           # end background snapshotting forever
+            try:
+                await asyncio.wait_for(self._stop.wait(), self.interval_s)
+            except asyncio.TimeoutError:
+                pass
+
+    # ----------------------------------------------------------------- sweep
+    async def sweep(self) -> int:
+        """One snapshot pass over every open session; returns #taken."""
+        loop = asyncio.get_event_loop()
+        taken = 0
+        open_sids: set[int] = set()
+        for reps in self.server.replicas:
+            for rep in reps:
+                if not rep.worker.alive:
+                    continue
+                for sid, sess in list(rep.sessions.items()):
+                    open_sids.add(sid)
+                    if self._last_step.get((sid, rep.stage)) == sess.step:
+                        continue
+                    # capture atomically (no await between reads): a decode
+                    # step swaps sess.cache/step as a pair
+                    snap = SessionSnapshot(
+                        session_id=sid, stage=rep.stage, step=sess.step,
+                        batch=sess.batch, cache=sess.cache)
+                    blob = await loop.run_in_executor(
+                        None, functools.partial(
+                            snapshot_to_blob, snap, codec=self.codec))
+                    self.store.set(self.key(sid, rep.stage), blob,
+                                   ttl=self.ttl_s)
+                    self._last_step[(sid, rep.stage)] = sess.step
+                    self.snapshots_taken += 1
+                    self.snapshot_bytes_total += len(blob)
+                    self.bytes_log.append(len(blob))
+                    taken += 1
+        # bytes_log is drained by MetricsHub when one is polling; without a
+        # hub it must not grow for the process lifetime — keep the tail
+        if len(self.bytes_log) > 1024:
+            del self.bytes_log[:len(self.bytes_log) - 512]
+        self._gc(open_sids)
+        return taken
+
+    def _gc(self, open_sids: set[int]) -> None:
+        """Prune keys (and cursor state) for sessions gone from every alive
+        replica for longer than the grace window — FINISHed sessions are
+        reclaimed eagerly by drop_session; this sweep handles reaped and
+        torn-down sessions without racing a kill-recovery restore."""
+        now = time.monotonic()
+        for sid in open_sids:
+            self._missing_since.pop(sid, None)
+        for sid in {s for s, _ in self._last_step} - open_sids:
+            first = self._missing_since.setdefault(sid, now)
+            if now - first > self.gc_grace_s:
+                self.drop_session(sid)
+
+    # ----------------------------------------------------------------- reads
+    def latest(self, sid: int, stage: int) -> Optional[SessionSnapshot]:
+        blob = self.store.get(self.key(sid, stage))
+        if blob is None:
+            return None
+        try:
+            return snapshot_from_blob(blob)
+        except SnapshotTransferError:
+            return None
+
+    def latest_step(self, sid: int, stage: int) -> Optional[int]:
+        blob = self.store.get(self.key(sid, stage))
+        if blob is None:
+            return None
+        try:
+            return blob_step(blob)
+        except Exception:  # noqa: BLE001 — torn blob == no snapshot
+            return None
+
+    # -------------------------------------------------------------------- GC
+    def drop_session(self, sid: int) -> int:
+        """Eager reclamation when a session FINISHes (or is reaped)."""
+        n = self.store.delete_prefix(f"{self.prefix()}{sid}/")
+        self.pruned_keys += n
+        self._missing_since.pop(sid, None)
+        for key in [k for k in self._last_step if k[0] == sid]:
+            del self._last_step[key]
+        return n
+
+    def drop_all(self) -> int:
+        n = self.store.delete_prefix(self.prefix())
+        self.pruned_keys += n
+        self._last_step.clear()
+        self._missing_since.clear()
+        return n
