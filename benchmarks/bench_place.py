@@ -1,0 +1,279 @@
+"""Placement + heal benchmark: topology-aware state movement A/B'd against
+the placement-blind and recompute disciplines it replaces.
+
+Phase A — **drain migration on a two-host topology**, run twice on the
+identical scenario: placement-aware survivor choice (queue load + placement
+cost of the KV bytes about to move) vs the placement-blind queue-depth-only
+baseline. The blind baseline's tie-break lands on a cross-host survivor;
+the aware run must keep every migrated byte on-host. Acceptance (ISSUE 4):
+the aware run picks a same-host survivor and moves **strictly fewer
+cross-host bytes** than the blind run.
+
+Phase B — **heal of an alive-but-fenced replica** with open mid-decode
+sessions, run twice: snapshot-assisted live heal (state live-migrates to
+the replacement; bounced clients restore from it inside the grace window)
+vs the PR 3 heal (drain-migrate fails on pin-less fenced sessions, every
+client re-prefills its full history). Acceptance: the live heal recomputes
+**zero tokens** while preserving greedy token parity; the PR 3 heal
+recomputes at least every affected session's full prompt.
+
+  PYTHONPATH=src python -m benchmarks.bench_place [--tiny] [--json OUT]
+
+``--tiny`` shrinks the scenario for CI smoke; ``--json`` writes the rows +
+raw scenario dict as a machine-readable artifact (BENCH_place.json in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.control import ElasticController, MetricsHub
+from repro.core import Cluster, PlacementCost, Topology
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer, ServeEngine
+
+from .common import run_async
+
+PROMPT_LEN = 8
+
+
+def _build():
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                         groups=(BlockGroup(DENSE, 2),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, seed, seq=PROMPT_LEN):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (1, seq)) for _ in range(n)]
+
+
+async def _warm(cfg, server, sessions: int) -> None:
+    ps = _prompts(cfg, sessions, seed=9)
+    for _ in range(2):
+        await asyncio.gather(*(server.generate(p, 3, step_timeout=120.0)
+                               for p in ps))
+    # wait for the warm-up FINISHes to land: a lingering warm-up session
+    # satisfies _wait_open spuriously and the fence then hits orphans
+    # instead of the scenario's mid-decode sessions
+    deadline = time.monotonic() + 5.0
+    while any(r.sessions for reps in server.replicas for r in reps):
+        if time.monotonic() > deadline:
+            break
+        await asyncio.sleep(0.005)
+
+
+async def _wait_open(server, stage: int, n: int, timeout=20.0) -> None:
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        if time.monotonic() > deadline:
+            break
+        await asyncio.sleep(0.005)
+
+
+async def _drain_placement_scenario(aware: bool, tiny: bool) -> dict:
+    """Drain a loaded replica on a two-host topology with one same-host and
+    one cross-host survivor; count where the migrated KV bytes went."""
+    cfg, model, params = _build()
+    topo = Topology(hosts=("h0", "h1"))
+    # steep byte pricing: cross-host bandwidth is the scarce resource this
+    # suite measures, so the topology term must dominate queue wiggle
+    cluster = Cluster(topology=topo,
+                      placement_cost=PlacementCost(topo,
+                                                   bytes_per_load=8 * 1024))
+    server = PipelineServer(cluster, model, params, [1, 3], max_len=64)
+    server.migrations.placement_aware = aware
+    await server.start()
+    sessions = 6 if tiny else 9
+    new_tokens = 8 if tiny else 12
+    await _warm(cfg, server, sessions)
+    ps = _prompts(cfg, sessions, seed=1)
+    tasks = [asyncio.ensure_future(server.generate(p, new_tokens,
+                                                   step_timeout=30.0))
+             for p in ps]
+    await _wait_open(server, 1, sessions)
+    reps = sorted((r for r in server.replicas[1]
+                   if r.worker.alive and not r.draining),
+                  key=lambda r: -r.open_sessions())
+    victim, survivors = reps[0], reps[1:]
+    # identical host map in both runs: the *first-listed* survivor (the
+    # blind tie-break winner) sits across the wire, the other shares the
+    # victim's host — so blind pays cross-host bytes and aware must not
+    in_order = [r for r in server.replicas[1]
+                if r is not victim and r in survivors]
+    topo.assign(victim.worker_id, "h0")
+    topo.assign(in_order[0].worker_id, "h1")     # blind's tie-break pick
+    topo.assign(in_order[1].worker_id, "h0")     # the same-host survivor
+    same_host_id = in_order[1].worker_id
+    open_at_drain = victim.open_sessions()
+    cross0 = cluster.transport.bulk_cross_host_bytes_sent
+    weighted0 = cluster.transport.bulk_cost_weighted_bytes
+    t0 = time.monotonic()
+    await server.remove_replica(1, victim.worker_id, drain=True,
+                                timeout=60.0)
+    drain_s = time.monotonic() - t0
+    await asyncio.gather(*tasks)
+    m = server.migrations.stats()
+    moved = [d for _, k, d in server.events if k == "migrate"]
+    out = {
+        "aware": aware,
+        "sessions": sessions,
+        "open_at_drain": open_at_drain,
+        "migrations": m["migrations_total"],
+        "reprefills": m["reprefills_total"],
+        "migration_bytes": m["migration_bytes_total"],
+        "cross_host_bulk_bytes": (cluster.transport.bulk_cross_host_bytes_sent
+                                  - cross0),
+        "cost_weighted_bulk_bytes": (
+            cluster.transport.bulk_cost_weighted_bytes - weighted0),
+        "same_host_migrations": sum(1 for d in moved if same_host_id in d),
+        "drain_s": drain_s,
+    }
+    cluster.shutdown()
+    return out
+
+
+async def _heal_scenario(live_heal: bool, tiny: bool) -> dict:
+    """Fence a loaded stage-1 replica (worker alive, every upstream edge
+    broken) under open mid-decode sessions and let the controller heal it;
+    measure what recovery recomputed and check greedy token parity."""
+    cfg, model, params = _build()
+    engine = ServeEngine(model, params, max_len=64)
+    cluster = Cluster()
+    server = PipelineServer(cluster, model, params, [1, 2], max_len=64)
+    await server.start()
+    sessions = 4 if tiny else 6
+    # enough decode runway that the fence always lands mid-generation:
+    # a session that slips through finished would dodge the bounce and
+    # understate both recovery disciplines
+    new_tokens = 12 if tiny else 16
+    await _warm(cfg, server, sessions)
+    ctrl = ElasticController(server, interval=0.02, scale_stages=[],
+                             live_heal=live_heal)
+    ctrl.start()
+    ps = _prompts(cfg, sessions, seed=2)
+    wants = [engine.generate(p, new_tokens) for p in ps]
+    tasks = [asyncio.ensure_future(server.generate(p, new_tokens,
+                                                   step_timeout=30.0))
+             for p in ps]
+    await _wait_open(server, 1, sessions)
+    victim = max((r for r in server.replicas[1]
+                  if r.worker.alive and not r.draining),
+                 key=lambda r: r.open_sessions())
+    open_at_fence = victim.open_sessions()
+    t0 = time.monotonic()
+    for world, router in list(victim.upstream_edges):
+        router.mark_broken(world)
+        server.broken_worlds.add(world)
+    outs = await asyncio.gather(*tasks)
+    recover_s = time.monotonic() - t0
+    await ctrl.stop()
+    parity = all(np.array_equal(w, g) for w, g in zip(wants, outs))
+    m = server.migrations.stats()
+    hub = MetricsHub(server)
+    out = {
+        "live_heal": live_heal,
+        "sessions": sessions,
+        "open_at_fence": open_at_fence,
+        "prompt_len": PROMPT_LEN,
+        "heals": ctrl.heals,
+        "heal_migrations": m["heal_migrations_total"],
+        "migration_failures": m["migration_failures"],
+        "restores": m["restores_total"],
+        "restore_failures": m["restore_failures"],
+        "reprefills": m["reprefills_total"],
+        "timeline": [(e.kind, e.detail) for e in ctrl.timeline],
+        "recovered_tokens": m["recovered_tokens"],
+        "recomputed_tokens": m["recomputed_tokens"],
+        "recover_s": recover_s,
+        "token_parity": parity,
+        "placement": hub.placement_metrics(),
+    }
+    cluster.shutdown()
+    return out
+
+
+async def _scenario(tiny: bool) -> dict:
+    return {
+        "drain_aware": await _drain_placement_scenario(True, tiny),
+        "drain_blind": await _drain_placement_scenario(False, tiny),
+        "heal_live": await _heal_scenario(True, tiny),
+        "heal_reprefill": await _heal_scenario(False, tiny),
+    }
+
+
+def run(tiny: bool = False, json_path: str | None = None
+        ) -> list[tuple[str, float, str]]:
+    r = run_async(_scenario(tiny))
+    da, db = r["drain_aware"], r["drain_blind"]
+    hl, hr = r["heal_live"], r["heal_reprefill"]
+    rows = [
+        ("place_drain_cross_host_bytes/aware",
+         float(da["cross_host_bulk_bytes"]),
+         f"{da['migrations']} migrations, "
+         f"{da['same_host_migrations']} stayed on-host"),
+        ("place_drain_cross_host_bytes/blind",
+         float(db["cross_host_bulk_bytes"]),
+         f"{db['migrations']} migrations, "
+         f"{db['same_host_migrations']} stayed on-host"),
+        ("place_drain_cost_weighted_bytes/aware",
+         da["cost_weighted_bulk_bytes"], "bytes x per-edge placement cost"),
+        ("place_drain_cost_weighted_bytes/blind",
+         db["cost_weighted_bulk_bytes"], "bytes x per-edge placement cost"),
+        ("heal_recomputed_tokens/live",
+         float(hl["recomputed_tokens"]),
+         f"{hl['heal_migrations']} live handoffs, "
+         f"{hl['restores']} restores, {hl['reprefills']} re-prefills"),
+        ("heal_recomputed_tokens/reprefill",
+         float(hr["recomputed_tokens"]),
+         f"PR 3 heal: {hr['reprefills']} full-history re-prefills"),
+        ("heal_recover_s/live", hl["recover_s"],
+         f"fence -> {hl['sessions']} sessions finished"),
+        ("heal_recover_s/reprefill", hr["recover_s"],
+         f"fence -> {hr['sessions']} sessions finished"),
+    ]
+    # acceptance gates (ISSUE 4)
+    assert da["migrations"] >= da["open_at_drain"] >= 1, da
+    assert da["same_host_migrations"] == da["migrations"], \
+        f"placement-aware drain left the victim's host: {da}"
+    assert db["cross_host_bulk_bytes"] > 0, \
+        f"blind baseline never crossed hosts — A/B is vacuous: {db}"
+    assert da["cross_host_bulk_bytes"] < db["cross_host_bulk_bytes"], \
+        (f"aware drain moved {da['cross_host_bulk_bytes']}B cross-host, "
+         f"blind moved {db['cross_host_bulk_bytes']}B")
+    assert da["reprefills"] == 0 and db["reprefills"] == 0, (da, db)
+    assert hl["token_parity"] and hr["token_parity"], \
+        "greedy token parity lost through heal"
+    assert hl["open_at_fence"] >= 1 and hr["open_at_fence"] >= 1, (hl, hr)
+    assert hl["recomputed_tokens"] == 0 and hl["reprefills"] == 0, \
+        f"live heal recomputed tokens: {hl}"
+    assert hl["heal_migrations"] >= hl["open_at_fence"], hl
+    assert hl["restores"] >= hl["open_at_fence"], hl
+    # the PR 3 discipline pays at least every affected session's prompt
+    assert hr["recomputed_tokens"] >= \
+        hr["open_at_fence"] * hr["prompt_len"], hr
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": [{"name": n, "value": v, "derived": d}
+                                for n, v, d in rows],
+                       "raw": r, "tiny": tiny}, f, indent=2, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small scenario")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write rows + raw results as JSON artifact")
+    args = ap.parse_args()
+    for name, value, derived in run(tiny=args.tiny, json_path=args.json):
+        print(f"{name},{value:.4f},{derived}")

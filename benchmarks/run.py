@@ -13,6 +13,8 @@ Prints ``name,value,derived`` CSV rows:
   recovery of in-flight sessions
 * migrate — state transfer: live KV-session handoff vs re-prefill on
   drain, snapshot restore after a kill, warm scale-up bootstrap
+* place — topology-aware placement: same-host vs cross-host survivor
+  choice on drain, and snapshot-assisted live heal vs the re-prefill heal
 """
 from __future__ import annotations
 
@@ -99,6 +101,8 @@ SUITES = {
                                    fromlist=["run"]).run(),
     "migrate": lambda: __import__("benchmarks.bench_migrate",
                                   fromlist=["run"]).run(),
+    "place": lambda: __import__("benchmarks.bench_place",
+                                fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

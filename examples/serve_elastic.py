@@ -143,6 +143,13 @@ async def main() -> None:
           f"tokens recovered/recomputed "
           f"{mm['recovered_tokens']}/{mm['recomputed_tokens']}; "
           f"deadline drops {mm['deadline_expired_total']}")
+    pm = ctrl.hub.placement_metrics()
+    print(f"placement: {mm['heal_migrations_total']} heal handoffs; "
+          f"{pm['cross_host_bytes'] / 1e3:.0f} KB of "
+          f"{pm['bytes_sent'] / 1e3:.0f} KB crossed hosts "
+          f"(bulk {pm['bulk_cross_host_bytes'] / 1e3:.0f} KB of "
+          f"{pm['bulk_bytes'] / 1e3:.0f} KB); "
+          f"cost-weighted total {pm['cost_weighted_bytes'] / 1e3:.0f}")
     assert summary["failed"] == 0
     cluster.shutdown()
 

@@ -4,15 +4,33 @@
      we leave it as future work."  (§3.1)
 
 One asyncio task per pipeline: each tick it (1) polls MetricsHub, (2) heals
-— every watchdog-fenced replica is unhooked (``remove_replica(drain=False)``)
-and replaced via online instantiation, the paper's Fig. 2c rhombus with the
-human taken out of the loop — and (3) executes the scaling policy: scale-up
-through ``add_replica`` (fresh worlds, zero disturbance to live traffic),
-scale-down through the drain-and-remove path (zero request loss).
+— every watchdog-fenced replica is replaced via online instantiation, the
+paper's Fig. 2c rhombus with the human taken out of the loop — and (3)
+executes the scaling policy: scale-up through ``add_replica`` (fresh worlds,
+zero disturbance to live traffic), scale-down through the drain-and-remove
+path (zero request loss).
 
-Healing outranks scaling: a fenced replica distorts the load signal, so the
-loop restores capacity first and lets policies see the healed state next
-tick. Every action lands in ``timeline`` for Fig. 5-style reporting.
+Heal moves state instead of recomputing it, like drain does:
+
+* an **alive-but-fenced** replica (its worlds are broken, but the worker is
+  reachable in-process) gets a replacement instantiated on its own host
+  (``near=``), then its open sessions are *live-migrated* to same-stage
+  survivors (``MigrationManager.heal_replica_sessions``) before teardown —
+  bounced clients, parked in their restore grace window, rewire the route
+  from the moved state and resume with **zero recomputed tokens**;
+* a **dead** worker cannot hand anything off — its replacement is placed on
+  the dead worker's host and the clients' snapshot-restore path (suffix
+  replay from the SnapshotStore) remains the fallback.
+
+Replacements and scale-ups are **warm** whenever a same-stage peer exists
+(weight fetch + compiled-shape warmup before entering rotation), with an
+automatic cold fallback.
+
+Heals run as *bounded concurrent tasks* (``max_concurrent_heals``) off the
+control loop: one slow drain (``heal_drain_timeout_s``) can no longer
+freeze scaling decisions for every other stage. ``wait_heals`` joins them
+(tests, teardown). Every action lands in ``timeline`` for Fig. 5-style
+reporting.
 """
 from __future__ import annotations
 
@@ -45,6 +63,11 @@ class ElasticController:
         heal: bool = True,
         scale_stages: Optional[list[int]] = None,
         migrate_on_drain: bool = True,
+        live_heal: bool = True,
+        warm_replicas: bool = True,
+        fresh_executors: bool = False,
+        heal_drain_timeout_s: float = 10.0,
+        max_concurrent_heals: int = 4,
     ) -> None:
         self.server = server
         self.hub = hub or MetricsHub(server)
@@ -66,6 +89,26 @@ class ElasticController:
         #: (state transfer) instead of bouncing them into re-prefill; False
         #: restores the PR 2 drain for A/B benchmarking
         self.migrate_on_drain = migrate_on_drain
+        #: heal discipline: live-migrate an alive-but-fenced replica's open
+        #: sessions to the replacement/survivors instead of letting every
+        #: one re-prefill its full history; False restores the PR 3 heal
+        #: for A/B benchmarking (bench_place)
+        self.live_heal = live_heal
+        #: warm-bootstrap healed/scaled replicas from a same-stage peer
+        #: (weights + compiled shapes) when one exists; cold is automatic
+        #: when there is no peer or the warm path fails
+        self.warm_replicas = warm_replicas
+        #: give each warm replica its own StageExecutor (models a real new
+        #: process that cannot share the peers' jit cache); the default
+        #: shared executor makes compile warmup a no-op by construction
+        self.fresh_executors = fresh_executors
+        #: drain budget for the old replica on the heal path (was a
+        #: hardcoded 10 s that froze the whole control loop)
+        self.heal_drain_timeout_s = heal_drain_timeout_s
+        self._heal_sem = asyncio.Semaphore(max(1, max_concurrent_heals))
+        #: worker ids with a heal task in flight (dedup across ticks)
+        self._healing: set[str] = set()
+        self._heal_tasks: set[asyncio.Task] = set()
         #: stages the policy may resize (healing covers all stages always);
         #: default: every stage
         self.scale_stages = (list(range(n)) if scale_stages is None
@@ -92,6 +135,13 @@ class ElasticController:
             except asyncio.CancelledError:
                 pass
             self._task = None
+        await self.wait_heals()
+
+    async def wait_heals(self) -> None:
+        """Join every in-flight heal task (tests and teardown barriers)."""
+        while self._heal_tasks:
+            await asyncio.gather(*list(self._heal_tasks),
+                                 return_exceptions=True)
 
     async def run(self) -> None:
         while not self._stop.is_set():
@@ -123,41 +173,99 @@ class ElasticController:
         return snaps
 
     async def _heal_failed(self) -> None:
+        """Schedule one bounded background heal task per fenced replica.
+
+        The tasks run off the control loop: a slow drain on one stage no
+        longer freezes scaling decisions for every other stage, and several
+        failures heal in parallel up to ``max_concurrent_heals``."""
         for stage in range(self.server.n_stages):
             for worker_id in self.server.failed_replicas(stage):
-                # A dead worker can't drain; an alive-but-cut-off replica
-                # (every upstream edge fenced) still can — instantiate the
-                # successor first (capacity never dips), then drain the old
-                # one so its queued payloads reach downstream before
-                # teardown.
-                worker = self.server.cluster.workers.get(worker_id)
-                alive = worker is not None and worker.alive
-                try:
-                    if alive:
-                        new_id = await self.server.add_replica(stage)
-                        try:
-                            await self.server.remove_replica(
-                                stage, worker_id, drain=True, timeout=10.0)
-                        except TimeoutError:
-                            await self.server.remove_replica(
-                                stage, worker_id, drain=False)
-                    else:
-                        await self.server.remove_replica(
+                if worker_id in self._healing:
+                    continue        # a heal task is already on it
+                self._healing.add(worker_id)
+                task = asyncio.ensure_future(self._heal_one(stage, worker_id))
+                self._heal_tasks.add(task)
+                task.add_done_callback(self._heal_tasks.discard)
+
+    async def _add_replica(self, stage: int, *,
+                           near: Optional[str] = None,
+                           host: Optional[str] = None) -> str:
+        """Warm scale-up/heal with automatic cold fallback: warm bootstrap
+        needs a same-stage peer to stream weights/shapes from, and a torn
+        warm path must degrade to the plain cold add, never fail the
+        action."""
+        if self.warm_replicas and self.server.healthy_replicas(stage):
+            try:
+                return await self.server.add_replica(
+                    stage, warm=True, fresh_executor=self.fresh_executors,
+                    near=near, host=host)
+            except Exception as e:  # noqa: BLE001 — warm is an optimization
+                self._record("error", stage,
+                             f"warm bootstrap failed, going cold: {e!r}")
+        return await self.server.add_replica(stage, near=near, host=host)
+
+    async def _heal_one(self, stage: int, worker_id: str) -> None:
+        """Replace one fenced replica, moving its state instead of
+        recomputing it.
+
+        Alive-but-fenced: the successor is instantiated first on the
+        victim's host (capacity never dips, migrated bytes stay local),
+        the victim's open sessions are live-migrated to same-stage
+        survivors, then the victim drains (bounded) and is torn down.
+        Dead: unhook, replace on the same host; clients restore from
+        background snapshots (the fallback for state nobody can hand off).
+        """
+        server = self.server
+        async with self._heal_sem:
+            worker = server.cluster.workers.get(worker_id)
+            alive = worker is not None and worker.alive
+            host = server.cluster.topology.host_of(worker_id) \
+                if worker is not None else None
+            try:
+                if alive:
+                    new_id = await self._add_replica(stage, host=host)
+                    rep = next((r for r in server.replicas[stage]
+                                if r.worker_id == worker_id), None)
+                    if self.live_heal and rep is not None and rep.sessions:
+                        moved = await server.migrations \
+                            .heal_replica_sessions(rep)
+                        n_ok = sum(1 for ok in moved.values() if ok)
+                        self._record(
+                            "heal_migrate", stage,
+                            f"{n_ok}/{len(moved)} sessions live-migrated "
+                            f"off {worker_id}")
+                    try:
+                        # live_heal already moved the sessions; with it off,
+                        # the drain-time migrate reproduces the PR 3 heal
+                        # (which fails on pin-less fenced sessions and sends
+                        # every one through full re-prefill — bench_place
+                        # measures exactly that gap)
+                        await server.remove_replica(
+                            stage, worker_id, drain=True,
+                            timeout=self.heal_drain_timeout_s,
+                            migrate=not self.live_heal)
+                    except TimeoutError:
+                        await server.remove_replica(
                             stage, worker_id, drain=False)
-                        new_id = await self.server.add_replica(stage)
-                except Exception as e:  # noqa: BLE001 — keep the loop alive
-                    self._record("error", stage, f"heal failed: {e!r}")
-                    continue
-                self.heals += 1
-                self._record("heal", stage,
-                             f"{worker_id} fenced -> replaced by {new_id}")
+                else:
+                    await server.remove_replica(
+                        stage, worker_id, drain=False)
+                    new_id = await self._add_replica(stage, host=host)
+            except Exception as e:  # noqa: BLE001 — keep the loop alive
+                self._record("error", stage, f"heal failed: {e!r}")
+                return
+            finally:
+                self._healing.discard(worker_id)
+            self.heals += 1
+            self._record("heal", stage,
+                         f"{worker_id} fenced -> replaced by {new_id}")
 
     async def _apply(self, decision) -> None:
         stage, delta = decision.stage, decision.delta
         try:
             if delta > 0:
                 for _ in range(delta):
-                    new_id = await self.server.add_replica(stage)
+                    new_id = await self._add_replica(stage)
                     self.scale_ups += 1
                     self._record("scale_up", stage,
                                  f"+{new_id} ({decision.reason})")

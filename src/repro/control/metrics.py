@@ -227,5 +227,29 @@ class MetricsHub:
                 "recomputed_tokens": mig.recomputed_tokens,
                 "restores_total": mig.restores_total,
                 "reprefills_total": mig.reprefills_total,
+                "heal_migrations_total": mig.heal_migrations_total,
             })
+        # thin-margin int8 -> fp demotions, wherever the quantized codec
+        # runs (background snapshots and live handoffs)
+        snaps = getattr(self.server, "snapshots", None)
+        out["int8_fp_fallbacks"] = (
+            (getattr(snaps, "int8_fallbacks", 0) if snaps else 0)
+            + (getattr(mig, "int8_fallbacks", 0) if mig else 0))
         return out
+
+    def placement_metrics(self) -> dict:
+        """Topology-cost view of the data plane: how many bytes crossed a
+        host boundary, and the cost-weighted total (bytes x per-edge cost).
+        The ``bulk_*`` slice isolates state transfer (migrations, snapshots,
+        weight streaming) — the traffic the placement-aware choices in
+        MigrationManager/WarmBootstrap/restore exist to keep on-host."""
+        t = self.server.cluster.transport
+        return {
+            "bytes_sent": t.bytes_sent,
+            "cross_host_bytes": t.cross_host_bytes_sent,
+            "cross_host_messages": t.cross_host_messages_sent,
+            "cost_weighted_bytes": t.cost_weighted_bytes,
+            "bulk_bytes": t.bulk_bytes_sent,
+            "bulk_cross_host_bytes": t.bulk_cross_host_bytes_sent,
+            "bulk_cost_weighted_bytes": t.bulk_cost_weighted_bytes,
+        }

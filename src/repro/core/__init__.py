@@ -3,7 +3,7 @@
 JAX reproduction of *Enabling Elastic Model Serving with MultiWorld*
 (Lee, Jajoo, Kompella — Cisco Research, 2024).
 """
-from .cluster import Cluster, Worker
+from .cluster import Cluster, Placement, Topology, Worker
 from .communicator import REDUCE_OPS, WorldCommunicator
 from .fault import (
     FailureKind,
@@ -16,16 +16,25 @@ from .fault import (
 )
 from .online import OnlineInstantiator, WorldSpec
 from .store import Store
-from .transport import Codec, CopyCodec, IPCCodec, SerializeCodec, Transport
+from .transport import (
+    Codec,
+    CopyCodec,
+    IPCCodec,
+    PlacementCost,
+    SerializeCodec,
+    Transport,
+)
 from .watchdog import Watchdog
 from .world import World, WorldStatus
 from .world_manager import WorldManager
 
 __all__ = [
-    "Cluster", "Worker", "WorldCommunicator", "REDUCE_OPS",
+    "Cluster", "Placement", "Topology", "Worker",
+    "WorldCommunicator", "REDUCE_OPS",
     "FailureKind", "FaultInjector", "MultiWorldError", "RemoteError",
     "RendezvousTimeout", "WorldBrokenError", "WorldNotFoundError",
     "OnlineInstantiator", "WorldSpec", "Store",
-    "Codec", "CopyCodec", "IPCCodec", "SerializeCodec", "Transport",
+    "Codec", "CopyCodec", "IPCCodec", "PlacementCost", "SerializeCodec",
+    "Transport",
     "Watchdog", "World", "WorldStatus", "WorldManager",
 ]

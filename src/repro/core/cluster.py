@@ -4,24 +4,123 @@ Owns the shared Store (control plane), the Transport (data plane), the fault
 injector, and the per-worker WorldManagers. Tests, benchmarks and examples
 create one Cluster per scenario; on real hardware the same roles are played
 by an actual TCPStore endpoint + ICI/NCCL, and workers are real processes.
+
+Topology: every worker carries a :class:`Placement` (host + NUMA domain).
+On real hardware a same-host edge is shared memory / NVLink and a cross-host
+edge is the datacenter network — orders of magnitude apart in cost per byte.
+The :class:`Topology` labels workers so the transport's
+:class:`~repro.core.transport.PlacementCost` can price every edge and the
+state-moving paths (migration survivor choice, warm-bootstrap peer choice,
+snapshot restore targets, heal replacement placement) can prefer cheap ones.
 """
 from __future__ import annotations
 
 import asyncio
+import dataclasses
+import itertools
 from typing import Awaitable, Callable, Optional
 
 from .fault import FailureKind, FaultInjector
 from .store import Store
-from .transport import Codec, Transport
+from .transport import Codec, PlacementCost, Transport
 from .world_manager import WorldManager
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where a worker runs: host label + NUMA domain within that host."""
+
+    host: str = "host0"
+    numa: int = 0
+
+
+class Topology:
+    """host/NUMA labels for workers, plus a policy for placing new ones.
+
+    Workers appear dynamically (scale-up, heal), so unknown workers are
+    auto-placed on first sight: ``near=`` pins a new worker to another
+    worker's host (the heal path keeps a replacement on the failed
+    replica's host so its state stays local); otherwise ``policy`` decides
+    — ``"pack"`` fills the first host, ``"spread"`` round-robins across
+    hosts. Explicit :meth:`assign` always wins and may be called before or
+    after the worker exists.
+    """
+
+    def __init__(self, hosts: tuple[str, ...] = ("host0",), *,
+                 numa_per_host: int = 1, policy: str = "pack") -> None:
+        if not hosts:
+            raise ValueError("topology needs at least one host")
+        if policy not in ("pack", "spread"):
+            raise ValueError(f"unknown placement policy {policy!r}")
+        self.hosts = tuple(hosts)
+        self.numa_per_host = max(1, numa_per_host)
+        self.policy = policy
+        self._placements: dict[str, Placement] = {}
+        self._rr = itertools.count()
+        #: per-host NUMA round-robin so packed workers still spread domains
+        self._numa_rr: dict[str, itertools.count] = {}
+
+    def assign(self, worker_id: str, host: str, numa: int = 0) -> Placement:
+        p = Placement(host=host, numa=numa)
+        self._placements[worker_id] = p
+        return p
+
+    def place_on(self, worker_id: str, host: str) -> Placement:
+        """Pin a worker to a host while keeping the per-host NUMA
+        round-robin (a bare ``assign`` would pile every pinned worker onto
+        domain 0 and skew the cost model)."""
+        rr = self._numa_rr.setdefault(host, itertools.count())
+        return self.assign(worker_id, host, next(rr) % self.numa_per_host)
+
+    def lookup(self, worker_id: str) -> Optional[Placement]:
+        """Non-mutating read: None for unknown workers. The cost model uses
+        this so pricing an edge against a retired (forgotten) worker never
+        re-registers it on a default host."""
+        return self._placements.get(worker_id)
+
+    def forget(self, worker_id: str) -> None:
+        """Drop a retired worker's label — worker ids are never reused, so
+        keeping them would leak one entry per scale/heal cycle. Callers
+        that need a successor on the retiree's host read the host *before*
+        teardown and pass it explicitly."""
+        self._placements.pop(worker_id, None)
+
+    def place(self, worker_id: str, *,
+              near: Optional[str] = None) -> Placement:
+        """Placement of ``worker_id``, auto-assigning unknown workers."""
+        p = self._placements.get(worker_id)
+        if p is not None:
+            return p
+        if near is not None and near in self._placements:
+            host = self._placements[near].host
+        elif self.policy == "spread":
+            host = self.hosts[next(self._rr) % len(self.hosts)]
+        else:
+            host = self.hosts[0]
+        return self.place_on(worker_id, host)
+
+    def placement(self, worker_id: str) -> Placement:
+        return self.place(worker_id)
+
+    def host_of(self, worker_id: str) -> str:
+        return self.place(worker_id).host
+
+    def same_host(self, a: str, b: str) -> bool:
+        return self.place(a).host == self.place(b).host
+
+    def same_numa(self, a: str, b: str) -> bool:
+        pa, pb = self.place(a), self.place(b)
+        return pa.host == pb.host and pa.numa == pb.numa
 
 
 class Worker:
     """An async actor owning a WorldManager (one 'process' of the paper)."""
 
-    def __init__(self, cluster: "Cluster", worker_id: str) -> None:
+    def __init__(self, cluster: "Cluster", worker_id: str,
+                 near: Optional[str] = None) -> None:
         self.cluster = cluster
         self.worker_id = worker_id
+        self.placement = cluster.topology.place(worker_id, near=near)
         self.manager = WorldManager(
             worker_id, cluster.store, cluster.transport,
             heartbeat_interval=cluster.heartbeat_interval,
@@ -63,19 +162,23 @@ class Cluster:
         codec: Codec | None = None,
         heartbeat_interval: float = 0.02,
         heartbeat_timeout: float = 0.25,
+        topology: Topology | None = None,
+        placement_cost: PlacementCost | None = None,
     ) -> None:
         self.store = Store()
-        self.transport = Transport(codec=codec)
+        self.topology = topology or Topology()
+        self.placement = placement_cost or PlacementCost(self.topology)
+        self.transport = Transport(codec=codec, placement=self.placement)
         self.injector = FaultInjector()
         self.injector.register(self._on_kill)
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_timeout = heartbeat_timeout
         self.workers: dict[str, Worker] = {}
 
-    def worker(self, worker_id: str) -> Worker:
+    def worker(self, worker_id: str, *, near: Optional[str] = None) -> Worker:
         w = self.workers.get(worker_id)
         if w is None:
-            w = self.workers[worker_id] = Worker(self, worker_id)
+            w = self.workers[worker_id] = Worker(self, worker_id, near=near)
         return w
 
     def kill(self, worker_id: str,

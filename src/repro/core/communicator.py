@@ -152,7 +152,9 @@ class WorldCommunicator:
 
         def _try() -> tuple[bool, Any]:
             self._manager.transport.send(
-                world_name, rank, dst, tensor, dst_worker=world.members.get(dst))
+                world_name, rank, dst, tensor,
+                dst_worker=world.members.get(dst),
+                src_worker=world.members.get(rank))
             return True, None
 
         await self._poll(world, _try, timeout)

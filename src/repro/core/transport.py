@@ -141,6 +141,72 @@ class IPCCodec(Codec):
         return jnp.asarray(staged)
 
 
+class PlacementCost:
+    """Per-edge transport cost model over a cluster topology.
+
+    Relative cost per byte of moving data between two workers: same NUMA
+    domain is cheapest (shared memory), same host is cheap (NVLink / ICI),
+    cross-host is expensive (datacenter network). The absolute numbers are
+    unitless ratios — what matters to every placement decision is the
+    *ordering* and the rough magnitude gap, mirroring the transport-cost
+    modeling that topology-aware collectives use at scale.
+
+    :meth:`score` folds the cost of an impending transfer into a queue-load
+    scalar so survivor/peer choice can rank candidates by
+    ``(queue depth, placement cost of the bytes about to move)`` as one
+    number: ``bytes_per_load`` says how many same-host-cost bytes weigh as
+    much as one queued request.
+    """
+
+    def __init__(self, topology=None, *, same_numa: float = 0.2,
+                 same_host: float = 1.0, cross_host: float = 8.0,
+                 bytes_per_load: int = 256 * 1024) -> None:
+        self.topology = topology
+        self.same_numa = same_numa
+        self.same_host = same_host
+        self.cross_host = cross_host
+        self.bytes_per_load = bytes_per_load
+
+    def edge_cost(self, src_worker: str | None,
+                  dst_worker: str | None) -> float:
+        """Relative cost/byte of the (src, dst) edge; same-host when either
+        endpoint is unknown or retired (the neutral default — a read-only
+        lookup, so pricing an edge against a forgotten worker never
+        re-registers it on a default host)."""
+        if self.topology is None or src_worker is None or dst_worker is None:
+            return self.same_host
+        a = self.topology.lookup(src_worker)
+        b = self.topology.lookup(dst_worker)
+        if a is None or b is None:
+            return self.same_host
+        if a.host != b.host:
+            return self.cross_host
+        if a.numa == b.numa:
+            return self.same_numa
+        return self.same_host
+
+    def is_cross_host(self, src_worker: str | None,
+                      dst_worker: str | None) -> bool:
+        if self.topology is None or src_worker is None or dst_worker is None:
+            return False
+        a = self.topology.lookup(src_worker)
+        b = self.topology.lookup(dst_worker)
+        return a is not None and b is not None and a.host != b.host
+
+    def transfer_load(self, src_worker: str | None, dst_worker: str | None,
+                      nbytes: int) -> float:
+        """Queue-load equivalent of moving ``nbytes`` over the (src, dst)
+        edge: cost ratio x bytes, normalized by ``bytes_per_load``."""
+        return (self.edge_cost(src_worker, dst_worker) * nbytes
+                / max(1, self.bytes_per_load))
+
+    def score(self, load: float, src_worker: str | None,
+              dst_worker: str | None, nbytes: int) -> float:
+        """Rank key for a transfer target: queue load + placement cost of
+        the bytes about to move. Lower is better."""
+        return load + self.transfer_load(src_worker, dst_worker, nbytes)
+
+
 class _Channel:
     """SPSC queue. deque.append/popleft are GIL-atomic, so the hot path is
     lock-free; only channel-map mutation takes the transport lock."""
@@ -152,8 +218,11 @@ class _Channel:
 
 
 class Transport:
-    def __init__(self, codec: Codec | None = None) -> None:
+    def __init__(self, codec: Codec | None = None,
+                 placement: PlacementCost | None = None) -> None:
         self.codec = codec or Codec()
+        #: edge cost model (None -> every edge priced as same-host)
+        self.placement = placement
         self._channels: dict[tuple[str, int, int], _Channel] = {}
         self._lock = threading.Lock()
         #: worker_id -> FailureKind for dead workers
@@ -165,6 +234,14 @@ class Transport:
         #: traffic from serving traffic on the same wires
         self.bulk_bytes_sent = 0
         self.bulk_messages_sent = 0
+        # -- placement-cost accounting (bytes x edge cost; MetricsHub
+        #    surfaces these so dashboards can see what elasticity events
+        #    actually cost in topology terms) -----------------------------
+        self.cost_weighted_bytes = 0.0
+        self.cross_host_bytes_sent = 0
+        self.cross_host_messages_sent = 0
+        self.bulk_cross_host_bytes_sent = 0
+        self.bulk_cost_weighted_bytes = 0.0
 
     # -- fault hooks ---------------------------------------------------------
     def mark_dead(self, worker_id: str, kind: FailureKind) -> None:
@@ -190,7 +267,8 @@ class Transport:
             return ch
 
     def send(self, world: str, src: int, dst: int, payload: Any,
-             dst_worker: str | None = None) -> None:
+             dst_worker: str | None = None,
+             src_worker: str | None = None) -> None:
         """Post one message. Raises RemoteError iff dst is detectably dead."""
         if self._dead and dst_worker is not None \
                 and self._dead.get(dst_worker) is FailureKind.CRASH_DETECTABLE:
@@ -202,9 +280,21 @@ class Transport:
         # serializing codec (pickle bytes), the leaf-tensor bytes otherwise
         nbytes = payload_nbytes(wire)
         self.bytes_sent += nbytes
-        if getattr(payload, "bulk", False):
+        bulk = getattr(payload, "bulk", False)
+        if bulk:
             self.bulk_bytes_sent += nbytes
             self.bulk_messages_sent += 1
+        if self.placement is not None:
+            weighted = nbytes * self.placement.edge_cost(src_worker,
+                                                         dst_worker)
+            self.cost_weighted_bytes += weighted
+            if self.placement.is_cross_host(src_worker, dst_worker):
+                self.cross_host_bytes_sent += nbytes
+                self.cross_host_messages_sent += 1
+                if bulk:
+                    self.bulk_cross_host_bytes_sent += nbytes
+            if bulk:
+                self.bulk_cost_weighted_bytes += weighted
 
     def recv_nowait(self, world: str, src: int, dst: int,
                     src_worker: str | None = None) -> tuple[bool, Any]:

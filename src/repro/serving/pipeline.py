@@ -69,7 +69,13 @@ from repro.core import (
     WorldSpec,
 )
 from repro.core.online import OnlineInstantiator
-from repro.statexfer import MigrationManager, SnapshotStore, WarmBootstrap
+from repro.statexfer import (
+    INT8,
+    MigrationManager,
+    SnapshotStore,
+    WarmBootstrap,
+    argmax_margin,
+)
 from .envelope import Envelope, Kind
 from .executor import StageExecutor
 from .partition import split_stages, stage_params
@@ -391,22 +397,24 @@ class _Replica:
 
     async def _forward_pinned(self, env: Envelope) -> None:
         """Send a decode result along the session's pinned route; if the pin
-        is gone (downstream death or drain), the downstream state is lost —
-        bounce the session back to the client."""
+        is gone (downstream death, drain, or fencing), bounce the session
+        back to the client — but keep the *local* stage slice: this stage's
+        cache is still consistent, and the client's restore path (racing
+        the controller's live heal of the downstream stage) rebuilds the
+        route from exactly this state with zero recompute. If the client
+        instead gives up and re-prefills, it sweeps the partial route with
+        a FINISH; the TTL reap is the backstop."""
         world = self.router.pinned(env.session_id)
         if world is None:
-            self.sessions.pop(env.session_id, None)
             await self._send_retry(env)
             return
         try:
             await self.worker.comm.send(env, 1, world)
         except WorldBrokenError:
             self.router.mark_broken(world)
-            self.sessions.pop(env.session_id, None)
             await self._send_retry(env)
         except WorldNotFoundError:
             self.router.remove(world)
-            self.sessions.pop(env.session_id, None)
             await self._send_retry(env)
 
     async def _expire(self, env: Envelope) -> None:
@@ -441,6 +449,8 @@ class _Replica:
 
     async def _finish_session(self, env: Envelope) -> None:
         self.sessions.pop(env.session_id, None)
+        if self.server._is_last(self.stage):
+            self.server.session_margins.pop(env.session_id, None)
         world = self.router.pinned(env.session_id)
         self.router.unpin(env.session_id)
         if env.error is not None:
@@ -473,6 +483,8 @@ class _Replica:
                     if now - sess.touched > ttl]:
             del self.sessions[sid]
             self.router.unpin(sid)
+            if self.server._is_last(self.stage):
+                self.server.session_margins.pop(sid, None)
 
     async def reap_loop(self) -> None:
         """Periodic TTL sweep: an *idle* replica (rerouted traffic, fenced
@@ -495,7 +507,8 @@ class PipelineServer:
                  microbatch_max: int = 8, microbatch_wait_s: float = 0.002,
                  session_ttl_s: float = 60.0,
                  snapshot_interval_s: Optional[float] = None,
-                 snapshot_codec: str = "fp") -> None:
+                 snapshot_codec: str = "fp",
+                 restore_grace_s: float = 0.5) -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
@@ -509,6 +522,12 @@ class PipelineServer:
         self.microbatch_max = microbatch_max
         self.microbatch_wait_s = microbatch_wait_s
         self.session_ttl_s = session_ttl_s
+        #: how long a bounced client keeps retrying the cheap restore path
+        #: while an alive-but-fenced replica still holds its session live —
+        #: the controller's live heal is racing to move that state to a
+        #: survivor, and waiting a few control ticks costs far less than
+        #: recomputing the whole history
+        self.restore_grace_s = restore_grace_s
         self.stage_specs = split_stages(self.cfg, self.n_stages)
         self.stage_param_sets = [stage_params(self.cfg, params, s)
                                  for s in self.stage_specs]
@@ -544,11 +563,37 @@ class PipelineServer:
         #: deadline drops carried over from retired replicas — folded in at
         #: teardown so cumulative counters survive scale-down exactly
         self.expired_retired = 0
+        #: sid -> running-min relative argmax gap observed at the last
+        #: stage; the int8 snapshot path reads this to decide, per session,
+        #: whether quantization noise could flip a greedy token
+        self.session_margins: dict[int, float] = {}
         self._wired_managers: set[str] = set()
         self._wire_manager(self.client.manager, self.client_router)
 
     def _is_last(self, stage: int) -> bool:
         return stage == self.n_stages - 1
+
+    # ------------------------------------------------------- int8 margins
+    def _margins_wanted(self) -> bool:
+        """Track per-session argmax gaps only when an int8 state path can
+        consume them — the partition over the vocab axis is cheap but not
+        free, and fp snapshots never look at it."""
+        return ((self.snapshots is not None
+                 and self.snapshots.codec == INT8)
+                or self.migrations.codec == INT8)
+
+    def _note_margin(self, sid: int, logits: np.ndarray) -> None:
+        """Fold one step's logits into the session's running-min relative
+        argmax gap (the int8 codec's parity-margin signal). Called on the
+        *client* path, which has already materialized the last-stage logits
+        host-side for its own argmax — tracking here costs one extra O(V)
+        partition per token and keeps the replicas' serve loops free of
+        device syncs."""
+        if sid < 0 or not self._margins_wanted():
+            return
+        m = argmax_margin(logits)
+        old = self.session_margins.get(sid)
+        self.session_margins[sid] = m if old is None else min(old, m)
 
     def _edge_load(self, world: str) -> float:
         """Router load probe: queue depth of the replica behind an edge."""
@@ -584,7 +629,9 @@ class PipelineServer:
         manager.on_world_broken(cb)
 
     async def add_replica(self, stage: int, *, warm: bool = False,
-                          fresh_executor: bool = False) -> str:
+                          fresh_executor: bool = False,
+                          near: Optional[str] = None,
+                          host: Optional[str] = None) -> str:
         """Online instantiation of one replica (paper Fig. 2c / §4.2).
 
         ``warm=True`` runs the WarmBootstrap first: stage weights are
@@ -594,8 +641,18 @@ class PipelineServer:
         ``fresh_executor=True`` additionally gives it its own
         :class:`StageExecutor` (a new worker process would not share the
         peers' jit cache; this models that).
+
+        Placement: ``host=`` pins the new worker to a topology host
+        explicitly; ``near=`` places it on another worker's host (the heal
+        path passes the failed replica, so its migrated state stays
+        on-host); otherwise the topology's placement policy decides. The
+        worker is placed *before* the warm bootstrap so the peer choice can
+        price the weight bytes it is about to move.
         """
         worker_id = f"{self.name}-s{stage}-r{next(self._uid)}"
+        if host is not None:
+            self.cluster.topology.place_on(worker_id, host)
+        self.cluster.worker(worker_id, near=near)
         rep = _Replica(self, worker_id, stage)
         if warm:
             report = await self.bootstrap.bootstrap(
@@ -737,12 +794,20 @@ class PipelineServer:
         deadline = time.monotonic() + timeout
 
         def flushed() -> bool:
+            # broken worlds are excluded: their pump (ours or the peer's)
+            # is dead, so whatever sits in those channels can never flush —
+            # waiting on them turned every heal-drain of a fenced replica
+            # into a guaranteed full-timeout stall. Payloads wedged in a
+            # broken world are already lost to the at-least-once resend
+            # path, exactly as if the world had been torn down.
             return (rep.inbox.empty() and not rep._stash
                     and rep.inflight == 0
                     and all(transport.pending(w) == 0
-                            for w in rep.upstream)
+                            for w in rep.upstream
+                            if w not in self.broken_worlds)
                     and all(transport.pending(w) == 0
-                            for w in rep.router.worlds))
+                            for w in rep.router.worlds
+                            if w not in self.broken_worlds))
 
         while True:
             # A pump can be suspended on a fairness yield *between* popping a
@@ -792,6 +857,7 @@ class PipelineServer:
         if worker is not None:
             worker.kill()
             worker.manager.shutdown()
+        self.cluster.topology.forget(rep.worker_id)
 
     def _remove_world_everywhere(self, world: str) -> None:
         for worker in list(self.cluster.workers.values()):
@@ -833,7 +899,8 @@ class PipelineServer:
             self._responses.pop(env.req_id, None)
 
     async def _restore_replay(self, sid: int, out: list, s0: int,
-                              step_timeout: float) -> bool:
+                              step_timeout: float, *,
+                              count_failures: bool = True) -> bool:
         """Unplanned-loss recovery, cheap path: rebuild the session's route
         from live survivor state + background snapshots
         (``MigrationManager.restore_session``), then replay only the decode
@@ -841,7 +908,8 @@ class PipelineServer:
         every generated token, and greedy decode is deterministic, so the
         replayed responses are discarded. Returns True when the session is
         live and caught up; False sends the caller to full re-prefill."""
-        t0 = await self.migrations.restore_session(sid)
+        t0 = await self.migrations.restore_session(
+            sid, count_failures=count_failures)
         if t0 is None:
             return False
         replayed = 0
@@ -865,6 +933,57 @@ class PipelineServer:
         finally:
             self.migrations.recomputed_tokens += replayed
         return True
+
+    def _live_heal_possible(self, sid: int) -> bool:
+        """True while an alive-but-fenced replica still holds this session's
+        state live — the controller's heal loop will live-migrate that state
+        to a survivor, so a bounced client should wait a grace window and
+        re-try the cheap restore path instead of re-prefilling immediately."""
+        for stage in range(self.n_stages):
+            failed = self.failed_replicas(stage)
+            if not failed:
+                continue
+            for rep in self.replicas[stage]:
+                if (rep.worker_id in failed and rep.worker.alive
+                        and (sid in rep.sessions or sid in rep.held)):
+                    return True
+        return False
+
+    async def _restore_with_grace(self, sid: int, out: list, s0: int,
+                                  step_timeout: float) -> bool:
+        """Cheap-path recovery with a heal grace window: keep re-trying
+        restore while a live heal can still deliver this session's state to
+        a survivor (see :meth:`_live_heal_possible`); give up to the
+        re-prefill fallback as soon as that hope is gone or the window
+        closes. The probes suppress the failure counter — one bounce is
+        one logical recovery event, counted once on final failure."""
+        deadline = time.monotonic() + self.restore_grace_s
+        while True:
+            if await self._restore_replay(sid, out, s0, step_timeout,
+                                          count_failures=False):
+                return True
+            if not (self._live_heal_possible(sid)
+                    and time.monotonic() < deadline):
+                self.migrations.restore_failures += 1
+                return False
+            await asyncio.sleep(0.02)
+
+    async def _abandon_session(self, sid: int) -> None:
+        """The client is giving up on this session id for good (re-prefill
+        under a fresh one follows). Surviving stages deliberately kept their
+        slices alive for the restore path — sweep what the remaining pins
+        can still reach with a best-effort FINISH so that state is released
+        now rather than at the TTL reap."""
+        world = self.client_router.pinned(sid)
+        self.client_router.unpin(sid)
+        if world is not None:
+            try:
+                await self.client.comm.send(
+                    Envelope(next(self._req_ids), sid, Kind.FINISH, step=0),
+                    1, world)
+            except (WorldBrokenError, WorldNotFoundError):
+                pass
+        self.session_margins.pop(sid, None)
 
     async def _pick_entry(self, timeout: float) -> Optional[str]:
         world = self.client_router.try_pick(self.least_loaded)
@@ -968,8 +1087,9 @@ class PipelineServer:
                 # greedy pick on the host: the logits are tiny (B,V) and a
                 # jax dispatch per token per session would dominate the
                 # client loop at smoke scale
-                tok = np.argmax(np.asarray(resp.payload), axis=-1) \
-                    .astype(np.int32)
+                logits = np.asarray(resp.payload)
+                self._note_margin(sid, logits)
+                tok = np.argmax(logits, axis=-1).astype(np.int32)
                 out.append(tok)
                 if token_times is not None:
                     token_times.append(time.monotonic())
@@ -981,13 +1101,13 @@ class PipelineServer:
                         f"generation failed after {max_restarts} session "
                         f"restarts: {e}") from e
                 if sid is not None:
-                    if out and await self._restore_replay(
+                    if out and await self._restore_with_grace(
                             sid, out, s0, step_timeout):
                         # session restored + caught up: resume decoding with
                         # the step arithmetic re-anchored to the raw prompt
                         hist_len, base = s0, 0
                         continue
-                    self.client_router.unpin(sid)
+                    await self._abandon_session(sid)
                     if out:
                         self.migrations.reprefills_total += 1
                         self.migrations.recomputed_tokens += s0 + len(out)
@@ -1005,6 +1125,7 @@ class PipelineServer:
             if self.snapshots is not None:
                 # eager snapshot GC; the background sweep + TTL are backstops
                 self.snapshots.drop_session(sid)
+            self.session_margins.pop(sid, None)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
     # ------------------------------------------------------------------ intro

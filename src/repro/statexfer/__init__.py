@@ -25,15 +25,21 @@ from .codec import (
     SnapshotChunk,
     SnapshotHeader,
     SnapshotTransferError,
+    argmax_margin,
+    blob_origin,
     blob_step,
     decode_cache,
     encode_cache,
+    encode_cache_checked,
+    int8_margin_ok,
     params_assemble,
     params_encode,
+    quantization_noise,
     snapshot_assemble,
     snapshot_encode,
     snapshot_from_blob,
     snapshot_to_blob,
+    snapshot_to_blob_checked,
     tree_equal,
 )
 from .manager import MigrationManager
@@ -43,9 +49,11 @@ __all__ = [
     "FP", "INT8",
     "SessionSnapshot", "SnapshotChunk", "SnapshotHeader",
     "SnapshotTransferError",
-    "blob_step", "decode_cache", "encode_cache",
-    "params_assemble", "params_encode",
-    "snapshot_assemble", "snapshot_encode",
-    "snapshot_from_blob", "snapshot_to_blob", "tree_equal",
+    "argmax_margin", "blob_origin", "blob_step",
+    "decode_cache", "encode_cache", "encode_cache_checked",
+    "int8_margin_ok", "params_assemble", "params_encode",
+    "quantization_noise", "snapshot_assemble", "snapshot_encode",
+    "snapshot_from_blob", "snapshot_to_blob", "snapshot_to_blob_checked",
+    "tree_equal",
     "MigrationManager", "SnapshotStore", "WarmBootstrap",
 ]

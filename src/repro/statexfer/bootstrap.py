@@ -27,23 +27,42 @@ import itertools
 import time
 
 from .codec import DEFAULT_CHUNK_BYTES, params_assemble, params_encode
-from .manager import stream_chunks
+from .manager import cache_nbytes, stream_chunks
 
 
 class WarmBootstrap:
     def __init__(self, server, *,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  backpressure_bytes: int = 4 * 1024 * 1024,
-                 transfer_timeout_s: float = 30.0) -> None:
+                 transfer_timeout_s: float = 30.0,
+                 placement_aware: bool = True) -> None:
         self.server = server
         self.chunk_bytes = chunk_bytes
         self.backpressure_bytes = backpressure_bytes
         self.transfer_timeout_s = transfer_timeout_s
+        #: weight-source peer ranked by (queue load + placement cost of the
+        #: stage weights about to move), not queue depth alone
+        self.placement_aware = placement_aware
         self._uid = itertools.count()
         self.bootstraps_total = 0
         self.weight_bytes: list[int] = []
         self.transfer_s: list[float] = []
         self.warm_s: list[float] = []
+
+    def _pick_peer(self, stage: int, worker_id: str):
+        """Weight-source choice: a same-host peer saves a cross-host copy of
+        the whole stage pytree, which dwarfs any queue-depth difference."""
+        server = self.server
+        peers = [r for r in server.replicas[stage]
+                 if r.worker.alive and not r.draining]
+        if not peers:
+            return None
+        placement = getattr(server.cluster, "placement", None)
+        if not self.placement_aware or placement is None:
+            return min(peers, key=lambda r: r.queue_depth())
+        nbytes = cache_nbytes(server.stage_param_sets[stage])
+        return min(peers, key=lambda r: placement.score(
+            r.queue_depth(), r.worker_id, worker_id, nbytes))
 
     async def bootstrap(self, stage: int, worker_id: str, *,
                         fresh_executor: bool = False) -> dict:
@@ -56,9 +75,7 @@ class WarmBootstrap:
         from repro.serving.executor import StageExecutor
 
         server = self.server
-        peers = [r for r in server.replicas[stage]
-                 if r.worker.alive and not r.draining]
-        peer = min(peers, key=lambda r: r.queue_depth()) if peers else None
+        peer = self._pick_peer(stage, worker_id)
         report: dict = {"stage": stage, "peer": peer.worker_id if peer
                         else None, "bytes": 0, "transfer_s": 0.0,
                         "warm_s": 0.0, "fresh_executor": fresh_executor}

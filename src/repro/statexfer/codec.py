@@ -61,6 +61,9 @@ class SnapshotHeader:
     nbytes: int          # total payload bytes across all chunks
     n_chunks: int
     crc32: int           # over the full reassembled payload
+    #: worker that captured the state — restore targets are ranked by
+    #: placement cost *from here*, so the bytes prefer to stay on-host
+    origin: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +92,7 @@ class SessionSnapshot:
     step: int
     batch: int
     cache: Any           # stage-slice cache pytree (numpy or jax leaves)
+    origin: Optional[str] = None   # worker the state was captured on
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,7 +159,8 @@ def snapshot_encode(snap: SessionSnapshot, *, codec: str = FP,
     header = SnapshotHeader(
         version=SNAPSHOT_VERSION, session_id=snap.session_id,
         stage=snap.stage, step=snap.step, batch=snap.batch, codec=codec,
-        nbytes=len(payload), n_chunks=n, crc32=zlib.crc32(payload))
+        nbytes=len(payload), n_chunks=n, crc32=zlib.crc32(payload),
+        origin=snap.origin)
     return [
         SnapshotChunk(
             session_id=snap.session_id, stage=snap.stage, seq=i,
@@ -193,7 +198,8 @@ def snapshot_assemble(chunks: list[SnapshotChunk]) -> SessionSnapshot:
         raise SnapshotTransferError("payload CRC mismatch")
     return SessionSnapshot(
         session_id=header.session_id, stage=header.stage, step=header.step,
-        batch=header.batch, cache=decode_cache(payload, header.codec))
+        batch=header.batch, cache=decode_cache(payload, header.codec),
+        origin=getattr(header, "origin", None))
 
 
 # ---------------------------------------------------------------- blob form
@@ -204,7 +210,8 @@ def snapshot_to_blob(snap: SessionSnapshot, *, codec: str = FP) -> bytes:
     header = SnapshotHeader(
         version=SNAPSHOT_VERSION, session_id=snap.session_id,
         stage=snap.stage, step=snap.step, batch=snap.batch, codec=codec,
-        nbytes=len(payload), n_chunks=1, crc32=zlib.crc32(payload))
+        nbytes=len(payload), n_chunks=1, crc32=zlib.crc32(payload),
+        origin=snap.origin)
     return pickle.dumps((header, payload), protocol=pickle.HIGHEST_PROTOCOL)
 
 
@@ -220,13 +227,103 @@ def snapshot_from_blob(blob: bytes) -> SessionSnapshot:
         raise SnapshotTransferError("snapshot blob failed integrity check")
     return SessionSnapshot(
         session_id=header.session_id, stage=header.stage, step=header.step,
-        batch=header.batch, cache=decode_cache(payload, header.codec))
+        batch=header.batch, cache=decode_cache(payload, header.codec),
+        origin=getattr(header, "origin", None))
 
 
 def blob_step(blob: bytes) -> int:
     """Decode cursor of a stored blob without materializing the cache."""
     header, _ = pickle.loads(blob)
     return header.step
+
+
+def blob_origin(blob: bytes) -> Optional[str]:
+    """Capturing worker of a stored blob, without materializing the cache."""
+    header, _ = pickle.loads(blob)
+    return getattr(header, "origin", None)
+
+
+# ------------------------------------------------------- int8 margin check
+# int8 restore is token-identical in practice but unproven: quantization
+# perturbs the KV cache, the perturbed cache perturbs the logits, and a
+# session whose greedy argmax is decided by a hair can flip. The check below
+# is the pragmatic bound: compare the session's observed *relative argmax
+# gap* (top-1 minus top-2 logit, normalized by the logits' RMS — tracked by
+# the serving layer as a running minimum over the session's steps) against
+# the cache's *relative quantization noise* (worst per-leaf dequantization
+# error over leaf RMS). When the gap is not comfortably wider than the
+# noise, the session's snapshot falls back to the fp codec — correctness is
+# per-session, bandwidth savings are kept for the well-margined majority.
+
+#: gap must exceed noise by this factor before int8 is trusted
+DEFAULT_MARGIN_FACTOR = 4.0
+
+
+def argmax_margin(logits: Any) -> float:
+    """Relative argmax gap of one step's logits: min over batch rows of
+    (top1 - top2) / rms(row). Dimensionless, comparable across models."""
+    a = np.asarray(logits, dtype=np.float32)
+    a = a.reshape(-1, a.shape[-1])
+    top2 = np.partition(a, -2, axis=-1)[:, -2:]
+    gap = top2[:, 1] - top2[:, 0]
+    rms = np.sqrt(np.mean(a * a, axis=-1)) + 1e-9
+    return float(np.min(gap / rms))
+
+
+def quantization_noise(cache: Any) -> float:
+    """Relative int8 quantization noise of a cache pytree: max over float
+    leaves of (worst-case dequantization error / leaf RMS). The worst-case
+    per-element error of per-last-axis absmax quantization is scale/2."""
+    worst = 0.0
+    for leaf in jax.tree.leaves(_host_cache(cache)):
+        if not jnp.issubdtype(np.asarray(leaf).dtype, jnp.floating):
+            continue
+        x = np.asarray(leaf, dtype=np.float32)
+        scale = np.abs(x).max(axis=-1, keepdims=True) / 127.0
+        rms = np.sqrt(np.mean(x * x)) + 1e-9
+        worst = max(worst, float(scale.max()) / 2.0 / rms)
+    return worst
+
+
+def int8_margin_ok(argmax_gap: Optional[float], cache: Any, *,
+                   margin_factor: float = DEFAULT_MARGIN_FACTOR) -> bool:
+    """True when the session's argmax gap comfortably dominates the cache's
+    quantization noise. An untracked gap (None) is treated as thin — no
+    evidence means no int8."""
+    if argmax_gap is None:
+        return False
+    return argmax_gap > margin_factor * quantization_noise(cache)
+
+
+def encode_cache_checked(cache: Any, codec: str, *,
+                         argmax_gap: Optional[float] = None,
+                         margin_factor: float = DEFAULT_MARGIN_FACTOR
+                         ) -> tuple[bytes, str]:
+    """Like :func:`encode_cache`, but int8 demotes itself to fp when the
+    argmax-gap-vs-quantization-noise margin is too thin. Returns
+    ``(payload, codec_actually_used)``."""
+    if codec == INT8 and not int8_margin_ok(argmax_gap, cache,
+                                            margin_factor=margin_factor):
+        codec = FP
+    return encode_cache(cache, codec), codec
+
+
+def snapshot_to_blob_checked(snap: SessionSnapshot, *, codec: str = FP,
+                             argmax_gap: Optional[float] = None,
+                             margin_factor: float = DEFAULT_MARGIN_FACTOR
+                             ) -> tuple[bytes, str]:
+    """Margin-checked :func:`snapshot_to_blob`: int8 falls back to fp per
+    session when its parity margin is too thin. Returns ``(blob, codec)``."""
+    payload, used = encode_cache_checked(snap.cache, codec,
+                                         argmax_gap=argmax_gap,
+                                         margin_factor=margin_factor)
+    header = SnapshotHeader(
+        version=SNAPSHOT_VERSION, session_id=snap.session_id,
+        stage=snap.stage, step=snap.step, batch=snap.batch, codec=used,
+        nbytes=len(payload), n_chunks=1, crc32=zlib.crc32(payload),
+        origin=snap.origin)
+    return (pickle.dumps((header, payload),
+                         protocol=pickle.HIGHEST_PROTOCOL), used)
 
 
 # ------------------------------------------------------------ param transfer

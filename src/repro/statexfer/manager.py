@@ -38,15 +38,26 @@ import time
 from typing import Optional
 
 from repro.core import WorldBrokenError, WorldNotFoundError, WorldSpec
+from repro.core.transport import payload_nbytes
 
 from .codec import (
     FP,
+    INT8,
     DEFAULT_CHUNK_BYTES,
     SessionSnapshot,
     SnapshotTransferError,
+    int8_margin_ok,
     snapshot_assemble,
     snapshot_encode,
 )
+
+
+def cache_nbytes(cache) -> int:
+    """Decoded size of a cache pytree — the bytes a handoff is about to
+    move, for placement-cost scoring before any encode work happens."""
+    import jax
+
+    return sum(payload_nbytes(leaf) for leaf in jax.tree.leaves(cache))
 
 
 async def stream_chunks(server, src_worker, dst_worker, world: str,
@@ -93,26 +104,46 @@ class MigrationManager:
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  backpressure_bytes: int = 4 * 1024 * 1024,
                  freeze_timeout_s: float = 5.0,
-                 transfer_timeout_s: float = 10.0) -> None:
+                 transfer_timeout_s: float = 10.0,
+                 placement_aware: bool = True) -> None:
         self.server = server
         self.codec = codec
         self.chunk_bytes = chunk_bytes
         self.backpressure_bytes = backpressure_bytes
         self.freeze_timeout_s = freeze_timeout_s
         self.transfer_timeout_s = transfer_timeout_s
+        #: rank survivors/restore targets by (queue load + placement cost of
+        #: the bytes about to move); False restores the placement-blind
+        #: queue-depth-only choice for A/B benchmarking (bench_place)
+        self.placement_aware = placement_aware
         self._uid = itertools.count()
         # -- counters (MetricsHub / bench_migrate read these) --------------
         self.migrations_total = 0
         self.migration_failures = 0
+        self.heal_migrations_total = 0   # live handoffs on the heal path
         self.restores_total = 0
         self.restore_failures = 0
         self.reprefills_total = 0        # full-history fallbacks (state lost)
+        self.int8_fallbacks = 0          # thin-margin int8 -> fp demotions
         self.migration_s: list[float] = []
         self.migration_bytes: list[int] = []
         #: token-position accounting: positions resumed from moved/restored
         #: state vs positions recomputed (replayed suffix or re-prefill)
         self.recovered_tokens = 0
         self.recomputed_tokens = 0
+
+    # ------------------------------------------------------------- placement
+    def _rank(self, src_worker_id: Optional[str], candidates, nbytes: int):
+        """Order transfer targets by (queue load, placement cost of moving
+        ``nbytes`` from ``src_worker_id``); placement-blind mode reproduces
+        the old (open_sessions, queue_depth) ordering exactly."""
+        placement = getattr(self.server.cluster, "placement", None)
+        if not self.placement_aware or placement is None:
+            return min(candidates, key=lambda r: (r.open_sessions(),
+                                                  r.queue_depth()))
+        return min(candidates, key=lambda r: placement.score(
+            r.open_sessions() + r.queue_depth(),
+            src_worker_id, r.worker_id, nbytes))
 
     # ------------------------------------------------------------ reporting
     def migration_p50_s(self) -> float:
@@ -125,11 +156,13 @@ class MigrationManager:
         return {
             "migrations_total": self.migrations_total,
             "migration_failures": self.migration_failures,
+            "heal_migrations_total": self.heal_migrations_total,
             "migration_p50_s": self.migration_p50_s(),
             "migration_bytes_total": sum(self.migration_bytes),
             "restores_total": self.restores_total,
             "restore_failures": self.restore_failures,
             "reprefills_total": self.reprefills_total,
+            "int8_fallbacks": self.int8_fallbacks,
             "recovered_tokens": self.recovered_tokens,
             "recomputed_tokens": self.recomputed_tokens,
         }
@@ -147,11 +180,18 @@ class MigrationManager:
         return results
 
     async def migrate_session(self, rep, sid: int,
-                              survivor=None) -> bool:
+                              survivor=None, *, heal: bool = False) -> bool:
         """Live handoff of one session from ``rep`` to a same-stage survivor.
         Returns True on success; on any failure the session is released
         locally (the RETRY/re-prefill fallback takes over) and False is
-        returned."""
+        returned.
+
+        ``heal=True`` is the fenced-replica discipline: the victim's route
+        pins were already dropped when the watchdog fenced its edges, so
+        missing pins are tolerated — whatever pins survive are flipped, the
+        state lands on the target, and the client's restore path (which the
+        controller's heal races against a grace window) rewires the rest of
+        the route from live state with zero recompute."""
         server = self.server
         t_begin = time.monotonic()
         if survivor is None:
@@ -161,19 +201,22 @@ class MigrationManager:
                 self.migration_failures += 1
                 self._release(rep, sid)
                 return False
-            survivor = min(peers, key=lambda r: (r.open_sessions(),
-                                                 r.queue_depth()))
+            sess = rep.sessions.get(sid)
+            est = cache_nbytes(sess.cache) if sess is not None else 0
+            survivor = self._rank(rep.worker_id, peers, est)
         rep.held.setdefault(sid, [])          # freeze: hold new steps
         try:
             snap = await self._freeze_snapshot(rep, sid)
             moved, nbytes = await self._transfer(rep, survivor, snap)
-            self._install(rep, survivor, sid, moved)
+            self._install(rep, survivor, sid, moved, heal=heal)
         except (SnapshotTransferError, WorldBrokenError, WorldNotFoundError,
                 asyncio.TimeoutError, TimeoutError):
             self.migration_failures += 1
             self._release(rep, sid)
             return False
         self.migrations_total += 1
+        if heal:
+            self.heal_migrations_total += 1
         # appended pairwise only on success, so the lists stay in step and
         # the window trim below never deletes mismatched entries
         self.migration_s.append(time.monotonic() - t_begin)
@@ -181,10 +224,31 @@ class MigrationManager:
         if len(self.migration_s) > 1024:      # p50 over the recent window;
             del self.migration_s[:512]        # never grows unbounded
             del self.migration_bytes[:512]
-        self.recovered_tokens += max(0, snap.step + 1)
-        server._event("migrate", f"{sid}: {rep.worker_id}->"
-                                 f"{survivor.worker_id}")
+        if not heal:
+            # heal handoffs are finished by the client's restore pass, which
+            # does the recovered-token accounting for the whole route
+            self.recovered_tokens += max(0, snap.step + 1)
+        server._event("heal_migrate" if heal else "migrate",
+                      f"{sid}: {rep.worker_id}->{survivor.worker_id}")
         return True
+
+    # ---------------------------------------------------------- heal handoff
+    async def heal_replica_sessions(self, rep) -> dict[int, bool]:
+        """Live-migrate every open session off an alive-but-fenced replica.
+
+        Unlike the drain path, the victim's upstream pins are usually gone
+        (fencing dropped them) and no new steps can arrive — each session is
+        frozen, streamed to a placement-ranked same-stage target (typically
+        the fresh replacement on the victim's own host), and installed;
+        the client's grace-window restore then rewires the route from live
+        state and resumes with zero recomputed tokens. Failures fall back to
+        snapshot restore / re-prefill exactly as before."""
+        for sid in list(rep.sessions):
+            rep.held.setdefault(sid, [])
+        results: dict[int, bool] = {}
+        for sid in list(rep.sessions):
+            results[sid] = await self.migrate_session(rep, sid, heal=True)
+        return results
 
     async def _freeze_snapshot(self, rep, sid: int) -> SessionSnapshot:
         """Wait for the session's in-flight step (if any) to land, then
@@ -199,7 +263,7 @@ class MigrationManager:
             raise SnapshotTransferError(f"session {sid} vanished mid-freeze")
         return SessionSnapshot(session_id=sid, stage=rep.stage,
                                step=sess.step, batch=sess.batch,
-                               cache=sess.cache)
+                               cache=sess.cache, origin=rep.worker_id)
 
     async def _transfer(self, rep, survivor,
                         snap: SessionSnapshot) -> tuple[SessionSnapshot, int]:
@@ -208,8 +272,17 @@ class MigrationManager:
         the bytes that crossed the wire."""
         server = self.server
         loop = asyncio.get_event_loop()
+        codec = self.codec
+        if codec == INT8:
+            gap = getattr(server, "session_margins", {}) \
+                .get(snap.session_id)
+            ok = await loop.run_in_executor(
+                None, functools.partial(int8_margin_ok, gap, snap.cache))
+            if not ok:          # thin argmax margin: move exact bytes
+                codec = FP
+                self.int8_fallbacks += 1
         chunks = await loop.run_in_executor(
-            None, functools.partial(snapshot_encode, snap, codec=self.codec,
+            None, functools.partial(snapshot_encode, snap, codec=codec,
                                     chunk_bytes=self.chunk_bytes))
         world = f"mig:{server.name}:{snap.session_id}:{next(self._uid)}"
         received = await self._stream(rep.worker, survivor.worker, world,
@@ -227,9 +300,16 @@ class MigrationManager:
             timeout_s=self.transfer_timeout_s)
 
     def _install(self, rep, survivor, sid: int,
-                 snap: SessionSnapshot) -> None:
+                 snap: SessionSnapshot, *, heal: bool = False) -> None:
         """Install on the survivor, flip pins, release held steps. Runs
-        without awaits so no envelope can interleave half-flipped state."""
+        without awaits so no envelope can interleave half-flipped state.
+
+        The drain path (``heal=False``) demands a fully pinned route — a
+        missing pin there means the session state machine is torn and the
+        re-prefill fallback is safer. The heal path tolerates missing pins
+        (fencing already dropped them): surviving pins are flipped, the rest
+        of the route is rewired by the client's restore pass from the live
+        state this install just placed."""
         from repro.serving.pipeline import CLIENT, _edge
 
         server = self.server
@@ -238,14 +318,20 @@ class MigrationManager:
             raise SnapshotTransferError("endpoint vanished before install")
         # downstream pin: same next-hop replica (or the client), new edge
         down_world = rep.router.pinned(sid)
+        new_down = None
         if down_world is None:
-            raise SnapshotTransferError(f"session {sid} has no route pin")
-        down = server._world_to_replica.get(down_world)   # None -> client
-        new_down = _edge(server.name, survivor.worker_id,
-                         CLIENT if down is None else down.worker_id)
-        if new_down not in survivor.router.healthy():
-            raise SnapshotTransferError(
-                f"survivor lacks downstream edge {new_down}")
+            if not heal:
+                raise SnapshotTransferError(f"session {sid} has no route pin")
+        else:
+            down = server._world_to_replica.get(down_world)   # None -> client
+            new_down = _edge(server.name, survivor.worker_id,
+                             CLIENT if down is None else down.worker_id)
+            if new_down not in survivor.router.healthy():
+                if heal:
+                    new_down = None
+                else:
+                    raise SnapshotTransferError(
+                        f"survivor lacks downstream edge {new_down}")
         # upstream pin: the router (client's or an upstream replica's) that
         # pinned this session onto rep must repin onto survivor
         flips = []
@@ -257,11 +343,12 @@ class MigrationManager:
                     raise SnapshotTransferError(
                         "no survivor edge for the pinning upstream router")
                 flips.append((router, new_up))
-        if not flips:
+        if not flips and not heal:
             raise SnapshotTransferError(f"session {sid} has no upstream pin")
 
         survivor.install_session(sid, snap.cache, snap.batch, snap.step)
-        survivor.router.pin(sid, new_down)
+        if new_down is not None:
+            survivor.router.pin(sid, new_down)
         for router, new_up in flips:
             router.pin(sid, new_up)
         rep.sessions.pop(sid, None)
@@ -286,11 +373,17 @@ class MigrationManager:
             rep.inbox.put_nowait(item)
 
     # ------------------------------------------------------ snapshot restore
-    async def restore_session(self, sid: int) -> Optional[int]:
+    async def restore_session(self, sid: int, *,
+                              count_failures: bool = True) -> Optional[int]:
         """Rebuild a lost session from live survivor state + stored
         snapshots. Returns the oldest restored decode position ``t0`` (the
         caller replays positions ``t0+1..``), or None if any stage cannot be
-        restored — the caller then falls back to full re-prefill."""
+        restored — the caller then falls back to full re-prefill.
+
+        ``count_failures=False`` suppresses the failure counter for the
+        grace-window retry loop, which probes every few milliseconds while
+        a heal is in flight — one *logical* recovery failure must count
+        once, not once per probe."""
         from repro.serving.pipeline import CLIENT, _edge
 
         server = self.server
@@ -310,10 +403,12 @@ class MigrationManager:
             healthy = [r for r in server.replicas[stage]
                        if r.worker.alive and not r.draining]
             if snap is None or not healthy:
-                self.restore_failures += 1
+                if count_failures:
+                    self.restore_failures += 1
                 return None
-            rep = min(healthy, key=lambda r: (r.open_sessions(),
-                                              r.queue_depth()))
+            # placement-aware install target: the snapshot's bytes prefer
+            # to land near where they were captured (same host = cheap)
+            rep = self._rank(snap.origin, healthy, cache_nbytes(snap.cache))
             route.append(rep)
             installs.append(snap)
             steps.append(snap.step)
@@ -326,7 +421,8 @@ class MigrationManager:
         # SSM/windowed pipelines take the re-prefill fallback.
         if not all(server.stage_executors[i].full_cache
                    for i in range(server.n_stages)):
-            self.restore_failures += 1
+            if count_failures:
+                self.restore_failures += 1
             return None
         # the route must be fully wired before any pin flips
         entry = _edge(server.name, CLIENT, route[0].worker_id)
@@ -338,7 +434,8 @@ class MigrationManager:
         routers = [server.client_router] + [r.router for r in route]
         if any(h not in router.healthy()
                for h, router in zip(hops, routers)):
-            self.restore_failures += 1
+            if count_failures:
+                self.restore_failures += 1
             return None
         for rep, snap in zip(route, installs):
             if snap is not None:

@@ -31,11 +31,12 @@ from typing import Optional
 
 from .codec import (
     FP,
+    INT8,
     SessionSnapshot,
     SnapshotTransferError,
     blob_step,
     snapshot_from_blob,
-    snapshot_to_blob,
+    snapshot_to_blob_checked,
 )
 
 
@@ -66,6 +67,9 @@ class SnapshotStore:
         #: per-snapshot byte sizes not yet folded into the hub's EWMA
         self.bytes_log: list[int] = []
         self.pruned_keys = 0
+        #: int8 snapshots demoted to fp because the session's argmax margin
+        #: was too thin against the cache's quantization noise
+        self.int8_fallbacks = 0
 
     # ------------------------------------------------------------- namespace
     def prefix(self) -> str:
@@ -125,10 +129,16 @@ class SnapshotStore:
                     # step swaps sess.cache/step as a pair
                     snap = SessionSnapshot(
                         session_id=sid, stage=rep.stage, step=sess.step,
-                        batch=sess.batch, cache=sess.cache)
-                    blob = await loop.run_in_executor(
+                        batch=sess.batch, cache=sess.cache,
+                        origin=rep.worker_id)
+                    gap = (getattr(self.server, "session_margins", {})
+                           .get(sid) if self.codec == INT8 else None)
+                    blob, used = await loop.run_in_executor(
                         None, functools.partial(
-                            snapshot_to_blob, snap, codec=self.codec))
+                            snapshot_to_blob_checked, snap, codec=self.codec,
+                            argmax_gap=gap))
+                    if self.codec == INT8 and used == FP:
+                        self.int8_fallbacks += 1
                     self.store.set(self.key(sid, rep.stage), blob,
                                    ttl=self.ttl_s)
                     self._last_step[(sid, rep.stage)] = sess.step

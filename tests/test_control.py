@@ -303,7 +303,8 @@ def test_controller_heals_killed_replica(arun):
         assert server.broken_worlds                    # detection happened
         assert victim in server.failed_replicas(1)
 
-        await ctrl.step()                              # one control tick heals
+        await ctrl.step()              # one control tick schedules the heal
+        await ctrl.wait_heals()        # heals run as bounded background tasks
         assert ctrl.heals == 1
         assert any(e.kind == "heal" for e in ctrl.timeline)
         healed = server.healthy_replicas(1)
@@ -338,6 +339,7 @@ def test_controller_heal_replaces_alive_cutoff_replica(arun):
 
         server.failed_replicas = fake
         await ctrl.step()
+        await ctrl.wait_heals()
         assert ctrl.heals == 1
         ids = server.healthy_replicas(1)
         assert victim not in ids and len(ids) == 2

@@ -1,0 +1,470 @@
+"""Topology-aware placement + snapshot-assisted live heal (ISSUE 4).
+
+The acceptance bar: every byte-moving choice (migration survivor,
+warm-bootstrap peer, restore target, heal replacement) prices the bytes it
+is about to move against the cluster topology instead of treating all edges
+as equally cheap; and healing an alive-but-fenced replica live-migrates its
+open sessions to the replacement — zero re-prefilled tokens, greedy token
+parity — instead of recomputing every history, with snapshot restore as the
+fallback for dead workers.
+"""
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.control import ElasticController, MetricsHub
+from repro.core import Cluster, PlacementCost, Topology
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer, ServeEngine
+from repro.statexfer import (
+    FP,
+    INT8,
+    SessionSnapshot,
+    argmax_margin,
+    blob_origin,
+    int8_margin_ok,
+    quantization_noise,
+    snapshot_from_blob,
+    snapshot_to_blob_checked,
+)
+
+CFG = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                     groups=(BlockGroup(DENSE, 2),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+ENGINE = ServeEngine(MODEL, PARAMS, max_len=64)
+
+
+def _prompts(n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, (1, seq)) for _ in range(n)]
+
+
+async def _warm(server, sessions=4):
+    ps = _prompts(sessions, seed=99)
+    for _ in range(2):
+        await asyncio.gather(*(server.generate(p, 3, step_timeout=120.0)
+                               for p in ps))
+    # let the warm-up FINISHes land: a lingering warm-up session would
+    # satisfy _wait_open spuriously and the fence/drain would hit orphans
+    # instead of the scenario's own mid-decode sessions
+    deadline = time.monotonic() + 5.0
+    while any(r.sessions for reps in server.replicas for r in reps):
+        if time.monotonic() > deadline:
+            break
+        await asyncio.sleep(0.005)
+
+
+async def _wait_open(server, stage, n, timeout=15.0):
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        assert time.monotonic() < deadline, "sessions never all opened"
+        await asyncio.sleep(0.005)
+
+
+def _fence(server, rep):
+    """Watchdog-style fencing of every upstream edge of ``rep``: the worlds
+    leave their routers' rotations (dropping session pins) and land in
+    ``broken_worlds`` — the exact state ``failed_replicas`` reports for an
+    alive-but-cut-off replica, with the worker itself still reachable."""
+    for world, router in list(rep.upstream_edges):
+        router.mark_broken(world)
+        server.broken_worlds.add(world)
+
+
+# ------------------------------------------------------------------ topology
+
+def test_topology_placement_and_cost():
+    topo = Topology(hosts=("h0", "h1"), numa_per_host=2, policy="spread")
+    cost = PlacementCost(topo)
+    a = topo.place("a")          # spread: h0
+    b = topo.place("b")          # spread: h1
+    assert a.host == "h0" and b.host == "h1"
+    assert cost.edge_cost("a", "b") == cost.cross_host
+    topo.assign("c", "h0", numa=a.numa)
+    topo.assign("d", "h0", numa=1 - a.numa)
+    assert cost.edge_cost("a", "c") == cost.same_numa
+    assert cost.edge_cost("a", "d") == cost.same_host
+    assert cost.same_numa < cost.same_host < cost.cross_host
+    # near= pins a new worker to another worker's host (the heal path)
+    assert topo.place("e", near="b").host == "h1"
+    # unknown endpoints price conservatively as same-host
+    assert cost.edge_cost(None, "a") == cost.same_host
+    topo.forget("e")
+    assert "e" not in topo._placements
+
+
+def test_placement_score_orders_by_load_then_cost():
+    """Equal queue load -> same-host wins; a big enough load gap still
+    outranks the placement cost (placement never starves a hot replica)."""
+    topo = Topology(hosts=("h0", "h1"))
+    topo.assign("src", "h0")
+    topo.assign("near", "h0", numa=1)
+    topo.assign("far", "h1")
+    cost = PlacementCost(topo, bytes_per_load=256 * 1024)
+    nbytes = 256 * 1024          # one load-unit of same-host bytes
+    same = cost.score(2.0, "src", "near", nbytes)
+    cross = cost.score(2.0, "src", "far", nbytes)
+    assert same < cross          # equal load: same-host strictly preferred
+    # cross-host with a much shorter queue wins over a drowning local peer
+    assert cost.score(1.0, "src", "far", nbytes) \
+        < cost.score(20.0, "src", "near", nbytes)
+
+
+def test_migration_rank_prefers_same_host_under_equal_load():
+    class Rep:
+        def __init__(self, wid):
+            self.worker_id = wid
+
+        def open_sessions(self):
+            return 2
+
+        def queue_depth(self):
+            return 1
+
+    topo = Topology(hosts=("h0", "h1"))
+    for wid, host in (("src", "h0"), ("near", "h0"), ("far", "h1")):
+        topo.assign(wid, host)
+    cluster = Cluster(topology=topo)
+    server = PipelineServer(cluster, MODEL, PARAMS, [1], max_len=64)
+    near, far = Rep("near"), Rep("far")
+    # equal load either way: placement cost must break the tie to same-host
+    assert server.migrations._rank("src", [far, near], 128 * 1024) is near
+    server.migrations.placement_aware = False     # blind baseline: list order
+    assert server.migrations._rank("src", [far, near], 128 * 1024) is far
+    cluster.shutdown()
+
+
+def test_drain_migration_stays_on_host(arun):
+    """Two-host topology, a same-host and a cross-host survivor at equal
+    load: every drained session's KV bytes stay on-host, and no bulk byte
+    crosses the host boundary."""
+    async def scenario():
+        topo = Topology(hosts=("h0", "h1"))
+        # price bytes steeply relative to queue load so the topology term
+        # dominates the transient queue wiggle of mid-decode survivors —
+        # the deployment knob for "cross-host bandwidth is precious"
+        c = Cluster(topology=topo,
+                    placement_cost=PlacementCost(topo,
+                                                 bytes_per_load=8 * 1024))
+        server = PipelineServer(c, MODEL, PARAMS, [1, 3], max_len=64)
+        await server.start()
+        await _warm(server, 6)
+        ps = _prompts(6, seed=4)
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 12, step_timeout=30.0)) for p in ps]
+        await _wait_open(server, 1, len(ps))
+        reps = sorted((r for r in server.replicas[1]
+                       if r.worker.alive and not r.draining),
+                      key=lambda r: -r.open_sessions())
+        victim, a, b = reps
+        assert victim.open_sessions() >= 1
+        # victim + survivor a share h0; survivor b sits across the wire
+        topo.assign(victim.worker_id, "h0")
+        topo.assign(a.worker_id, "h0")
+        topo.assign(b.worker_id, "h1")
+        cross0 = c.transport.bulk_cross_host_bytes_sent
+        await server.remove_replica(1, victim.worker_id, drain=True,
+                                    timeout=60.0)
+        await asyncio.gather(*tasks)
+        moved = [d for _, k, d in server.events if k == "migrate"]
+        assert moved and all(a.worker_id in d for d in moved), moved
+        assert c.transport.bulk_cross_host_bytes_sent == cross0
+        assert server.migrations.stats()["reprefills_total"] == 0
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+# ------------------------------------------------------------------ live heal
+
+def test_live_heal_fenced_replica_zero_recompute(arun):
+    """Heal of an alive-but-fenced replica with open mid-decode sessions:
+    the controller live-migrates its state to the replacement (instantiated
+    on the victim's host), bounced clients restore the route from that
+    state inside the grace window, and generation finishes with greedy
+    token parity and ZERO recomputed tokens — where the PR 3 heal
+    re-prefilled every session's full history."""
+    async def scenario():
+        topo = Topology(hosts=("h0", "h1"), policy="spread")
+        c = Cluster(topology=topo)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2], max_len=64)
+        await server.start()
+        await _warm(server, 4)
+        ctrl = ElasticController(server, interval=0.05, scale_stages=[])
+        ctrl.start()
+        ps = _prompts(4, seed=4)
+        wants = [ENGINE.generate(p, 16) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 16, step_timeout=30.0)) for p in ps]
+        await _wait_open(server, 1, len(ps))
+        victim = max((r for r in server.replicas[1]
+                      if r.worker.alive and not r.draining),
+                     key=lambda r: r.open_sessions())
+        n_open = victim.open_sessions()
+        victim_host = topo.host_of(victim.worker_id)
+        assert n_open >= 1
+        _fence(server, victim)
+        outs = await asyncio.gather(*tasks)
+        await ctrl.stop()
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)     # greedy parity
+        m = server.migrations.stats()
+        assert m["heal_migrations_total"] >= n_open, m
+        assert m["reprefills_total"] == 0, m             # zero re-prefill
+        assert m["recomputed_tokens"] == 0, m            # zero recompute
+        assert m["restores_total"] >= n_open, m
+        assert ctrl.heals == 1
+        # replacement landed on the victim's host (near-placement)
+        new = [r.worker_id for r in server.replicas[1]]
+        healed = [w for w in new if w != victim.worker_id]
+        assert any(topo.host_of(w) == victim_host for w in healed)
+        # no session state leaked anywhere after the dust settles
+        await asyncio.sleep(0.1)
+        assert not any(r.sessions for reps in server.replicas for r in reps)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_heal_dead_worker_falls_back_to_snapshot_restore(arun):
+    """A dead worker has nothing to hand off: the heal replaces it (same
+    host) and the clients' snapshot-restore path replays only the suffix —
+    the live-heal change must not regress the PR 3 fallback."""
+    async def scenario():
+        from repro.core import FailureKind
+
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2], max_len=64,
+                                snapshot_interval_s=5.0)
+        await server.start()
+        await _warm(server, 3)
+        ctrl = ElasticController(server, interval=0.05, scale_stages=[])
+        ctrl.start()
+        ps = _prompts(3, seed=6)
+        wants = [ENGINE.generate(p, 12) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 12, step_timeout=5.0)) for p in ps]
+        await _wait_open(server, 1, len(ps))
+        await server.snapshots.sweep()
+        victim = max((r for r in server.replicas[1] if r.worker.alive),
+                     key=lambda r: r.open_sessions())
+        c.kill(victim.worker_id, FailureKind.SILENT_HANG)
+        outs = await asyncio.gather(*tasks)
+        await ctrl.stop()
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        m = server.migrations.stats()
+        assert m["restores_total"] >= 1, m
+        assert m["reprefills_total"] == 0, m
+        full_history = sum(8 + 12 for _ in ps)
+        assert m["recomputed_tokens"] < full_history, m
+        assert ctrl.heals >= 1
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_warm_heal_first_dispatch_beats_cold(arun):
+    """A controller heal with fresh executors pre-warms the replacement
+    from a peer: its first real dispatch skips the compile the cold path
+    pays."""
+    async def scenario():
+        from repro.core import FailureKind
+        from repro.serving.executor import StageExecutor
+
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2], max_len=64)
+        await server.start()
+        p = _prompts(1, seed=7)[0]
+        want = ENGINE.generate(p, 6)
+        np.testing.assert_array_equal(
+            await server.generate(p, 6, step_timeout=120.0), want)
+
+        ctrl = ElasticController(server, interval=0.05, scale_stages=[],
+                                 fresh_executors=True)
+        before = {r.worker_id for r in server.replicas[1]}
+        victim = server.replicas[1][0].worker_id
+        c.kill(victim, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+        await ctrl.step()
+        await ctrl.wait_heals()
+        assert ctrl.heals == 1
+        healed = next(r for r in server.replicas[1]
+                      if r.worker_id not in before)
+        assert healed.executor is not server.stage_executors[1]
+        assert healed.executor.stats["warmed_dispatches"] > 0
+        assert server.bootstrap.bootstraps_total == 1
+
+        shape, dtype = healed.executor.warm_profile()["prefill"][0]
+
+        def first_dispatch_s(ex):
+            t0 = time.monotonic()
+            x = jnp.zeros(shape, jnp.dtype(dtype))
+            _, cache = ex.prefill(x)
+            step = jnp.zeros((shape[0], 1) + tuple(shape[2:]),
+                             jnp.dtype(dtype))
+            y, _ = ex.decode(cache, step, min(shape[1], ex.max_len - 1))
+            jax.block_until_ready(y)
+            return time.monotonic() - t0
+
+        cold = StageExecutor(server.cfg, server.stage_specs[1],
+                             server.stage_param_sets[1],
+                             max_len=server.max_len)
+        cold_s = first_dispatch_s(cold)          # cold heal: full compile
+        warm_s = first_dispatch_s(healed.executor)
+        assert warm_s < cold_s, (warm_s, cold_s)
+        # the warm replica serves token-correct traffic
+        np.testing.assert_array_equal(
+            await server.generate(p, 6, step_timeout=30.0), want)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_heal_warm_falls_back_cold_without_peer(arun):
+    """Healing the only replica of a stage has no warm peer: the controller
+    must degrade to a cold add, not fail the heal."""
+    async def scenario():
+        from repro.core import FailureKind
+
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64)
+        await server.start()
+        toks = _prompts(1, seed=9)[0]
+        await server.submit(toks)
+        ctrl = ElasticController(server, interval=0.05)
+        victim = server.replicas[1][0].worker_id
+        c.kill(victim, FailureKind.SILENT_HANG)
+        await asyncio.sleep(0.3)
+        await ctrl.step()
+        await ctrl.wait_heals()
+        assert ctrl.heals == 1
+        assert server.bootstrap.bootstraps_total == 0    # no peer -> cold
+        assert len(server.healthy_replicas(1)) == 1
+        await server.submit(toks, timeout=10.0)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_concurrent_heals_dont_serialize_on_one_drain(arun):
+    """One slow drain must not stall other heals: with a replica whose
+    drain can never finish (artificially wedged), a simultaneously fenced
+    replica of another stage is still healed promptly."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [2, 2], max_len=64)
+        await server.start()
+        await server.submit(_prompts(1, seed=1)[0])
+        ctrl = ElasticController(server, interval=0.05, scale_stages=[],
+                                 heal_drain_timeout_s=2.0)
+        slow = server.replicas[0][0]
+        fast = server.replicas[1][0]
+        _fence(server, slow)
+        _fence(server, fast)
+        slow.inflight += 1          # wedge: drain can never observe empty
+        await ctrl.step()
+        # the unwedged heal completes while the wedged drain is still
+        # burning its (bounded) timeout
+        deadline = time.monotonic() + 1.5
+        while ctrl.heals < 1:
+            assert time.monotonic() < deadline, "fast heal was stalled"
+            await asyncio.sleep(0.01)
+        assert any(r.worker_id != fast.worker_id
+                   for r in server.replicas[1])
+        slow.inflight -= 1          # unwedge; let the slow heal finish too
+        await ctrl.wait_heals()
+        assert ctrl.heals == 2
+        await ctrl.stop()
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+# ------------------------------------------------------------- int8 margin
+
+def test_int8_margin_check_falls_back_to_fp():
+    sess = ENGINE.start_session(_prompts(1, seed=11)[0])
+    snap = SessionSnapshot(session_id=3, stage=0, step=sess.t, batch=1,
+                           cache=sess.cache, origin="w0")
+    noise = quantization_noise(sess.cache)
+    assert noise > 0.0
+    # thin margin (or no tracked margin at all) -> fp
+    blob, used = snapshot_to_blob_checked(snap, codec=INT8, argmax_gap=None)
+    assert used == FP
+    blob, used = snapshot_to_blob_checked(snap, codec=INT8,
+                                          argmax_gap=noise * 0.5)
+    assert used == FP
+    back = snapshot_from_blob(blob)
+    assert back.origin == "w0" and blob_origin(blob) == "w0"
+    # comfortable margin -> int8 allowed, and strictly smaller
+    wide = noise * 100.0
+    assert int8_margin_ok(wide, sess.cache)
+    blob8, used = snapshot_to_blob_checked(snap, codec=INT8, argmax_gap=wide)
+    assert used == INT8 and len(blob8) < len(blob)
+
+
+def test_argmax_margin_tracks_tight_logits():
+    tight = np.zeros((1, 16), np.float32)
+    tight[0, 0] = 1.0
+    tight[0, 1] = 1.0 - 1e-6         # near-tie: tiny relative gap
+    wide = np.zeros((1, 16), np.float32)
+    wide[0, 0] = 10.0
+    assert argmax_margin(tight) < 1e-4 < argmax_margin(wide)
+
+
+def test_int8_snapshots_demote_per_session_and_count(arun):
+    """An int8 SnapshotStore demotes thin-margin sessions to fp and the
+    counter surfaces in MetricsHub.migration_metrics()."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64,
+                                snapshot_interval_s=5.0,
+                                snapshot_codec=INT8)
+        await server.start()
+        task = asyncio.ensure_future(
+            server.generate(_prompts(1, seed=5)[0], 8, step_timeout=30.0))
+        await _wait_open(server, 0, 1)
+        # the serving layer tracked real margins at the last stage
+        assert server._margins_wanted()
+        while not server.session_margins:
+            await asyncio.sleep(0.005)
+        sid = next(iter(server.session_margins))
+        # force one thin-margin sweep, then one generous sweep
+        server.session_margins[sid] = 0.0
+        await server.snapshots.sweep()
+        assert server.snapshots.int8_fallbacks >= 1
+        hub = MetricsHub(server)
+        assert hub.migration_metrics()["int8_fp_fallbacks"] >= 1
+        await task
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+# ------------------------------------------------------------ restore origin
+
+def test_snapshot_store_records_origin(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64,
+                                snapshot_interval_s=5.0)
+        await server.start()
+        task = asyncio.ensure_future(
+            server.generate(_prompts(1, seed=5)[0], 6, step_timeout=30.0))
+        await _wait_open(server, 1, 1)
+        await server.snapshots.sweep()
+        rep = server.replicas[1][0]
+        sid = next(iter(rep.sessions))
+        snap = server.snapshots.latest(sid, 1)
+        assert snap is not None and snap.origin == rep.worker_id
+        await task
+        c.shutdown()
+
+    arun(scenario())
