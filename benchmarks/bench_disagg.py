@@ -1,0 +1,242 @@
+"""Disaggregation benchmark: split prefill/decode pools A/B'd against the
+colocated (``role='both'``) baseline under a mixed prefill-heavy workload.
+
+One replicated stage, same replica budget in both runs:
+
+* **colocated** — 3 ``both`` replicas; every replica serves long prefill
+  dispatches and short decode steps, so a burst of long prompts convoys
+  decode microbatches behind prefills (the interference the serving-
+  optimization survey calls out).
+* **split** — 1 ``prefill`` + 2 ``decode`` replicas; prefills queue on the
+  prefill pool, freshly built KV caches stream to a decode-pool home over
+  the statexfer chunked codec (HANDOFF envelopes), and decode steps never
+  share a serve loop with a prefill again.
+
+The workload runs decode-heavy sessions (short prompt, long generation,
+per-token timestamps) concurrently with prefill-heavy lanes (long prompt,
+2 tokens, continuous). Acceptance (ISSUE 5): the split run sustains >= the
+colocated decode tokens/s with lower p95 decode latency, zero
+client-visible failures, greedy token parity across the handoff, and the
+colocated run does zero handoffs (the ``role='both'`` path is untouched).
+
+  PYTHONPATH=src python -m benchmarks.bench_disagg [--tiny] [--json OUT]
+
+``--tiny`` shrinks the scenario for CI smoke (wall-clock-sensitive gates
+are skipped; parity/zero-failure/handoff gates always hold); ``--json``
+writes the rows + raw scenario dict (BENCH_disagg.json in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import DENSE, BlockGroup, build_model
+from repro.core import Cluster
+from repro.serving import PipelineServer, ServeEngine
+
+from .common import run_async
+
+DECODE_PROMPT = 8
+PREFILL_PROMPT = 40      # buckets to the 64-wide prefill executable
+
+
+def _build():
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                         groups=(BlockGroup(DENSE, 2),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, seed, seq):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (1, seq)) for _ in range(n)]
+
+
+def _p95(xs: list[float]) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(0.95 * len(s)))]
+
+
+async def _mixed_scenario(split: bool, tiny: bool) -> dict:
+    cfg, model, params = _build()
+    engine = ServeEngine(model, params, max_len=64)
+    cluster = Cluster()
+    spec = {"prefill": 1, "decode": 2} if split else 3
+    server = PipelineServer(cluster, model, params, [spec], max_len=64)
+    await server.start()
+
+    # the A/B isolates *interference*, so decode demand must fit the decode
+    # pool (2 sessions per decode replica) in both modes; full mode runs a
+    # longer steady state under heavier prefill pressure instead of
+    # overcommitting the decode pool
+    d_sessions = 4
+    d_tokens = 12 if tiny else 32
+    lanes = 3 if tiny else 5
+
+    d_prompts = _prompts(cfg, d_sessions, seed=1, seq=DECODE_PROMPT)
+    l_prompts = _prompts(cfg, lanes, seed=2, seq=PREFILL_PROMPT)
+    d_wants = [engine.generate(p, d_tokens) for p in d_prompts]
+    l_wants = [engine.generate(p, 2) for p in l_prompts]
+
+    # warm both pools off-clock: two rounds of the real mixed traffic (like
+    # bench_generate/bench_migrate), then an explicit profile replay so
+    # every decode convoy width the measurement can coalesce to is
+    # compiled — traffic-only warmup is timing-dependent and a
+    # mid-measurement width compile masquerades as interference
+    for _ in range(2):
+        await asyncio.gather(
+            *(server.generate(p, 3, step_timeout=120.0) for p in d_prompts),
+            *(server.generate(p, 2, step_timeout=120.0) for p in l_prompts))
+    profile = {"prefill": [((1, 8), "int32"), ((1, 64), "int32")],
+               "widths": [2, 4, 8]}
+    for ex in {id(r.executor): r.executor
+               for reps in server.replicas for r in reps}.values():
+        ex.warm(profile)
+
+    failures = 0
+    stop = asyncio.Event()
+    lane_outs: list[list] = [[] for _ in range(lanes)]
+
+    async def prefill_lane(i: int) -> None:
+        nonlocal failures
+        while not stop.is_set():
+            try:
+                out = await server.generate(l_prompts[i], 2,
+                                            step_timeout=60.0)
+                lane_outs[i].append(out)
+            except Exception:  # noqa: BLE001 — gate counts every failure
+                failures += 1
+
+    token_times: list[list[float]] = [[] for _ in range(d_sessions)]
+
+    async def decode_session(i: int):
+        return await server.generate(d_prompts[i], d_tokens,
+                                     step_timeout=60.0,
+                                     token_times=token_times[i])
+
+    lane_tasks = [asyncio.ensure_future(prefill_lane(i))
+                  for i in range(lanes)]
+    t0 = time.monotonic()
+    try:
+        d_outs = await asyncio.gather(
+            *(decode_session(i) for i in range(d_sessions)))
+    except Exception:  # noqa: BLE001
+        failures += 1
+        d_outs = []
+    wall = time.monotonic() - t0
+    stop.set()
+    await asyncio.gather(*lane_tasks, return_exceptions=True)
+
+    parity = (len(d_outs) == d_sessions
+              and all(np.array_equal(w, g)
+                      for w, g in zip(d_wants, d_outs))
+              and all(np.array_equal(l_wants[i], out)
+                      for i in range(lanes) for out in lane_outs[i]))
+    intertoken = [b - a for times in token_times
+                  for a, b in zip(times, times[1:])]
+    m = server.migrations.stats()
+    stats = server.replica_stats()
+    out = {
+        "split": split,
+        "decode_sessions": d_sessions,
+        "decode_tokens": d_sessions * d_tokens,
+        "prefill_lane_requests": sum(len(o) for o in lane_outs),
+        "wall_s": wall,
+        "decode_tokens_per_s": d_sessions * d_tokens / max(wall, 1e-9),
+        "decode_p50_s": (sorted(intertoken)[len(intertoken) // 2]
+                         if intertoken else 0.0),
+        "decode_p95_s": _p95(intertoken),
+        "token_parity": parity,
+        "failures": failures,
+        "handoffs": m["handoffs_total"],
+        "handoff_failures": m["handoff_failures"],
+        "handoff_p50_s": m["handoff_p50_s"],
+        "handoff_bytes": m["handoff_bytes_total"],
+        "reprefills": m["reprefills_total"],
+        "retries": sum(s["retries_sent"] for s in stats.values()),
+        "decode_steps_on_prefill_pool": sum(
+            s["decode_steps"] for s in stats.values()
+            if s["role"] == "prefill"),
+    }
+    cluster.shutdown()
+    return out
+
+
+async def _scenario(tiny: bool) -> dict:
+    return {
+        "colocated": await _mixed_scenario(split=False, tiny=tiny),
+        "split": await _mixed_scenario(split=True, tiny=tiny),
+    }
+
+
+def run(tiny: bool = False, json_path: str | None = None
+        ) -> list[tuple[str, float, str]]:
+    r = run_async(_scenario(tiny))
+    co, sp = r["colocated"], r["split"]
+    rows = [
+        ("disagg_decode_tokens_per_s/split", sp["decode_tokens_per_s"],
+         f"{sp['decode_sessions']} sessions + "
+         f"{sp['prefill_lane_requests']} prefill-heavy requests"),
+        ("disagg_decode_tokens_per_s/colocated", co["decode_tokens_per_s"],
+         f"{co['decode_sessions']} sessions + "
+         f"{co['prefill_lane_requests']} prefill-heavy requests"),
+        ("disagg_decode_p95_ms/split", sp["decode_p95_s"] * 1e3,
+         "inter-token latency under prefill interference"),
+        ("disagg_decode_p95_ms/colocated", co["decode_p95_s"] * 1e3,
+         "inter-token latency under prefill interference"),
+        ("disagg_decode_p50_ms/split", sp["decode_p50_s"] * 1e3, ""),
+        ("disagg_decode_p50_ms/colocated", co["decode_p50_s"] * 1e3, ""),
+        ("disagg_handoffs", float(sp["handoffs"]),
+         f"prefill->decode KV handoffs "
+         f"(p50 {sp['handoff_p50_s'] * 1e3:.1f} ms, "
+         f"{sp['handoff_bytes']}B)"),
+        ("disagg_failures/split", float(sp["failures"]),
+         "must be 0 — zero client-visible failures"),
+        ("disagg_failures/colocated", float(co["failures"]), "must be 0"),
+    ]
+    # acceptance gates (ISSUE 5)
+    assert sp["token_parity"], \
+        "greedy token parity lost across the prefill->decode handoff"
+    assert co["token_parity"], "colocated (role='both') parity lost"
+    assert sp["failures"] == 0 and co["failures"] == 0, (sp, co)
+    assert sp["handoffs"] >= sp["decode_sessions"], sp
+    assert co["handoffs"] == 0, \
+        f"role='both' run must never hand off: {co}"
+    assert sp["reprefills"] == 0 and sp["handoff_failures"] == 0, sp
+    assert sp["decode_steps_on_prefill_pool"] == 0, \
+        f"decode leaked into the prefill pool: {sp}"
+    if not tiny:
+        # the A/B gate: dedicated decode capacity must not lose throughput
+        # and must cut tail latency under prefill interference
+        assert sp["decode_tokens_per_s"] >= co["decode_tokens_per_s"], \
+            (f"split {sp['decode_tokens_per_s']:.1f} tok/s < colocated "
+             f"{co['decode_tokens_per_s']:.1f} tok/s")
+        assert sp["decode_p95_s"] < co["decode_p95_s"], \
+            (f"split p95 {sp['decode_p95_s'] * 1e3:.1f}ms not under "
+             f"colocated {co['decode_p95_s'] * 1e3:.1f}ms")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": [{"name": n, "value": v, "derived": d}
+                                for n, v, d in rows],
+                       "raw": r, "tiny": tiny}, f, indent=2, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small scenario, no wall-clock gates")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write rows + raw results as JSON artifact")
+    args = ap.parse_args()
+    for name, value, derived in run(tiny=args.tiny, json_path=args.json):
+        print(f"{name},{value:.4f},{derived}")

@@ -15,6 +15,8 @@ Prints ``name,value,derived`` CSV rows:
   drain, snapshot restore after a kill, warm scale-up bootstrap
 * place — topology-aware placement: same-host vs cross-host survivor
   choice on drain, and snapshot-assisted live heal vs the re-prefill heal
+* disagg — disaggregated prefill/decode pools vs colocated replicas under
+  a mixed prefill-heavy workload (decode tokens/s + tail latency A/B)
 """
 from __future__ import annotations
 
@@ -103,6 +105,8 @@ SUITES = {
                                   fromlist=["run"]).run(),
     "place": lambda: __import__("benchmarks.bench_place",
                                 fromlist=["run"]).run(),
+    "disagg": lambda: __import__("benchmarks.bench_disagg",
+                                 fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

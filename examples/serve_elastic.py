@@ -139,10 +139,17 @@ async def main() -> None:
           f"(p50 {mm['migration_p50_s'] * 1e3:.1f} ms), "
           f"{mm['restores_total']} snapshot restores, "
           f"{mm['reprefills_total']} re-prefill fallbacks; "
-          f"snapshot ~{mm['snapshot_bytes_ewma'] / 1e3:.0f} KB; "
+          f"snapshot ~{mm['snapshot_bytes_ewma'] / 1e3:.0f} KB "
+          f"({mm.get('delta_snapshots_total', 0)} delta snapshots, "
+          f"{mm.get('snapshot_delta_bytes_total', 0) / 1e3:.0f} KB of "
+          f"{mm.get('snapshot_bytes_total', 0) / 1e3:.0f} KB); "
           f"tokens recovered/recomputed "
           f"{mm['recovered_tokens']}/{mm['recomputed_tokens']}; "
           f"deadline drops {mm['deadline_expired_total']}")
+    lm = ctrl.hub.latency_metrics()
+    print(f"latency split: TTFT {lm['ttft_s'] * 1e3:.1f} ms (prefill "
+          f"round-trip), decode {lm['decode_latency_s'] * 1e3:.1f} ms/token "
+          f"— the per-role scaling signals")
     pm = ctrl.hub.placement_metrics()
     print(f"placement: {mm['heal_migrations_total']} heal handoffs; "
           f"{pm['cross_host_bytes'] / 1e3:.0f} KB of "

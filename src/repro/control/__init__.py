@@ -10,12 +10,14 @@ workload generator to drive elastic scenarios.
 from .controller import ControlEvent, ElasticController
 from .metrics import Ewma, MetricsHub, ReplicaSample, StageSnapshot
 from .policy import (
+    DisaggregatedStagePolicy,
     HysteresisPolicy,
     LatencySLOPolicy,
     ScaleDecision,
     ScalingPolicy,
     TargetQueueDepthPolicy,
     TokenRatePolicy,
+    TTFTSLOPolicy,
 )
 from .workload import (
     BurstProfile,
@@ -30,8 +32,9 @@ from .workload import (
 __all__ = [
     "ControlEvent", "ElasticController",
     "Ewma", "MetricsHub", "ReplicaSample", "StageSnapshot",
-    "HysteresisPolicy", "LatencySLOPolicy", "ScaleDecision",
-    "ScalingPolicy", "TargetQueueDepthPolicy", "TokenRatePolicy",
+    "DisaggregatedStagePolicy", "HysteresisPolicy", "LatencySLOPolicy",
+    "ScaleDecision", "ScalingPolicy", "TargetQueueDepthPolicy",
+    "TokenRatePolicy", "TTFTSLOPolicy",
     "BurstProfile", "ConstantProfile", "DiurnalProfile",
     "OpenLoopGenerator", "RampProfile", "RateProfile", "RequestRecord",
 ]

@@ -22,6 +22,11 @@ Heal moves state instead of recomputing it, like drain does:
   the dead worker's host and the clients' snapshot-restore path (suffix
   replay from the SnapshotStore) remains the fallback.
 
+Either way the replacement joins the victim's own role pool (prefill /
+decode / both), so a disaggregated stage heals back to the split the
+operator configured; per-role scaling rides ``DisaggregatedStagePolicy``,
+whose votes carry the pool they target.
+
 Replacements and scale-ups are **warm** whenever a same-stage peer exists
 (weight fetch + compiled-shape warmup before entering rotation), with an
 automatic cold fallback.
@@ -166,10 +171,16 @@ class ElasticController:
         for snap in snaps:
             if snap.stage not in self.scale_stages:
                 continue
-            decision = self.policies[snap.stage].decide(snap)
-            if decision.hold:
-                continue
-            await self._apply(decision)
+            policy = self.policies[snap.stage]
+            # a disaggregated policy votes once per role pool; plain
+            # policies keep the single-decision contract
+            many = getattr(policy, "decide_many", None)
+            decisions = many(snap) if many is not None \
+                else [policy.decide(snap)]
+            for decision in decisions:
+                if decision.hold:
+                    continue
+                await self._apply(decision)
         return snaps
 
     async def _heal_failed(self) -> None:
@@ -188,21 +199,24 @@ class ElasticController:
                 task.add_done_callback(self._heal_tasks.discard)
 
     async def _add_replica(self, stage: int, *,
+                           role: str = "both",
                            near: Optional[str] = None,
                            host: Optional[str] = None) -> str:
         """Warm scale-up/heal with automatic cold fallback: warm bootstrap
         needs a same-stage peer to stream weights/shapes from, and a torn
         warm path must degrade to the plain cold add, never fail the
-        action."""
+        action. The replica joins the requested role pool either way."""
         if self.warm_replicas and self.server.healthy_replicas(stage):
             try:
                 return await self.server.add_replica(
-                    stage, warm=True, fresh_executor=self.fresh_executors,
+                    stage, role=role, warm=True,
+                    fresh_executor=self.fresh_executors,
                     near=near, host=host)
             except Exception as e:  # noqa: BLE001 — warm is an optimization
                 self._record("error", stage,
                              f"warm bootstrap failed, going cold: {e!r}")
-        return await self.server.add_replica(stage, near=near, host=host)
+        return await self.server.add_replica(stage, role=role, near=near,
+                                             host=host)
 
     async def _heal_one(self, stage: int, worker_id: str) -> None:
         """Replace one fenced replica, moving its state instead of
@@ -221,11 +235,17 @@ class ElasticController:
             alive = worker is not None and worker.alive
             host = server.cluster.topology.host_of(worker_id) \
                 if worker is not None else None
+            victim = next((r for r in server.replicas[stage]
+                           if r.worker_id == worker_id), None)
+            #: the replacement joins the victim's own pool — healing a dead
+            #: decode replica with a 'both' one would silently erode the
+            #: split the operator asked for
+            role = getattr(victim, "role", "both")
             try:
                 if alive:
-                    new_id = await self._add_replica(stage, host=host)
-                    rep = next((r for r in server.replicas[stage]
-                                if r.worker_id == worker_id), None)
+                    new_id = await self._add_replica(stage, role=role,
+                                                     host=host)
+                    rep = victim
                     if self.live_heal and rep is not None and rep.sessions:
                         moved = await server.migrations \
                             .heal_replica_sessions(rep)
@@ -250,7 +270,8 @@ class ElasticController:
                 else:
                     await server.remove_replica(
                         stage, worker_id, drain=False)
-                    new_id = await self._add_replica(stage, host=host)
+                    new_id = await self._add_replica(stage, role=role,
+                                                     host=host)
             except Exception as e:  # noqa: BLE001 — keep the loop alive
                 self._record("error", stage, f"heal failed: {e!r}")
                 return
@@ -262,17 +283,20 @@ class ElasticController:
 
     async def _apply(self, decision) -> None:
         stage, delta = decision.stage, decision.delta
+        role = getattr(decision, "role", None)
         try:
             if delta > 0:
                 for _ in range(delta):
-                    new_id = await self._add_replica(stage)
+                    new_id = await self._add_replica(stage,
+                                                     role=role or "both")
                     self.scale_ups += 1
                     self._record("scale_up", stage,
                                  f"+{new_id} ({decision.reason})")
             else:
                 for _ in range(-delta):
                     gone = await self.server.remove_replica(
-                        stage, drain=True, migrate=self.migrate_on_drain)
+                        stage, role=role, drain=True,
+                        migrate=self.migrate_on_drain)
                     self.scale_downs += 1
                     self._record("scale_down", stage,
                                  f"-{gone} ({decision.reason})")

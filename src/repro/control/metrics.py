@@ -58,11 +58,23 @@ class ReplicaSample:
     tokens_per_s: float = 0.0   # decode tokens/s, EWMA (generative plane)
     open_sessions: int = 0      # sessions whose KV cache lives here
     expired: int = 0            # deadline-expired envelopes dropped here
+    role: str = "both"          # pool membership (prefill/decode/both)
+    ttft_s: float = 0.0         # per-prefill service time (incl. handoff),
+    #                             EWMA — the stage's TTFT contribution
+    decode_lat_s: float = 0.0   # per fused decode dispatch (~per token), EWMA
 
 
 @dataclasses.dataclass
 class StageSnapshot:
-    """What a scaling policy sees for one pipeline stage."""
+    """What a scaling policy sees for one pipeline stage.
+
+    ``role_slices`` re-aggregates the same replica samples per pool
+    (``prefill`` / ``decode`` / ``both``), so a disaggregated policy can
+    scale each pool on its own signal — decode on tokens/s + open sessions,
+    prefill on queue depth / TTFT. Slices are instantaneous re-aggregations
+    of the per-replica EWMAs (the stage-level ``queue_per_replica`` EWMA is
+    not re-smoothed per slice).
+    """
 
     stage: int
     t: float
@@ -79,6 +91,10 @@ class StageSnapshot:
     #                                 currently in the stage (retired
     #                                 replicas' counts live in the hub's
     #                                 deadline_expired_total accumulator)
+    ttft_s: float = 0.0             # mean per-prefill service EWMA (healthy)
+    decode_latency_s: float = 0.0   # mean per-dispatch decode EWMA (healthy)
+    role: str = "all"               # "all" for the stage view, else the pool
+    role_slices: dict = dataclasses.field(default_factory=dict)
 
 
 class MetricsHub:
@@ -88,12 +104,18 @@ class MetricsHub:
         #: (t, kind, world) world-lifecycle events from every manager
         self.world_events: list[tuple[float, str, str]] = []
         self.breaks_seen = 0
-        self._prev: dict[str, tuple[float, int, float, int]] = {}
+        self._prev: dict[str, tuple] = {}
         self._tput: dict[str, Ewma] = {}
         self._lat: dict[str, Ewma] = {}
         self._toks: dict[str, Ewma] = {}
+        self._ttft: dict[str, Ewma] = {}
+        self._declat: dict[str, Ewma] = {}
         self._qdepth: dict[int, Ewma] = {}
         self._snap_bytes = Ewma(alpha)
+        #: client-observed latency split, fed from the server's per-kind
+        #: logs: prefill round-trip (true TTFT) vs per-token decode
+        self._client_ttft = Ewma(alpha)
+        self._client_declat = Ewma(alpha)
         self._subscribed: set[str] = set()
         self._subscribe_new_managers()
 
@@ -128,18 +150,31 @@ class MetricsHub:
         processed = rep.processed
         lat_sum = rep.wait_s_sum + rep.service_s_sum
         tokens = rep.tokens_out
+        prefills = rep.prefills
+        prefill_s = rep.prefill_s_sum
+        dbatches = rep.decode_batches
+        decode_s = rep.decode_s_sum
         tput = self._tput.setdefault(wid, Ewma(self.alpha))
         lat = self._lat.setdefault(wid, Ewma(self.alpha))
         toks = self._toks.setdefault(wid, Ewma(self.alpha))
+        ttft = self._ttft.setdefault(wid, Ewma(self.alpha))
+        declat = self._declat.setdefault(wid, Ewma(self.alpha))
         if prev is not None:
-            t0, done0, lat0, tok0 = prev
+            t0, done0, lat0, tok0, pre0, pres0, db0, ds0 = prev
             dt = max(now - t0, 1e-9)
             dn = processed - done0
             tput.update(dn / dt)
             toks.update((tokens - tok0) / dt)
             if dn > 0:
                 lat.update((lat_sum - lat0) / dn)
-        self._prev[wid] = (now, processed, lat_sum, tokens)
+            # per-kind latency split: prefill service time (TTFT slice at
+            # this stage, handoff included) vs per-fused-dispatch decode
+            if prefills > pre0:
+                ttft.update((prefill_s - pres0) / (prefills - pre0))
+            if dbatches > db0:
+                declat.update((decode_s - ds0) / (dbatches - db0))
+        self._prev[wid] = (now, processed, lat_sum, tokens,
+                           prefills, prefill_s, dbatches, decode_s)
         open_sessions = rep.open_sessions()
         return ReplicaSample(
             worker_id=wid, stage=rep.stage, alive=rep.worker.alive,
@@ -147,14 +182,16 @@ class MetricsHub:
             inflight=rep.inflight, processed=processed,
             throughput=tput.get(), latency_s=lat.get(),
             tokens_per_s=toks.get(), open_sessions=open_sessions,
-            expired=rep.expired)
+            expired=rep.expired, role=getattr(rep, "role", "both"),
+            ttft_s=ttft.get(), decode_lat_s=declat.get())
 
     def _prune_retired(self) -> None:
         """Worker ids are never reused, so per-replica state for retired
         replicas is garbage — drop it or a long-lived elastic cluster leaks
         one entry set per scale/heal cycle."""
         live = {r.worker_id for reps in self.server.replicas for r in reps}
-        for d in (self._prev, self._tput, self._lat, self._toks):
+        for d in (self._prev, self._tput, self._lat, self._toks,
+                  self._ttft, self._declat):
             for wid in [w for w in d if w not in live]:
                 del d[wid]
         # retired workers leave the cluster registry too (teardown reclaims
@@ -170,26 +207,53 @@ class MetricsHub:
         for stage, reps in enumerate(self.server.replicas):
             samples = [self._replica_sample(r, now) for r in reps]
             failed = set(self.server.failed_replicas(stage))
-            healthy = [s for s in samples
-                       if s.alive and not s.draining
-                       and s.worker_id not in failed]
-            n = len(healthy)
-            queue_total = sum(s.queue_depth for s in healthy)
-            qd = self._qdepth.setdefault(stage, Ewma(self.alpha))
-            qd.update(queue_total / max(n, 1))
-            snaps.append(StageSnapshot(
-                stage=stage, t=now, n_replicas=n, n_failed=len(failed),
-                queue_total=queue_total,
-                queue_per_replica=qd.get(),
-                throughput=sum(s.throughput for s in healthy),
-                latency_s=(sum(s.latency_s for s in healthy) / n
-                           if n else 0.0),
-                replicas=samples,
-                tokens_per_s=sum(s.tokens_per_s for s in healthy),
-                open_sessions=sum(s.open_sessions for s in healthy),
-                expired=sum(s.expired for s in samples)))
+            snap = self._aggregate(stage, now, samples, failed)
+            for role in sorted({s.role for s in samples}):
+                snap.role_slices[role] = self._aggregate(
+                    stage, now, [s for s in samples if s.role == role],
+                    failed, role=role)
+            snaps.append(snap)
         self._update_migration_ewmas()
         return snaps
+
+    def _aggregate(self, stage: int, now: float,
+                   samples: list[ReplicaSample], failed: set,
+                   role: str = "all") -> StageSnapshot:
+        """Fold replica samples into one StageSnapshot. The whole-stage
+        view (role="all") owns the smoothed queue_per_replica EWMA; role
+        slices re-aggregate instantaneously over the pool's samples."""
+        healthy = [s for s in samples
+                   if s.alive and not s.draining
+                   and s.worker_id not in failed]
+        n = len(healthy)
+        queue_total = sum(s.queue_depth for s in healthy)
+        if role == "all":
+            qd = self._qdepth.setdefault(stage, Ewma(self.alpha))
+            qd.update(queue_total / max(n, 1))
+            queue_per = qd.get()
+        else:
+            queue_per = queue_total / max(n, 1)
+        # per-kind means over the replicas that actually serve the kind —
+        # a decode pool's TTFT (0, it never prefills) must not dilute the
+        # stage's prefill signal
+        ttft_src = [s.ttft_s for s in healthy if s.ttft_s > 0]
+        declat_src = [s.decode_lat_s for s in healthy if s.decode_lat_s > 0]
+        return StageSnapshot(
+            stage=stage, t=now, n_replicas=n,
+            n_failed=len({s.worker_id for s in samples} & failed),
+            queue_total=queue_total,
+            queue_per_replica=queue_per,
+            throughput=sum(s.throughput for s in healthy),
+            latency_s=(sum(s.latency_s for s in healthy) / n
+                       if n else 0.0),
+            replicas=samples,
+            tokens_per_s=sum(s.tokens_per_s for s in healthy),
+            open_sessions=sum(s.open_sessions for s in healthy),
+            expired=sum(s.expired for s in samples),
+            ttft_s=(sum(ttft_src) / len(ttft_src) if ttft_src else 0.0),
+            decode_latency_s=(sum(declat_src) / len(declat_src)
+                              if declat_src else 0.0),
+            role=role)
 
     # ------------------------------------------------------- state transfer
     def _update_migration_ewmas(self) -> None:
@@ -200,6 +264,25 @@ class MetricsHub:
             for nbytes in snaps.bytes_log:
                 self._snap_bytes.update(float(nbytes))
             snaps.bytes_log.clear()
+        # client-observed per-kind latency: the server logs one sample per
+        # prefill round-trip (TTFT) and per decode step; drain into EWMAs
+        for log, ewma in ((getattr(self.server, "ttft_log", None),
+                           self._client_ttft),
+                          (getattr(self.server, "decode_lat_log", None),
+                           self._client_declat)):
+            if log:
+                for dt in log:
+                    ewma.update(dt)
+                log.clear()
+
+    def latency_metrics(self) -> dict:
+        """Client-observed per-kind latency split: TTFT (PREFILL round-trip,
+        handoff included) vs per-token decode — the signals the per-role
+        scaling policies consume, here as the end-to-end client view."""
+        return {
+            "ttft_s": self._client_ttft.get(),
+            "decode_latency_s": self._client_declat.get(),
+        }
 
     def migration_metrics(self) -> dict:
         """State-transfer counters for dashboards/benchmarks: how often
@@ -228,7 +311,19 @@ class MetricsHub:
                 "restores_total": mig.restores_total,
                 "reprefills_total": mig.reprefills_total,
                 "heal_migrations_total": mig.heal_migrations_total,
+                # steady-state prefill -> decode-pool KV handoffs
+                "handoffs_total": mig.handoffs_total,
+                "handoff_failures": mig.handoff_failures,
+                "handoff_p50_s": mig.handoff_p50_s(),
+                "handoff_bytes_total": sum(mig.handoff_bytes),
             })
+        snaps_store = getattr(self.server, "snapshots", None)
+        if snaps_store is not None:
+            # delta snapshots: how much of the background-snapshot stream
+            # rode the (base, delta) path and what it cost in bytes
+            out["delta_snapshots_total"] = snaps_store.delta_snapshots_taken
+            out["snapshot_delta_bytes_total"] = snaps_store.delta_bytes_total
+            out["snapshot_bytes_total"] = snaps_store.snapshot_bytes_total
         # thin-margin int8 -> fp demotions, wherever the quantized codec
         # runs (background snapshots and live handoffs)
         snaps = getattr(self.server, "snapshots", None)

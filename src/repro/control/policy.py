@@ -16,10 +16,19 @@ Provided policies:
 * :class:`TokenRatePolicy` — the generative-plane signal: size the stage by
   decode tokens/s against a per-replica capacity target, and never shrink
   while open sessions would have to relocate en masse.
+* :class:`TTFTSLOPolicy` — the prefill-pool signal: grow on TTFT (per-
+  prefill service EWMA, handoff included) breaching its SLO or on queue
+  backlog; shrink only when both are comfortably low.
 * :class:`HysteresisPolicy` — a wrapper adding the stability knobs every
   real autoscaler needs: K-consecutive-votes confirmation, post-action
   cooldown, and ±1 step clamping. Wrap any policy above with it to stop
   flapping on noisy load.
+* :class:`DisaggregatedStagePolicy` — per-role composition for a stage
+  with split pools: the prefill policy votes on the ``prefill`` slice of
+  the StageSnapshot, the decode policy on the ``decode`` slice, and each
+  resulting decision carries its ``role`` so the controller scales the
+  right pool. A stage without split pools falls back to the colocated
+  policy over the whole snapshot.
 
 Generative serving makes scale-down stateful: draining a replica relocates
 every session pinned to it (each one re-prefills its full history on a
@@ -28,6 +37,7 @@ many open sessions per replica a voluntary shrink may displace.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
 import time
@@ -43,14 +53,17 @@ class ScaleDecision:
     stage: int
     delta: int            # >0 scale up, <0 scale down, 0 hold
     reason: str
+    #: pool the action targets (None = the colocated 'both' pool)
+    role: Optional[str] = None
 
     @property
     def hold(self) -> bool:
         return self.delta == 0
 
 
-def hold(stage: int, reason: str = HOLD_REASON) -> ScaleDecision:
-    return ScaleDecision(stage, 0, reason)
+def hold(stage: int, reason: str = HOLD_REASON,
+         role: Optional[str] = None) -> ScaleDecision:
+    return ScaleDecision(stage, 0, reason, role)
 
 
 class ScalingPolicy(Protocol):
@@ -173,6 +186,95 @@ class TokenRatePolicy:
 
 
 @dataclasses.dataclass
+class TTFTSLOPolicy:
+    """Prefill-pool sizing: the user-visible prefill signal is time to
+    first token. Grow when the pool's TTFT EWMA breaches ``slo_s`` or the
+    per-replica backlog exceeds ``queue_target`` (queue depth leads TTFT —
+    a prefill burst shows up as backlog one EWMA half-life before it shows
+    up as latency); shrink only when TTFT is comfortably under the SLO
+    *and* the queue is near-empty."""
+
+    slo_s: float
+    queue_target: float = 4.0
+    shrink_frac: float = 0.3
+    idle_queue: float = 0.5
+    min_replicas: int = 1
+    max_replicas: int = 8
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        n = max(snap.n_replicas, 1)
+        ttft = snap.ttft_s
+        if n < self.max_replicas:
+            if ttft > self.slo_s:
+                return ScaleDecision(
+                    snap.stage, 1,
+                    f"TTFT {ttft * 1e3:.0f}ms > SLO "
+                    f"{self.slo_s * 1e3:.0f}ms")
+            if snap.queue_per_replica > self.queue_target:
+                return ScaleDecision(
+                    snap.stage, 1,
+                    f"prefill queue/replica {snap.queue_per_replica:.1f} "
+                    f"> {self.queue_target:g}")
+        if (ttft < self.shrink_frac * self.slo_s
+                and snap.queue_per_replica < self.idle_queue
+                and n > self.min_replicas):
+            return ScaleDecision(
+                snap.stage, -1,
+                f"TTFT {ttft * 1e3:.0f}ms well under SLO, queue idle")
+        return hold(snap.stage)
+
+
+@dataclasses.dataclass
+class DisaggregatedStagePolicy:
+    """Per-role composition for a disaggregated stage.
+
+    ``prefill`` votes on the stage's prefill-pool slice (queue depth /
+    TTFT), ``decode`` on the decode-pool slice (tokens/s + open sessions);
+    each vote is stamped with its role so the controller adds or drains in
+    the right pool. Policies carry hysteresis state, so give each stage its
+    own instance (the controller deep-copies a shared one). ``colocated``
+    governs 'both' replicas — the whole stage when no split pools exist
+    (role-less vote, byte-compatible with a plain single-policy stage) and
+    the 'both' slice of a mixed stage otherwise; it defaults to an
+    *independent copy* of the decode policy, so no pool is ever left
+    unmanaged and no hysteresis state is shared across slices.
+    """
+
+    prefill: ScalingPolicy
+    decode: ScalingPolicy
+    colocated: Optional[ScalingPolicy] = None
+
+    def __post_init__(self) -> None:
+        if self.colocated is None:
+            self.colocated = copy.deepcopy(self.decode)
+
+    def decide_many(self, snap: StageSnapshot) -> list[ScaleDecision]:
+        slices = getattr(snap, "role_slices", {}) or {}
+        out: list[ScaleDecision] = []
+        split = "prefill" in slices or "decode" in slices
+        if not split:
+            return [self.colocated.decide(snap)]
+        if "prefill" in slices:
+            d = self.prefill.decide(slices["prefill"])
+            out.append(dataclasses.replace(d, role="prefill"))
+        if "decode" in slices:
+            d = self.decode.decide(slices["decode"])
+            out.append(dataclasses.replace(d, role="decode"))
+        if "both" in slices:
+            d = self.colocated.decide(slices["both"])
+            out.append(dataclasses.replace(d, role="both"))
+        return out
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        """Single-decision view (first non-hold vote) for callers that do
+        not speak ``decide_many``."""
+        for d in self.decide_many(snap):
+            if not d.hold:
+                return d
+        return hold(snap.stage)
+
+
+@dataclasses.dataclass
 class HysteresisPolicy:
     """Stability wrapper: act only after ``confirm`` consecutive same-sign
     votes from ``inner``, wait out ``cooldown_s`` after every action, and
@@ -209,4 +311,6 @@ class HysteresisPolicy:
         self._streak_sign, self._streak = 0, 0
         self._last_action_t = now
         delta = max(-self.max_step, min(self.max_step, want.delta))
-        return ScaleDecision(snap.stage, delta, want.reason)
+        # replace() keeps whatever else the inner vote carried (its role
+        # stamp in particular — clamping must not retarget the pool)
+        return dataclasses.replace(want, delta=delta)

@@ -1,5 +1,12 @@
 from .engine import EngineSession, ServeEngine, sample_tokens
-from .envelope import Envelope, Kind, payload_nbytes
+from .envelope import (
+    Envelope,
+    Kind,
+    ROLE_BOTH,
+    ROLE_DECODE,
+    ROLE_PREFILL,
+    payload_nbytes,
+)
 from .executor import StageExecutor
 from .partition import (
     StageSpec,
@@ -16,6 +23,7 @@ from .router import ReplicaRouter
 __all__ = [
     "EngineSession", "ServeEngine", "sample_tokens",
     "Envelope", "Kind", "payload_nbytes",
+    "ROLE_BOTH", "ROLE_DECODE", "ROLE_PREFILL",
     "StageExecutor",
     "StageSpec", "split_stages", "stage_decode", "stage_forward",
     "stage_init_cache", "stage_params", "stage_prefill",

@@ -22,6 +22,14 @@ Lifecycle of a generative request (client-side loop in
 
 ``SCORE`` keeps the legacy stateless teacher-forced path alive under the
 same typed wire format.
+
+Disaggregated pools (role-specialized replicas): a stage may split its
+replicas into a ``prefill`` pool (long, compute-bound dispatches) and a
+``decode`` pool (short, latency-bound, batch-hungry steps). The envelope's
+``role`` tag tells every router which pool the work belongs to, and the
+``HANDOFF`` kind is the wire form of the freshly built KV cache streaming
+from a prefill replica to its session's decode home — typed like all other
+pipeline traffic, so byte accounting and dashboards see the transfer.
 """
 from __future__ import annotations
 
@@ -30,6 +38,20 @@ import enum
 from typing import Any, Optional
 
 from repro.core.transport import payload_nbytes
+
+#: replica/pool roles for disaggregated prefill/decode serving.
+#: ``both`` is the colocated default — one pool serves prefill and decode,
+#: exactly the pre-disaggregation behavior.
+ROLE_BOTH = "both"
+ROLE_PREFILL = "prefill"
+ROLE_DECODE = "decode"
+
+#: worlds/replicas able to serve work of a given role
+ROLE_CAPABLE = {
+    ROLE_PREFILL: (ROLE_PREFILL, ROLE_BOTH),
+    ROLE_DECODE: (ROLE_DECODE, ROLE_BOTH),
+    ROLE_BOTH: (ROLE_BOTH,),
+}
 
 
 class Kind(enum.IntEnum):
@@ -40,6 +62,8 @@ class Kind(enum.IntEnum):
     #               route) or, with ``error`` set, server-initiated — e.g. a
     #               deadline-expired step dropped at a stage boundary
     RETRY = 4     # session state lost; client must re-prefill on a survivor
+    HANDOFF = 5   # one chunk of a freshly prefilled KV cache streaming from
+    #               a prefill replica to the session's decode-pool home
 
 
 @dataclasses.dataclass
@@ -63,11 +87,25 @@ class Envelope:
     #: FINISH only: why the server ended the session (e.g. a deadline-
     #: expired step dropped at a stage boundary). None for client FINISHes.
     error: Optional[str] = None
+    #: which replica pool this work belongs to (routers restrict the
+    #: rotation to role-capable worlds); None routes over the whole pool
+    role: Optional[str] = None
+    #: PREFILL chain only: worker id of the sending stage's decode home for
+    #: this session — the receiving stage repins that home's route onto the
+    #: decode home it chooses, stitching the decode path pool-to-pool
+    home: Optional[str] = None
 
     @property
     def nbytes(self) -> int:
         """Wire size of the tensor payload (transport byte accounting)."""
         return payload_nbytes(self.payload)
+
+    @property
+    def bulk(self) -> bool:
+        """Bulk-transfer marker passthrough: a HANDOFF envelope wrapping a
+        snapshot chunk counts in the transport's bulk byte slice exactly
+        like the bare chunk would."""
+        return bool(getattr(self.payload, "bulk", False))
 
     def expired(self, now: float) -> bool:
         return self.deadline > 0.0 and now > self.deadline

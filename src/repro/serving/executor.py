@@ -35,10 +35,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import DENSE, MOE, ModelConfig
+from .envelope import ROLE_BOTH, ROLE_DECODE, ROLE_PREFILL
 from .partition import (
     StageSpec,
     stage_decode,
     stage_forward,
+    stage_init_cache,
     stage_params,
     stage_prefill,
     split_stages,
@@ -47,11 +49,17 @@ from .partition import (
 
 class StageExecutor:
     def __init__(self, cfg: ModelConfig, spec: StageSpec, sparams: Any, *,
-                 max_len: int = 256, pad_seq: bool = True) -> None:
+                 max_len: int = 256, pad_seq: bool = True,
+                 role: str = ROLE_BOTH) -> None:
         self.cfg = cfg
         self.spec = spec
         self.sparams = sparams
         self.max_len = max_len
+        #: which pool this executor serves: a ``prefill`` executor never
+        #: compiles decode buckets, a ``decode`` executor never compiles the
+        #: full prefill shape set — warm bootstrap replays only the role's
+        #: slice of a peer's shape profile (see :meth:`warm`)
+        self.role = role
         groups = [cfg.groups[gi] for gi, _, _ in spec.slices]
         #: every group uses a full (non-ring, non-SSM) attention cache —
         #: gates right-padding here and replay-idempotent snapshot restore
@@ -210,9 +218,23 @@ class StageExecutor:
         executable is compiled before real traffic arrives. Returns the
         number of warm dispatches issued. Dummy results are discarded; the
         dispatches land in the shared jit cache, which is the entire point.
+
+        Role filtering (disaggregated pools): a ``prefill`` executor replays
+        only the prefill shape set — its replicas never decode, so compiling
+        decode convoy widths would burn warm time on executables the jit
+        cache never serves. A ``decode`` executor skips prefill compiles
+        entirely: its caches arrive pre-built over the handoff wire, so the
+        donor caches for width warmup are constructed host-side with
+        :func:`stage_init_cache` (an allocation, not a compile) — one per
+        distinct batch shape instead of one prefill executable per sequence
+        bucket. Either way the role's warm bootstrap is strictly cheaper
+        than the colocated profile replay.
         """
+        if self.role == ROLE_DECODE:
+            return self._warm_decode_only(profile)
         dispatches = 0
-        widths = list(profile.get("widths", []))
+        widths = (list(profile.get("widths", []))
+                  if self.role != ROLE_PREFILL else [])
         for shape, dtype in profile.get("prefill", []):
             x = jnp.zeros(shape, dtype=jnp.dtype(dtype))
             # go through the jitted callable directly: prefill() would
@@ -222,6 +244,8 @@ class StageExecutor:
             jax.block_until_ready(out)
             self._prefill_shapes_seen.add((tuple(shape), str(dtype)))
             dispatches += 1
+            if self.role == ROLE_PREFILL:
+                continue
             # decode warmup needs a live cache of the right batch; reuse the
             # one this prefill just built
             step_x = jnp.zeros((shape[0], 1) + tuple(shape[2:]),
@@ -234,6 +258,30 @@ class StageExecutor:
             if not widths:
                 out2, _ = self.decode(cache, step_x, t)
                 jax.block_until_ready(out2)
+                dispatches += 1
+        self.stats["warmed_dispatches"] += dispatches
+        return dispatches
+
+    def _warm_decode_only(self, profile: dict) -> int:
+        """Decode-pool warm: the cache shape depends only on the session
+        batch (caches are allocated at ``max_len`` regardless of prompt
+        length), so one zero-filled donor cache per distinct batch shape
+        covers every decode executable the peer has served."""
+        dispatches = 0
+        widths = list(profile.get("widths", []))
+        batches = sorted({(shape[0], tuple(shape[2:]), dtype)
+                          for shape, dtype in profile.get("prefill", [])})
+        for bsz, tail, dtype in batches:
+            cache = stage_init_cache(self.cfg, self.spec, bsz, self.max_len)
+            step_x = jnp.zeros((bsz, 1) + tail, dtype=jnp.dtype(dtype))
+            t = self.max_len - 1
+            for w in widths:
+                outs = self.decode_many([cache] * w, [step_x] * w, [t] * w)
+                jax.block_until_ready(outs[0][0])
+                dispatches += 1
+            if not widths:
+                out, _ = self.decode(cache, step_x, t)
+                jax.block_until_ready(out)
                 dispatches += 1
         self.stats["warmed_dispatches"] += dispatches
         return dispatches

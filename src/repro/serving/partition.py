@@ -142,3 +142,21 @@ def stage_init_cache(cfg: ModelConfig, spec: StageSpec, batch: int,
                      max_len: int, dtype=None):
     sub = dataclasses.replace(cfg, groups=tuple(_stage_groups(cfg, spec)))
     return tfm.init_cache(sub, batch, max_len, dtype)
+
+
+def stage_cache_seq_axes(cfg: ModelConfig, spec: StageSpec):
+    """Per-leaf index of the decode-sequence axis of the stage cache tree
+    (-1 for leaves without one). This is the structural ground truth the
+    delta-snapshot codec slices along — a size-match heuristic is ambiguous
+    whenever another axis happens to equal ``max_len`` (e.g. head_dim 64
+    with a 64-token cache)."""
+    sub = dataclasses.replace(cfg, groups=tuple(_stage_groups(cfg, spec)))
+    axes = tfm.cache_logical_axes(sub, 1, 1)
+
+    def _is_names(x) -> bool:
+        return isinstance(x, tuple) and bool(x) and x[0] == "layers"
+
+    return jax.tree.map(
+        lambda names: (names.index("cache_seq")
+                       if "cache_seq" in names else -1),
+        axes, is_leaf=_is_names)

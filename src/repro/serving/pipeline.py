@@ -39,6 +39,21 @@ full re-prefill is the *fallback*, not the norm:
 * a deadline-expired envelope is dropped at the stage boundary with a
   FINISH(error) propagated to the client instead of being served late.
 
+Disaggregated prefill/decode pools (role-specialized replicas): a stage's
+replica count may be given as ``{"prefill": p, "decode": d}`` instead of an
+int, splitting the stage into a prefill pool (serves PREFILL/SCORE — long,
+compute-bound, compile-heavy dispatches) and a decode pool (serves DECODE —
+short, latency-bound, batch-hungry steps), each scalable on its own signal.
+The two pools meet at the *handoff*: a prefill replica builds the session's
+stage-slice KV cache, streams it to a placement-ranked decode-pool home over
+the statexfer chunked codec (HANDOFF envelopes), and stitches the decode
+route's pins onto that home — so every subsequent decode step bypasses the
+prefill pool entirely, and a burst of long prompts can no longer convoy
+decode microbatches behind prefill dispatches. ``role='both'`` (the default
+for int counts) keeps the colocated behavior bit-identical: caches install
+locally and no handoff ever runs. A failed handoff unwinds to RETRY + full
+re-prefill on the prefill pool — never a new failure mode.
+
 Elastic control hooks (consumed by repro.control):
 
 * ``remove_replica`` — scale-down: stop routing to the replica, *unpin* its
@@ -75,8 +90,16 @@ from repro.statexfer import (
     SnapshotStore,
     WarmBootstrap,
     argmax_margin,
+    cache_nbytes,
 )
-from .envelope import Envelope, Kind
+from .envelope import (
+    Envelope,
+    Kind,
+    ROLE_BOTH,
+    ROLE_CAPABLE,
+    ROLE_DECODE,
+    ROLE_PREFILL,
+)
 from .executor import StageExecutor
 from .partition import split_stages, stage_params
 from .router import ReplicaRouter
@@ -104,20 +127,25 @@ class _SessionLost(Exception):
 
 class _Replica:
     def __init__(self, server: "PipelineServer", worker_id: str,
-                 stage: int) -> None:
+                 stage: int, role: str = ROLE_BOTH) -> None:
         self.server = server
         self.worker_id = worker_id
         self.stage = stage
+        #: which pool this replica serves: ``both`` (colocated default),
+        #: ``prefill`` (builds caches, hands them off, never decodes), or
+        #: ``decode`` (receives caches over the handoff, serves every step)
+        self.role = role
         self.worker = server.cluster.worker(worker_id)
-        #: compute executor — the stage-shared one unless WarmBootstrap
+        #: compute executor — shared per (stage, role) unless WarmBootstrap
         #: installed a fresh per-replica executor (new-process simulation)
-        self.executor = server.stage_executors[stage]
+        self.executor = server.role_executor(stage, role)
         self.upstream: list[str] = []          # world names we recv on
         #: (world, upstream router that routes onto it) — scale-down needs to
         #: know exactly which rotation each inbound edge lives in
         self.upstream_edges: list[tuple[str, ReplicaRouter]] = []
         self.router = ReplicaRouter()          # downstream worlds we send on
         self.router.set_load_probe(server._edge_load)
+        self.router.set_drop_listener(server._forget_edge)
         self.inbox: asyncio.Queue = asyncio.Queue()
         #: envelopes popped during decode coalescing that must be served
         #: before the next inbox read (ordering across kinds)
@@ -134,6 +162,10 @@ class _Replica:
         #: sessions with a decode step currently executing/coalescing — the
         #: MigrationManager waits for a step boundary before snapshotting
         self.active: set[int] = set()
+        #: persistent prefill<->decode handoff worlds this replica is an
+        #: endpoint of (steady-state KV transfer channels; torn down with
+        #: the replica)
+        self.handoff_worlds: set[str] = set()
         self._pumps: dict[str, asyncio.Task] = {}
         self._run_task: Optional[asyncio.Task] = None
         self._reap_task: Optional[asyncio.Task] = None
@@ -150,6 +182,12 @@ class _Replica:
         self.decode_steps = 0        # decode envelopes served
         self.retries_sent = 0        # sessions bounced back for re-prefill
         self.expired = 0             # envelopes dropped past their deadline
+        # -- per-kind latency split (MetricsHub turns the deltas into TTFT
+        #    vs per-token decode EWMAs — the per-role policies' signals) ---
+        self.prefills = 0            # prefills served (incl. handoff time)
+        self.prefill_s_sum = 0.0     # wall time of served prefills
+        self.decode_s_sum = 0.0      # wall time of fused decode dispatches
+        self.handoffs_out = 0        # prefills handed to the decode pool
 
     def queue_depth(self) -> int:
         return (self.inbox.qsize() + len(self._stash) + self.inflight
@@ -234,6 +272,11 @@ class _Replica:
             await self._expire(env)
             return
         kind = env.kind
+        if kind is Kind.HANDOFF:
+            # handoff chunks travel dedicated pairwise worlds consumed by
+            # the MigrationManager's own receive loop; one in a serve inbox
+            # is a misroute — drop it rather than decode it
+            return
         if kind is Kind.RETRY:
             # stateless pass-through toward the client — any healthy path
             await self._forward_routed(env)
@@ -256,19 +299,61 @@ class _Replica:
             await self._send_retry(env)
             return
         y, cache = await loop.run_in_executor(None, ex.prefill, env.payload)
-        if self.server._is_last(self.stage):
+        server = self.server
+        if server._is_last(self.stage):
             y = y[:, -1]              # client only needs last-position logits
-        self.sessions[env.session_id] = _Session(
-            cache=cache, batch=int(env.payload.shape[0]),
-            step=env.step, touched=time.monotonic())
+        sid = env.session_id
+        batch = int(env.payload.shape[0])
+        # -- decode home: where this session's stage slice will live -------
+        # A 'both' replica keeps the cache (the colocated path, unchanged).
+        # A prefill-pool replica streams it to a placement-ranked decode
+        # peer over the statexfer chunked codec and pins the decode route
+        # there; with no decode-capable peer (e.g. the only decode replica
+        # just died and the heal is still in flight) it degrades to serving
+        # the session locally rather than livelocking the client in RETRY.
+        home: "_Replica" = self
+        if self.role == ROLE_PREFILL and sid >= 0:
+            peer = server._pick_decode_peer(self.stage, exclude=self,
+                                            nbytes=cache_nbytes(cache))
+            if peer is not None:
+                ok = await server.migrations.handoff_prefill(
+                    self, peer, sid, cache, batch, env.step)
+                if not ok:
+                    # mid-handoff failure: unwind to the at-least-once
+                    # discipline — RETRY bounces the client into a full
+                    # re-prefill on the prefill pool
+                    await self._send_retry(env)
+                    return
+                home = peer
+                self.handoffs_out += 1
+        if home is self:
+            self.sessions[sid] = _Session(
+                cache=cache, batch=batch, step=env.step,
+                touched=time.monotonic())
+        else:
+            # a step routed at us before the pins stitched (or a straggler
+            # in our channels) forwards in-process to the decode home
+            self.migrated[sid] = home
+            if server._is_last(self.stage):
+                client_edge = _edge(server.name, home.worker_id, CLIENT)
+                if client_edge in home.router.healthy():
+                    home.router.pin(sid, client_edge)
+        server._pin_upstream(self, env, home)
         world = await self._forward_routed(
-            dataclasses.replace(env, payload=y))
+            dataclasses.replace(env, payload=y, home=home.worker_id))
         if world is None:            # expired while parked — orphan reaped
-            self.sessions.pop(env.session_id, None)
+            home.sessions.pop(sid, None)
+            self.migrated.pop(sid, None)
             return
-        self.router.pin(env.session_id, world)
+        if home is self and self.router.pinned(sid) is None:
+            # colocated downstream pin — unless the next stage's handoff
+            # already stitched the decode route onto its own decode home
+            self.router.pin(sid, world)
         self.processed += 1
-        self.service_s_sum += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.service_s_sum += dt
+        self.prefill_s_sum += dt
+        self.prefills += 1
 
     async def _handle_decode(self, ex: StageExecutor, loop, env: Envelope,
                              t0: float) -> None:
@@ -329,7 +414,9 @@ class _Replica:
                 self.tokens_out += sess.batch
                 await self._forward_pinned(dataclasses.replace(e, payload=y))
                 self.processed += 1
-            self.service_s_sum += time.monotonic() - t0
+            dt = time.monotonic() - t0
+            self.service_s_sum += dt
+            self.decode_s_sum += dt
         finally:
             # coalesced extras were pulled out of the inbox by this handler;
             # the run loop only balances the first envelope's inflight count
@@ -371,21 +458,31 @@ class _Replica:
     async def _forward_routed(self, env: Envelope) -> Optional[str]:
         """Send via the rotation (SCORE/PREFILL/RETRY). Parks on an empty
         rotation until the controller heals a downstream replica; drops the
-        envelope if its deadline passes while parked. Returns the world used
-        (None if dropped)."""
+        envelope if its deadline passes while parked. PREFILL/SCORE honor
+        the envelope's role tag, so a split downstream stage receives them
+        in its prefill pool. Returns the world used (None if dropped)."""
         comm = self.worker.comm
+        role = (env.role if env.kind in (Kind.PREFILL, Kind.SCORE)
+                else None)
         while True:
             if env.expired(time.monotonic()):
                 self.expired += 1
                 return None
-            world = self.router.try_pick(least_loaded=self.server.least_loaded)
+            world = self.router.try_pick(
+                least_loaded=self.server.least_loaded, role=role)
             if world is None:
-                # Every downstream world is gone. Dying here would drop the
-                # in-flight payload and kill this serve loop for good — park
-                # instead and retry once the controller adds/heals a
-                # downstream replica.
+                # Every routable downstream world is gone. Dying here would
+                # drop the in-flight payload and kill this serve loop for
+                # good — park instead and retry once the controller
+                # adds/heals a downstream replica.
                 self.parked += 1
-                await self.router.wait_healthy()
+                if role is not None and self.router.healthy():
+                    # worlds exist, just none role-capable: the controller
+                    # is growing that pool — the any-world event is already
+                    # set, so poll instead of waiting on it
+                    await asyncio.sleep(0.005)
+                else:
+                    await self.router.wait_healthy()
                 continue
             try:
                 await comm.send(env, 1, world)
@@ -485,6 +582,14 @@ class _Replica:
             self.router.unpin(sid)
             if self.server._is_last(self.stage):
                 self.server.session_margins.pop(sid, None)
+        # forwarding stubs for handed-off sessions: once the decode home no
+        # longer holds the session (FINISHed/reaped/moved on), the stub is
+        # garbage — a long-lived prefill replica would otherwise keep one
+        # per prefill it ever served
+        for sid in [s for s, tgt in self.migrated.items()
+                    if s not in tgt.sessions and s not in tgt.held
+                    and s not in tgt.migrated]:
+            del self.migrated[sid]
 
     async def reap_loop(self) -> None:
         """Periodic TTL sweep: an *idle* replica (rerouted traffic, fenced
@@ -502,7 +607,7 @@ class PipelineServer:
     """Build/serve/heal a replicated stage pipeline on a MultiWorld cluster."""
 
     def __init__(self, cluster: Cluster, model, params,
-                 replicas: list[int], *, name: str = "pipe",
+                 replicas: list, *, name: str = "pipe",
                  least_loaded: bool = False, max_len: int = 256,
                  microbatch_max: int = 8, microbatch_wait_s: float = 0.002,
                  session_ttl_s: float = 60.0,
@@ -513,7 +618,27 @@ class PipelineServer:
         self.model = model
         self.cfg = model.cfg
         self.name = name
-        self.replica_counts = replicas
+        # replica spec per stage: an int builds that many colocated
+        # ('both') replicas — the pre-disaggregation behavior, unchanged —
+        # while {"prefill": p, "decode": d} splits the stage into
+        # role-specialized pools
+        self.replica_roles: list[dict[str, int]] = []
+        for spec in replicas:
+            if isinstance(spec, dict):
+                roles = {r: int(n) for r, n in spec.items() if int(n) > 0}
+                bad = set(roles) - {ROLE_BOTH, ROLE_PREFILL, ROLE_DECODE}
+                if bad:
+                    raise ValueError(f"unknown replica roles {sorted(bad)}")
+                if not any(r in (ROLE_BOTH, ROLE_PREFILL) for r in roles):
+                    # a decode-only stage could never serve a PREFILL: the
+                    # role-aware rotation would park every new session
+                    raise ValueError(
+                        "stage needs at least one prefill-capable "
+                        f"(prefill/both) replica: {roles}")
+                self.replica_roles.append(roles)
+            else:
+                self.replica_roles.append({ROLE_BOTH: int(spec)})
+        self.replica_counts = [sum(r.values()) for r in self.replica_roles]
         self.n_stages = len(replicas)
         self.least_loaded = least_loaded
         self.max_len = max_len
@@ -536,6 +661,11 @@ class PipelineServer:
         self.stage_executors = [
             StageExecutor(self.cfg, spec, sp, max_len=max_len)
             for spec, sp in zip(self.stage_specs, self.stage_param_sets)]
+        #: role-specialized executors, created lazily per (stage, role) and
+        #: shared within the pool — a split pool must NOT share the 'both'
+        #: executor's jit cache, or "prefill replicas skip decode-bucket
+        #: compiles" would be vacuously true
+        self._role_executors: dict[tuple[int, str], StageExecutor] = {}
         self.instantiator = OnlineInstantiator(cluster)
         #: state-transfer subsystem: live handoff + restore, background
         #: snapshots (opt-in via snapshot_interval_s), warm scale-up
@@ -549,6 +679,7 @@ class PipelineServer:
         self.client = cluster.worker(CLIENT)
         self.client_router = ReplicaRouter()   # worlds to stage-0 replicas
         self.client_router.set_load_probe(self._edge_load)
+        self.client_router.set_drop_listener(self._forget_edge)
         self._responses: dict[int, asyncio.Future] = {}
         self._req_ids = itertools.count()
         self._session_ids = itertools.count(1)
@@ -567,6 +698,10 @@ class PipelineServer:
         #: stage; the int8 snapshot path reads this to decide, per session,
         #: whether quantization noise could flip a greedy token
         self.session_margins: dict[int, float] = {}
+        #: client-observed per-kind latencies, drained by MetricsHub into
+        #: the TTFT / per-token-decode EWMAs the per-role policies consume
+        self.ttft_log: list[float] = []
+        self.decode_lat_log: list[float] = []
         self._wired_managers: set[str] = set()
         self._wire_manager(self.client.manager, self.client_router)
 
@@ -595,19 +730,108 @@ class PipelineServer:
         old = self.session_margins.get(sid)
         self.session_margins[sid] = m if old is None else min(old, m)
 
+    @staticmethod
+    def _note_latency(log: list, dt: float) -> None:
+        """Append one client-observed latency sample; the logs are drained
+        by MetricsHub each poll, so cap the tail for hub-less runs."""
+        log.append(dt)
+        if len(log) > 4096:
+            del log[:2048]
+
+    def role_executor(self, stage: int, role: str = ROLE_BOTH
+                      ) -> StageExecutor:
+        """The pool executor for (stage, role): the stage-shared one for
+        'both' (unchanged behavior), a lazily built role-specialized one —
+        own jit cache, role-filtered warm replay — for split pools."""
+        if role == ROLE_BOTH:
+            return self.stage_executors[stage]
+        key = (stage, role)
+        ex = self._role_executors.get(key)
+        if ex is None:
+            ex = StageExecutor(self.cfg, self.stage_specs[stage],
+                               self.stage_param_sets[stage],
+                               max_len=self.max_len, role=role)
+            self._role_executors[key] = ex
+        return ex
+
     def _edge_load(self, world: str) -> float:
-        """Router load probe: queue depth of the replica behind an edge."""
+        """Router load probe: queue depth of the replica behind an edge.
+        A fenced, retired, dead, or draining replica scores infinite — the
+        probe must never make a world it cannot serve look least loaded
+        (client edges have no replica mapping and score neutral)."""
         rep = self._world_to_replica.get(world)
-        return float(rep.queue_depth()) if rep is not None else 0.0
+        if rep is None:
+            return 0.0
+        if (world in self.broken_worlds or not rep.worker.alive
+                or rep.draining or rep not in self.replicas[rep.stage]):
+            return float("inf")
+        return float(rep.queue_depth())
+
+    def _forget_edge(self, world: str) -> None:
+        """Drop-listener for every router: a world gracefully retired from
+        a rotation loses its replica mapping at once, so no stale probe
+        target outlives the retirement (the load-probe prune)."""
+        self._world_to_replica.pop(world, None)
+
+    def decode_replicas(self, stage: int, exclude=None) -> list["_Replica"]:
+        """Replicas able to hold and serve decode state at ``stage``."""
+        return [r for r in self.replicas[stage]
+                if r is not exclude and r.worker.alive and not r.draining
+                and r.role != ROLE_PREFILL]
+
+    def _pick_decode_peer(self, stage: int, exclude: "_Replica",
+                          nbytes: int) -> Optional["_Replica"]:
+        """The decode-pool home for a freshly prefilled session: ranked by
+        (queue load + placement cost of the KV bytes about to move), the
+        same ranking every other state-moving chooser uses."""
+        peers = self.decode_replicas(stage, exclude=exclude)
+        if not peers:
+            return None
+        return self.migrations._rank(exclude.worker_id, peers, nbytes)
+
+    def _replica_by_id(self, worker_id: Optional[str],
+                       stage: Optional[int] = None) -> Optional["_Replica"]:
+        if worker_id is None:
+            return None
+        stages = [stage] if stage is not None else range(self.n_stages)
+        for si in stages:
+            for rep in self.replicas[si]:
+                if rep.worker_id == worker_id:
+                    return rep
+        return None
+
+    def _pin_upstream(self, receiver: "_Replica", env: Envelope,
+                      home: "_Replica") -> None:
+        """Stitch the decode route pool-to-pool during the PREFILL pass:
+        the upstream stage's decode home (or the client) pins this session
+        onto ``home``'s edge — not onto the prefill replica that merely
+        built the cache. For colocated ('both') hops this pins exactly the
+        edge the PREFILL travelled on, so the wiring is identical to the
+        pre-disaggregation pins; races lose to the ``migrated`` in-process
+        forwarding stub, never to a stuck session."""
+        sid = env.session_id
+        if sid < 0:
+            return
+        if receiver.stage == 0:
+            router, src = self.client_router, CLIENT
+        else:
+            up = self._replica_by_id(env.home, stage=receiver.stage - 1)
+            if up is None:
+                return   # upstream home already gone; restore path covers it
+            router, src = up.router, up.worker_id
+        edge = _edge(self.name, src, home.worker_id)
+        if edge in router.healthy():
+            router.pin(sid, edge)
 
     def _event(self, kind: str, detail: str) -> None:
         self.events.append((time.monotonic(), kind, detail))
 
     # ------------------------------------------------------------------ build
     async def start(self) -> None:
-        for si, count in enumerate(self.replica_counts):
-            for _ in range(count):
-                await self.add_replica(si)
+        for si, roles in enumerate(self.replica_roles):
+            for role, count in roles.items():
+                for _ in range(count):
+                    await self.add_replica(si, role=role)
         if self.snapshots is not None:
             # ride on the client worker so Cluster.shutdown reaps the task
             self.snapshots.start(spawn=self.client.spawn)
@@ -628,11 +852,17 @@ class PipelineServer:
 
         manager.on_world_broken(cb)
 
-    async def add_replica(self, stage: int, *, warm: bool = False,
+    async def add_replica(self, stage: int, *, role: str = ROLE_BOTH,
+                          warm: bool = False,
                           fresh_executor: bool = False,
                           near: Optional[str] = None,
                           host: Optional[str] = None) -> str:
         """Online instantiation of one replica (paper Fig. 2c / §4.2).
+
+        ``role`` selects the pool the replica joins: ``both`` (colocated
+        default), ``prefill``, or ``decode``. The role decides which pool
+        executor it shares, how upstream routers may route to it, and which
+        slice of a peer's shape profile a warm bootstrap replays.
 
         ``warm=True`` runs the WarmBootstrap first: stage weights are
         fetched from a peer replica over the wire and the peer's served
@@ -649,14 +879,15 @@ class PipelineServer:
         worker is placed *before* the warm bootstrap so the peer choice can
         price the weight bytes it is about to move.
         """
-        worker_id = f"{self.name}-s{stage}-r{next(self._uid)}"
+        tag = "" if role == ROLE_BOTH else f"{role}-"
+        worker_id = f"{self.name}-s{stage}-{tag}r{next(self._uid)}"
         if host is not None:
             self.cluster.topology.place_on(worker_id, host)
         self.cluster.worker(worker_id, near=near)
-        rep = _Replica(self, worker_id, stage)
+        rep = _Replica(self, worker_id, stage, role=role)
         if warm:
             report = await self.bootstrap.bootstrap(
-                stage, worker_id, fresh_executor=fresh_executor)
+                stage, worker_id, fresh_executor=fresh_executor, role=role)
             rep.executor = report["executor"]
             self._event("warm_bootstrap",
                         f"{worker_id} <- {report['peer']} "
@@ -706,13 +937,16 @@ class PipelineServer:
                 continue
             rep.watch_upstream(world, router)
             self._world_to_replica[world] = rep
-            router.add(world)
+            # the rotation learns the receiver's role, so PREFILLs can be
+            # steered into the prefill pool
+            router.add(world, role=rep.role)
         for world, down in down_watchers:
             if _gone(down, self.replicas[stage + 1]
                      if stage < self.n_stages - 1 else []):
                 self._remove_world_everywhere(world)
                 continue
-            rep.router.add(world)
+            rep.router.add(world,
+                           role=ROLE_BOTH if down is None else down.role)
             if down is None:
                 self._watch_client_world(world)
             else:
@@ -731,6 +965,7 @@ class PipelineServer:
     # ------------------------------------------------------------- scale-down
     async def remove_replica(self, stage: int,
                              worker_id: Optional[str] = None, *,
+                             role: Optional[str] = None,
                              drain: bool = True,
                              timeout: float = 30.0,
                              migrate: bool = True) -> str:
@@ -749,6 +984,13 @@ class PipelineServer:
         ``drain=False`` (heal): the replica is already dead; just unhook the
         bookkeeping and purge its (broken) worlds so a replacement can be
         instantiated cleanly.
+
+        ``role=`` restricts the victim choice to that pool (the per-role
+        scale-down path). Whatever selected the victim, a drain refuses to
+        remove the last replica *capable* of a role the victim serves —
+        draining the last prefill-capable replica would strand every new
+        session, and the last decode-capable one every open session, even
+        if other pools still have capacity.
         """
         reps = self.replicas[stage]
         if worker_id is not None:
@@ -756,15 +998,23 @@ class PipelineServer:
             if rep is None:
                 raise KeyError(f"no replica {worker_id} in stage {stage}")
         else:
-            live = [r for r in reps if r.worker.alive and not r.draining]
+            live = [r for r in reps if r.worker.alive and not r.draining
+                    and (role is None or r.role == role)]
             if not live:
-                raise RuntimeError(f"stage {stage} has no removable replica")
+                raise RuntimeError(
+                    f"stage {stage} has no removable replica"
+                    + (f" in role {role!r}" if role else ""))
             rep = min(live, key=lambda r: (r.open_sessions(),
                                            r.queue_depth()))
-        if drain and len([r for r in reps
-                          if r.worker.alive and not r.draining]) <= 1:
-            raise RuntimeError(
-                f"refusing to drain the last healthy replica of stage {stage}")
+        if drain:
+            others = [r for r in reps if r is not rep
+                      and r.worker.alive and not r.draining]
+            for cap in (ROLE_PREFILL, ROLE_DECODE):
+                if rep.role in ROLE_CAPABLE[cap] and not any(
+                        r.role in ROLE_CAPABLE[cap] for r in others):
+                    raise RuntimeError(
+                        f"refusing to drain the last healthy "
+                        f"{cap}-capable replica of stage {stage}")
 
         rep.draining = True
         self._event("drain_begin", rep.worker_id)
@@ -848,6 +1098,12 @@ class PipelineServer:
                 collector.cancel()
             rep.router.remove(world)
             self._remove_world_everywhere(world)
+        for world in rep.handoff_worlds:
+            # persistent handoff channels die with either endpoint; the
+            # partner's set keeps a stale name, which is harmless — peers
+            # are only ever picked among live replicas
+            self._remove_world_everywhere(world)
+        rep.handoff_worlds.clear()
         if rep in self.replicas[rep.stage]:
             self.replicas[rep.stage].remove(rep)
         # reclaim the worker: stop its watchdog task and drop it from the
@@ -923,7 +1179,7 @@ class PipelineServer:
                 env = Envelope(
                     next(self._req_ids), sid, Kind.DECODE, step=s0 + k,
                     deadline=time.monotonic() + step_timeout,
-                    payload=out[k][:, None])
+                    payload=out[k][:, None], role=ROLE_DECODE)
                 resp = await self._roundtrip(env, world, step_timeout)
                 if resp.kind is not Kind.DECODE:
                     return False
@@ -985,15 +1241,24 @@ class PipelineServer:
                 pass
         self.session_margins.pop(sid, None)
 
-    async def _pick_entry(self, timeout: float) -> Optional[str]:
-        world = self.client_router.try_pick(self.least_loaded)
-        if world is not None:
-            return world
-        try:
-            await asyncio.wait_for(self.client_router.wait_healthy(), timeout)
-        except asyncio.TimeoutError:
-            return None
-        return self.client_router.try_pick(self.least_loaded)
+    async def _pick_entry(self, timeout: float,
+                          role: Optional[str] = None) -> Optional[str]:
+        deadline = time.monotonic() + timeout
+        while True:
+            world = self.client_router.try_pick(self.least_loaded, role=role)
+            if world is not None:
+                return world
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return None
+            # the any-world event may already be set while the role's pool
+            # is empty (controller still growing it) — bound each wait and
+            # re-check the role-filtered rotation
+            try:
+                await asyncio.wait_for(self.client_router.wait_healthy(),
+                                       min(0.05, remaining))
+            except asyncio.TimeoutError:
+                pass
 
     async def submit(self, tokens: np.ndarray, *, timeout: float = 30.0,
                      retries: int = 2) -> jax.Array:
@@ -1007,11 +1272,12 @@ class PipelineServer:
         x = jnp.asarray(tokens, jnp.int32)
         last_err: Optional[Exception] = None
         for _ in range(retries + 1):
-            world = await self._pick_entry(timeout)
+            world = await self._pick_entry(timeout, role=ROLE_PREFILL)
             if world is None:
                 last_err = asyncio.TimeoutError("no healthy entry replica")
                 continue
-            env = Envelope(next(self._req_ids), -1, Kind.SCORE, payload=x)
+            env = Envelope(next(self._req_ids), -1, Kind.SCORE, payload=x,
+                           role=ROLE_PREFILL)
             try:
                 resp = await self._roundtrip(env, world, timeout)
                 return resp.payload
@@ -1053,37 +1319,48 @@ class PipelineServer:
                             jnp.concatenate([seq, jnp.stack(out, 1)], 1))
                     hist_len = hist.shape[1]
                     base = len(out)
-                    world = await self._pick_entry(step_timeout)
+                    world = await self._pick_entry(step_timeout,
+                                                   role=ROLE_PREFILL)
                     if world is None:
                         raise _SessionLost("no healthy entry replica")
                     sid = next(self._session_ids)
+                    t_send = time.monotonic()
                     env = Envelope(
                         next(self._req_ids), sid, Kind.PREFILL,
                         step=hist_len - 1,
                         deadline=time.monotonic() + step_timeout,
-                        payload=hist)
+                        payload=hist, role=ROLE_PREFILL)
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
                         raise _SessionLost("prefill bounced")
                     if resp.kind is Kind.FINISH:
                         raise _SessionLost(resp.error or "server finished")
-                    self.client_router.pin(sid, world)
+                    self._note_latency(self.ttft_log,
+                                       time.monotonic() - t_send)
+                    if self.client_router.pinned(sid) is None:
+                        # a split stage-0 already stitched the pin onto the
+                        # session's decode home during the prefill pass —
+                        # only the colocated path pins the entry world here
+                        self.client_router.pin(sid, world)
                 else:
                     world = self.client_router.pinned(sid)
                     if world is None:
                         raise _SessionLost("entry replica gone")
                     # position of the fed token: history end + tokens
                     # generated since that history was prefilled
+                    t_send = time.monotonic()
                     env = Envelope(
                         next(self._req_ids), sid, Kind.DECODE,
                         step=hist_len + (len(out) - base) - 1,
                         deadline=time.monotonic() + step_timeout,
-                        payload=out[-1][:, None])
+                        payload=out[-1][:, None], role=ROLE_DECODE)
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
                         raise _SessionLost("decode bounced")
                     if resp.kind is Kind.FINISH:
                         raise _SessionLost(resp.error or "server finished")
+                    self._note_latency(self.decode_lat_log,
+                                       time.monotonic() - t_send)
                 # greedy pick on the host: the logits are tiny (B,V) and a
                 # jax dispatch per token per session would dominate the
                 # client loop at smoke scale
@@ -1129,10 +1406,13 @@ class PipelineServer:
         return np.stack([np.asarray(t) for t in out], axis=1)
 
     # ------------------------------------------------------------------ intro
-    def healthy_replicas(self, stage: int) -> list[str]:
+    def healthy_replicas(self, stage: int,
+                         role: Optional[str] = None) -> list[str]:
         out = []
         for rep in self.replicas[stage]:
             if not rep.worker.alive or rep.draining:
+                continue
+            if role is not None and rep.role != role:
                 continue
             out.append(rep.worker_id)
         return out
@@ -1165,6 +1445,7 @@ class PipelineServer:
             for rep in reps:
                 out[rep.worker_id] = {
                     "stage": stage,
+                    "role": rep.role,
                     "alive": rep.worker.alive,
                     "draining": rep.draining,
                     "queue_depth": rep.queue_depth(),
@@ -1181,5 +1462,7 @@ class PipelineServer:
                     "expired": rep.expired,
                     "held_sessions": len(rep.held),
                     "migrated_away": len(rep.migrated),
+                    "prefills": rep.prefills,
+                    "handoffs_out": rep.handoffs_out,
                 }
         return out

@@ -16,6 +16,21 @@ Two pick disciplines:
   plane wires this to per-replica inbox depth); falls back to
   fewest-routed-so-far when no probe is installed.
 
+Role-specialized pools (disaggregated serving): each world is tagged with
+the receiving replica's role (``prefill`` / ``decode`` / ``both``) at
+:meth:`add` time. A pick with ``role=`` restricts the rotation to worlds
+whose replica can serve that role — PREFILLs land in the prefill pool,
+while ``both`` worlds (the colocated default) serve everything, so a
+pipeline with no split pools routes exactly as before.
+
+Probe hygiene: ``remove``/``mark_broken`` prune the world's routed history,
+and ``remove`` additionally fires the drop listener
+(:meth:`set_drop_listener`) so the owner can forget its side of the load
+probe in the same tick — ``pick_least_loaded`` must never score a dead or
+retired world, not even through a stale probe target left behind by the
+callback. (Fenced worlds keep their owner-side mapping until teardown needs
+it; the owner's probe guards them by health instead.)
+
 Empty-rotation safety: ``pick`` raises (legacy behavior, callers that can't
 wait), while ``try_pick``/``wait_healthy`` let a sender park a payload until
 a world is added instead of dying — a replica must survive the window where
@@ -36,6 +51,8 @@ import asyncio
 import itertools
 from typing import Callable, Hashable, Optional
 
+from .envelope import ROLE_BOTH, ROLE_CAPABLE
+
 
 class ReplicaRouter:
     def __init__(self, worlds: Optional[list[str]] = None) -> None:
@@ -43,23 +60,35 @@ class ReplicaRouter:
         self._dead: set[str] = set()
         self._rr = itertools.count()
         self.routed: dict[str, int] = {}
+        #: world -> role of the replica behind it (both = serves everything)
+        self._roles: dict[str, str] = {}
         #: session id -> world holding that session's downstream state
         self._pins: dict[Hashable, str] = {}
         #: optional world -> load metric (lower is better); see set_load_probe
         self._load_probe: Optional[Callable[[str], float]] = None
+        #: fired when a world leaves rotation (remove/mark_broken) so the
+        #: owner can prune its side of the load probe in the same tick
+        self._drop_listener: Optional[Callable[[str], None]] = None
         self._nonempty = asyncio.Event()
         if self._worlds:
             self._nonempty.set()
 
     # -- membership ----------------------------------------------------------
-    def add(self, world: str) -> None:
+    def add(self, world: str, role: str = ROLE_BOTH) -> None:
         if world not in self._worlds:
             self._worlds.append(world)
+        self._roles[world] = role
         self._dead.discard(world)
         self._nonempty.set()
 
+    def role_of(self, world: str) -> str:
+        return self._roles.get(world, ROLE_BOTH)
+
     def mark_broken(self, world: str) -> None:
+        # routed history pruned too: the no-probe fallback of
+        # pick_least_loaded must not keep weighing a fenced world's past
         self._dead.add(world)
+        self.routed.pop(world, None)
         self._drop_pins(world)
         if not self.healthy():
             self._nonempty.clear()
@@ -70,9 +99,15 @@ class ReplicaRouter:
             self._worlds.remove(world)
         self._dead.discard(world)
         self.routed.pop(world, None)
+        self._roles.pop(world, None)
         self._drop_pins(world)
+        self._notify_drop(world)
         if not self.healthy():
             self._nonempty.clear()
+
+    def _notify_drop(self, world: str) -> None:
+        if self._drop_listener is not None:
+            self._drop_listener(world)
 
     # -- session affinity -----------------------------------------------------
     def pin(self, session_id: Hashable, world: str) -> None:
@@ -101,8 +136,13 @@ class ReplicaRouter:
         for sid in [s for s, w in self._pins.items() if w == world]:
             del self._pins[sid]
 
-    def healthy(self) -> list[str]:
-        return [w for w in self._worlds if w not in self._dead]
+    def healthy(self, role: Optional[str] = None) -> list[str]:
+        live = [w for w in self._worlds if w not in self._dead]
+        if role is None:
+            return live
+        capable = ROLE_CAPABLE.get(role, (role, ROLE_BOTH))
+        return [w for w in live
+                if self._roles.get(w, ROLE_BOTH) in capable]
 
     @property
     def worlds(self) -> list[str]:
@@ -114,18 +154,27 @@ class ReplicaRouter:
         """Install a world -> current-load function used by pick_least_loaded."""
         self._load_probe = probe
 
-    def pick(self) -> str:
-        live = self.healthy()
+    def set_drop_listener(self, cb: Optional[Callable[[str], None]]) -> None:
+        """Install a callback fired whenever a world leaves rotation, so the
+        load-probe owner can forget the world's probe target immediately —
+        without it, ``pick_least_loaded``'s probe could keep consulting a
+        retired replica's counters through a stale mapping."""
+        self._drop_listener = cb
+
+    def pick(self, role: Optional[str] = None) -> str:
+        live = self.healthy(role)
         if not live:
-            raise RuntimeError("no healthy replica worlds")
+            raise RuntimeError("no healthy replica worlds"
+                               + (f" for role {role!r}" if role else ""))
         world = live[next(self._rr) % len(live)]
         self.routed[world] = self.routed.get(world, 0) + 1
         return world
 
-    def pick_least_loaded(self) -> str:
-        live = self.healthy()
+    def pick_least_loaded(self, role: Optional[str] = None) -> str:
+        live = self.healthy(role)
         if not live:
-            raise RuntimeError("no healthy replica worlds")
+            raise RuntimeError("no healthy replica worlds"
+                               + (f" for role {role!r}" if role else ""))
         if self._load_probe is not None:
             world = min(live, key=self._load_probe)
         else:
@@ -133,12 +182,14 @@ class ReplicaRouter:
         self.routed[world] = self.routed.get(world, 0) + 1
         return world
 
-    def try_pick(self, least_loaded: bool = False) -> Optional[str]:
+    def try_pick(self, least_loaded: bool = False,
+                 role: Optional[str] = None) -> Optional[str]:
         """Like pick()/pick_least_loaded() but returns None when rotation is
         empty, so callers can park instead of crash."""
-        if not self.healthy():
+        if not self.healthy(role):
             return None
-        return self.pick_least_loaded() if least_loaded else self.pick()
+        return (self.pick_least_loaded(role) if least_loaded
+                else self.pick(role))
 
     async def wait_healthy(self) -> None:
         """Park until at least one healthy world is in rotation."""

@@ -42,7 +42,13 @@ from .codec import (
     snapshot_to_blob_checked,
     tree_equal,
 )
-from .manager import MigrationManager
+from .codec import (
+    apply_snapshot_delta,
+    blob_base_step,
+    encode_cache_delta,
+    snapshot_delta_to_blob,
+)
+from .manager import MigrationManager, cache_nbytes
 from .snapstore import SnapshotStore
 
 __all__ = [
@@ -55,5 +61,7 @@ __all__ = [
     "quantization_noise", "snapshot_assemble", "snapshot_encode",
     "snapshot_from_blob", "snapshot_to_blob", "snapshot_to_blob_checked",
     "tree_equal",
-    "MigrationManager", "SnapshotStore", "WarmBootstrap",
+    "apply_snapshot_delta", "blob_base_step", "encode_cache_delta",
+    "snapshot_delta_to_blob",
+    "MigrationManager", "SnapshotStore", "WarmBootstrap", "cache_nbytes",
 ]

@@ -49,12 +49,20 @@ class WarmBootstrap:
         self.transfer_s: list[float] = []
         self.warm_s: list[float] = []
 
-    def _pick_peer(self, stage: int, worker_id: str):
+    def _pick_peer(self, stage: int, worker_id: str, role: str = "both"):
         """Weight-source choice: a same-host peer saves a cross-host copy of
-        the whole stage pytree, which dwarfs any queue-depth difference."""
+        the whole stage pytree, which dwarfs any queue-depth difference.
+        A same-*role* peer is preferred over any other — its served shape
+        profile is exactly the traffic the new replica's pool will see, so
+        the compile warmup replays nothing the role can't use — but weights
+        are role-agnostic, so any peer works as the fallback."""
         server = self.server
         peers = [r for r in server.replicas[stage]
                  if r.worker.alive and not r.draining]
+        if role != "both":
+            same = [r for r in peers
+                    if getattr(r, "role", "both") == role]
+            peers = same or peers
         if not peers:
             return None
         placement = getattr(server.cluster, "placement", None)
@@ -65,20 +73,25 @@ class WarmBootstrap:
             r.queue_depth(), r.worker_id, worker_id, nbytes))
 
     async def bootstrap(self, stage: int, worker_id: str, *,
-                        fresh_executor: bool = False) -> dict:
+                        fresh_executor: bool = False,
+                        role: str = "both") -> dict:
         """Fetch weights + warm compiles for a new replica of ``stage``.
         Returns a report dict whose ``executor`` the caller installs on the
         replica before it starts serving. The weight fetch only happens for
         a fresh executor — the shared per-stage executor already holds the
         stage params, and streaming a pytree nobody will use is pure wire
-        cost."""
+        cost. ``role`` selects the pool executor and filters the warm
+        replay to the role's slice of the peer profile (a prefill replica
+        never compiles decode widths and vice versa — measurably cheaper
+        than the colocated replay)."""
         from repro.serving.executor import StageExecutor
 
         server = self.server
-        peer = self._pick_peer(stage, worker_id)
+        peer = self._pick_peer(stage, worker_id, role)
         report: dict = {"stage": stage, "peer": peer.worker_id if peer
                         else None, "bytes": 0, "transfer_s": 0.0,
-                        "warm_s": 0.0, "fresh_executor": fresh_executor}
+                        "warm_s": 0.0, "fresh_executor": fresh_executor,
+                        "role": role}
 
         if fresh_executor:
             sparams = server.stage_param_sets[stage]
@@ -89,9 +102,9 @@ class WarmBootstrap:
                 report["bytes"] = self.weight_bytes[-1]
             executor = StageExecutor(
                 server.cfg, server.stage_specs[stage], sparams,
-                max_len=server.max_len)
+                max_len=server.max_len, role=role)
         else:
-            executor = server.stage_executors[stage]
+            executor = server.role_executor(stage, role)
 
         if peer is not None:
             profile = peer.executor.warm_profile()

@@ -64,6 +64,10 @@ class SnapshotHeader:
     #: worker that captured the state — restore targets are ranked by
     #: placement cost *from here*, so the bytes prefer to stay on-host
     origin: Optional[str] = None
+    #: delta blobs only: decode cursor of the base snapshot this delta
+    #: extends (a delta against any other base fails closed); None for
+    #: full snapshots
+    base_step: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,10 +241,127 @@ def blob_step(blob: bytes) -> int:
     return header.step
 
 
+def blob_base_step(blob: bytes) -> Optional[int]:
+    """Base cursor a delta blob extends (None for full snapshots)."""
+    header, _ = pickle.loads(blob)
+    return getattr(header, "base_step", None)
+
+
 def blob_origin(blob: bytes) -> Optional[str]:
     """Capturing worker of a stored blob, without materializing the cache."""
     header, _ = pickle.loads(blob)
     return getattr(header, "origin", None)
+
+
+# ------------------------------------------------------- delta snapshots
+# A full-attention cache at decode position t differs from the same
+# session's cache at position t0 < t only in positions t0+1..t of each
+# leaf's sequence axis — prefill writes positions 0..s0-1 once, each decode
+# step writes exactly its own slot, and earlier slots are immutable. A
+# *delta* snapshot therefore re-encodes only that slice, cutting
+# steady-state background-snapshot bandwidth by ~seq_len/interval_tokens.
+# The sequence axis is identified structurally (the axis sized ``seq_len``);
+# a leaf with zero or several matching axes ships whole — correct, merely
+# uncompressed. Deltas are fp-only (an int8 re-quantized slice would not
+# splice bit-exactly into its base) and only valid for full caches —
+# ring-buffer and SSM state mutate old positions, so those stages take full
+# snapshots. A delta that fails any integrity check, or whose recorded
+# ``base_step`` does not match the base it is applied to, raises and the
+# caller falls back to the base snapshot alone (an older but valid cursor).
+
+@dataclasses.dataclass(frozen=True)
+class _DeltaLeaf:
+    """One leaf of a delta tree: either a slice of the sequence axis
+    (``axis`` set, covering base positions ``t0+1 .. t0+data.shape[axis]``)
+    or a full replacement (``axis`` None)."""
+
+    axis: Optional[int]
+    data: np.ndarray
+
+
+def _seq_axis(shape: tuple, seq_len: int) -> Optional[int]:
+    axes = [i for i, n in enumerate(shape) if n == seq_len]
+    return axes[0] if len(axes) == 1 else None
+
+
+def encode_cache_delta(cache: Any, *, base_step: int, step: int,
+                       seq_len: int, seq_axes: Any = None) -> bytes:
+    """Serialize only positions ``base_step+1 .. step`` of each leaf's
+    sequence axis. ``seq_axes`` is an optional tree matching ``cache``
+    whose leaves name each leaf's sequence axis (-1 = none; see
+    ``stage_cache_seq_axes``) — the structural ground truth. Without it a
+    unique-size heuristic is used, and any leaf whose sequence axis cannot
+    be determined unambiguously ships whole (correct, just uncompressed)."""
+    host = _host_cache(cache)
+
+    def enc(leaf, ax) -> _DeltaLeaf:
+        arr = np.asarray(leaf)
+        if ax is None or ax < 0 or ax >= arr.ndim:
+            return _DeltaLeaf(axis=None, data=arr)
+        sl = [slice(None)] * arr.ndim
+        sl[ax] = slice(base_step + 1, step + 1)
+        return _DeltaLeaf(axis=ax, data=np.ascontiguousarray(arr[tuple(sl)]))
+
+    if seq_axes is not None:
+        tree = jax.tree.map(enc, host, seq_axes)
+    else:
+        tree = jax.tree.map(
+            lambda leaf: enc(leaf, _seq_axis(np.asarray(leaf).shape,
+                                             seq_len)), host)
+    return pickle.dumps(tree, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def snapshot_delta_to_blob(snap: SessionSnapshot, *, base_step: int,
+                           seq_len: int, seq_axes: Any = None) -> bytes:
+    """Single-buffer delta form for the snapshot store: (header || payload)
+    with ``base_step`` recording the base cursor this delta extends."""
+    payload = encode_cache_delta(snap.cache, base_step=base_step,
+                                 step=snap.step, seq_len=seq_len,
+                                 seq_axes=seq_axes)
+    header = SnapshotHeader(
+        version=SNAPSHOT_VERSION, session_id=snap.session_id,
+        stage=snap.stage, step=snap.step, batch=snap.batch, codec=FP,
+        nbytes=len(payload), n_chunks=1, crc32=zlib.crc32(payload),
+        origin=snap.origin, base_step=base_step)
+    return pickle.dumps((header, payload), protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def apply_snapshot_delta(base: SessionSnapshot,
+                         blob: bytes) -> SessionSnapshot:
+    """Reconstruct the newer snapshot from ``base`` + a delta blob. Fails
+    closed (:class:`SnapshotTransferError`) on any integrity or base-cursor
+    mismatch — the caller then restores from the base alone."""
+    try:
+        header, payload = pickle.loads(blob)
+    except Exception as e:  # noqa: BLE001 — any unpickle failure is torn state
+        raise SnapshotTransferError(f"undecodable delta blob: {e!r}") from e
+    if header.version != SNAPSHOT_VERSION:
+        raise SnapshotTransferError(
+            f"snapshot version {header.version} != {SNAPSHOT_VERSION}")
+    if len(payload) != header.nbytes or zlib.crc32(payload) != header.crc32:
+        raise SnapshotTransferError("delta blob failed integrity check")
+    base_step = getattr(header, "base_step", None)
+    if base_step is None or base_step != base.step:
+        raise SnapshotTransferError(
+            f"delta base cursor {base_step} != base snapshot {base.step}")
+    if header.session_id != base.session_id or header.stage != base.stage:
+        raise SnapshotTransferError("delta applied to the wrong session")
+    tree = pickle.loads(payload)
+
+    def merge(b, d: _DeltaLeaf):
+        if d.axis is None:
+            return d.data
+        out = np.array(np.asarray(b))
+        sl = [slice(None)] * out.ndim
+        sl[d.axis] = slice(base_step + 1, base_step + 1 + d.data.shape[d.axis])
+        out[tuple(sl)] = d.data
+        return out
+
+    merged = jax.tree.map(merge, _host_cache(base.cache), tree)
+    return SessionSnapshot(
+        session_id=header.session_id, stage=header.stage, step=header.step,
+        batch=header.batch, cache=jax.tree.map(jnp.asarray, merged),
+        origin=getattr(header, "origin", None))
 
 
 # ------------------------------------------------------- int8 margin check

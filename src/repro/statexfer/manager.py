@@ -24,6 +24,14 @@ of the README recovery matrix:
   stage, no healthy replica, torn blob — returns ``None`` and the caller
   re-prefills (at-least-once semantics are never weakened).
 
+A third path makes the same machinery the *steady-state* data path
+(disaggregated prefill/decode pools): :meth:`handoff_prefill` streams a
+freshly built KV cache from a prefill-pool replica to the session's chosen
+decode-pool home, chunk-by-chunk over HANDOFF envelopes — the FailSafe
+observation that resilience-grade state movement doubles as a serving
+primitive. The fp codec keeps the handoff byte-exact, so greedy decode on
+the decode home is token-identical to decoding where the cache was built.
+
 Anything that goes wrong mid-handoff (transfer error, vanished survivor,
 missing pin) unwinds to the PR 2 behavior: the session is bounced via RETRY
 and the client re-prefills. State transfer is an optimization, never a new
@@ -37,7 +45,12 @@ import itertools
 import time
 from typing import Optional
 
-from repro.core import WorldBrokenError, WorldNotFoundError, WorldSpec
+from repro.core import (
+    WorldBrokenError,
+    WorldNotFoundError,
+    WorldSpec,
+    WorldStatus,
+)
 from repro.core.transport import payload_nbytes
 
 from .codec import (
@@ -62,14 +75,22 @@ def cache_nbytes(cache) -> int:
 
 async def stream_chunks(server, src_worker, dst_worker, world: str,
                         chunks: list, *, backpressure_bytes: int,
-                        timeout_s: float) -> list:
-    """Stream wire chunks src -> dst over a fresh pairwise world with
-    byte-level backpressure and a hard receive deadline, then tear the
-    world down. Shared by session migration and warm bootstrap — any bulk
-    state transfer between two live workers takes this path, so a silently
-    hung peer costs ``timeout_s``, never a wedged coroutine."""
-    await server.instantiator.instantiate(
-        [WorldSpec.pair(world, src_worker.worker_id, dst_worker.worker_id)])
+                        timeout_s: float, persistent: bool = False) -> list:
+    """Stream wire chunks src -> dst over a pairwise world with byte-level
+    backpressure and a hard receive deadline. Shared by session migration,
+    warm bootstrap, and the prefill->decode handoff — any bulk state
+    transfer between two live workers takes this path, so a silently hung
+    peer costs ``timeout_s``, never a wedged coroutine.
+
+    ``persistent=False`` (migration/bootstrap: rare transfers) builds a
+    fresh world and tears it down afterwards. ``persistent=True`` (the
+    steady-state handoff path: one transfer per session) reuses a world
+    the caller already instantiated and leaves it up — a per-transfer
+    rendezvous would dominate the handoff cost."""
+    if not persistent:
+        await server.instantiator.instantiate(
+            [WorldSpec.pair(world, src_worker.worker_id,
+                            dst_worker.worker_id)])
     transport = server.cluster.transport
     deadline = time.monotonic() + timeout_s
 
@@ -96,7 +117,8 @@ async def stream_chunks(server, src_worker, dst_worker, world: str,
             recv_task.cancel()
             raise
     finally:
-        server._remove_world_everywhere(world)
+        if not persistent:
+            server._remove_world_everywhere(world)
 
 
 class MigrationManager:
@@ -121,6 +143,11 @@ class MigrationManager:
         self.migrations_total = 0
         self.migration_failures = 0
         self.heal_migrations_total = 0   # live handoffs on the heal path
+        #: steady-state prefill -> decode-pool KV handoffs (disaggregation)
+        self.handoffs_total = 0
+        self.handoff_failures = 0
+        self.handoff_s: list[float] = []
+        self.handoff_bytes: list[int] = []
         self.restores_total = 0
         self.restore_failures = 0
         self.reprefills_total = 0        # full-history fallbacks (state lost)
@@ -145,6 +172,14 @@ class MigrationManager:
             r.open_sessions() + r.queue_depth(),
             src_worker_id, r.worker_id, nbytes))
 
+    def _decode_capable(self, stage: int, exclude=None) -> list:
+        """Replicas able to *hold and serve* a session's decode state: a
+        prefill-pool replica is never a valid survivor/restore target — its
+        executor has no decode executables and routing would send decode
+        convoys into the pool the split exists to protect. One predicate,
+        owned by the server, shared with handoff peer choice."""
+        return self.server.decode_replicas(stage, exclude=exclude)
+
     # ------------------------------------------------------------ reporting
     def migration_p50_s(self) -> float:
         if not self.migration_s:
@@ -152,11 +187,21 @@ class MigrationManager:
         s = sorted(self.migration_s)
         return s[len(s) // 2]
 
+    def handoff_p50_s(self) -> float:
+        if not self.handoff_s:
+            return 0.0
+        s = sorted(self.handoff_s)
+        return s[len(s) // 2]
+
     def stats(self) -> dict:
         return {
             "migrations_total": self.migrations_total,
             "migration_failures": self.migration_failures,
             "heal_migrations_total": self.heal_migrations_total,
+            "handoffs_total": self.handoffs_total,
+            "handoff_failures": self.handoff_failures,
+            "handoff_p50_s": self.handoff_p50_s(),
+            "handoff_bytes_total": sum(self.handoff_bytes),
             "migration_p50_s": self.migration_p50_s(),
             "migration_bytes_total": sum(self.migration_bytes),
             "restores_total": self.restores_total,
@@ -195,8 +240,7 @@ class MigrationManager:
         server = self.server
         t_begin = time.monotonic()
         if survivor is None:
-            peers = [r for r in server.replicas[rep.stage]
-                     if r is not rep and r.worker.alive and not r.draining]
+            peers = self._decode_capable(rep.stage, exclude=rep)
             if not peers:
                 self.migration_failures += 1
                 self._release(rep, sid)
@@ -230,6 +274,86 @@ class MigrationManager:
             self.recovered_tokens += max(0, snap.step + 1)
         server._event("heal_migrate" if heal else "migrate",
                       f"{sid}: {rep.worker_id}->{survivor.worker_id}")
+        return True
+
+    # ------------------------------------------------- prefill/decode handoff
+    async def handoff_prefill(self, rep, peer, sid: int, cache,
+                              batch: int, step: int) -> bool:
+        """Steady-state disaggregation path: stream a freshly prefilled KV
+        cache from prefill-pool replica ``rep`` to decode-pool ``peer`` and
+        install it there at the prefill step boundary. Each chunk crosses
+        the wire as a typed HANDOFF envelope (bulk byte-accounted like any
+        other state transfer). Returns True on success; on any failure the
+        caller drops the cache and bounces the client into full re-prefill
+        on the prefill pool — the handoff is never a new failure mode.
+
+        Unlike drain/heal migration there is nothing to freeze or repin
+        here: the client has not seen the prefill response yet, so no
+        decode step can be in flight, and the caller wires the decode
+        route's pins onto ``peer`` itself.
+
+        The transfer rides a *persistent* pairwise world per (prefill,
+        decode) replica pair, instantiated on first use and kept up: a
+        handoff happens once per session, and paying a world rendezvous
+        every time would dominate the steady-state cost. The prefill
+        replica's serve loop is serialized, so transfers on one pair world
+        never interleave. Any failure drops the pair world (stale chunks
+        must not greet the next handoff) and unwinds to RETRY."""
+        from repro.serving.envelope import Envelope, Kind, ROLE_DECODE
+
+        server = self.server
+        loop = asyncio.get_event_loop()
+        t_begin = time.monotonic()
+        snap = SessionSnapshot(session_id=sid, stage=rep.stage, step=step,
+                               batch=batch, cache=cache,
+                               origin=rep.worker_id)
+        world = f"hand:{server.name}:{rep.worker_id}->{peer.worker_id}"
+        try:
+            chunks = await loop.run_in_executor(
+                None, functools.partial(snapshot_encode, snap, codec=FP,
+                                        chunk_bytes=self.chunk_bytes))
+            envs = [Envelope(req_id=-1, session_id=sid, kind=Kind.HANDOFF,
+                             step=step, payload=c, role=ROLE_DECODE)
+                    for c in chunks]
+            def _ready(worker) -> bool:
+                # a once-removed name stays in manager.worlds with status
+                # REMOVED — only a HEALTHY world on *both* endpoints is a
+                # usable channel
+                w = worker.manager.worlds.get(world)
+                return w is not None and w.status is WorldStatus.HEALTHY
+
+            if (not _ready(rep.worker) or not _ready(peer.worker)
+                    or world in server.broken_worlds):
+                server._remove_world_everywhere(world)
+                server.broken_worlds.discard(world)
+                await server.instantiator.instantiate(
+                    [WorldSpec.pair(world, rep.worker_id, peer.worker_id)])
+                rep.handoff_worlds.add(world)
+                peer.handoff_worlds.add(world)
+            received = await self._stream(rep.worker, peer.worker, world,
+                                          envs, persistent=True)
+            assembled = await loop.run_in_executor(
+                None, snapshot_assemble, [e.payload for e in received])
+            if not peer.worker.alive or peer.draining:
+                raise SnapshotTransferError(
+                    "decode peer vanished mid-handoff")
+            peer.install_session(sid, assembled.cache, assembled.batch,
+                                 assembled.step)
+        except (SnapshotTransferError, WorldBrokenError, WorldNotFoundError,
+                asyncio.TimeoutError, TimeoutError):
+            self.handoff_failures += 1
+            server._remove_world_everywhere(world)
+            rep.handoff_worlds.discard(world)
+            peer.handoff_worlds.discard(world)
+            return False
+        self.handoffs_total += 1
+        self.handoff_s.append(time.monotonic() - t_begin)
+        self.handoff_bytes.append(sum(e.nbytes for e in received))
+        if len(self.handoff_s) > 4096:        # p50 over the recent window
+            del self.handoff_s[:2048]
+            del self.handoff_bytes[:2048]
+        server._event("handoff",
+                      f"{sid}: {rep.worker_id}->{peer.worker_id}")
         return True
 
     # ---------------------------------------------------------- heal handoff
@@ -292,12 +416,12 @@ class MigrationManager:
         return assembled, sum(c.nbytes for c in received)
 
     async def _stream(self, src_worker, dst_worker, world: str,
-                      chunks: list) -> list:
+                      chunks: list, persistent: bool = False) -> list:
         # seam for tests (torn-transfer injection) and subclasses
         return await stream_chunks(
             self.server, src_worker, dst_worker, world, chunks,
             backpressure_bytes=self.backpressure_bytes,
-            timeout_s=self.transfer_timeout_s)
+            timeout_s=self.transfer_timeout_s, persistent=persistent)
 
     def _install(self, rep, survivor, sid: int,
                  snap: SessionSnapshot, *, heal: bool = False) -> None:
@@ -400,8 +524,7 @@ class MigrationManager:
                 continue
             snap = (server.snapshots.latest(sid, stage)
                     if server.snapshots is not None else None)
-            healthy = [r for r in server.replicas[stage]
-                       if r.worker.alive and not r.draining]
+            healthy = self._decode_capable(stage)
             if snap is None or not healthy:
                 if count_failures:
                     self.restore_failures += 1

@@ -34,7 +34,10 @@ from .codec import (
     INT8,
     SessionSnapshot,
     SnapshotTransferError,
+    apply_snapshot_delta,
+    blob_base_step,
     blob_step,
+    snapshot_delta_to_blob,
     snapshot_from_blob,
     snapshot_to_blob_checked,
 )
@@ -43,12 +46,22 @@ from .codec import (
 class SnapshotStore:
     def __init__(self, server, *, interval_s: float = 0.05,
                  ttl_s: float = 60.0, codec: str = FP,
-                 gc_grace_s: float = 15.0) -> None:
+                 gc_grace_s: float = 15.0, delta: bool = True,
+                 rebase_every: int = 8) -> None:
         self.server = server
         self.store = server.cluster.store
         self.interval_s = interval_s
         self.ttl_s = ttl_s
         self.codec = codec
+        #: delta snapshots: once a session-stage has a full base, later
+        #: sweeps re-encode only the decode positions since that base
+        #: (~seq_len/interval_tokens smaller), refreshed cumulatively
+        #: against the same base; fp-only and full-cache-only — anything
+        #: else (int8, ring/SSM stages) takes full snapshots as before
+        self.delta = delta
+        #: write a fresh full base every N delta sweeps: bounds both the
+        #: delta's own growth and the blast radius of a torn base
+        self.rebase_every = rebase_every
         #: how long a session must be absent from every *alive* replica
         #: before the sweep reclaims its keys. A killed replica's sessions
         #: vanish from the alive view instantly, but the client only learns
@@ -61,9 +74,17 @@ class SnapshotStore:
         self._stop = asyncio.Event()
         #: (sid, stage) -> last snapshotted step, to skip unchanged sessions
         self._last_step: dict[tuple[int, int], int] = {}
+        #: per-stage tree of cache sequence-axis indices (delta slicing)
+        self._seq_axes: dict[int, object] = {}
+        #: (sid, stage) -> cursor of the stored full base snapshot
+        self._base_step: dict[tuple[int, int], int] = {}
+        #: (sid, stage) -> delta sweeps since the last full base
+        self._deltas_since_base: dict[tuple[int, int], int] = {}
         # -- counters (MetricsHub reads these) -----------------------------
         self.snapshots_taken = 0
         self.snapshot_bytes_total = 0
+        self.delta_snapshots_taken = 0
+        self.delta_bytes_total = 0
         #: per-snapshot byte sizes not yet folded into the hub's EWMA
         self.bytes_log: list[int] = []
         self.pruned_keys = 0
@@ -77,6 +98,9 @@ class SnapshotStore:
 
     def key(self, sid: int, stage: int) -> str:
         return f"{self.prefix()}{sid}/{stage}"
+
+    def delta_key(self, sid: int, stage: int) -> str:
+        return f"{self.prefix()}{sid}/{stage}/delta"
 
     # ------------------------------------------------------------- lifecycle
     def start(self, spawn=None) -> None:
@@ -131,20 +155,9 @@ class SnapshotStore:
                         session_id=sid, stage=rep.stage, step=sess.step,
                         batch=sess.batch, cache=sess.cache,
                         origin=rep.worker_id)
-                    gap = (getattr(self.server, "session_margins", {})
-                           .get(sid) if self.codec == INT8 else None)
-                    blob, used = await loop.run_in_executor(
-                        None, functools.partial(
-                            snapshot_to_blob_checked, snap, codec=self.codec,
-                            argmax_gap=gap))
-                    if self.codec == INT8 and used == FP:
-                        self.int8_fallbacks += 1
-                    self.store.set(self.key(sid, rep.stage), blob,
-                                   ttl=self.ttl_s)
+                    await self._write_one(loop, snap)
                     self._last_step[(sid, rep.stage)] = sess.step
                     self.snapshots_taken += 1
-                    self.snapshot_bytes_total += len(blob)
-                    self.bytes_log.append(len(blob))
                     taken += 1
         # bytes_log is drained by MetricsHub when one is polling; without a
         # hub it must not grow for the process lifetime — keep the tail
@@ -152,6 +165,65 @@ class SnapshotStore:
             del self.bytes_log[:len(self.bytes_log) - 512]
         self._gc(open_sids)
         return taken
+
+    def _stage_seq_axes(self, stage: int):
+        """Structural sequence-axis tree for the stage's cache (the delta
+        codec must not guess the axis from sizes — head_dim can collide
+        with max_len)."""
+        axes = self._seq_axes.get(stage)
+        if axes is None:
+            from repro.serving.partition import stage_cache_seq_axes
+
+            axes = stage_cache_seq_axes(self.server.cfg,
+                                        self.server.stage_specs[stage])
+            self._seq_axes[stage] = axes
+        return axes
+
+    def _delta_eligible(self, snap: SessionSnapshot) -> bool:
+        key = (snap.session_id, snap.stage)
+        base = self._base_step.get(key)
+        return (self.delta and self.codec == FP
+                and base is not None and snap.step > base
+                and self._deltas_since_base.get(key, 0) < self.rebase_every
+                and self.server.stage_executors[snap.stage].full_cache
+                # the cursor bookkeeping can outlive the blob (TTL expiry
+                # while the session idled): a delta against a vanished base
+                # restores nothing — write a fresh full base instead
+                and self.store.get(self.key(*key)) is not None)
+
+    async def _write_one(self, loop, snap: SessionSnapshot) -> None:
+        """Write one session-stage snapshot: a delta against the stored
+        base when eligible, a fresh full base otherwise."""
+        key = (snap.session_id, snap.stage)
+        if self._delta_eligible(snap):
+            blob = await loop.run_in_executor(
+                None, functools.partial(
+                    snapshot_delta_to_blob, snap,
+                    base_step=self._base_step[key],
+                    seq_len=self.server.max_len,
+                    seq_axes=self._stage_seq_axes(snap.stage)))
+            self.store.set(self.delta_key(*key), blob, ttl=self.ttl_s)
+            self._deltas_since_base[key] = \
+                self._deltas_since_base.get(key, 0) + 1
+            self.delta_snapshots_taken += 1
+            self.delta_bytes_total += len(blob)
+        else:
+            gap = (getattr(self.server, "session_margins", {})
+                   .get(snap.session_id) if self.codec == INT8 else None)
+            blob, used = await loop.run_in_executor(
+                None, functools.partial(
+                    snapshot_to_blob_checked, snap, codec=self.codec,
+                    argmax_gap=gap))
+            if self.codec == INT8 and used == FP:
+                self.int8_fallbacks += 1
+            self.store.set(self.key(*key), blob, ttl=self.ttl_s)
+            # a stale delta against the old base would fail its base-cursor
+            # check anyway; delete it so restore never pays the failed probe
+            self.store.delete(self.delta_key(*key))
+            self._base_step[key] = snap.step
+            self._deltas_since_base[key] = 0
+        self.snapshot_bytes_total += len(blob)
+        self.bytes_log.append(len(blob))
 
     def _gc(self, open_sids: set[int]) -> None:
         """Prune keys (and cursor state) for sessions gone from every alive
@@ -168,22 +240,40 @@ class SnapshotStore:
 
     # ----------------------------------------------------------------- reads
     def latest(self, sid: int, stage: int) -> Optional[SessionSnapshot]:
+        """Newest restorable snapshot: base + delta when a valid delta
+        extends the stored base, the base alone when the delta is absent or
+        fails any check (an older but intact cursor beats no restore)."""
         blob = self.store.get(self.key(sid, stage))
         if blob is None:
             return None
         try:
-            return snapshot_from_blob(blob)
+            base = snapshot_from_blob(blob)
         except SnapshotTransferError:
             return None
+        dblob = self.store.get(self.delta_key(sid, stage))
+        if dblob is not None:
+            try:
+                return apply_snapshot_delta(base, dblob)
+            except SnapshotTransferError:
+                pass
+        return base
 
     def latest_step(self, sid: int, stage: int) -> Optional[int]:
         blob = self.store.get(self.key(sid, stage))
         if blob is None:
             return None
         try:
-            return blob_step(blob)
+            step = blob_step(blob)
         except Exception:  # noqa: BLE001 — torn blob == no snapshot
             return None
+        dblob = self.store.get(self.delta_key(sid, stage))
+        if dblob is not None:
+            try:
+                if blob_base_step(dblob) == step:
+                    return blob_step(dblob)
+            except Exception:  # noqa: BLE001 — torn delta == base only
+                pass
+        return step
 
     # -------------------------------------------------------------------- GC
     def drop_session(self, sid: int) -> int:
@@ -191,13 +281,16 @@ class SnapshotStore:
         n = self.store.delete_prefix(f"{self.prefix()}{sid}/")
         self.pruned_keys += n
         self._missing_since.pop(sid, None)
-        for key in [k for k in self._last_step if k[0] == sid]:
-            del self._last_step[key]
+        for d in (self._last_step, self._base_step, self._deltas_since_base):
+            for key in [k for k in d if k[0] == sid]:
+                del d[key]
         return n
 
     def drop_all(self) -> int:
         n = self.store.delete_prefix(self.prefix())
         self.pruned_keys += n
         self._last_step.clear()
+        self._base_step.clear()
+        self._deltas_since_base.clear()
         self._missing_since.clear()
         return n

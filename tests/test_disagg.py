@@ -1,0 +1,524 @@
+"""Disaggregated prefill/decode pools: role-specialized replicas with the
+KV handoff as the steady-state data path.
+
+The acceptance bar (ISSUE 5): a split-pool pipeline keeps greedy token
+parity with the single engine across the prefill->decode handoff, the
+colocated (``role='both'``) path stays behavior-identical, and the
+role-aware recovery edges hold — a RETRY raised mid-handoff falls back to
+full re-prefill on the prefill pool, and killing the *only* decode replica
+while prefill replicas survive heals a replacement into the decode role.
+Delta snapshots and the per-kind latency split (satellites) are covered
+here too.
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.control import (
+    DisaggregatedStagePolicy,
+    ElasticController,
+    MetricsHub,
+    ScaleDecision,
+    StageSnapshot,
+    TokenRatePolicy,
+    TTFTSLOPolicy,
+)
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import (
+    PipelineServer,
+    ReplicaRouter,
+    ROLE_BOTH,
+    ROLE_DECODE,
+    ROLE_PREFILL,
+    ServeEngine,
+)
+from repro.serving.partition import split_stages, stage_cache_seq_axes
+from repro.statexfer import (
+    SessionSnapshot,
+    SnapshotTransferError,
+    apply_snapshot_delta,
+    snapshot_delta_to_blob,
+    snapshot_from_blob,
+    snapshot_to_blob,
+    tree_equal,
+)
+
+CFG = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                     groups=(BlockGroup(DENSE, 2),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+ENGINE = ServeEngine(MODEL, PARAMS, max_len=64)
+
+
+def _prompts(n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, (1, seq)) for _ in range(n)]
+
+
+async def _wait_open(server, stage, n, timeout=20.0):
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        assert time.monotonic() < deadline, "sessions never all opened"
+        await asyncio.sleep(0.005)
+
+
+# -------------------------------------------------------------------- router
+
+def test_router_role_rotation():
+    r = ReplicaRouter()
+    r.add("p", role=ROLE_PREFILL)
+    r.add("d", role=ROLE_DECODE)
+    r.add("b", role=ROLE_BOTH)
+    assert r.healthy() == ["p", "d", "b"]
+    assert r.healthy(ROLE_PREFILL) == ["p", "b"]
+    assert r.healthy(ROLE_DECODE) == ["d", "b"]
+    # role-restricted picks never land in the other pool
+    for _ in range(8):
+        assert r.pick(ROLE_PREFILL) in ("p", "b")
+        assert r.pick(ROLE_DECODE) in ("d", "b")
+    r.mark_broken("b")
+    assert r.healthy(ROLE_PREFILL) == ["p"]
+    assert r.try_pick(role=ROLE_DECODE) == "d"
+    r.mark_broken("d")
+    assert r.try_pick(role=ROLE_DECODE) is None
+    assert r.try_pick(role=ROLE_PREFILL) == "p"
+
+
+def test_router_probe_prune_on_remove_and_break():
+    """The load-probe fix: pick_least_loaded must never score a world that
+    left rotation — not via the probe, and not via stale routed history."""
+    r = ReplicaRouter(["a", "b", "c"])
+    scored = []
+
+    def probe(world):
+        scored.append(world)
+        return 0.0
+
+    r.set_load_probe(probe)
+    dropped = []
+    r.set_drop_listener(dropped.append)
+    r.pick_least_loaded()
+    r.remove("a")
+    r.mark_broken("b")
+    scored.clear()
+    for _ in range(4):
+        assert r.pick_least_loaded() == "c"
+    assert set(scored) == {"c"}
+    assert dropped == ["a"]                  # graceful retirement notifies
+    assert "a" not in r.routed and "b" not in r.routed
+    # no-probe fallback: a fenced world's routed history is gone too
+    r.set_load_probe(None)
+    assert r.pick_least_loaded() == "c"
+
+
+def test_edge_load_guards_dead_replicas(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2], max_len=64,
+                                least_loaded=True)
+        await server.start()
+        rep = server.replicas[1][0]
+        entry = rep.upstream[0]
+        assert server._edge_load(entry) == 0.0
+        # fenced: the probe must make the edge unpickable, not least-loaded
+        server.broken_worlds.add(entry)
+        assert server._edge_load(entry) == float("inf")
+        server.broken_worlds.discard(entry)
+        # retired: remove_replica prunes the probe target entirely
+        await server.remove_replica(1, rep.worker_id, drain=True,
+                                    timeout=30.0)
+        assert server._world_to_replica.get(entry) is None
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ------------------------------------------------------------------- handoff
+
+def test_split_pools_generate_matches_engine(arun):
+    """Token parity across the prefill->decode handoff at every stage, and
+    the decode pool really is the only pool decoding."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(
+            c, MODEL, PARAMS,
+            [{"prefill": 1, "decode": 1}, {"prefill": 1, "decode": 2}],
+            max_len=64)
+        await server.start()
+        ps = _prompts(4, seed=2)
+        wants = [ENGINE.generate(p, 5) for p in ps]
+        outs = await asyncio.gather(
+            *[server.generate(p, 5, step_timeout=30.0) for p in ps])
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        m = server.migrations.stats()
+        # one handoff per split stage per session (both stages are split)
+        assert m["handoffs_total"] == 2 * len(ps), m
+        assert m["handoff_failures"] == 0 and m["handoff_bytes_total"] > 0
+        for wid, s in server.replica_stats().items():
+            if s["role"] == "prefill":
+                assert s["decode_steps"] == 0, (wid, s)
+                assert s["prefills"] > 0 and s["handoffs_out"] > 0, (wid, s)
+            if s["role"] == "decode":
+                assert s["prefills"] == 0, (wid, s)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_colocated_stage_never_hands_off(arun):
+    """role='both' (int replica counts) must keep the pre-disaggregation
+    behavior: local installs, zero handoffs, token parity."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 2], max_len=64)
+        await server.start()
+        p = _prompts(1, seed=3)[0]
+        want = ENGINE.generate(p, 5)
+        got = await server.generate(p, 5, step_timeout=30.0)
+        np.testing.assert_array_equal(got, want)
+        assert server.migrations.handoffs_total == 0
+        assert all(r.role == ROLE_BOTH
+                   for reps in server.replicas for r in reps)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_handoff_failure_falls_back_to_reprefill(arun):
+    """Satellite edge: a RETRY raised mid-handoff sends the client through
+    a full re-prefill on the prefill pool — and the session still finishes
+    with the exact greedy tokens."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [{"prefill": 1, "decode": 1}, 1],
+                                max_len=64)
+        await server.start()
+        real = server.migrations._stream
+        torn = {"n": 0}
+
+        async def failing(src, dst, world, chunks, **kw):
+            if world.startswith("hand:") and torn["n"] < 2:
+                torn["n"] += 1
+                raise SnapshotTransferError("injected torn handoff")
+            return await real(src, dst, world, chunks, **kw)
+
+        server.migrations._stream = failing
+        p = _prompts(1, seed=4)[0]
+        want = ENGINE.generate(p, 5)
+        got = await server.generate(p, 5, step_timeout=30.0)
+        np.testing.assert_array_equal(got, want)
+        m = server.migrations.stats()
+        assert m["handoff_failures"] == 2
+        assert m["handoffs_total"] >= 1      # the retry eventually lands
+        retries = sum(s["retries_sent"]
+                      for s in server.replica_stats().values())
+        assert retries >= 2                  # each torn handoff bounced once
+        # the re-prefills went back through the prefill pool, never the
+        # decode pool (served-prefill counter only ticks on success, so
+        # the prefill replica shows the one that finally landed)
+        prefills = {s["role"]: s["prefills"]
+                    for s in server.replica_stats().values()
+                    if s["stage"] == 0}
+        assert prefills.get("prefill", 0) >= 1
+        assert prefills.get("decode", 0) == 0
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_kill_only_decode_replica_heals_into_role(arun):
+    """Satellite edge: the only decode replica dies mid-generation while
+    the prefill replica survives — generation completes (prefill pool
+    degrades to local serving during the gap) and the controller heals the
+    replacement into the *decode* role."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [1, {"prefill": 1, "decode": 1}],
+                                max_len=64)
+        await server.start()
+        ctrl = ElasticController(server, interval=0.02, scale_stages=[])
+        ctrl.start()
+        p = _prompts(1, seed=5)[0]
+        want = ENGINE.generate(p, 8)
+        task = asyncio.ensure_future(
+            server.generate(p, 8, step_timeout=5.0))
+        await _wait_open(server, 1, 1)
+        victim = next(r for r in server.replicas[1]
+                      if r.role == ROLE_DECODE)
+        c.kill(victim.worker_id, FailureKind.SILENT_HANG)
+        got = await task
+        np.testing.assert_array_equal(got, want)
+        await ctrl.stop()
+        assert ctrl.heals >= 1
+        healed = [r for r in server.replicas[1]
+                  if r.role == ROLE_DECODE and r.worker.alive]
+        assert healed, "decode pool was not healed back"
+        assert healed[0].worker_id != victim.worker_id
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_drain_decode_replica_migrates_within_pool(arun):
+    """Scale-down of a decode-pool replica hands its sessions to the other
+    decode replica (never the prefill pool), zero re-prefills."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [1, {"prefill": 1, "decode": 2}],
+                                max_len=64)
+        await server.start()
+        ps = _prompts(4, seed=6)
+        wants = [ENGINE.generate(p, 6) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 6, step_timeout=30.0)) for p in ps]
+        await _wait_open(server, 1, 4)
+        victim = max((r for r in server.replicas[1]
+                      if r.role == ROLE_DECODE and not r.draining),
+                     key=lambda r: r.open_sessions())
+        moved = victim.open_sessions()
+        await server.remove_replica(1, victim.worker_id, drain=True,
+                                    timeout=60.0)
+        outs = await asyncio.gather(*tasks)
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        m = server.migrations.stats()
+        assert m["migrations_total"] >= moved >= 1
+        assert m["reprefills_total"] == 0
+        survivors = [r for r in server.replicas[1] if r.worker.alive]
+        assert all(not r.sessions for r in survivors
+                   if r.role == ROLE_PREFILL)
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_drain_guard_protects_last_capable_replica(arun):
+    """The role-aware drain guard: a split stage refuses to drain its last
+    prefill-capable (or decode-capable) replica even while the other pool
+    has spare capacity."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [1, {"prefill": 1, "decode": 2}],
+                                max_len=64)
+        await server.start()
+        victim = next(r for r in server.replicas[1]
+                      if r.role == ROLE_PREFILL)
+        try:
+            await server.remove_replica(1, victim.worker_id, drain=True)
+            raise AssertionError("drained the last prefill-capable replica")
+        except RuntimeError as e:
+            assert "prefill-capable" in str(e)
+        # decode pool still has slack: draining one decode replica is fine
+        gone = await server.remove_replica(1, role=ROLE_DECODE, drain=True,
+                                           timeout=30.0)
+        assert "decode" in gone
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+# ----------------------------------------------------------- delta snapshots
+
+def test_delta_snapshot_roundtrip_and_size():
+    spec = split_stages(CFG, 1)[0]
+    seq_axes = stage_cache_seq_axes(CFG, spec)
+    sess = ENGINE.start_session(_prompts(1, seed=7)[0])
+    for _ in range(3):
+        ENGINE.step_session(sess)
+    base = SessionSnapshot(1, 0, sess.t - 1, 1, sess.cache)
+    base_blob = snapshot_to_blob(base)
+    for _ in range(4):
+        ENGINE.step_session(sess)
+    cur = SessionSnapshot(1, 0, sess.t - 1, 1, sess.cache)
+    delta_blob = snapshot_delta_to_blob(cur, base_step=base.step,
+                                        seq_len=64, seq_axes=seq_axes)
+    full_blob = snapshot_to_blob(cur)
+    # only the 4 new positions re-encode: ~seq_len/interval_tokens smaller
+    assert len(delta_blob) < len(full_blob) / 4, (len(delta_blob),
+                                                  len(full_blob))
+    rec = apply_snapshot_delta(snapshot_from_blob(base_blob), delta_blob)
+    assert rec.step == cur.step
+    assert tree_equal(rec.cache, cur.cache)
+    # fail closed: a delta against the wrong base cursor must not install
+    stale = snapshot_delta_to_blob(cur, base_step=base.step + 1,
+                                   seq_len=64, seq_axes=seq_axes)
+    try:
+        apply_snapshot_delta(snapshot_from_blob(base_blob), stale)
+        raise AssertionError("stale delta applied")
+    except SnapshotTransferError:
+        pass
+
+
+def test_delta_snapshots_in_store(arun):
+    """The background sweep ships (base, delta) pairs, reconstructs the
+    newest cursor on read, and restore still recovers a killed session."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64,
+                                snapshot_interval_s=3600.0)  # manual sweeps
+        await server.start()
+        p = _prompts(1, seed=8)[0]
+        want = ENGINE.generate(p, 8)
+        task = asyncio.ensure_future(server.generate(p, 8,
+                                                     step_timeout=30.0))
+        await _wait_open(server, 1, 1)
+        await server.snapshots.sweep()           # full base
+        sid = next(iter(server.replicas[1][0].sessions))
+        base_step = server.snapshots.latest_step(sid, 1)
+        got = await task
+        np.testing.assert_array_equal(got, want)
+        c.shutdown()
+        assert base_step is not None
+
+    async def scenario_counters():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS, [1, 1], max_len=64,
+                                snapshot_interval_s=3600.0)
+        await server.start()
+        p = _prompts(1, seed=9)[0]
+
+        async def decoding(n):
+            return await server.generate(p, n, step_timeout=30.0)
+
+        task = asyncio.ensure_future(decoding(10))
+        await _wait_open(server, 1, 1)
+        await server.snapshots.sweep()           # base
+        rep = server.replicas[1][0]
+        sid = next(iter(rep.sessions))
+        step0 = rep.sessions[sid].step
+        deadline = time.monotonic() + 20.0
+        while rep.sessions.get(sid) is not None \
+                and rep.sessions[sid].step == step0:
+            assert time.monotonic() < deadline
+            await asyncio.sleep(0.005)
+        if rep.sessions.get(sid) is not None:
+            await server.snapshots.sweep()       # delta vs the base
+            assert server.snapshots.delta_snapshots_taken >= 1
+            snap = server.snapshots.latest(sid, 1)
+            assert snap is not None
+            assert snap.step > step0 - 1         # newest cursor, not base
+        await task
+        hub = MetricsHub(server)
+        mm = hub.migration_metrics()
+        assert mm["delta_snapshots_total"] == \
+            server.snapshots.delta_snapshots_taken
+        assert mm["snapshot_delta_bytes_total"] \
+            < mm["snapshot_bytes_total"]
+        c.shutdown()
+
+    arun(scenario())
+    arun(scenario_counters())
+
+
+# ------------------------------------------------------- metrics and policy
+
+def test_metrics_latency_split_and_role_slices(arun):
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(
+            c, MODEL, PARAMS, [{"prefill": 1, "decode": 1}, 1], max_len=64)
+        await server.start()
+        hub = MetricsHub(server, alpha=1.0)
+        hub.poll()
+        await server.generate(_prompts(1, seed=10)[0], 5,
+                              step_timeout=30.0)
+        await asyncio.sleep(0.05)
+        snaps = hub.poll()
+        s0 = snaps[0]
+        assert set(s0.role_slices) == {"prefill", "decode"}
+        assert snaps[1].role_slices.keys() == {"both"}
+        pre, dec = s0.role_slices["prefill"], s0.role_slices["decode"]
+        assert pre.n_replicas == 1 and dec.n_replicas == 1
+        # the split signals: prefill slice saw TTFT, decode slice tokens
+        assert pre.ttft_s > 0.0
+        assert dec.tokens_per_s > 0.0 and dec.decode_latency_s > 0.0
+        assert pre.tokens_per_s == 0.0       # prefill pool never decoded
+        lm = hub.latency_metrics()
+        assert lm["ttft_s"] > 0.0 and lm["decode_latency_s"] > 0.0
+        assert lm["ttft_s"] > lm["decode_latency_s"]
+        c.shutdown()
+
+    arun(scenario())
+
+
+def _snap(role_slices=None, **kw):
+    base = dict(stage=0, t=0.0, n_replicas=2, n_failed=0, queue_total=0,
+                queue_per_replica=0.0, throughput=0.0, latency_s=0.0,
+                replicas=[], tokens_per_s=0.0, open_sessions=0)
+    base.update(kw)
+    snap = StageSnapshot(**base)
+    if role_slices:
+        snap.role_slices.update(role_slices)
+    return snap
+
+
+def test_disaggregated_policy_votes_per_role():
+    pol = DisaggregatedStagePolicy(
+        prefill=TTFTSLOPolicy(slo_s=0.05, queue_target=4.0),
+        decode=TokenRatePolicy(target_tokens_per_s=100.0,
+                               migration_aware=True))
+    # split stage: prefill pool slow on TTFT, decode pool idle
+    snap = _snap(role_slices={
+        "prefill": _snap(n_replicas=1, ttft_s=0.2, role="prefill"),
+        "decode": _snap(n_replicas=2, tokens_per_s=10.0, role="decode"),
+    })
+    votes = {d.role: d for d in pol.decide_many(snap)}
+    assert votes["prefill"].delta == 1        # TTFT breach -> grow prefill
+    assert votes["decode"].delta == -1        # idle -> shrink decode
+    # colocated stage falls back to the colocated policy, role-less
+    flat = pol.decide_many(_snap(role_slices={
+        "both": _snap(n_replicas=2, role="both")}))
+    assert len(flat) == 1 and flat[0].role is None
+    # ScaleDecision carries role through dataclasses.replace
+    assert isinstance(votes["prefill"], ScaleDecision)
+    # a mixed stage's 'both' replicas are governed too — by an independent
+    # copy of the decode policy, never a shared (stateful) instance
+    mixed = _snap(role_slices={
+        "prefill": _snap(n_replicas=1, role="prefill"),
+        "decode": _snap(n_replicas=1, role="decode",
+                        tokens_per_s=500.0),
+        "both": _snap(n_replicas=1, role="both", tokens_per_s=500.0),
+    })
+    mixed_votes = {d.role: d for d in pol.decide_many(mixed)}
+    assert mixed_votes["both"].delta > 0
+    assert pol.colocated is not pol.decode
+
+
+def test_hysteresis_preserves_role():
+    """The stability wrapper must not strip the pool stamp off a confirmed
+    per-role vote — a role-less decision would scale the wrong pool."""
+    from repro.control import HysteresisPolicy
+
+    inner = DisaggregatedStagePolicy(
+        prefill=TTFTSLOPolicy(slo_s=0.05, queue_target=1.0),
+        decode=TokenRatePolicy(target_tokens_per_s=100.0))
+    hp = HysteresisPolicy(inner, confirm=2, cooldown_s=0.0)
+    snap = _snap(role_slices={
+        "prefill": _snap(n_replicas=1, queue_per_replica=9.0,
+                         role="prefill"),
+        "decode": _snap(n_replicas=1, role="decode"),
+    })
+    hp.decide(snap)
+    confirmed = hp.decide(snap)
+    assert confirmed.delta == 1 and confirmed.role == "prefill"
+
+
+def test_ttft_policy_queue_leads_latency():
+    pol = TTFTSLOPolicy(slo_s=1.0, queue_target=2.0)
+    up = pol.decide(_snap(n_replicas=1, queue_per_replica=5.0, ttft_s=0.1))
+    assert up.delta == 1 and "queue" in up.reason
+    down = pol.decide(_snap(n_replicas=3, queue_per_replica=0.0,
+                            ttft_s=0.01))
+    assert down.delta == -1
+    hold_ = pol.decide(_snap(n_replicas=1, queue_per_replica=1.0,
+                             ttft_s=0.5))
+    assert hold_.hold
