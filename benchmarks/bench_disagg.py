@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import argparse
 import asyncio
-import json
 import time
 
 import jax
@@ -40,7 +39,8 @@ from repro.models import DENSE, BlockGroup, build_model
 from repro.core import Cluster
 from repro.serving import PipelineServer, ServeEngine
 
-from .common import run_async
+from .common import (collect_obs, run_async, trace_path_for,
+                     write_bench_json, write_trace_json)
 
 DECODE_PROMPT = 8
 PREFILL_PROMPT = 40      # buckets to the 64-wide prefill executable
@@ -166,6 +166,7 @@ async def _mixed_scenario(split: bool, tiny: bool) -> dict:
         "decode_steps_on_prefill_pool": sum(
             s["decode_steps"] for s in stats.values()
             if s["role"] == "prefill"),
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return out
@@ -224,10 +225,12 @@ def run(tiny: bool = False, json_path: str | None = None
             (f"split p95 {sp['decode_p95_s'] * 1e3:.1f}ms not under "
              f"colocated {co['decode_p95_s'] * 1e3:.1f}ms")
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump({"rows": [{"name": n, "value": v, "derived": d}
-                                for n, v, d in rows],
-                       "raw": r, "tiny": tiny}, f, indent=2, default=str)
+        # obs snapshots ride the trace artifact, not the bench metrics doc
+        phases = {k: v.pop("obs", {}) for k, v in r.items()}
+        write_bench_json(json_path, suite="disagg", rows=rows, raw=r,
+                         tiny=tiny)
+        write_trace_json(trace_path_for(json_path, "disagg"),
+                         suite="disagg", phases=phases)
     return rows
 
 

@@ -36,9 +36,14 @@ from repro.core import Cluster, FailureKind
 from repro.models import DENSE, BlockGroup, build_model
 from repro.serving import PipelineServer
 
-from .common import run_async
+from .common import (collect_obs, run_async, trace_path_for,
+                     write_bench_json, write_trace_json)
 
 PROMPT_LEN = 8
+
+#: tracing must stay in the noise: tracer-on tokens/s within this fraction
+#: of tracer-off in the full run (tiny CI boxes are too noisy to gate hard)
+TRACING_OVERHEAD_BUDGET = 0.05
 
 
 def _build():
@@ -86,6 +91,42 @@ async def _phase_batching(tiny: bool) -> dict:
                                     for s in stats.values())
         cluster.shutdown()
     out["speedup"] = out["continuous"] / max(out["single_dispatch"], 1e-9)
+    return out
+
+
+async def _phase_tracing_overhead(tiny: bool) -> dict:
+    """Tracer on vs off on the identical continuous-batching scenario:
+    default-on tracing is only tenable if the span path stays in the
+    measurement noise (the ``TRACING_OVERHEAD_BUDGET`` smoke gate)."""
+    cfg, model, params = _build()
+    sessions = 4 if tiny else 8
+    new_tokens = 4 if tiny else 8
+    out = {"sessions": sessions, "new_tokens": new_tokens}
+    for label, tracing in (("tracer_off", False), ("tracer_on", True)):
+        cluster = Cluster()
+        server = PipelineServer(cluster, model, params, [1, 1],
+                                max_len=64, microbatch_max=8,
+                                tracing=tracing)
+        await server.start()
+        prompts = _prompts(cfg, sessions, seed=1)
+
+        async def round_() -> float:
+            t0 = time.monotonic()
+            await asyncio.gather(*(server.generate(p, new_tokens,
+                                                   step_timeout=120.0)
+                                   for p in prompts))
+            return time.monotonic() - t0
+
+        await round_()          # absorb compiles
+        await round_()
+        dt = min(await round_(), await round_())
+        out[label] = sessions * new_tokens / dt
+        if tracing:
+            out["spans_recorded"] = server.tracer.recorded
+            out["obs"] = collect_obs(server)
+        cluster.shutdown()
+    out["overhead_frac"] = 1.0 - (out["tracer_on"]
+                                  / max(out["tracer_off"], 1e-9))
     return out
 
 
@@ -169,6 +210,7 @@ async def _phase_elastic(tiny: bool) -> dict:
         "p50_token_s": pct(50), "p95_token_s": pct(95),
         "heals": ctrl.heals, "killed": killed, "drained": drained,
         "retries": sum(s["retries_sent"] for s in stats.values()),
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return result
@@ -176,12 +218,15 @@ async def _phase_elastic(tiny: bool) -> dict:
 
 async def _scenario(tiny: bool) -> dict:
     return {"batching": await _phase_batching(tiny),
-            "elastic": await _phase_elastic(tiny)}
+            "elastic": await _phase_elastic(tiny),
+            "tracing": await _phase_tracing_overhead(tiny)}
 
 
-def run(tiny: bool = False) -> list[tuple[str, float, str]]:
+def run(tiny: bool = False, json_path: str | None = None
+        ) -> list[tuple[str, float, str]]:
     r = run_async(_scenario(tiny))
     b, e = r["batching"], r["elastic"]
+    tr = r["tracing"]
     rows = [
         ("generate_tokens_per_s/single_dispatch", b["single_dispatch"],
          f"{b['sessions']} sessions, microbatch off"),
@@ -205,13 +250,35 @@ def run(tiny: bool = False) -> list[tuple[str, float, str]]:
          f"killed={e['killed']} auto-replaced"),
         ("elastic_generate_retries", float(e["retries"]),
          "RETRY bounces (sessions relocated)"),
+        ("generate_tokens_per_s/tracer_off", tr["tracer_off"],
+         "tracing disabled, continuous batching"),
+        ("generate_tokens_per_s/tracer_on", tr["tracer_on"],
+         f"default-on tracing ({tr['spans_recorded']} spans recorded)"),
+        ("generate_tracing_overhead_ratio", tr["overhead_frac"],
+         f"budget {TRACING_OVERHEAD_BUDGET:.0%} (gated in full mode)"),
     ]
     assert e["failed"] == 0, f"client-visible failures: {e}"
     assert e["ok"] == e["sessions"], e
     assert e["heals"] >= 1, "controller never healed the killed replica"
+    assert tr["spans_recorded"] > 0, \
+        "tracer-on run recorded no spans — the A/B is vacuous"
     if not tiny:
         assert b["speedup"] >= 2.0, \
             f"continuous batching speedup {b['speedup']:.2f} < 2x"
+        # the tracing-overhead smoke gate (ISSUE 6): default-on spans must
+        # cost at most the budgeted fraction of decode throughput
+        assert tr["overhead_frac"] <= TRACING_OVERHEAD_BUDGET, \
+            (f"tracing overhead {tr['overhead_frac']:.1%} > "
+             f"{TRACING_OVERHEAD_BUDGET:.0%} budget "
+             f"(on {tr['tracer_on']:.1f} vs off {tr['tracer_off']:.1f} "
+             f"tokens/s)")
+    if json_path:
+        # obs snapshots ride the trace artifact, not the bench metrics doc
+        phases = {k: v.pop("obs", {}) for k, v in r.items()}
+        write_bench_json(json_path, suite="generate", rows=rows, raw=r,
+                         tiny=tiny)
+        write_trace_json(trace_path_for(json_path, "generate"),
+                         suite="generate", phases=phases)
     return rows
 
 
@@ -219,6 +286,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: small scenario, no throughput gate")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write rows + raw results as JSON artifact")
     args = ap.parse_args()
-    for name, value, derived in run(tiny=args.tiny):
+    for name, value, derived in run(tiny=args.tiny, json_path=args.json):
         print(f"{name},{value:.4f},{derived}")

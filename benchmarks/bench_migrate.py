@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import argparse
 import asyncio
-import json
 import time
 
 import jax
@@ -37,7 +36,8 @@ from repro.core import Cluster, FailureKind
 from repro.models import DENSE, BlockGroup, build_model
 from repro.serving import PipelineServer
 
-from .common import run_async
+from .common import (collect_obs, run_async, trace_path_for,
+                     write_bench_json, write_trace_json)
 
 PROMPT_LEN = 16
 
@@ -117,6 +117,7 @@ async def _drain_scenario(migrate: bool, tiny: bool) -> dict:
         "recovered_tokens": m["recovered_tokens"],
         "recomputed_tokens": m["recomputed_tokens"],
         "retries": sum(s["retries_sent"] for s in stats.values()),
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return out
@@ -162,6 +163,7 @@ async def _kill_restore_scenario(tiny: bool) -> dict:
         "recomputed_tokens": m["recomputed_tokens"],
         "snapshots_taken": server.snapshots.snapshots_taken,
         "snapshot_bytes_total": server.snapshots.snapshot_bytes_total,
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return out
@@ -214,6 +216,7 @@ async def _bootstrap_scenario(tiny: bool) -> dict:
         "weight_transfer_s": (server.bootstrap.transfer_s or [0.0])[-1],
         "profile_warm_s": (server.bootstrap.warm_s or [0.0])[-1],
         "warmed_dispatches": rep.executor.stats["warmed_dispatches"],
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return out
@@ -278,10 +281,12 @@ def run(tiny: bool = False, json_path: str | None = None
     assert k["restores"] >= 1, k
     assert k["recomputed_tokens"] < k["full_history_tokens"], k
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump({"rows": [{"name": n, "value": v, "derived": d}
-                                for n, v, d in rows],
-                       "raw": r, "tiny": tiny}, f, indent=2, default=str)
+        # obs snapshots ride the trace artifact, not the bench metrics doc
+        phases = {k: v.pop("obs", {}) for k, v in r.items()}
+        write_bench_json(json_path, suite="migrate", rows=rows, raw=r,
+                         tiny=tiny)
+        write_trace_json(trace_path_for(json_path, "migrate"),
+                         suite="migrate", phases=phases)
     return rows
 
 

@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import argparse
 import asyncio
-import json
 import time
 
 import jax
@@ -36,9 +35,11 @@ from repro.configs import get_smoke
 from repro.control import ElasticController, MetricsHub
 from repro.core import Cluster, PlacementCost, Topology
 from repro.models import DENSE, BlockGroup, build_model
+from repro.obs import validate_dump
 from repro.serving import PipelineServer, ServeEngine
 
-from .common import run_async
+from .common import (collect_obs, run_async, trace_path_for,
+                     write_bench_json, write_trace_json)
 
 PROMPT_LEN = 8
 
@@ -136,6 +137,7 @@ async def _drain_placement_scenario(aware: bool, tiny: bool) -> dict:
             cluster.transport.bulk_cost_weighted_bytes - weighted0),
         "same_host_migrations": sum(1 for d in moved if same_host_id in d),
         "drain_s": drain_s,
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return out
@@ -179,6 +181,13 @@ async def _heal_scenario(live_heal: bool, tiny: bool) -> dict:
     parity = all(np.array_equal(w, g) for w, g in zip(wants, outs))
     m = server.migrations.stats()
     hub = MetricsHub(server)
+    # acceptance (ISSUE 6): every heal emits a schema-valid flight dump
+    heal_dumps = [d for d in server.recorder.dump_log
+                  if d["reason"] == "heal"]
+    assert len(heal_dumps) >= ctrl.heals >= 1, \
+        f"{ctrl.heals} heals but {len(heal_dumps)} heal dumps"
+    assert all(validate_dump(d) for d in heal_dumps), \
+        "heal flight dump failed schema validation"
     out = {
         "live_heal": live_heal,
         "sessions": sessions,
@@ -196,6 +205,8 @@ async def _heal_scenario(live_heal: bool, tiny: bool) -> dict:
         "recover_s": recover_s,
         "token_parity": parity,
         "placement": hub.placement_metrics(),
+        "heal_dumps_validated": len(heal_dumps),
+        "obs": collect_obs(server),
     }
     cluster.shutdown()
     return out
@@ -261,10 +272,12 @@ def run(tiny: bool = False, json_path: str | None = None
     assert hr["recomputed_tokens"] >= \
         hr["open_at_fence"] * hr["prompt_len"], hr
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump({"rows": [{"name": n, "value": v, "derived": d}
-                                for n, v, d in rows],
-                       "raw": r, "tiny": tiny}, f, indent=2, default=str)
+        # obs snapshots ride the trace artifact, not the bench metrics doc
+        phases = {k: v.pop("obs", {}) for k, v in r.items()}
+        write_bench_json(json_path, suite="place", rows=rows, raw=r,
+                         tiny=tiny)
+        write_trace_json(trace_path_for(json_path, "place"),
+                         suite="place", phases=phases)
     return rows
 
 

@@ -2,9 +2,16 @@
 from __future__ import annotations
 
 import asyncio
+import json
+import subprocess
+import time
 from collections import deque
 
 import jax.numpy as jnp
+
+#: one schema for every BENCH_*.json artifact — CI trend tooling reads
+#: suite/rev/metrics uniformly instead of per-suite ad-hoc shapes
+BENCH_SCHEMA = "bench/v1"
 
 TENSOR_SIZES = {            # paper Figs 1/6/7: 4 KB .. 4 MB float32 tensors
     "4KB": 1_000,
@@ -46,3 +53,109 @@ class SingleWorldChannel:
 
 def run_async(coro):
     return asyncio.run(coro)
+
+
+def git_rev() -> str:
+    """Short git revision of the working tree, or ``unknown`` outside a
+    checkout — artifacts must stay writable anywhere the bench runs."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git, not a repo, timeout: all fine
+        return "unknown"
+
+
+def _unit_for(name: str) -> str:
+    """Infer a metric's unit from its name suffix (the suites use a
+    consistent *_s / *_ms / *_bytes / *_per_s naming discipline). Variant
+    rows are spelled ``metric/variant`` — the unit rides the metric part."""
+    name = name.split("/", 1)[0]
+    if name.endswith("_tokens_per_s"):
+        return "tokens/s"
+    if name.endswith("_per_s"):
+        return "1/s"
+    if name.endswith("_ms"):
+        return "ms"
+    if name.endswith("_s"):
+        return "s"
+    if name.endswith("_bytes") or name.endswith("_bytes_total"):
+        return "bytes"
+    if name.endswith("_speedup") or name.endswith("_ratio"):
+        return "ratio"
+    if name.endswith("_tokens"):
+        return "tokens"
+    return "count"
+
+
+def write_bench_json(path: str, *, suite: str,
+                     rows: list[tuple[str, float, str]],
+                     raw=None, tiny: bool = False) -> dict:
+    """Write the suite's ``BENCH_*.json`` artifact in the shared
+    ``bench/v1`` schema: suite name, git revision, wall-clock, and one
+    ``{value, unit, derived}`` record per reported metric. ``raw`` carries
+    the suite's full scenario dict for deep dives; ``rows`` are the
+    headline ``(name, value, derived)`` tuples every suite already prints.
+    Returns the document (tests assert on it without re-reading)."""
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "suite": suite,
+        "git_rev": git_rev(),
+        "wall_clock": time.time(),
+        "tiny": tiny,
+        "metrics": {
+            name: {"value": value, "unit": _unit_for(name),
+                   "derived": derived}
+            for name, value, derived in rows
+        },
+    }
+    if raw is not None:
+        doc["raw"] = raw
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=str)
+    return doc
+
+
+def trace_path_for(json_path: str, suite: str) -> str:
+    """Where the trace artifact lands: ``TRACE_<suite>.json`` in the same
+    directory as the suite's ``BENCH_*.json``."""
+    import os
+    return os.path.join(os.path.dirname(os.path.abspath(json_path)),
+                        f"TRACE_{suite}.json")
+
+
+def collect_obs(server) -> dict:
+    """Snapshot a server's tracer + flight recorder into a plain dict —
+    the benches tear servers down between phases, so the obs state must be
+    captured before teardown and carried to the artifact writer."""
+    out: dict = {}
+    tracer = getattr(server, "tracer", None)
+    if tracer is not None:
+        out["span_summary"] = tracer.summary()
+        out["spans_recorded"] = tracer.recorded
+        out["spans_dropped"] = tracer.dropped
+    rec = getattr(server, "recorder", None)
+    if rec is not None:
+        out["flight_events"] = len(rec)
+        out["flight_dumps"] = rec.dumps_total
+        out["last_dump"] = rec.last_dump
+    return out
+
+
+def write_trace_json(path: str, *, suite: str, phases: dict) -> dict:
+    """Write the suite's ``TRACE_*.json`` next to its ``BENCH_*.json``:
+    one ``collect_obs`` snapshot per phase, with the last non-empty phase
+    promoted to the artifact's headline summary."""
+    from repro.obs.export import write_trace_artifact
+
+    primary = next((p for p in reversed(list(phases.values())) if p), {})
+    rec_keys = ("flight_events", "flight_dumps", "last_dump")
+    return write_trace_artifact(
+        path, suite=suite,
+        tracer=primary.get("span_summary", {}),
+        recorder=({k: primary[k] for k in rec_keys if k in primary}
+                  or None),
+        extra={"phases": phases,
+               "spans_recorded": primary.get("spans_recorded"),
+               "spans_dropped": primary.get("spans_dropped")})

@@ -35,6 +35,7 @@ from repro.control import (
 )
 from repro.core import Cluster, FailureKind
 from repro.models import DENSE, BlockGroup, build_model
+from repro.obs.export import write_trace_artifact
 from repro.serving import PipelineServer
 
 
@@ -146,10 +147,24 @@ async def main() -> None:
           f"tokens recovered/recomputed "
           f"{mm['recovered_tokens']}/{mm['recomputed_tokens']}; "
           f"deadline drops {mm['deadline_expired_total']}")
-    lm = ctrl.hub.latency_metrics()
-    print(f"latency split: TTFT {lm['ttft_s'] * 1e3:.1f} ms (prefill "
-          f"round-trip), decode {lm['decode_latency_s'] * 1e3:.1f} ms/token "
-          f"— the per-role scaling signals")
+    # latency split via the supported obs surface: the tracer's per-kind
+    # span digests (the hub drains its raw latency logs on every poll, so
+    # reaching into those would race the controller)
+    ts = ctrl.hub.trace_summary()
+    ttft = ts.get("ttft", {})
+    dstep = ts.get("decode_step", {})
+    print(f"latency split: TTFT p50 {ttft.get('p50_s', 0.0) * 1e3:.1f} ms "
+          f"/ p95 {ttft.get('p95_s', 0.0) * 1e3:.1f} ms (prefill "
+          f"round-trip, n={ttft.get('count', 0)}), decode p50 "
+          f"{dstep.get('p50_s', 0.0) * 1e3:.1f} ms/token "
+          f"(n={dstep.get('count', 0)}) — the per-role scaling signals")
+    recov = {k: v for k, v in ts.items()
+             if k in ("handoff", "migrate", "restore", "restore_replay",
+                      "heal", "reprefill") and v.get("count")}
+    if recov:
+        print("recovery spans: " + "; ".join(
+            f"{k} n={v['count']} p50 {v['p50_s'] * 1e3:.1f} ms"
+            for k, v in sorted(recov.items())))
     pm = ctrl.hub.placement_metrics()
     print(f"placement: {mm['heal_migrations_total']} heal handoffs; "
           f"{pm['cross_host_bytes'] / 1e3:.0f} KB of "
@@ -157,6 +172,14 @@ async def main() -> None:
           f"(bulk {pm['bulk_cross_host_bytes'] / 1e3:.0f} KB of "
           f"{pm['bulk_bytes'] / 1e3:.0f} KB); "
           f"cost-weighted total {pm['cost_weighted_bytes'] / 1e3:.0f}")
+    art = write_trace_artifact(
+        "TRACE_serve_elastic.json", suite="serve_elastic",
+        tracer=server.tracer, recorder=server.recorder,
+        extra={"heals": ctrl.heals, "scale_ups": ctrl.scale_ups})
+    print(f"\ntrace artifact: TRACE_serve_elastic.json "
+          f"({len(art['span_summary'])} span kinds, "
+          f"{art['flight_events']} flight events, "
+          f"{art['flight_dumps']} dumps)")
     assert summary["failed"] == 0
     cluster.shutdown()
 

@@ -231,8 +231,11 @@ class ElasticController:
         """
         server = self.server
         async with self._heal_sem:
+            t_begin = time.monotonic()
             worker = server.cluster.workers.get(worker_id)
             alive = worker is not None and worker.alive
+            server.recorder.record("heal_begin", stage=stage,
+                                   worker=worker_id, alive=alive)
             host = server.cluster.topology.host_of(worker_id) \
                 if worker is not None else None
             victim = next((r for r in server.replicas[stage]
@@ -274,16 +277,38 @@ class ElasticController:
                                                      host=host)
             except Exception as e:  # noqa: BLE001 — keep the loop alive
                 self._record("error", stage, f"heal failed: {e!r}")
+                server.recorder.record("heal_failed", stage=stage,
+                                       worker=worker_id, error=repr(e))
+                server.recorder.dump("heal_failed", stage=stage,
+                                     worker=worker_id)
                 return
             finally:
                 self._healing.discard(worker_id)
             self.heals += 1
             self._record("heal", stage,
                          f"{worker_id} fenced -> replaced by {new_id}")
+            # a heal is a control-plane incident: span it (own root — it
+            # belongs to no client session) and snapshot the flight recorder
+            # so the window leading up to the failure survives the ring
+            root = server.tracer.begin()
+            server.tracer.record(
+                root, "heal", t_begin, time.monotonic() - t_begin,
+                worker_id, f"stage={stage} replacement={new_id} "
+                f"alive={alive}")
+            server.recorder.record("heal_done", stage=stage,
+                                   worker=worker_id, replacement=new_id,
+                                   alive=alive,
+                                   heal_s=time.monotonic() - t_begin)
+            server.recorder.dump("heal", stage=stage, worker=worker_id,
+                                 replacement=new_id)
 
     async def _apply(self, decision) -> None:
         stage, delta = decision.stage, decision.delta
         role = getattr(decision, "role", None)
+        # every acted-on policy vote lands in the flight recorder — a crash
+        # dump must show *why* the fleet was the size it was
+        self.server.recorder.record("scale_decision",
+                                    **decision.as_record())
         try:
             if delta > 0:
                 for _ in range(delta):
@@ -304,9 +329,15 @@ class ElasticController:
             # kill the control loop; next tick re-observes and retries
             self._record("error", stage, f"{decision.reason}: {e!r}")
 
+    #: soft cap on the retained action timeline — a days-long elastic run
+    #: appends one event per action forever otherwise; oldest half dropped
+    MAX_TIMELINE = 65_536
+
     def _record(self, kind: str, stage: int, detail: str) -> None:
         self.timeline.append(
             ControlEvent(time.monotonic(), kind, stage, detail))
+        if len(self.timeline) > self.MAX_TIMELINE:
+            del self.timeline[:self.MAX_TIMELINE // 2]
 
     # ------------------------------------------------------------ reporting
     def replica_counts(self) -> list[int]:

@@ -332,6 +332,72 @@ class MetricsHub:
             + (getattr(mig, "int8_fallbacks", 0) if mig else 0))
         return out
 
+    # ---------------------------------------------------------- obs surface
+    def trace_summary(self) -> dict:
+        """Per-span-kind latency summary from the server's tracer:
+        ``{kind: {count, mean_s, p50_s, p95_s, max_s}}`` over the retained
+        span ring. This is the supported read path for TTFT / per-token
+        decode / handoff / migration / heal / restore latencies — callers
+        must not reach into the server's raw latency logs (the hub drains
+        and clears those on every poll)."""
+        tracer = getattr(self.server, "tracer", None)
+        return tracer.summary() if tracer is not None else {}
+
+    def export_prometheus(self, snaps=None) -> str:
+        """Render the hub's whole view in Prometheus text exposition
+        format. ``snaps`` reuses an existing ``poll()`` result; omitted,
+        the hub polls once itself (polling is idempotent observation)."""
+        from repro.obs.export import render_prometheus
+
+        if snaps is None:
+            snaps = self.poll()
+        per_stage: dict[str, dict] = {
+            "replicas": {}, "failed": {}, "queue_total": {},
+            "throughput": {}, "tokens_per_s": {}, "open_sessions": {},
+        }
+        for s in snaps:
+            sid = str(s.stage)
+            per_stage["replicas"][sid] = s.n_replicas
+            per_stage["failed"][sid] = s.n_failed
+            per_stage["queue_total"][sid] = s.queue_total
+            per_stage["throughput"][sid] = s.throughput
+            per_stage["tokens_per_s"][sid] = s.tokens_per_s
+            per_stage["open_sessions"][sid] = s.open_sessions
+        groups: dict[str, dict] = {
+            "stage": per_stage,
+            "latency": self.latency_metrics(),
+            "migration": self.migration_metrics(),
+            "placement": self.placement_metrics(),
+        }
+        # executor dispatch/compile counters, summed over the distinct
+        # executors behind the fleet (replicas may share one per stage)
+        execs = {id(r.executor): r.executor
+                 for reps in self.server.replicas for r in reps
+                 if getattr(r, "executor", None) is not None}
+        exec_totals: dict[str, float] = {}
+        for ex in execs.values():
+            for k, v in ex.obs_stats().items():
+                exec_totals[k] = exec_totals.get(k, 0) + v
+        if exec_totals:
+            groups["executor"] = exec_totals
+        span_flat: dict[str, float] = {}
+        for kind, stats in self.trace_summary().items():
+            for stat, v in stats.items():
+                span_flat[f"{kind}_{stat}"] = v
+        if span_flat:
+            groups["span"] = span_flat
+        obs: dict[str, float] = {"world_breaks": self.breaks_seen}
+        tracer = getattr(self.server, "tracer", None)
+        if tracer is not None:
+            obs["spans_recorded"] = tracer.recorded
+            obs["spans_dropped"] = tracer.dropped
+        rec = getattr(self.server, "recorder", None)
+        if rec is not None:
+            obs["flight_events"] = len(rec)
+            obs["flight_dumps"] = rec.dumps_total
+        groups["obs"] = obs
+        return render_prometheus(groups)
+
     def placement_metrics(self) -> dict:
         """Topology-cost view of the data plane: how many bytes crossed a
         host boundary, and the cost-weighted total (bytes x per-edge cost).
@@ -347,4 +413,5 @@ class MetricsHub:
             "bulk_bytes": t.bulk_bytes_sent,
             "bulk_cross_host_bytes": t.bulk_cross_host_bytes_sent,
             "bulk_cost_weighted_bytes": t.bulk_cost_weighted_bytes,
+            "messages_dropped": getattr(t, "messages_dropped", 0),
         }

@@ -60,6 +60,13 @@ class ScaleDecision:
     def hold(self) -> bool:
         return self.delta == 0
 
+    def as_record(self) -> dict:
+        """Flight-recorder / JSON form of the vote (the ``reason`` string
+        is the policy's own explanation — the 'vote' a crash dump needs to
+        show why the fleet was the size it was)."""
+        return {"stage": self.stage, "delta": self.delta,
+                "reason": self.reason, "role": self.role or "both"}
+
 
 def hold(stage: int, reason: str = HOLD_REASON,
          role: Optional[str] = None) -> ScaleDecision:

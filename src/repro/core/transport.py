@@ -242,11 +242,22 @@ class Transport:
         self.cross_host_messages_sent = 0
         self.bulk_cross_host_bytes_sent = 0
         self.bulk_cost_weighted_bytes = 0.0
+        #: messages discarded with their world (fencing/teardown) — the
+        #: at-least-once resend path re-covers them; the counter makes the
+        #: loss observable instead of silent
+        self.messages_dropped = 0
 
     # -- fault hooks ---------------------------------------------------------
     def mark_dead(self, worker_id: str, kind: FailureKind) -> None:
         with self._lock:
             self._dead[worker_id] = kind
+
+    def forget_dead(self, worker_id: str) -> None:
+        """Reclaim the death record of a fully torn-down worker: its worlds
+        and channels are gone, so nothing can consult the entry again —
+        keeping it would grow the map by one worker per heal forever."""
+        with self._lock:
+            self._dead.pop(worker_id, None)
 
     def is_dead(self, worker_id: str) -> FailureKind | None:
         return self._dead.get(worker_id)
@@ -336,4 +347,5 @@ class Transport:
             for key in [k for k in self._channels if k[0] == world]:
                 dropped += len(self._channels[key].buf)
                 del self._channels[key]
+            self.messages_dropped += dropped
         return dropped

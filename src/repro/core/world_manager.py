@@ -169,5 +169,9 @@ class WorldManager:
     def _event(self, kind: str, world: str) -> None:
         t = time.monotonic()
         self.events.append((t, kind, world))
+        # an elastic cluster churns worlds for the process lifetime; readers
+        # (plots, subscribers) only ever need the recent window
+        if len(self.events) > 8192:
+            del self.events[:4096]
         for cb in self._event_listeners:
             cb(t, kind, world)

@@ -1,0 +1,27 @@
+"""Observability: causal spans + flight recorder + export surface.
+
+This package is dependency-free within the repo (imports nothing from
+``core``/``serving``/``control``) so every layer can import it without
+cycles. Three pieces:
+
+* :mod:`~repro.obs.trace` — an allocation-cheap :class:`Tracer` whose
+  :class:`TraceContext` rides every :class:`~repro.serving.envelope.Envelope`
+  so one session's lifecycle (prefill, per-step decode, handoff, snapshot,
+  migration, heal, restore replay) reconstructs as one causal tree;
+* :mod:`~repro.obs.recorder` — a :class:`FlightRecorder` ring buffer of
+  structured control-plane events (world lifecycle, scale votes, pin flips,
+  deadline expiries, codec fallbacks) that dumps to JSON on failure/heal;
+* :mod:`~repro.obs.export` — Prometheus text rendering and the shared
+  trace-artifact writer the benches and examples use.
+"""
+from .recorder import FlightRecorder, validate_dump
+from .trace import SpanKind, TraceContext, Tracer, connected_tree
+
+__all__ = [
+    "FlightRecorder",
+    "SpanKind",
+    "TraceContext",
+    "Tracer",
+    "connected_tree",
+    "validate_dump",
+]

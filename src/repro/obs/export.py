@@ -1,0 +1,91 @@
+"""Export surface: Prometheus text rendering + trace artifacts.
+
+``render_prometheus`` turns nested metric dicts into the Prometheus text
+exposition format (``# TYPE`` headers, label sets, one sample per line) —
+:meth:`MetricsHub.export_prometheus` drives it with the hub's own metric
+groups plus the tracer's per-kind digests. ``write_trace_artifact`` is the
+shared writer the benches and examples use to drop a ``TRACE_*.json`` next
+to their ``BENCH_*.json``: tracer summary + per-kind counts + any flight
+recorder dumps collected during the run.
+"""
+from __future__ import annotations
+
+import json
+import re
+import time
+from typing import Optional
+
+__all__ = ["render_prometheus", "write_trace_artifact"]
+
+_NAME_BAD = re.compile(r"[^a-zA-Z0-9_]")
+
+TRACE_SCHEMA = "trace/v1"
+
+
+def _metric_name(*parts: str) -> str:
+    return _NAME_BAD.sub("_", "_".join(p for p in parts if p))
+
+
+def _labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + body + "}"
+
+
+def render_prometheus(groups: dict, *, prefix: str = "repro") -> str:
+    """Render ``{group: {metric: value | {label: value}}}`` as Prometheus
+    text. Scalar values become plain gauges; a dict value becomes one
+    sample per label (e.g. per-replica throughput). Non-numeric values are
+    skipped — the endpoint never raises on a weird counter."""
+    lines: list[str] = []
+    for group, metrics in sorted(groups.items()):
+        if not isinstance(metrics, dict):
+            continue
+        for metric, value in sorted(metrics.items()):
+            name = _metric_name(prefix, group, metric)
+            if isinstance(value, bool):
+                value = int(value)
+            if isinstance(value, (int, float)):
+                lines.append(f"# TYPE {name} gauge")
+                lines.append(f"{name} {value}")
+            elif isinstance(value, dict):
+                samples = [(k, v) for k, v in sorted(value.items())
+                           if isinstance(v, (int, float))
+                           and not isinstance(v, bool)]
+                if not samples:
+                    continue
+                lines.append(f"# TYPE {name} gauge")
+                for k, v in samples:
+                    lines.append(f"{name}{_labels({'id': k})} {v}")
+    return "\n".join(lines) + "\n"
+
+
+def write_trace_artifact(path: str, *, suite: str,
+                         tracer=None,
+                         recorder=None,
+                         extra: Optional[dict] = None) -> dict:
+    """Write the trace artifact every bench/example drops next to its
+    ``BENCH_*.json``. Accepts either live objects or pre-collected dicts
+    (the benches tear their servers down between phases)."""
+    summary = tracer.summary() if hasattr(tracer, "summary") else (tracer or {})
+    art = {
+        "schema": TRACE_SCHEMA,
+        "suite": suite,
+        "wall_clock": time.time(),
+        "span_summary": summary,
+        "spans_recorded": getattr(tracer, "recorded", None),
+        "spans_dropped": getattr(tracer, "dropped", None),
+    }
+    if recorder is not None:
+        if hasattr(recorder, "events"):
+            art["flight_events"] = len(recorder)
+            art["flight_dumps"] = recorder.dumps_total
+            art["last_dump"] = recorder.last_dump
+        else:
+            art["flight"] = recorder
+    if extra:
+        art.update(extra)
+    with open(path, "w") as f:
+        json.dump(art, f, indent=2, default=str)
+    return art

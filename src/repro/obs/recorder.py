@@ -1,0 +1,126 @@
+"""FlightRecorder: a crash-dump ring of structured control-plane events.
+
+Benches and examples today end with "zero failures" — an aggregate that
+says nothing about *what happened on the way*. The recorder keeps the last
+N structured events (world create/fence/remove, scale decisions with the
+policy's vote text, pin flips, deadline expiries, codec fallbacks) in a
+bounded deque and serializes them to a schema-versioned JSON dump on any
+unhandled failure, every heal, or an explicit :meth:`dump` — the same
+artifact shape whether it came from a crash or a curious operator.
+
+Events are plain dicts with a monotonic timestamp and a ``kind``; fields
+beyond that are event-specific and must be JSON-serializable (the recorder
+coerces stragglers to ``str`` at dump time, never at record time — the
+record path is one dict build + one deque append).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Optional
+
+__all__ = ["FlightRecorder", "validate_dump"]
+
+SCHEMA = "flightrec/v1"
+
+
+class FlightRecorder:
+    def __init__(self, capacity: int = 4096, *,
+                 dump_dir: Optional[str] = None,
+                 name: str = "pipe") -> None:
+        self.capacity = capacity
+        self.name = name
+        #: where :meth:`dump` also writes a file; None = in-memory only
+        self.dump_dir = dump_dir
+        self._events: deque = deque(maxlen=capacity)
+        self.recorded = 0
+        self.dumps_total = 0
+        #: the most recent dump dict (tests and artifact writers read this)
+        self.last_dump: Optional[dict] = None
+        #: the most recent dumps in order — the benches schema-validate one
+        #: entry per heal, so the window must cover a whole scenario's heals
+        self.dump_log: deque = deque(maxlen=64)
+        self._uid = 0
+
+    # ------------------------------------------------------------ recording
+    def record(self, kind: str, **fields) -> None:
+        ev = {"t": time.monotonic(), "kind": kind}
+        if fields:
+            ev.update(fields)
+        self._events.append(ev)
+        self.recorded += 1
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def events(self, kind: Optional[str] = None) -> list[dict]:
+        if kind is None:
+            return list(self._events)
+        return [e for e in self._events if e["kind"] == kind]
+
+    # -------------------------------------------------------------- dumping
+    def dump(self, reason: str, **context) -> dict:
+        """Serialize the ring (oldest first) into a schema-versioned dict;
+        also writes ``<dump_dir>/flightrec_<name>_<n>.json`` when a dump
+        directory is configured. Returns the dump dict either way."""
+        d = {
+            "schema": SCHEMA,
+            "name": self.name,
+            "reason": reason,
+            "wall_clock": time.time(),
+            "dropped": max(0, self.recorded - len(self._events)),
+            "events": [self._jsonable(e) for e in self._events],
+        }
+        if context:
+            d["context"] = {k: self._coerce(v) for k, v in context.items()}
+        self.dumps_total += 1
+        self.last_dump = d
+        self.dump_log.append(d)
+        if self.dump_dir:
+            self._uid += 1
+            path = os.path.join(
+                self.dump_dir, f"flightrec_{self.name}_{self._uid}.json")
+            try:
+                os.makedirs(self.dump_dir, exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump(d, f, indent=2)
+                d["path"] = path
+            except OSError:
+                pass  # a full disk must not turn a dump into a crash
+        return d
+
+    @classmethod
+    def _jsonable(cls, ev: dict) -> dict:
+        return {k: cls._coerce(v) for k, v in ev.items()}
+
+    @staticmethod
+    def _coerce(v):
+        if isinstance(v, (str, int, float, bool)) or v is None:
+            return v
+        if isinstance(v, (list, tuple)):
+            return [FlightRecorder._coerce(x) for x in v]
+        if isinstance(v, dict):
+            return {str(k): FlightRecorder._coerce(x) for k, x in v.items()}
+        return str(v)
+
+
+def validate_dump(d: dict) -> bool:
+    """Schema check for a flight-recorder dump: the gate the migrate/place
+    suites run on every heal-triggered dump."""
+    if not isinstance(d, dict) or d.get("schema") != SCHEMA:
+        return False
+    for field in ("name", "reason", "wall_clock", "dropped", "events"):
+        if field not in d:
+            return False
+    if not isinstance(d["events"], list):
+        return False
+    for ev in d["events"]:
+        if not isinstance(ev, dict):
+            return False
+        if "t" not in ev or "kind" not in ev:
+            return False
+        if not isinstance(ev["kind"], str):
+            return False
+    return True

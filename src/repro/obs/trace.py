@@ -1,0 +1,216 @@
+"""Causal spans: one tree per client session, allocation-cheap emission.
+
+The data plane moves one envelope per decode *step*; at thousands of
+tokens/s any per-span allocation (a dict, a dataclass, a list append that
+reallocates) shows up in the tokens/s A/B. The :class:`Tracer` therefore
+preallocates a ring of reusable slot lists and mutates them in place —
+recording a span is eight item stores and one index increment, no object
+churn. The ring is a *recorder*, not a queue: readers (``spans()``,
+``summary()``, artifact writers) materialize dicts on demand, off the hot
+path.
+
+Causality is carried by :class:`TraceContext` — ``(trace_id, span_id,
+parent_id)`` — stamped on every envelope. The *client* ``generate()`` loop
+owns the root context, so the tree survives the session-id changes a
+re-prefill causes: PREFILL on the original replica, the RETRY bounce, the
+re-prefill under a fresh session id, and the resumed decode all parent back
+to the same root.
+
+Span taxonomy (the ``kind`` strings the summary aggregates over):
+
+======================  ====================================================
+``session``             client root — one per ``generate()`` call
+``prefill``             stage-side prefill dispatch (KV-cache build)
+``ttft``                client-observed prefill round trip (first token)
+``decode``              one stage-side decode step (possibly fused/batched)
+``decode_step``         client-observed per-token round trip
+``handoff``             prefill→decode pool KV streaming + install
+``snapshot``            one background snapshot write (base or delta)
+``migrate``             live drain/heal session migration
+``restore``             snapshot fetch + install after a kill
+``restore_replay``      client-side suffix replay after a restore
+``reprefill``           client-side full-history re-prefill (fallback path)
+``bootstrap``           warm scale-up (weight fetch + compile warmup)
+``heal``                controller heal of one failed replica
+======================  ====================================================
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Iterable, Optional
+
+__all__ = ["SpanKind", "TraceContext", "Tracer", "connected_tree"]
+
+
+class SpanKind:
+    """Well-known span kind strings (any string is accepted)."""
+
+    SESSION = "session"
+    PREFILL = "prefill"
+    TTFT = "ttft"
+    DECODE = "decode"
+    DECODE_STEP = "decode_step"
+    HANDOFF = "handoff"
+    SNAPSHOT = "snapshot"
+    MIGRATE = "migrate"
+    RESTORE = "restore"
+    RESTORE_REPLAY = "restore_replay"
+    REPREFILL = "reprefill"
+    BOOTSTRAP = "bootstrap"
+    HEAL = "heal"
+
+
+class TraceContext:
+    """Identity of one span: which tree, which node, which parent.
+
+    Immutable by convention; 0 is the nil parent (roots). Rides on
+    ``Envelope.trace`` and crosses worlds by value — three ints, no
+    references into the emitting process.
+    """
+
+    __slots__ = ("trace_id", "span_id", "parent_id")
+
+    def __init__(self, trace_id: int, span_id: int, parent_id: int = 0):
+        self.trace_id = trace_id
+        self.span_id = span_id
+        self.parent_id = parent_id
+
+    def __repr__(self) -> str:  # debugging only — never on the hot path
+        return (f"TraceContext(trace={self.trace_id}, span={self.span_id}, "
+                f"parent={self.parent_id})")
+
+
+# ring slot field offsets (one preallocated list per slot, mutated in place)
+_TRACE, _SPAN, _PARENT, _KIND, _WORKER, _T0, _DT, _DETAIL = range(8)
+
+
+class Tracer:
+    """Preallocated span ring. Default-on; ``enabled=False`` turns every
+    emission into a cheap early-return so the overhead A/B has a true
+    baseline."""
+
+    def __init__(self, capacity: int = 32768, *, enabled: bool = True):
+        self.enabled = enabled
+        self.capacity = capacity
+        # one reusable 8-field slot per ring position; item stores only
+        self._ring = [[0, 0, 0, "", "", 0.0, 0.0, ""]
+                      for _ in range(capacity)]
+        self._head = 0          # next slot to overwrite
+        self._count = 0         # slots holding live data (<= capacity)
+        self.recorded = 0       # spans ever recorded
+        self.dropped = 0        # spans overwritten before being read
+        self._ids = itertools.count(1)
+
+    # ------------------------------------------------------------ contexts
+    def begin(self, parent: Optional[TraceContext] = None
+              ) -> Optional[TraceContext]:
+        """Mint a child context (or a root when ``parent`` is None).
+        Returns None when disabled so call sites pay one attribute load."""
+        if not self.enabled:
+            return None
+        sid = next(self._ids)
+        if parent is None:
+            return TraceContext(sid, sid, 0)
+        return TraceContext(parent.trace_id, sid, parent.span_id)
+
+    # ------------------------------------------------------------ emission
+    def record(self, ctx: Optional[TraceContext], kind: str, t0: float,
+               dt: float, worker: str = "", detail: str = "") -> None:
+        """Store one completed span. No-op on a None context (disabled
+        tracer, or an envelope minted before tracing was on)."""
+        if ctx is None or not self.enabled:
+            return
+        slot = self._ring[self._head]
+        slot[_TRACE] = ctx.trace_id
+        slot[_SPAN] = ctx.span_id
+        slot[_PARENT] = ctx.parent_id
+        slot[_KIND] = kind
+        slot[_WORKER] = worker
+        slot[_T0] = t0
+        slot[_DT] = dt
+        slot[_DETAIL] = detail
+        self._head = (self._head + 1) % self.capacity
+        if self._count < self.capacity:
+            self._count += 1
+        else:
+            self.dropped += 1
+        self.recorded += 1
+
+    def span(self, parent: Optional[TraceContext], kind: str, t0: float,
+             worker: str = "", detail: str = "") -> Optional[TraceContext]:
+        """Mint a child of ``parent`` and record it closed at now-t0 in one
+        call — the common shape for stage-side work that is already done.
+        No-op on a None parent: an untraced envelope must not spawn an
+        orphan root (roots are minted explicitly via ``begin()``)."""
+        if parent is None or not self.enabled:
+            return None
+        ctx = self.begin(parent)
+        self.record(ctx, kind, t0, time.monotonic() - t0, worker, detail)
+        return ctx
+
+    # -------------------------------------------------------------- readers
+    def _live_slots(self):
+        if self._count < self.capacity:
+            return self._ring[:self._count]
+        # full ring: oldest live slot is at _head
+        return self._ring[self._head:] + self._ring[:self._head]
+
+    def spans(self, trace_id: Optional[int] = None) -> list[dict]:
+        """Materialize spans as dicts (oldest first), optionally filtered
+        to one tree. Reader-side cost only."""
+        out = []
+        for s in self._live_slots():
+            if trace_id is not None and s[_TRACE] != trace_id:
+                continue
+            out.append({
+                "trace_id": s[_TRACE], "span_id": s[_SPAN],
+                "parent_id": s[_PARENT], "kind": s[_KIND],
+                "worker": s[_WORKER], "t0": s[_T0], "dt": s[_DT],
+                "detail": s[_DETAIL],
+            })
+        return out
+
+    def trace_ids(self) -> list[int]:
+        seen: dict[int, None] = {}
+        for s in self._live_slots():
+            seen.setdefault(s[_TRACE])
+        return list(seen)
+
+    def summary(self) -> dict:
+        """Per-kind latency digests over the live ring:
+        ``{kind: {count, mean_s, p50_s, p95_s, max_s}}``."""
+        by_kind: dict[str, list[float]] = {}
+        for s in self._live_slots():
+            by_kind.setdefault(s[_KIND], []).append(s[_DT])
+        out: dict = {}
+        for kind, xs in by_kind.items():
+            xs.sort()
+            n = len(xs)
+            out[kind] = {
+                "count": n,
+                "mean_s": sum(xs) / n,
+                "p50_s": xs[n // 2],
+                "p95_s": xs[min(n - 1, int(n * 0.95))],
+                "max_s": xs[-1],
+            }
+        return out
+
+    def clear(self) -> None:
+        self._head = 0
+        self._count = 0
+
+
+def connected_tree(spans: Iterable[dict]) -> bool:
+    """True iff ``spans`` form exactly one tree: a single root
+    (parent_id == 0) and every other span's parent present in the set.
+    The acceptance check for 'no orphan spans, parent links intact'."""
+    spans = list(spans)
+    if not spans:
+        return False
+    ids = {s["span_id"] for s in spans}
+    roots = [s for s in spans if s["parent_id"] == 0]
+    if len(roots) != 1:
+        return False
+    return all(s["parent_id"] in ids for s in spans
+               if s["parent_id"] != 0)

@@ -38,6 +38,7 @@ import enum
 from typing import Any, Optional
 
 from repro.core.transport import payload_nbytes
+from repro.obs.trace import TraceContext
 
 #: replica/pool roles for disaggregated prefill/decode serving.
 #: ``both`` is the colocated default — one pool serves prefill and decode,
@@ -94,6 +95,11 @@ class Envelope:
     #: this session — the receiving stage repins that home's route onto the
     #: decode home it chooses, stitching the decode path pool-to-pool
     home: Optional[str] = None
+    #: causal span context (trace_id, span_id, parent_id): every stage that
+    #: does work on this envelope parents its span here, so the session's
+    #: whole lifecycle — including RETRY bounces and re-prefills — rebuilds
+    #: as one tree. None = untraced (tracer off, or pre-obs senders).
+    trace: Optional[TraceContext] = None
 
     @property
     def nbytes(self) -> int:

@@ -213,6 +213,15 @@ class StageExecutor:
         return {"prefill": sorted(self._prefill_shapes_seen),
                 "widths": sorted(self._widths_seen)}
 
+    def obs_stats(self) -> dict:
+        """Flat numeric view of the executor for the metrics export
+        surface: dispatch counters plus how much of the jit cache the
+        served traffic has populated (warm-profile cardinality)."""
+        out = dict(self.stats)
+        out["prefill_shapes_compiled"] = len(self._prefill_shapes_seen)
+        out["decode_widths_compiled"] = len(self._widths_seen)
+        return out
+
     def warm(self, profile: dict) -> int:
         """Replay a peer's warm profile with dummy inputs so every listed
         executable is compiled before real traffic arrives. Returns the

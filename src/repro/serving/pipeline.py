@@ -84,6 +84,7 @@ from repro.core import (
     WorldSpec,
 )
 from repro.core.online import OnlineInstantiator
+from repro.obs import FlightRecorder, Tracer
 from repro.statexfer import (
     INT8,
     MigrationManager,
@@ -119,6 +120,10 @@ class _Session:
     batch: int
     step: int            # last position decoded at this stage
     touched: float       # monotonic; TTL reaping of orphaned state
+    #: TraceContext of the step that installed this state — migration,
+    #: snapshot, and heal spans for the session parent here, keeping the
+    #: control-plane work inside the session's causal tree
+    trace: Any = None
 
 
 class _SessionLost(Exception):
@@ -194,10 +199,10 @@ class _Replica:
                 + sum(len(h) for h in self.held.values()))
 
     def install_session(self, sid: int, cache: Any, batch: int,
-                        step: int) -> None:
+                        step: int, trace: Any = None) -> None:
         """Adopt migrated/restored decode state at a step boundary."""
         self.sessions[sid] = _Session(cache=cache, batch=batch, step=step,
-                                      touched=time.monotonic())
+                                      touched=time.monotonic(), trace=trace)
 
     def open_sessions(self) -> int:
         return len(self.sessions)
@@ -243,9 +248,16 @@ class _Replica:
                 raise
             except (WorldBrokenError, WorldNotFoundError):
                 pass   # per-send handling already rerouted or retried
-            except Exception:  # noqa: BLE001 — a failed stage dispatch must
-                # not kill the serve loop; bounce the session so the client
-                # rebuilds state elsewhere
+            except Exception as e:  # noqa: BLE001 — a failed stage dispatch
+                # must not kill the serve loop; bounce the session so the
+                # client rebuilds state elsewhere. This is the flight
+                # recorder's "unhandled failure" dump trigger: whatever led
+                # here is a bug or a torn dependency worth a timeline.
+                rec = self.server.recorder
+                rec.record("unhandled_failure", worker=self.worker_id,
+                           env_kind=int(env.kind), session=env.session_id,
+                           error=repr(e))
+                rec.dump("unhandled_failure", worker=self.worker_id)
                 self.sessions.pop(env.session_id, None)
                 if env.kind in (Kind.PREFILL, Kind.DECODE):
                     await self._send_retry(env)
@@ -317,7 +329,8 @@ class _Replica:
                                             nbytes=cache_nbytes(cache))
             if peer is not None:
                 ok = await server.migrations.handoff_prefill(
-                    self, peer, sid, cache, batch, env.step)
+                    self, peer, sid, cache, batch, env.step,
+                    trace=env.trace)
                 if not ok:
                     # mid-handoff failure: unwind to the at-least-once
                     # discipline — RETRY bounces the client into a full
@@ -329,7 +342,7 @@ class _Replica:
         if home is self:
             self.sessions[sid] = _Session(
                 cache=cache, batch=batch, step=env.step,
-                touched=time.monotonic())
+                touched=time.monotonic(), trace=env.trace)
         else:
             # a step routed at us before the pins stitched (or a straggler
             # in our channels) forwards in-process to the decode home
@@ -354,6 +367,7 @@ class _Replica:
         self.service_s_sum += dt
         self.prefill_s_sum += dt
         self.prefills += 1
+        server.tracer.span(env.trace, "prefill", t0, self.worker_id)
 
     async def _handle_decode(self, ex: StageExecutor, loop, env: Envelope,
                              t0: float) -> None:
@@ -406,12 +420,14 @@ class _Replica:
                 return
             now = time.monotonic()
             self.decode_batches += 1
+            tr = self.server.tracer
             for (e, sess), (y, new_cache) in zip(live, outs):
                 sess.cache = new_cache
                 sess.step = e.step
                 sess.touched = now
                 self.decode_steps += 1
                 self.tokens_out += sess.batch
+                tr.span(e.trace, "decode", t0, self.worker_id)
                 await self._forward_pinned(dataclasses.replace(e, payload=y))
                 self.processed += 1
             dt = time.monotonic() - t0
@@ -520,13 +536,16 @@ class _Replica:
         state and propagate FINISH(error) toward the client (cleaning up
         downstream stage state on the way) instead of silently eating it."""
         self.expired += 1
+        self.server.recorder.record(
+            "deadline_expired", worker=self.worker_id,
+            session=env.session_id, step=env.step)
         if env.kind not in (Kind.PREFILL, Kind.DECODE) or env.session_id < 0:
             return
         self.sessions.pop(env.session_id, None)
         fin = Envelope(req_id=env.req_id, session_id=env.session_id,
                        kind=Kind.FINISH, step=env.step,
                        error=f"deadline exceeded at {self.worker_id} "
-                             f"(step {env.step})")
+                             f"(step {env.step})", trace=env.trace)
         world = self.router.pinned(env.session_id)
         self.router.unpin(env.session_id)
         if world is not None:
@@ -542,7 +561,7 @@ class _Replica:
         self.router.unpin(env.session_id)
         await self._forward_routed(Envelope(
             req_id=env.req_id, session_id=env.session_id, kind=Kind.RETRY,
-            step=env.step))
+            step=env.step, trace=env.trace))
 
     async def _finish_session(self, env: Envelope) -> None:
         self.sessions.pop(env.session_id, None)
@@ -613,7 +632,11 @@ class PipelineServer:
                  session_ttl_s: float = 60.0,
                  snapshot_interval_s: Optional[float] = None,
                  snapshot_codec: str = "fp",
-                 restore_grace_s: float = 0.5) -> None:
+                 restore_grace_s: float = 0.5,
+                 tracing: bool = True,
+                 trace_capacity: int = 32768,
+                 flightrec_capacity: int = 4096,
+                 dump_dir: Optional[str] = None) -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
@@ -691,6 +714,14 @@ class PipelineServer:
         self.broken_worlds: set[str] = set()
         #: (t, kind, detail) scale/heal/drain timeline for Fig.5-style plots
         self.events: list[tuple[float, str, str]] = []
+        #: causal span tracer — default-ON; ``tracing=False`` is the A/B
+        #: baseline the generate bench's overhead gate measures against
+        self.tracer = Tracer(trace_capacity, enabled=tracing)
+        #: flight recorder: bounded ring of structured control-plane events,
+        #: dumped to JSON (under ``dump_dir`` when set) on any unhandled
+        #: failure, every heal, or an explicit ``recorder.dump()``
+        self.recorder = FlightRecorder(flightrec_capacity, name=name,
+                                       dump_dir=dump_dir)
         #: deadline drops carried over from retired replicas — folded in at
         #: teardown so cumulative counters survive scale-down exactly
         self.expired_retired = 0
@@ -825,6 +856,12 @@ class PipelineServer:
 
     def _event(self, kind: str, detail: str) -> None:
         self.events.append((time.monotonic(), kind, detail))
+        # long-lived servers must not grow the timeline forever (the plots
+        # only ever read the recent window); the flight recorder keeps the
+        # same events in its own bounded ring for crash dumps
+        if len(self.events) > 8192:
+            del self.events[:4096]
+        self.recorder.record(kind, detail=detail)
 
     # ------------------------------------------------------------------ build
     async def start(self) -> None:
@@ -851,6 +888,16 @@ class PipelineServer:
             self._event("world_broken", world)
 
         manager.on_world_broken(cb)
+
+        def world_ev(t: float, kind: str, world: str) -> None:
+            # world lifecycle into the flight recorder: create ("init_done")
+            # and remove, per endpoint manager. Fencing ("broken") is
+            # already recorded via the break listener above.
+            if kind in ("init_done", "removed"):
+                self.recorder.record(f"world_{kind}", world=world,
+                                     worker=manager.worker_id)
+
+        manager.on_event(world_ev)
 
     async def add_replica(self, stage: int, *, role: str = ROLE_BOTH,
                           warm: bool = False,
@@ -1114,11 +1161,21 @@ class PipelineServer:
             worker.kill()
             worker.manager.shutdown()
         self.cluster.topology.forget(rep.worker_id)
+        # its worlds and channels are gone with it — drop the transport's
+        # death record too, or the map grows one entry per heal forever
+        self.cluster.transport.forget_dead(rep.worker_id)
+        # the dedup guard is keyed by worker id; a retired id must not
+        # block re-wiring if a future replica ever reuses the name
+        self._wired_managers.discard(rep.worker_id)
 
     def _remove_world_everywhere(self, world: str) -> None:
         for worker in list(self.cluster.workers.values()):
             if world in worker.manager.worlds:
                 worker.manager.remove_world(world)
+        # a torn-down world can never break again — keeping it in the
+        # fenced set would grow one entry per kill for the process lifetime
+        # (and _drain/_edge_load only consult it for *live* worlds)
+        self.broken_worlds.discard(world)
 
     # ---------------------------------------------------------------- serving
     def _watch_client_world(self, world: str) -> None:
@@ -1156,7 +1213,8 @@ class PipelineServer:
 
     async def _restore_replay(self, sid: int, out: list, s0: int,
                               step_timeout: float, *,
-                              count_failures: bool = True) -> bool:
+                              count_failures: bool = True,
+                              parent=None) -> bool:
         """Unplanned-loss recovery, cheap path: rebuild the session's route
         from live survivor state + background snapshots
         (``MigrationManager.restore_session``), then replay only the decode
@@ -1164,11 +1222,14 @@ class PipelineServer:
         every generated token, and greedy decode is deterministic, so the
         replayed responses are discarded. Returns True when the session is
         live and caught up; False sends the caller to full re-prefill."""
+        t_r = time.monotonic()
         t0 = await self.migrations.restore_session(
-            sid, count_failures=count_failures)
+            sid, count_failures=count_failures, parent=parent)
         if t0 is None:
             return False
         replayed = 0
+        rctx = None
+        t_step = t_r
         try:
             # positions t0+1 .. s0+len(out)-2 were generated but lost from
             # every cache; feeding out[k] at position s0+k re-integrates it
@@ -1176,18 +1237,33 @@ class PipelineServer:
                 world = self.client_router.pinned(sid)
                 if world is None:
                     return False
+                t_step = time.monotonic()
+                rctx = self.tracer.begin(parent)
                 env = Envelope(
                     next(self._req_ids), sid, Kind.DECODE, step=s0 + k,
                     deadline=time.monotonic() + step_timeout,
-                    payload=out[k][:, None], role=ROLE_DECODE)
+                    payload=out[k][:, None], role=ROLE_DECODE,
+                    trace=rctx)
                 resp = await self._roundtrip(env, world, step_timeout)
+                # the replay ctx rode an envelope a stage may have spanned
+                # under — record it even on a bad response so no stage span
+                # is left parentless
+                self.tracer.record(rctx, "decode_step", t_step,
+                                   time.monotonic() - t_step, CLIENT,
+                                   "replay")
+                rctx = None
                 if resp.kind is not Kind.DECODE:
                     return False
                 replayed += 1
         except (WorldBrokenError, WorldNotFoundError, asyncio.TimeoutError):
+            self.tracer.record(rctx, "decode_step", t_step,
+                               time.monotonic() - t_step, CLIENT,
+                               "replay_error")
             return False
         finally:
             self.migrations.recomputed_tokens += replayed
+        self.tracer.span(parent, "restore_replay", t_r, CLIENT,
+                         f"replayed={replayed}")
         return True
 
     def _live_heal_possible(self, sid: int) -> bool:
@@ -1206,7 +1282,8 @@ class PipelineServer:
         return False
 
     async def _restore_with_grace(self, sid: int, out: list, s0: int,
-                                  step_timeout: float) -> bool:
+                                  step_timeout: float,
+                                  parent=None) -> bool:
         """Cheap-path recovery with a heal grace window: keep re-trying
         restore while a live heal can still deliver this session's state to
         a survivor (see :meth:`_live_heal_possible`); give up to the
@@ -1216,7 +1293,8 @@ class PipelineServer:
         deadline = time.monotonic() + self.restore_grace_s
         while True:
             if await self._restore_replay(sid, out, s0, step_timeout,
-                                          count_failures=False):
+                                          count_failures=False,
+                                          parent=parent):
                 return True
             if not (self._live_heal_possible(sid)
                     and time.monotonic() < deadline):
@@ -1311,6 +1389,16 @@ class PipelineServer:
         hist_len = s0
         base = 0        # tokens already inside the current prefill history
         restarts = 0
+        tracer = self.tracer
+        # the *client* owns the session's root span: a re-prefill changes
+        # the session id but not the trace, so RETRY bounces, restores, and
+        # the resumed decode all reconstruct under one tree
+        root = tracer.begin()
+        t_root = time.monotonic()
+        #: last client span ctx sent but not yet recorded — the failure
+        #: handler closes it, so a stage-side child span never outlives an
+        #: unrecorded parent (timeouts would otherwise orphan the subtree)
+        pending = None
         while len(out) < max_new_tokens:
             try:
                 if sid is None:
@@ -1325,18 +1413,27 @@ class PipelineServer:
                         raise _SessionLost("no healthy entry replica")
                     sid = next(self._session_ids)
                     t_send = time.monotonic()
+                    ctx = tracer.begin(root)
+                    pending = ("ttft", ctx, t_send)
                     env = Envelope(
                         next(self._req_ids), sid, Kind.PREFILL,
                         step=hist_len - 1,
                         deadline=time.monotonic() + step_timeout,
-                        payload=hist, role=ROLE_PREFILL)
+                        payload=hist, role=ROLE_PREFILL, trace=ctx)
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
+                        tracer.record(ctx, "ttft", t_send,
+                                      time.monotonic() - t_send, CLIENT,
+                                      "retry")
+                        pending = None
                         raise _SessionLost("prefill bounced")
                     if resp.kind is Kind.FINISH:
                         raise _SessionLost(resp.error or "server finished")
                     self._note_latency(self.ttft_log,
                                        time.monotonic() - t_send)
+                    tracer.record(ctx, "ttft", t_send,
+                                  time.monotonic() - t_send, CLIENT)
+                    pending = None
                     if self.client_router.pinned(sid) is None:
                         # a split stage-0 already stitched the pin onto the
                         # session's decode home during the prefill pass —
@@ -1349,18 +1446,28 @@ class PipelineServer:
                     # position of the fed token: history end + tokens
                     # generated since that history was prefilled
                     t_send = time.monotonic()
+                    ctx = tracer.begin(root)
+                    pending = ("decode_step", ctx, t_send)
                     env = Envelope(
                         next(self._req_ids), sid, Kind.DECODE,
                         step=hist_len + (len(out) - base) - 1,
                         deadline=time.monotonic() + step_timeout,
-                        payload=out[-1][:, None], role=ROLE_DECODE)
+                        payload=out[-1][:, None], role=ROLE_DECODE,
+                        trace=ctx)
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
+                        tracer.record(ctx, "decode_step", t_send,
+                                      time.monotonic() - t_send, CLIENT,
+                                      "retry")
+                        pending = None
                         raise _SessionLost("decode bounced")
                     if resp.kind is Kind.FINISH:
                         raise _SessionLost(resp.error or "server finished")
                     self._note_latency(self.decode_lat_log,
                                        time.monotonic() - t_send)
+                    tracer.record(ctx, "decode_step", t_send,
+                                  time.monotonic() - t_send, CLIENT)
+                    pending = None
                 # greedy pick on the host: the logits are tiny (B,V) and a
                 # jax dispatch per token per session would dominate the
                 # client loop at smoke scale
@@ -1372,6 +1479,15 @@ class PipelineServer:
                     token_times.append(time.monotonic())
             except (_SessionLost, asyncio.TimeoutError,
                     WorldBrokenError, WorldNotFoundError) as e:
+                if pending is not None:
+                    # the step died without a response; close its span so
+                    # any stage-side child recorded before the failure
+                    # still parents back into the tree
+                    p_kind, p_ctx, p_t = pending
+                    tracer.record(p_ctx, p_kind, p_t,
+                                  time.monotonic() - p_t, CLIENT,
+                                  f"error={type(e).__name__}")
+                    pending = None
                 restarts += 1
                 if restarts > max_restarts:
                     raise RuntimeError(
@@ -1379,7 +1495,7 @@ class PipelineServer:
                         f"restarts: {e}") from e
                 if sid is not None:
                     if out and await self._restore_with_grace(
-                            sid, out, s0, step_timeout):
+                            sid, out, s0, step_timeout, parent=root):
                         # session restored + caught up: resume decoding with
                         # the step arithmetic re-anchored to the raw prompt
                         hist_len, base = s0, 0
@@ -1388,6 +1504,11 @@ class PipelineServer:
                     if out:
                         self.migrations.reprefills_total += 1
                         self.migrations.recomputed_tokens += s0 + len(out)
+                        # zero-length marker span: the recovery fell through
+                        # to the full re-prefill path (the PREFILL that
+                        # follows carries its own ttft span under root)
+                        tracer.span(root, "reprefill", time.monotonic(),
+                                    CLIENT, str(e))
                 sid = None           # forces re-prefill with full history
         if sid is not None:
             world = self.client_router.pinned(sid)
@@ -1403,6 +1524,8 @@ class PipelineServer:
                 # eager snapshot GC; the background sweep + TTL are backstops
                 self.snapshots.drop_session(sid)
             self.session_margins.pop(sid, None)
+        tracer.record(root, "session", t_root, time.monotonic() - t_root,
+                      CLIENT, f"tokens={len(out)} restarts={restarts}")
         return np.stack([np.asarray(t) for t in out], axis=1)
 
     # ------------------------------------------------------------------ intro

@@ -87,6 +87,7 @@ class WarmBootstrap:
         from repro.serving.executor import StageExecutor
 
         server = self.server
+        t_begin = time.monotonic()
         peer = self._pick_peer(stage, worker_id, role)
         report: dict = {"stage": stage, "peer": peer.worker_id if peer
                         else None, "bytes": 0, "transfer_s": 0.0,
@@ -117,7 +118,22 @@ class WarmBootstrap:
         self.bootstraps_total += 1
         self.transfer_s.append(report["transfer_s"])
         self.warm_s.append(report["warm_s"])
+        # these logs feed p50-style reporting over the recent window only;
+        # a long-lived elastic fleet must not grow them per scale-up forever
+        if len(self.transfer_s) > 1024:
+            del self.transfer_s[:512]
+            del self.warm_s[:512]
+        if len(self.weight_bytes) > 1024:
+            del self.weight_bytes[:512]
         report["executor"] = executor
+        # control-plane root span: a bootstrap belongs to no client session,
+        # so it gets its own (single-node) trace tree
+        tracer = getattr(server, "tracer", None)
+        if tracer is not None:
+            root = tracer.begin()
+            tracer.record(root, "bootstrap", t_begin,
+                          time.monotonic() - t_begin, worker_id,
+                          f"stage={stage} peer={report['peer']}")
         return report
 
     async def _fetch_weights(self, peer, worker_id: str, sparams):

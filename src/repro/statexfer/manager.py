@@ -239,6 +239,9 @@ class MigrationManager:
         the route from live state with zero recompute."""
         server = self.server
         t_begin = time.monotonic()
+        #: session's causal parent — the migration span joins the trace tree
+        #: of the client call whose state is moving
+        parent = getattr(rep.sessions.get(sid), "trace", None)
         if survivor is None:
             peers = self._decode_capable(rep.stage, exclude=rep)
             if not peers:
@@ -274,11 +277,14 @@ class MigrationManager:
             self.recovered_tokens += max(0, snap.step + 1)
         server._event("heal_migrate" if heal else "migrate",
                       f"{sid}: {rep.worker_id}->{survivor.worker_id}")
+        server.tracer.span(parent, "migrate", t_begin, rep.worker_id,
+                           f"sid={sid}->{survivor.worker_id}"
+                           + (" heal" if heal else ""))
         return True
 
     # ------------------------------------------------- prefill/decode handoff
     async def handoff_prefill(self, rep, peer, sid: int, cache,
-                              batch: int, step: int) -> bool:
+                              batch: int, step: int, trace=None) -> bool:
         """Steady-state disaggregation path: stream a freshly prefilled KV
         cache from prefill-pool replica ``rep`` to decode-pool ``peer`` and
         install it there at the prefill step boundary. Each chunk crosses
@@ -313,7 +319,8 @@ class MigrationManager:
                 None, functools.partial(snapshot_encode, snap, codec=FP,
                                         chunk_bytes=self.chunk_bytes))
             envs = [Envelope(req_id=-1, session_id=sid, kind=Kind.HANDOFF,
-                             step=step, payload=c, role=ROLE_DECODE)
+                             step=step, payload=c, role=ROLE_DECODE,
+                             trace=trace)
                     for c in chunks]
             def _ready(worker) -> bool:
                 # a once-removed name stays in manager.worlds with status
@@ -338,10 +345,13 @@ class MigrationManager:
                 raise SnapshotTransferError(
                     "decode peer vanished mid-handoff")
             peer.install_session(sid, assembled.cache, assembled.batch,
-                                 assembled.step)
+                                 assembled.step, trace=trace)
         except (SnapshotTransferError, WorldBrokenError, WorldNotFoundError,
-                asyncio.TimeoutError, TimeoutError):
+                asyncio.TimeoutError, TimeoutError) as e:
             self.handoff_failures += 1
+            server.recorder.record("handoff_failure", session=sid,
+                                   src=rep.worker_id, dst=peer.worker_id,
+                                   error=repr(e))
             server._remove_world_everywhere(world)
             rep.handoff_worlds.discard(world)
             peer.handoff_worlds.discard(world)
@@ -354,6 +364,8 @@ class MigrationManager:
             del self.handoff_bytes[:2048]
         server._event("handoff",
                       f"{sid}: {rep.worker_id}->{peer.worker_id}")
+        server.tracer.span(trace, "handoff", t_begin, rep.worker_id,
+                           f"sid={sid}->{peer.worker_id}")
         return True
 
     # ---------------------------------------------------------- heal handoff
@@ -405,6 +417,9 @@ class MigrationManager:
             if not ok:          # thin argmax margin: move exact bytes
                 codec = FP
                 self.int8_fallbacks += 1
+                server.recorder.record("codec_fallback", path="int8->fp",
+                                       session=snap.session_id,
+                                       where="migration")
         chunks = await loop.run_in_executor(
             None, functools.partial(snapshot_encode, snap, codec=codec,
                                     chunk_bytes=self.chunk_bytes))
@@ -470,11 +485,16 @@ class MigrationManager:
         if not flips and not heal:
             raise SnapshotTransferError(f"session {sid} has no upstream pin")
 
-        survivor.install_session(sid, snap.cache, snap.batch, snap.step)
+        survivor.install_session(sid, snap.cache, snap.batch, snap.step,
+                                 trace=getattr(sess, "trace", None))
         if new_down is not None:
             survivor.router.pin(sid, new_down)
         for router, new_up in flips:
             router.pin(sid, new_up)
+        server.recorder.record(
+            "pin_flip", session=sid, src=rep.worker_id,
+            dst=survivor.worker_id, heal=heal,
+            flips=len(flips) + (1 if new_down is not None else 0))
         rep.sessions.pop(sid, None)
         rep.router.unpin(sid)
         # release: held steps first (FIFO), then any straggler that is still
@@ -498,7 +518,8 @@ class MigrationManager:
 
     # ------------------------------------------------------ snapshot restore
     async def restore_session(self, sid: int, *,
-                              count_failures: bool = True) -> Optional[int]:
+                              count_failures: bool = True,
+                              parent=None) -> Optional[int]:
         """Rebuild a lost session from live survivor state + stored
         snapshots. Returns the oldest restored decode position ``t0`` (the
         caller replays positions ``t0+1..``), or None if any stage cannot be
@@ -511,6 +532,7 @@ class MigrationManager:
         from repro.serving.pipeline import CLIENT, _edge
 
         server = self.server
+        t_begin = time.monotonic()
         route, installs, steps = [], [], []
         for stage in range(server.n_stages):
             live = [r for r in server.replicas[stage]
@@ -562,10 +584,13 @@ class MigrationManager:
             return None
         for rep, snap in zip(route, installs):
             if snap is not None:
-                rep.install_session(sid, snap.cache, snap.batch, snap.step)
+                rep.install_session(sid, snap.cache, snap.batch, snap.step,
+                                    trace=parent)
         for router, hop in zip(routers, hops):
             router.pin(sid, hop)
         self.restores_total += 1
         self.recovered_tokens += max(0, t0 + 1)
         server._event("restore", f"{sid} from snapshots@t<={t0}")
+        server.tracer.span(parent, "restore", t_begin, "",
+                           f"sid={sid} t0={t0}")
         return t0

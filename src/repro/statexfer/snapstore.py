@@ -155,7 +155,8 @@ class SnapshotStore:
                         session_id=sid, stage=rep.stage, step=sess.step,
                         batch=sess.batch, cache=sess.cache,
                         origin=rep.worker_id)
-                    await self._write_one(loop, snap)
+                    await self._write_one(loop, snap,
+                                          trace=getattr(sess, "trace", None))
                     self._last_step[(sid, rep.stage)] = sess.step
                     self.snapshots_taken += 1
                     taken += 1
@@ -191,10 +192,20 @@ class SnapshotStore:
                 # restores nothing — write a fresh full base instead
                 and self.store.get(self.key(*key)) is not None)
 
-    async def _write_one(self, loop, snap: SessionSnapshot) -> None:
+    async def _write_one(self, loop, snap: SessionSnapshot,
+                         trace=None) -> None:
         """Write one session-stage snapshot: a delta against the stored
         base when eligible, a fresh full base otherwise."""
+        t0 = time.monotonic()
         key = (snap.session_id, snap.stage)
+        # a delta was due — base present, cursor advanced, rebase not yet
+        # scheduled — so falling through to a full base below is the
+        # fail-closed delta->base path (vanished base blob, non-full cache)
+        wanted_delta = (self.delta and self.codec == FP
+                        and self._base_step.get(key) is not None
+                        and snap.step > self._base_step.get(key, 0)
+                        and self._deltas_since_base.get(key, 0)
+                        < self.rebase_every)
         if self._delta_eligible(snap):
             blob = await loop.run_in_executor(
                 None, functools.partial(
@@ -216,6 +227,13 @@ class SnapshotStore:
                     argmax_gap=gap))
             if self.codec == INT8 and used == FP:
                 self.int8_fallbacks += 1
+                self.server.recorder.record(
+                    "codec_fallback", path="int8->fp",
+                    session=snap.session_id, where="snapshot")
+            if wanted_delta:
+                self.server.recorder.record(
+                    "codec_fallback", path="delta->base",
+                    session=snap.session_id, where="snapshot")
             self.store.set(self.key(*key), blob, ttl=self.ttl_s)
             # a stale delta against the old base would fail its base-cursor
             # check anyway; delete it so restore never pays the failed probe
@@ -224,6 +242,8 @@ class SnapshotStore:
             self._deltas_since_base[key] = 0
         self.snapshot_bytes_total += len(blob)
         self.bytes_log.append(len(blob))
+        self.server.tracer.span(trace, "snapshot", t0, snap.origin,
+                                f"stage={snap.stage}")
 
     def _gc(self, open_sids: set[int]) -> None:
         """Prune keys (and cursor state) for sessions gone from every alive
