@@ -17,6 +17,9 @@ Prints ``name,value,derived`` CSV rows:
   choice on drain, and snapshot-assisted live heal vs the re-prefill heal
 * disagg — disaggregated prefill/decode pools vs colocated replicas under
   a mixed prefill-heavy workload (decode tokens/s + tail latency A/B)
+* paged — paged KV pool vs contiguous caches: session capacity at equal
+  cache memory (shared-prefix reuse), page-granular handoff/snapshot
+  bytes, greedy parity incl. kill + page-granular restore
 """
 from __future__ import annotations
 
@@ -107,6 +110,8 @@ SUITES = {
                                 fromlist=["run"]).run(),
     "disagg": lambda: __import__("benchmarks.bench_disagg",
                                  fromlist=["run"]).run(),
+    "paged": lambda: __import__("benchmarks.bench_paged",
+                                fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -380,6 +380,9 @@ class MetricsHub:
                 exec_totals[k] = exec_totals.get(k, 0) + v
         if exec_totals:
             groups["executor"] = exec_totals
+        kvpool = self.kvpool_metrics(execs.values())
+        if kvpool:
+            groups["kvpool"] = kvpool
         span_flat: dict[str, float] = {}
         for kind, stats in self.trace_summary().items():
             for stat, v in stats.items():
@@ -397,6 +400,32 @@ class MetricsHub:
             obs["flight_dumps"] = rec.dumps_total
         groups["obs"] = obs
         return render_prometheus(groups)
+
+    def kvpool_metrics(self, executors=None) -> dict:
+        """Paged KV pool pressure/sharing view, summed over the distinct
+        pools behind the fleet (one per paged executor). Empty when no
+        executor runs paged — the exporter then omits the group entirely.
+        Ratios are derived here so dashboards never join raw counters:
+        ``occupancy`` (used/total) is the admission-pressure signal,
+        ``shared_page_ratio`` (shared/used) is how much of the resident
+        cache the prefix trie is deduplicating."""
+        if executors is None:
+            executors = {id(r.executor): r.executor
+                         for reps in self.server.replicas for r in reps
+                         if getattr(r, "executor", None) is not None}.values()
+        totals: dict[str, float] = {}
+        for ex in executors:
+            stats = getattr(ex, "pool_stats", None)
+            for k, v in (stats() if callable(stats) else {}).items():
+                totals[k] = totals.get(k, 0) + v
+        if not totals:
+            return {}
+        total = totals.get("kv_pages_total", 0)
+        used = totals.get("kv_pages_used", 0)
+        totals["occupancy"] = used / total if total else 0.0
+        totals["shared_page_ratio"] = (
+            totals.get("kv_pages_shared", 0) / used if used else 0.0)
+        return totals
 
     def placement_metrics(self) -> dict:
         """Topology-cost view of the data plane: how many bytes crossed a

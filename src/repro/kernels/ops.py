@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention_bhd
 from .flash_attention import flash_attention_bhsd
+from .paged_attention import paged_decode_attention_bhd
 from .rmsnorm import rmsnorm_rows
 from .ssd_scan import ssd_scan_kernel
 
@@ -67,6 +68,24 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bk = _pick_block(kt.shape[2], 512)
     out = decode_attention_bhd(qt, kt, vt, mask, softcap=softcap, scale=scale,
                                block_k=bk, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None) -> jax.Array:
+    """q (B,1,H,hd); k_pages,v_pages (P,page,K,hd); page_table (B,NP) int32;
+    lengths (B,) -> (B,1,H,hd). Pad table entries should point at the pool's
+    reserved scratch page; validity comes from ``lengths`` alone."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k_pages.transpose(0, 2, 1, 3)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    out = paged_decode_attention_bhd(qt, kt, vt, page_table, lengths,
+                                     softcap=softcap, scale=scale,
+                                     interpret=_interpret())
     return out.transpose(0, 2, 1, 3)
 
 

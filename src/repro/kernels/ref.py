@@ -43,6 +43,23 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                             cap=softcap, scale=scale)
 
 
+def paged_decode_attention_ref(q: jax.Array,
+                               k_pages: jax.Array, v_pages: jax.Array,
+                               page_table: jax.Array, lengths: jax.Array, *,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None) -> jax.Array:
+    """q (B,1,H,hd); k_pages,v_pages (P,page,K,hd); page_table (B,NP) int32;
+    lengths (B,) -> (B,1,H,hd). Gathers pages to a contiguous cache and
+    delegates to the contiguous decode oracle."""
+    bsz = q.shape[0]
+    _, page, kv, hd = k_pages.shape
+    n_pages = page_table.shape[1]
+    k = k_pages[page_table].reshape(bsz, n_pages * page, kv, hd)
+    v = v_pages[page_table].reshape(bsz, n_pages * page, kv, hd)
+    mask = jnp.arange(n_pages * page)[None, :] < lengths[:, None]
+    return decode_attention_ref(q, k, v, mask, softcap=softcap, scale=scale)
+
+
 def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                  c: jax.Array, *, chunk: int):
     """Same contract as models.ssm.ssd_reference."""

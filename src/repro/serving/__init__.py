@@ -8,6 +8,13 @@ from .envelope import (
     payload_nbytes,
 )
 from .executor import StageExecutor
+from .kvpool import (
+    PagedCacheHandle,
+    PagedView,
+    PagePool,
+    gather_pages,
+    prefix_chunk_keys,
+)
 from .partition import (
     StageSpec,
     split_stages,
@@ -25,6 +32,8 @@ __all__ = [
     "Envelope", "Kind", "payload_nbytes",
     "ROLE_BOTH", "ROLE_DECODE", "ROLE_PREFILL",
     "StageExecutor",
+    "PagePool", "PagedCacheHandle", "PagedView",
+    "gather_pages", "prefix_chunk_keys",
     "StageSpec", "split_stages", "stage_decode", "stage_forward",
     "stage_init_cache", "stage_params", "stage_prefill",
     "CLIENT", "PipelineServer", "ReplicaRouter",

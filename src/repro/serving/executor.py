@@ -28,14 +28,19 @@ converge once sessions drift).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import DENSE, MOE, ModelConfig
+from repro.statexfer.codec import PagedCachePayload, materialize_paged
+from . import kvpool
 from .envelope import ROLE_BOTH, ROLE_DECODE, ROLE_PREFILL
+from .kvpool import PagedCacheHandle, PagePool
 from .partition import (
     StageSpec,
     stage_decode,
@@ -50,7 +55,9 @@ from .partition import (
 class StageExecutor:
     def __init__(self, cfg: ModelConfig, spec: StageSpec, sparams: Any, *,
                  max_len: int = 256, pad_seq: bool = True,
-                 role: str = ROLE_BOTH) -> None:
+                 role: str = ROLE_BOTH, paged: bool = False,
+                 page_size: int = 16,
+                 pool_pages: int | None = None) -> None:
         self.cfg = cfg
         self.spec = spec
         self.sparams = sparams
@@ -69,6 +76,24 @@ class StageExecutor:
             g.kind in (DENSE, MOE) and g.window is None for g in groups)
         #: right-padding is a pure win only for full-cache attention stages
         self.pad_seq = pad_seq and self.full_cache
+        #: paged KV mode: prefill installs the session cache into a shared
+        #: PagePool and returns a page-table handle; decode_many stacks page
+        #: tables instead of whole caches. Gated on full caches (page writes
+        #: rely on decode touching exactly slot t) and page-aligned max_len.
+        #: The contiguous path stays as the fallback/degrade target.
+        self.paged = bool(paged) and self.full_cache \
+            and max_len % page_size == 0
+        self.page_size = page_size
+        self.pool_pages = pool_pages or (4 * (max_len // page_size) + 1)
+        self.pool: PagePool | None = None
+        self._pool_init_lock = threading.Lock()
+        #: flight-event sink (set by the server: FlightRecorder.record)
+        self.on_event = None
+        self._paged_many = None
+        self._paged_widths_seen: set[int] = set()
+        #: cached all-zeros donor caches for convoy pad slots, one per
+        #: distinct cache leaf signature (built once, reused every pad)
+        self._pad_caches: dict = {}
         tokens_in = spec.first
 
         self._score = jax.jit(
@@ -101,7 +126,8 @@ class StageExecutor:
 
         self.stats = {"score_calls": 0, "prefill_calls": 0,
                       "decode_batches": 0, "decode_steps": 0,
-                      "first_call_compile_s": 0.0, "warmed_dispatches": 0}
+                      "first_call_compile_s": 0.0, "warmed_dispatches": 0,
+                      "paged_decode_batches": 0, "paged_degrades": 0}
         #: fused convoy widths already compiled (first-dispatch timing)
         self._widths_seen: set[int] = set()
         #: post-bucketing prefill input shapes served so far — together with
@@ -111,11 +137,11 @@ class StageExecutor:
 
     @classmethod
     def for_model(cls, model, params, *, max_len: int = 256,
-                  pad_seq: bool = True) -> "StageExecutor":
+                  pad_seq: bool = True, **kw) -> "StageExecutor":
         """Whole model as a single stage (the standalone-engine case)."""
         spec = split_stages(model.cfg, 1)[0]
         return cls(model.cfg, spec, stage_params(model.cfg, params, spec),
-                   max_len=max_len, pad_seq=pad_seq)
+                   max_len=max_len, pad_seq=pad_seq, **kw)
 
     # ------------------------------------------------------------------ shapes
     @staticmethod
@@ -150,8 +176,14 @@ class StageExecutor:
         return self._timed("score_calls", self._score, x)
 
     def prefill(self, x: jax.Array) -> tuple[jax.Array, Any]:
-        """History (B,S[,D]) -> (output sliced back to S, session cache)."""
-        s = x.shape[1]
+        """History (B,S[,D]) -> (output sliced back to S, session cache).
+
+        In paged mode the contiguous prefill result is installed into the
+        shared PagePool (leading full pages deduped against the prefix
+        trie) and a :class:`~repro.serving.kvpool.PagedCacheHandle` is
+        returned instead; on template mismatch or pool exhaustion the
+        session simply keeps the contiguous cache."""
+        x0, s = x, x.shape[1]
         if self.pad_seq:
             sp = min(self._bucket(s), self.max_len)
             if sp > s:
@@ -161,10 +193,17 @@ class StageExecutor:
         out, cache = self._timed("prefill_calls", self._prefill, x)
         if out.shape[1] != s:
             out = out[:, :s]
+        if self.paged:
+            keys = kvpool.prefix_chunk_keys(x0, s, self.page_size)
+            handle = self._ensure_pool().install_prefill(cache, s, keys)
+            if handle is not None:
+                return out, handle
         return out, cache
 
     def decode(self, cache: Any, x: jax.Array, t) -> tuple[jax.Array, Any]:
         """Single-session step: token/hidden (B,1[,D]) at position ``t``."""
+        if isinstance(cache, PagedCacheHandle):
+            return self._paged_decode_many([cache], [x], [t])[0]
         out, new_cache = self._timed(
             "decode_steps", self._decode, cache, x, jnp.int32(t))
         self.stats["decode_batches"] += 1
@@ -176,21 +215,43 @@ class StageExecutor:
 
         All ``xs`` must share one shape (same per-session batch); positions
         are free. Returns per-session (output, new_cache) in input order.
+        Paged and contiguous sessions may mix in one convoy: each kind
+        dispatches fused with its peers and the results merge in order.
 
-        Convoy widths are bucketed to powers of two by duplicating lane 0
-        (results discarded): otherwise every distinct width 2..max compiles
-        its own executable mid-serving, a compile stall per new width — the
-        decode-path analogue of the prefill sequence buckets.
+        Convoy widths are bucketed to powers of two by duplicating lane 0's
+        input shape (results discarded): otherwise every distinct width
+        2..max compiles its own executable mid-serving, a compile stall per
+        new width — the decode-path analogue of the prefill sequence
+        buckets. Pad slots carry a cached all-zeros donor cache (built once
+        per leaf signature), not a stacked copy of a real session's cache.
         """
+        paged_idx = [i for i, c in enumerate(caches)
+                     if isinstance(c, PagedCacheHandle)]
+        if paged_idx:
+            results: list = [None] * len(caches)
+            contig_idx = [i for i in range(len(caches))
+                          if not isinstance(caches[i], PagedCacheHandle)]
+            paged_out = self._paged_decode_many(
+                [caches[i] for i in paged_idx],
+                [xs[i] for i in paged_idx], [ts[i] for i in paged_idx])
+            for i, r in zip(paged_idx, paged_out):
+                results[i] = r
+            if contig_idx:
+                contig_out = self.decode_many(
+                    [caches[i] for i in contig_idx],
+                    [xs[i] for i in contig_idx], [ts[i] for i in contig_idx])
+                for i, r in zip(contig_idx, contig_out):
+                    results[i] = r
+            return results
         n = len(caches)
         if n == 1:
             return [self.decode(caches[0], xs[0], ts[0])]
         width = self._width_bucket(n)
         if width > n:
             pad = width - n
-            caches = list(caches) + [caches[0]] * pad
+            caches = list(caches) + [self._pad_cache(caches[0])] * pad
             xs = list(xs) + [xs[0]] * pad
-            ts = list(ts) + [ts[0]] * pad
+            ts = list(ts) + [0] * pad
         t = jnp.asarray(ts, jnp.int32)
         first = width not in self._widths_seen
         self._widths_seen.add(width)
@@ -203,6 +264,159 @@ class StageExecutor:
         self.stats["decode_batches"] += 1
         self.stats["decode_steps"] += n
         return list(zip(outs[:n], new_caches[:n]))
+
+    def _pad_cache(self, like: Any) -> Any:
+        """All-zeros donor cache for convoy pad slots, cached per leaf
+        signature: padding with ``caches[0]`` stacked a real session's
+        cache bytes once per pad lane per microbatch for results nobody
+        reads."""
+        key = tuple((tuple(leaf.shape), str(leaf.dtype))
+                    for leaf in jax.tree.leaves(like))
+        donor = self._pad_caches.get(key)
+        if donor is None:
+            donor = jax.tree.map(jnp.zeros_like, like)
+            self._pad_caches[key] = donor
+        return donor
+
+    # ------------------------------------------------------------ paged mode
+    def _ensure_pool(self) -> PagePool:
+        with self._pool_init_lock:
+            if self.pool is None:
+                self.pool = PagePool(
+                    self.cfg, self.spec, max_len=self.max_len,
+                    page_size=self.page_size, num_pages=self.pool_pages,
+                    on_event=self._pool_event)
+        return self.pool
+
+    def _pool_event(self, kind: str, **fields) -> None:
+        if self.on_event is not None:
+            self.on_event(kind, **fields)
+
+    def adopt_cache(self, cache: Any) -> Any:
+        """Normalize an installed session cache for this executor. Paged
+        wire payloads enter the pool directly (page-granular restore, full
+        prefix pages re-shared via the trie); without a usable pool they
+        materialize to a contiguous cache. Handles and contiguous caches
+        pass through."""
+        if isinstance(cache, PagedCachePayload):
+            if self.paged:
+                handle = self._ensure_pool().install_payload(cache)
+                if handle is not None:
+                    return handle
+            return materialize_paged(cache)
+        return cache
+
+    def release_cache(self, cache: Any) -> None:
+        """Return a dropped session's pool pages (no-op for contiguous)."""
+        if isinstance(cache, PagedCacheHandle):
+            cache.pool.release(cache)
+
+    def _paged_decode_many(self, handles: list, xs: list,
+                           ts: list) -> list[tuple[jax.Array, Any]]:
+        """Fused decode over paged sessions: host-side page-table upkeep
+        (growth + copy-on-write), then one jitted dispatch that gathers
+        each lane's cache through its page table and scatters back only the
+        page containing its written slot. A session whose upkeep fails
+        (pool exhausted) degrades to a contiguous cache and rides the
+        contiguous path — never crashes."""
+        n = len(handles)
+        results: list = [None] * n
+        caches = list(handles)
+        live = []
+        degraded = []
+        # hold the pool lock across upkeep + dispatch + leaves writeback:
+        # replicas share this executor and decode on worker threads, and a
+        # concurrent dispatch reading the same pool arrays would lose this
+        # one's page writes when it stores its own new arrays back
+        with self._ensure_pool().lock:
+            for i, (h, t) in enumerate(zip(handles, ts)):
+                ok = (self.pool is not None and h.pool is self.pool
+                      and self.pool.prepare_write(h, int(t)))
+                if ok:
+                    live.append(i)
+                else:
+                    caches[i] = h.pool.materialize(h)
+                    h.pool.release(h)
+                    self.stats["paged_degrades"] += 1
+                    degraded.append(i)
+            if live:
+                outs = self._dispatch_paged([caches[i] for i in live],
+                                            [xs[i] for i in live],
+                                            [ts[i] for i in live])
+                for i, r in zip(live, outs):
+                    results[i] = r
+        if degraded:
+            fallback = self.decode_many([caches[i] for i in degraded],
+                                        [xs[i] for i in degraded],
+                                        [ts[i] for i in degraded])
+            for i, r in zip(degraded, fallback):
+                results[i] = r
+        return results
+
+    def _dispatch_paged(self, handles: list, xs: list,
+                        ts: list) -> list[tuple[jax.Array, Any]]:
+        pool = self.pool
+        n = len(handles)
+        width = n if n == 1 else self._width_bucket(n)
+        tables = np.zeros((width, pool.pages_per_seq), np.int32)
+        for i, h in enumerate(handles):
+            tables[i, :len(h.pages)] = h.pages
+        # pad lanes: all-zero tables target the reserved scratch page — the
+        # gather reads garbage nobody looks at, the writeback lands on page 0
+        xs_p = list(xs) + [xs[0]] * (width - n)
+        ts_p = list(ts) + [0] * (width - n)
+        fn = self._get_paged_many()
+        first = width not in self._paged_widths_seen
+        self._paged_widths_seen.add(width)
+        t0 = time.monotonic()
+        outs, new_leaves = fn(self.sparams, tuple(pool.leaves),
+                              jnp.asarray(tables),
+                              tuple(xs_p), jnp.asarray(ts_p, jnp.int32))
+        if first:
+            jax.block_until_ready(outs)
+            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        pool.leaves = list(new_leaves)
+        for h, t in zip(handles, ts):
+            h.length = max(h.length, int(t) + 1)
+        self.stats["decode_batches"] += 1
+        self.stats["decode_steps"] += n
+        self.stats["paged_decode_batches"] += 1
+        return [(outs[i], handles[i]) for i in range(n)]
+
+    def _get_paged_many(self):
+        if self._paged_many is None:
+            cfg, spec, pool = self.cfg, self.spec, self.pool
+            tokens_in = spec.first
+            axes = tuple(pool.axes)
+            page = pool.page_size
+            structure = jax.tree.structure(pool.skeleton)
+
+            def _many_paged(sp, pool_leaves, tables, xs, ts):
+                def one(table, x, t):
+                    leaves = kvpool.gather_pages(pool_leaves, axes, table,
+                                                 page)
+                    cache = jax.tree.unflatten(structure, leaves)
+                    out, new_cache = stage_decode(cfg, spec, sp, cache, x, t,
+                                                  tokens_in=tokens_in)
+                    new_leaves = structure.flatten_up_to(new_cache)
+                    li = t // page
+                    pg = [jax.lax.dynamic_slice_in_dim(
+                        leaf, li * page, page, axis=ax)
+                        for leaf, ax in zip(new_leaves, axes)]
+                    return out, pg, table[li]
+
+                x = jnp.stack(xs)
+                outs, pgs, phys = jax.vmap(one, in_axes=(0, 0, 0))(
+                    tables, x, ts)
+                # distinct lanes own distinct physical pages (prepare_write
+                # guarantees exclusivity); pad lanes all hit scratch page 0
+                new_pool = tuple(
+                    leaf.at[phys].set(pg)
+                    for leaf, pg in zip(pool_leaves, pgs))
+                return outs, new_pool
+
+            self._paged_many = jax.jit(_many_paged)
+        return self._paged_many
 
     # ---------------------------------------------------------- warm profile
     def warm_profile(self) -> dict:
@@ -220,7 +434,15 @@ class StageExecutor:
         out = dict(self.stats)
         out["prefill_shapes_compiled"] = len(self._prefill_shapes_seen)
         out["decode_widths_compiled"] = len(self._widths_seen)
+        out["paged_widths_compiled"] = len(self._paged_widths_seen)
+        if self.pool is not None:
+            out.update(self.pool.stats())
         return out
+
+    def pool_stats(self) -> dict:
+        """Page-pool gauges for the kvpool metrics group ({} when the pool
+        has not been built — no paged session served yet)."""
+        return self.pool.stats() if self.pool is not None else {}
 
     def warm(self, profile: dict) -> int:
         """Replay a peer's warm profile with dummy inputs so every listed

@@ -1,0 +1,485 @@
+"""Paged KV-cache pool with shared-prefix reuse.
+
+One :class:`PagePool` serves one :class:`~repro.serving.executor.
+StageExecutor` (and therefore all replicas sharing it). A *logical page* is
+one ``page_size``-token slab of a session's whole stage cache tree — every
+leaf contributes its slice along its structural sequence axis (from
+:func:`~repro.serving.partition.stage_cache_seq_axes`), so page granularity
+matches the delta-snapshot slicing discipline exactly. Physically the pool
+holds, per cache leaf, one array of shape ``(num_pages, *lead, page_size,
+*tail)``; a session owns a page table (list of physical page ids) instead of
+a contiguous ``max_len`` buffer.
+
+Allocation is a free list with per-page refcounts. A radix trie over
+*content keys* — the chained digest of the raw per-page input chunks —
+lets sessions whose prompts share a prefix map their leading full pages to
+the same physical pages (refcount > 1). Only full pages are shareable; the
+partial last page of a prompt is always private, so ordinary decode (which
+writes positions >= length) never lands on a shared page. Writable access
+still goes through :meth:`prepare_write`, which copy-on-writes any page that
+is shared or trie-registered — the path a :meth:`fork` (parallel
+sampling / beam split, which shares *all* pages including the partial tail)
+takes on its first diverging token.
+
+Physical page 0 is reserved as a scratch sink: pad lanes of a fused decode
+dispatch carry all-zero page tables, so their gathers read and their
+page-writebacks land on page 0, never on a session's real page.
+
+Pool exhaustion is not an error: allocation failures report ``None`` /
+``False`` upward and the executor degrades the session to a contiguous
+cache (recording a ``page_alloc_failure`` flight event) — sessions never
+crash because the pool is full.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.statexfer.codec import PagedCachePayload
+from .partition import StageSpec, stage_cache_seq_axes
+
+_DIGEST_SIZE = 16
+
+
+def prefix_chunk_keys(x: Any, length: int, page_size: int) -> list:
+    """Content keys for the full pages of a prompt: per page a
+    ``(chunk_digest, chain_digest)`` pair where the chain hashes the whole
+    prefix up to and including that page. ``x`` is the *unpadded* prefill
+    input (B, S[, D]) — tokens at stage 0, hidden states downstream; both
+    are deterministic functions of the prompt prefix, and causal attention
+    makes each page's KV content a function of the prefix alone, so equal
+    chains imply equal page content."""
+    host = np.asarray(x)
+    keys = []
+    chain = b""
+    for i in range(length // page_size):
+        chunk = np.ascontiguousarray(host[:, i * page_size:(i + 1) * page_size])
+        tag = f"{chunk.shape}|{chunk.dtype}".encode()
+        digest = hashlib.blake2b(tag + chunk.tobytes(),
+                                 digest_size=_DIGEST_SIZE).digest()
+        chain = hashlib.blake2b(chain + digest,
+                                digest_size=_DIGEST_SIZE).digest()
+        keys.append((digest, chain))
+    return keys
+
+
+def gather_pages(pool_leaves, axes, table, page_size: int):
+    """Reassemble contiguous cache leaves from pool leaves through a page
+    table (jit-safe; ``table`` may be traced). Table slots beyond a
+    session's used pages should be 0 — they gather scratch-page garbage,
+    which the decode validity mask (slots <= t) never looks at."""
+    out = []
+    for leaf, ax in zip(pool_leaves, axes):
+        g = leaf[table]                       # (NP, *lead, page, *tail)
+        g = jnp.moveaxis(g, 0, ax)            # (*lead, NP, page, *tail)
+        shape = g.shape[:ax] + (g.shape[ax] * g.shape[ax + 1],) \
+            + g.shape[ax + 2:]
+        out.append(g.reshape(shape))
+    return out
+
+
+class _TrieNode:
+    __slots__ = ("digest", "chain", "page", "parent", "children")
+
+    def __init__(self, digest, chain, page, parent):
+        self.digest = digest
+        self.chain = chain
+        self.page = page
+        self.parent = parent
+        self.children: dict = {}
+
+
+@dataclasses.dataclass
+class PagedCacheHandle:
+    """A session's view into a :class:`PagePool`: the page table plus the
+    decode cursor. Mutable — decode grows ``pages``/``length`` in place, so
+    the pipeline's ``sess.cache`` reference stays valid across steps.
+    Concurrent readers (snapshot sweep, handoff encode) must go through
+    :meth:`freeze` first."""
+
+    pool: "PagePool"
+    pages: list                       # physical page id per logical slot
+    keys: list                        # per slot: (digest, chain) | None
+    length: int                       # valid tokens
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes a transfer of this session would move: used pages only
+        (``payload_nbytes`` duck-typing for placement scoring)."""
+        return len(self.pages) * self.pool.page_nbytes
+
+    def freeze(self) -> "PagedView":
+        """Snapshot-stable view: pool leaves are immutable jax arrays, so
+        pinning the current (leaves, pages, length) triple is enough —
+        later decode steps swap in new pool arrays instead of mutating
+        these."""
+        return PagedView(pool=self.pool, leaves=tuple(self.pool.leaves),
+                         pages=tuple(self.pages), keys=tuple(self.keys),
+                         length=self.length)
+
+    def paged_payload(self) -> PagedCachePayload:
+        return self.freeze().paged_payload()
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedView:
+    """Immutable capture of a handle at one instant (see
+    :meth:`PagedCacheHandle.freeze`). Safe to encode from a worker thread
+    while the serve loop keeps decoding."""
+
+    pool: "PagePool"
+    leaves: tuple
+    pages: tuple
+    keys: tuple
+    length: int
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.pages) * self.pool.page_nbytes
+
+    def paged_payload(self) -> PagedCachePayload:
+        pool = self.pool
+        idx = jnp.asarray(np.asarray(self.pages, np.int32))
+        pages = [np.asarray(leaf[idx]) for leaf in self.leaves]
+        return PagedCachePayload(
+            page_size=pool.page_size, length=self.length,
+            max_len=pool.max_len, skeleton=pool.skeleton,
+            axes=list(pool.axes), shapes=list(pool.template_shapes),
+            dtypes=list(pool.template_dtypes),
+            logical=list(range(len(self.pages))), pages=pages,
+            keys=list(self.keys))
+
+
+def _locked(fn):
+    """Serialize a PagePool method under the pool's reentrant lock."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self.lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
+class PagePool:
+    def __init__(self, cfg, spec: StageSpec, *, max_len: int, page_size: int,
+                 num_pages: int,
+                 on_event: Optional[Callable[..., Any]] = None) -> None:
+        assert max_len % page_size == 0, (max_len, page_size)
+        self.cfg = cfg
+        self.spec = spec
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_seq = max_len // page_size
+        #: physical pages including the reserved scratch page 0
+        self.num_pages = max(int(num_pages), self.pages_per_seq + 2)
+        self.on_event = on_event
+        self.seq_axes = stage_cache_seq_axes(cfg, spec)
+
+        # physical storage — built lazily from the first session's template
+        self.leaves: Optional[list] = None
+        self.axes: list = []
+        self.skeleton: Any = None
+        self.template_shapes: list = []
+        self.template_dtypes: list = []
+        self.page_nbytes = 0
+
+        #: replicas share one executor (hence one pool) per stage and their
+        #: serve loops run compute on worker threads — every refcount /
+        #: free-list / trie / leaves mutation must be serialized. Reentrant
+        #: so the executor can hold it across a whole decode dispatch
+        #: (table prep -> jit -> leaves writeback) while calling back in.
+        self.lock = threading.RLock()
+        self.refcount = np.zeros(self.num_pages, np.int64)
+        self._free = list(range(self.num_pages - 1, 0, -1))
+        self._root = _TrieNode(None, b"", -1, None)
+        self._page_node: dict = {}
+        self._node_by_chain: dict = {}
+
+        self.cow_splits = 0
+        self.alloc_failures = 0
+        self.prefix_pages_reused = 0
+        self.installed_sessions = 0
+
+    # ------------------------------------------------------------- template
+    def _ensure_spec(self, skeleton, shapes, dtypes) -> bool:
+        """Build (or compatibility-check) the physical pool arrays for a
+        flat leaf spec. One pool serves one template — sessions with a
+        different batch/dtype signature fall back to contiguous caches."""
+        sig = (tuple(tuple(s) for s in shapes), tuple(map(str, dtypes)))
+        if self.leaves is not None:
+            have = (tuple(tuple(s) for s in self.template_shapes),
+                    tuple(map(str, self.template_dtypes)))
+            return sig == have
+        structure = jax.tree.structure(skeleton)
+        axes = [int(a) for a in structure.flatten_up_to(self.seq_axes)]
+        if any(ax < 0 for ax in axes):
+            return False            # a leaf without a seq axis can't page
+        for shape, ax in zip(shapes, axes):
+            if shape[ax] != self.max_len:
+                return False
+        self.axes = axes
+        self.skeleton = skeleton
+        self.template_shapes = [tuple(s) for s in shapes]
+        self.template_dtypes = [np.dtype(d) for d in dtypes]
+        self.leaves = []
+        self.page_nbytes = 0
+        for shape, dtype, ax in zip(self.template_shapes,
+                                    self.template_dtypes, axes):
+            pshape = (self.num_pages,) + shape[:ax] + (self.page_size,) \
+                + shape[ax + 1:]
+            self.leaves.append(jnp.zeros(pshape, dtype))
+            self.page_nbytes += int(
+                np.prod(pshape[1:], dtype=np.int64)) * dtype.itemsize
+        return True
+
+    def _ensure_from_cache(self, cache) -> Optional[list]:
+        flat, treedef = jax.tree.flatten(cache)
+        skeleton = jax.tree.unflatten(treedef, list(range(len(flat))))
+        shapes = [tuple(leaf.shape) for leaf in flat]
+        dtypes = [np.dtype(leaf.dtype) for leaf in flat]
+        if not self._ensure_spec(skeleton, shapes, dtypes):
+            return None
+        return flat
+
+    # ----------------------------------------------------------- alloc/free
+    def _alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        return self._free.pop()
+
+    def _event(self, kind: str, **fields) -> None:
+        if self.on_event is not None:
+            self.on_event(kind, **fields)
+
+    def _alloc_failure(self, where: str) -> None:
+        self.alloc_failures += 1
+        self._event("page_alloc_failure", stage=self.spec.index, where=where,
+                    pages_total=self.num_pages - 1, pages_free=0)
+
+    def _unref(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] > 0:
+            return
+        node = self._page_node.pop(page, None)
+        if node is not None:
+            # a node's page can only hit refcount 0 after every descendant's
+            # did (any session holding a child page holds all its ancestors)
+            assert not node.children, "freed a trie page with live children"
+            node.parent.children.pop(node.digest, None)
+            self._node_by_chain.pop(node.chain, None)
+        self._free.append(page)
+
+    def _write_pages(self, phys: list, page_trees: list) -> None:
+        """Batch-write freshly allocated pages: one scatter per leaf.
+        ``page_trees``: per entry a flat per-leaf list of page arrays."""
+        if not phys:
+            return
+        idx = jnp.asarray(np.asarray(phys, np.int32))
+        for leaf_i in range(len(self.leaves)):
+            stacked = jnp.stack([jnp.asarray(pt[leaf_i])
+                                 for pt in page_trees])
+            self.leaves[leaf_i] = self.leaves[leaf_i].at[idx].set(stacked)
+
+    def _cache_page(self, flat_cache, li: int) -> list:
+        """Flat per-leaf list of logical page ``li`` sliced from a
+        contiguous cache's leaves."""
+        out = []
+        for leaf, ax in zip(flat_cache, self.axes):
+            out.append(jax.lax.dynamic_slice_in_dim(
+                leaf, li * self.page_size, self.page_size, axis=ax))
+        return out
+
+    # -------------------------------------------------------------- install
+    @_locked
+    def install_prefill(self, cache, length: int,
+                        keys: list) -> Optional[PagedCacheHandle]:
+        """Move a freshly prefilled contiguous cache into the pool. Leading
+        full pages whose content keys match the prefix trie reuse the
+        existing physical pages (refcount++); everything else allocates.
+        Returns None (caller keeps the contiguous cache) on template
+        mismatch or pool exhaustion — never raises."""
+        flat = self._ensure_from_cache(cache)
+        if flat is None:
+            return None
+        n_used = -(-length // self.page_size)
+        pages: list = []
+        page_keys: list = []
+        new_phys: list = []
+        new_trees: list = []
+        node = self._root
+        for li in range(n_used):
+            full = (li + 1) * self.page_size <= length
+            key = keys[li] if full and li < len(keys) else None
+            child = node.children.get(key[0]) if key is not None else None
+            if child is not None:
+                self.refcount[child.page] += 1
+                self.prefix_pages_reused += 1
+                pages.append(child.page)
+                page_keys.append(key)
+                node = child
+                continue
+            p = self._alloc()
+            if p is None:
+                for q in reversed(pages):
+                    self._unref(q)
+                self._alloc_failure("prefill")
+                return None
+            self.refcount[p] = 1
+            new_phys.append(p)
+            new_trees.append(self._cache_page(flat, li))
+            if key is not None:
+                child = _TrieNode(key[0], key[1], p, node)
+                node.children[key[0]] = child
+                self._node_by_chain[key[1]] = child
+                self._page_node[p] = child
+                node = child
+            pages.append(p)
+            page_keys.append(key)
+        self._write_pages(new_phys, new_trees)
+        self.installed_sessions += 1
+        return PagedCacheHandle(pool=self, pages=pages, keys=page_keys,
+                                length=length)
+
+    @_locked
+    def install_payload(self, payload: PagedCachePayload
+                        ) -> Optional[PagedCacheHandle]:
+        """Install a handed-off/restored paged payload. Full pages whose
+        chain keys already live in this pool's trie are shared instead of
+        re-stored — the cross-replica form of prefix reuse."""
+        if payload.logical != list(range(len(payload.logical))):
+            return None             # a bare delta cannot install on its own
+        if not self._ensure_spec(payload.skeleton, payload.shapes,
+                                 payload.dtypes):
+            return None
+        pages: list = []
+        page_keys: list = []
+        new_phys: list = []
+        new_trees: list = []
+        node: Optional[_TrieNode] = self._root
+        for pos in range(len(payload.logical)):
+            key = payload.keys[pos]
+            if key is not None:
+                known = self._node_by_chain.get(key[1])
+                if known is not None:
+                    self.refcount[known.page] += 1
+                    self.prefix_pages_reused += 1
+                    pages.append(known.page)
+                    page_keys.append(key)
+                    node = known
+                    continue
+            p = self._alloc()
+            if p is None:
+                for q in reversed(pages):
+                    self._unref(q)
+                self._alloc_failure("install")
+                return None
+            self.refcount[p] = 1
+            new_phys.append(p)
+            new_trees.append(payload.page_entry(pos))
+            if key is not None and node is not None:
+                child = _TrieNode(key[0], key[1], p, node)
+                node.children[key[0]] = child
+                self._node_by_chain[key[1]] = child
+                self._page_node[p] = child
+                node = child
+            else:
+                node = None         # keyless page: trie chain ends here
+            pages.append(p)
+            page_keys.append(key)
+        self._write_pages(new_phys, new_trees)
+        self.installed_sessions += 1
+        return PagedCacheHandle(pool=self, pages=pages, keys=page_keys,
+                                length=payload.length)
+
+    # ------------------------------------------------------------- lifetime
+    @_locked
+    def prepare_write(self, handle: PagedCacheHandle, t: int) -> bool:
+        """Make position ``t`` writable: grow the page table across page
+        boundaries and copy-on-write a shared or trie-registered target
+        page. False = pool exhausted (caller degrades to contiguous)."""
+        li = t // self.page_size
+        while len(handle.pages) <= li:
+            p = self._alloc()
+            if p is None:
+                self._alloc_failure("decode")
+                return False
+            self.refcount[p] = 1
+            handle.pages.append(p)
+            handle.keys.append(None)
+        page = handle.pages[li]
+        if self.refcount[page] > 1 or page in self._page_node:
+            fresh = self._alloc()
+            if fresh is None:
+                self._alloc_failure("cow")
+                return False
+            idx = jnp.asarray([page])
+            for leaf_i in range(len(self.leaves)):
+                src = self.leaves[leaf_i][idx]
+                self.leaves[leaf_i] = \
+                    self.leaves[leaf_i].at[jnp.asarray([fresh])].set(src)
+            self.refcount[fresh] = 1
+            self._unref(page)
+            handle.pages[li] = fresh
+            handle.keys[li] = None
+            self.cow_splits += 1
+        return True
+
+    @_locked
+    def fork(self, handle: PagedCacheHandle) -> PagedCacheHandle:
+        """Share *all* pages of a session (parallel sampling / beam split).
+        The partial tail page becomes shared too; the first diverging write
+        on either branch copy-on-writes it via :meth:`prepare_write`."""
+        for p in handle.pages:
+            self.refcount[p] += 1
+        self.installed_sessions += 1
+        return PagedCacheHandle(pool=self, pages=list(handle.pages),
+                                keys=list(handle.keys), length=handle.length)
+
+    @_locked
+    def release(self, handle: PagedCacheHandle) -> None:
+        """Drop a session's references. Pages shared with live siblings
+        survive; exclusively-owned pages return to the free list and leave
+        the prefix trie. Idempotent — a degraded-then-dropped session
+        releases once."""
+        if not handle.pages:
+            return
+        # leaf-to-root: a trie node must lose its children before its own
+        # page can be pruned from the trie
+        for p in reversed(handle.pages):
+            self._unref(p)
+        handle.pages = []
+        handle.keys = []
+        self.installed_sessions -= 1
+
+    # ------------------------------------------------------------------ view
+    @_locked
+    def materialize(self, handle: PagedCacheHandle):
+        """Contiguous ``max_len`` cache tree for a handle (degrade path).
+        Positions beyond the used pages gather scratch-page content — the
+        decode validity mask never reads them."""
+        table = np.zeros(self.pages_per_seq, np.int32)
+        table[:len(handle.pages)] = handle.pages
+        leaves = gather_pages(self.leaves, self.axes, jnp.asarray(table),
+                              self.page_size)
+        return jax.tree.unflatten(jax.tree.structure(self.skeleton), leaves)
+
+    @_locked
+    def stats(self) -> dict:
+        total = self.num_pages - 1
+        free = len(self._free)
+        return {
+            "kv_pages_total": total,
+            "kv_pages_free": free,
+            "kv_pages_used": total - free,
+            "kv_pages_shared": int(np.sum(self.refcount > 1)),
+            "cow_splits_total": self.cow_splits,
+            "page_alloc_failures": self.alloc_failures,
+            "prefix_pages_reused": self.prefix_pages_reused,
+            "paged_sessions": self.installed_sessions,
+        }

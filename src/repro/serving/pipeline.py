@@ -200,9 +200,25 @@ class _Replica:
 
     def install_session(self, sid: int, cache: Any, batch: int,
                         step: int, trace: Any = None) -> None:
-        """Adopt migrated/restored decode state at a step boundary."""
+        """Adopt migrated/restored decode state at a step boundary. A paged
+        wire payload is installed page-by-page into this executor's pool
+        (deduping against pages it already holds); anything else passes
+        through unchanged."""
+        cache = self.executor.adopt_cache(cache)
+        old = self.sessions.pop(sid, None)
+        if old is not None and old.cache is not cache:
+            self.executor.release_cache(old.cache)
         self.sessions[sid] = _Session(cache=cache, batch=batch, step=step,
                                       touched=time.monotonic(), trace=trace)
+
+    def drop_session(self, sid: int) -> None:
+        """Forget a session AND return its stage cache to the executor —
+        for a paged handle that decrements page refcounts (shared prefix
+        pages survive while siblings still hold them); contiguous caches
+        just lose their last reference."""
+        sess = self.sessions.pop(sid, None)
+        if sess is not None:
+            self.executor.release_cache(sess.cache)
 
     def open_sessions(self) -> int:
         return len(self.sessions)
@@ -258,7 +274,7 @@ class _Replica:
                            env_kind=int(env.kind), session=env.session_id,
                            error=repr(e))
                 rec.dump("unhandled_failure", worker=self.worker_id)
-                self.sessions.pop(env.session_id, None)
+                self.drop_session(env.session_id)
                 if env.kind in (Kind.PREFILL, Kind.DECODE):
                     await self._send_retry(env)
             finally:
@@ -331,6 +347,10 @@ class _Replica:
                 ok = await server.migrations.handoff_prefill(
                     self, peer, sid, cache, batch, env.step,
                     trace=env.trace)
+                # either way the prefill side is done with this cache: the
+                # bytes are on the wire (or abandoned) — return its pages
+                # to the prefill pool instead of stranding them
+                ex.release_cache(cache)
                 if not ok:
                     # mid-handoff failure: unwind to the at-least-once
                     # discipline — RETRY bounces the client into a full
@@ -355,7 +375,7 @@ class _Replica:
         world = await self._forward_routed(
             dataclasses.replace(env, payload=y, home=home.worker_id))
         if world is None:            # expired while parked — orphan reaped
-            home.sessions.pop(sid, None)
+            home.drop_session(sid)
             self.migrated.pop(sid, None)
             return
         if home is self and self.router.pinned(sid) is None:
@@ -376,7 +396,7 @@ class _Replica:
         position), waiting up to ``microbatch_wait_s`` for stragglers when
         more sessions are open than are in hand."""
         if self.draining or env.session_id not in self.sessions:
-            self.sessions.pop(env.session_id, None)
+            self.drop_session(env.session_id)
             await self._send_retry(env)
             return
         batch: list[Envelope] = [env]
@@ -415,7 +435,7 @@ class _Replica:
                 # batch-mates were already pulled off the inbox and would
                 # otherwise stall their clients a full step_timeout
                 for e, _ in live:
-                    self.sessions.pop(e.session_id, None)
+                    self.drop_session(e.session_id)
                     await self._send_retry(e)
                 return
             now = time.monotonic()
@@ -541,7 +561,7 @@ class _Replica:
             session=env.session_id, step=env.step)
         if env.kind not in (Kind.PREFILL, Kind.DECODE) or env.session_id < 0:
             return
-        self.sessions.pop(env.session_id, None)
+        self.drop_session(env.session_id)
         fin = Envelope(req_id=env.req_id, session_id=env.session_id,
                        kind=Kind.FINISH, step=env.step,
                        error=f"deadline exceeded at {self.worker_id} "
@@ -564,7 +584,7 @@ class _Replica:
             step=env.step, trace=env.trace))
 
     async def _finish_session(self, env: Envelope) -> None:
-        self.sessions.pop(env.session_id, None)
+        self.drop_session(env.session_id)
         if self.server._is_last(self.stage):
             self.server.session_margins.pop(env.session_id, None)
         world = self.router.pinned(env.session_id)
@@ -597,7 +617,7 @@ class _Replica:
         ttl = self.server.session_ttl_s
         for sid in [s for s, sess in self.sessions.items()
                     if now - sess.touched > ttl]:
-            del self.sessions[sid]
+            self.drop_session(sid)
             self.router.unpin(sid)
             if self.server._is_last(self.stage):
                 self.server.session_margins.pop(sid, None)
@@ -628,6 +648,8 @@ class PipelineServer:
     def __init__(self, cluster: Cluster, model, params,
                  replicas: list, *, name: str = "pipe",
                  least_loaded: bool = False, max_len: int = 256,
+                 paged: bool = False, page_size: int = 16,
+                 pool_pages: Optional[int] = None,
                  microbatch_max: int = 8, microbatch_wait_s: float = 0.002,
                  session_ttl_s: float = 60.0,
                  snapshot_interval_s: Optional[float] = None,
@@ -665,6 +687,12 @@ class PipelineServer:
         self.n_stages = len(replicas)
         self.least_loaded = least_loaded
         self.max_len = max_len
+        #: paged KV mode: every stage executor allocates its cache out of a
+        #: PagePool (shared prompt-prefix pages, page-granular state
+        #: transfer) instead of per-session contiguous buffers
+        self.paged = paged
+        self.page_size = page_size
+        self.pool_pages = pool_pages
         #: continuous-batching knobs: how many decode steps one dispatch may
         #: fuse, and how long to hold the first step for stragglers
         self.microbatch_max = microbatch_max
@@ -682,7 +710,9 @@ class PipelineServer:
         #: one executor per stage, shared by the stage's replicas so they
         #: share one jit cache (compile once, serve everywhere)
         self.stage_executors = [
-            StageExecutor(self.cfg, spec, sp, max_len=max_len)
+            StageExecutor(self.cfg, spec, sp, max_len=max_len,
+                          paged=paged, page_size=page_size,
+                          pool_pages=pool_pages)
             for spec, sp in zip(self.stage_specs, self.stage_param_sets)]
         #: role-specialized executors, created lazily per (stage, role) and
         #: shared within the pool — a split pool must NOT share the 'both'
@@ -722,6 +752,10 @@ class PipelineServer:
         #: failure, every heal, or an explicit ``recorder.dump()``
         self.recorder = FlightRecorder(flightrec_capacity, name=name,
                                        dump_dir=dump_dir)
+        # pool pressure events (page_alloc_failure) land in the flight
+        # recorder's timeline next to the heals/drains they may explain
+        for _ex in self.stage_executors:
+            _ex.on_event = self.recorder.record
         #: deadline drops carried over from retired replicas — folded in at
         #: teardown so cumulative counters survive scale-down exactly
         self.expired_retired = 0
@@ -781,7 +815,10 @@ class PipelineServer:
         if ex is None:
             ex = StageExecutor(self.cfg, self.stage_specs[stage],
                                self.stage_param_sets[stage],
-                               max_len=self.max_len, role=role)
+                               max_len=self.max_len, role=role,
+                               paged=self.paged, page_size=self.page_size,
+                               pool_pages=self.pool_pages)
+            ex.on_event = self.recorder.record
             self._role_executors[key] = ex
         return ex
 
@@ -1128,7 +1165,8 @@ class PipelineServer:
         for task in (rep._run_task, rep._reap_task):
             if task is not None and not task.done():
                 task.cancel()
-        rep.sessions.clear()
+        for sid in list(rep.sessions):
+            rep.drop_session(sid)   # paged pages go back to the pool
         rep.held.clear()
         rep.migrated.clear()
         self.expired_retired += rep.expired

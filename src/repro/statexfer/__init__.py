@@ -48,6 +48,13 @@ from .codec import (
     encode_cache_delta,
     snapshot_delta_to_blob,
 )
+from .codec import (
+    PagedCachePayload,
+    apply_paged_delta,
+    as_paged_payload,
+    materialize_paged,
+    paged_payload_delta,
+)
 from .manager import MigrationManager, cache_nbytes
 from .snapstore import SnapshotStore
 
@@ -63,5 +70,7 @@ __all__ = [
     "tree_equal",
     "apply_snapshot_delta", "blob_base_step", "encode_cache_delta",
     "snapshot_delta_to_blob",
+    "PagedCachePayload", "apply_paged_delta", "as_paged_payload",
+    "materialize_paged", "paged_payload_delta",
     "MigrationManager", "SnapshotStore", "WarmBootstrap", "cache_nbytes",
 ]

@@ -132,8 +132,122 @@ def _host_cache(cache: Any) -> Any:
     return jax.tree.map(lambda a: np.asarray(a), cache)
 
 
+# ---------------------------------------------------------- paged payloads
+@dataclasses.dataclass
+class PagedCachePayload:
+    """Page-granular wire form of one session's stage cache.
+
+    A paged session's cache lives in a shared :class:`~repro.serving.kvpool.
+    PagePool`; its wire form enumerates only the pages the session actually
+    uses (``ceil(length / page_size)`` of them) instead of the whole
+    ``max_len`` buffer — handoffs and snapshots of a paged session are
+    therefore strictly smaller than the contiguous encoding whenever
+    ``length < max_len``. Leaves are host numpy; the tree structure rides as
+    a ``skeleton`` (the cache tree with integer leaf indices), so no pytree
+    registration or treedef pickling is needed on the wire.
+
+    ``keys`` carries the prefix-trie identity of each *full* page (a
+    ``(chunk_digest, chain_digest)`` pair; ``None`` for the partial last
+    page and decode-written pages) so the receiving pool can re-share
+    matching prefix pages instead of storing duplicates.
+
+    ``base_step`` is set on delta payloads only: the entries then cover just
+    the pages dirtied since the base cursor.
+    """
+
+    page_size: int
+    length: int                    # valid tokens (decode cursor + 1)
+    max_len: int
+    skeleton: Any                  # cache tree shape with int leaf indices
+    axes: list                     # per flat leaf: seq axis of the template
+    shapes: list                   # per flat leaf: contiguous template shape
+    dtypes: list                   # per flat leaf: numpy dtype
+    logical: list                  # logical page index per entry (sorted)
+    pages: list                    # per flat leaf: (n_entries, ..page..) array
+    keys: list                     # per entry: (digest, chain) | None
+    base_step: Optional[int] = None
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes this payload moves (page data only — the metadata is noise)."""
+        return int(sum(int(p.nbytes) for p in self.pages))
+
+    def page_entry(self, pos: int) -> list:
+        """Flat per-leaf list of one entry's page arrays."""
+        return [p[pos] for p in self.pages]
+
+
+def as_paged_payload(cache: Any) -> Optional[PagedCachePayload]:
+    """The paged wire form of ``cache`` if it has one (a pool handle, a
+    frozen pool view, or an already-built payload), else None."""
+    if isinstance(cache, PagedCachePayload):
+        return cache
+    fn = getattr(cache, "paged_payload", None)
+    return fn() if callable(fn) else None
+
+
+def materialize_paged(payload: PagedCachePayload, *,
+                      device: bool = True) -> Any:
+    """Expand a paged payload to a contiguous ``max_len`` cache pytree (the
+    adopt-path for executors running without a page pool). Positions beyond
+    the payload's pages are zero, matching a freshly-initialized cache."""
+    page = payload.page_size
+    flats = [np.zeros(shape, dtype)
+             for shape, dtype in zip(payload.shapes, payload.dtypes)]
+    for pos, li in enumerate(payload.logical):
+        for leaf, arr, ax in zip(flats, payload.pages, payload.axes):
+            sl = [slice(None)] * leaf.ndim
+            sl[ax] = slice(li * page, (li + 1) * page)
+            leaf[tuple(sl)] = arr[pos]
+    if device:
+        flats = [jnp.asarray(leaf) for leaf in flats]
+    structure = jax.tree.structure(payload.skeleton)
+    return jax.tree.unflatten(structure, flats)
+
+
+def paged_payload_delta(payload: PagedCachePayload, *, base_step: int,
+                        step: int) -> PagedCachePayload:
+    """Dirty-page subset of a paged payload: only the pages covering
+    positions ``base_step+1 .. step`` (prefill/decode never rewrite earlier
+    positions of a full cache, so earlier pages are bit-identical to the
+    base snapshot's)."""
+    page = payload.page_size
+    lo, hi = (base_step + 1) // page, step // page
+    keep = [i for i, li in enumerate(payload.logical) if lo <= li <= hi]
+    return PagedCachePayload(
+        page_size=page, length=payload.length, max_len=payload.max_len,
+        skeleton=payload.skeleton, axes=payload.axes, shapes=payload.shapes,
+        dtypes=payload.dtypes,
+        logical=[payload.logical[i] for i in keep],
+        pages=[p[keep] for p in payload.pages],
+        keys=[payload.keys[i] for i in keep],
+        base_step=base_step)
+
+
+def apply_paged_delta(base: PagedCachePayload, delta: PagedCachePayload
+                      ) -> PagedCachePayload:
+    """Merge a dirty-page delta into its paged base payload."""
+    by_logical = {li: (base.page_entry(pos), base.keys[pos])
+                  for pos, li in enumerate(base.logical)}
+    for pos, li in enumerate(delta.logical):
+        by_logical[li] = (delta.page_entry(pos), delta.keys[pos])
+    logical = sorted(by_logical)
+    pages = [np.stack([by_logical[li][0][leaf_i] for li in logical])
+             for leaf_i in range(len(base.pages))]
+    return PagedCachePayload(
+        page_size=base.page_size, length=delta.length, max_len=base.max_len,
+        skeleton=base.skeleton, axes=base.axes, shapes=base.shapes,
+        dtypes=base.dtypes, logical=logical, pages=pages,
+        keys=[by_logical[li][1] for li in logical])
+
+
 def encode_cache(cache: Any, codec: str = FP) -> bytes:
     """Serialize a cache pytree to one payload byte string."""
+    paged = as_paged_payload(cache)
+    if paged is not None:
+        # pages always ship fp: pool pages must splice back bit-exactly, and
+        # re-quantizing a page would break that regardless of session margin
+        return pickle.dumps(paged, protocol=pickle.HIGHEST_PROTOCOL)
     host = _host_cache(cache)
     if codec == INT8:
         host = jax.tree.map(_quantize_leaf, host)
@@ -144,8 +258,12 @@ def encode_cache(cache: Any, codec: str = FP) -> bytes:
 
 def decode_cache(payload: bytes, codec: str = FP, *,
                  device: bool = True) -> Any:
-    """Inverse of :func:`encode_cache`; returns jax leaves when ``device``."""
+    """Inverse of :func:`encode_cache`; returns jax leaves when ``device``.
+    Paged payloads come back as :class:`PagedCachePayload` (host-side) —
+    the installer decides whether they enter a pool or materialize."""
     host = pickle.loads(payload)
+    if isinstance(host, PagedCachePayload):
+        return host
     if codec == INT8:
         host = jax.tree.map(_dequantize_leaf, host,
                             is_leaf=lambda x: isinstance(x, _QLeaf))
@@ -291,7 +409,15 @@ def encode_cache_delta(cache: Any, *, base_step: int, step: int,
     whose leaves name each leaf's sequence axis (-1 = none; see
     ``stage_cache_seq_axes``) — the structural ground truth. Without it a
     unique-size heuristic is used, and any leaf whose sequence axis cannot
-    be determined unambiguously ships whole (correct, just uncompressed)."""
+    be determined unambiguously ships whole (correct, just uncompressed).
+
+    Paged caches delta at page granularity instead: the payload carries the
+    pages covering the dirty positions whole (``seq_axes`` is moot — the
+    paged payload knows its own layout)."""
+    paged = as_paged_payload(cache)
+    if paged is not None:
+        delta = paged_payload_delta(paged, base_step=base_step, step=step)
+        return pickle.dumps(delta, protocol=pickle.HIGHEST_PROTOCOL)
     host = _host_cache(cache)
 
     def enc(leaf, ax) -> _DeltaLeaf:
@@ -348,6 +474,24 @@ def apply_snapshot_delta(base: SessionSnapshot,
         raise SnapshotTransferError("delta applied to the wrong session")
     tree = pickle.loads(payload)
 
+    if isinstance(tree, PagedCachePayload):
+        base_paged = as_paged_payload(base.cache)
+        if base_paged is None:
+            # the session flipped contiguous -> paged between base and delta
+            # (e.g. a pool-exhaustion degrade ran the other way); a page
+            # delta cannot splice into a contiguous base — fail closed, the
+            # caller restores from the base cursor alone
+            raise SnapshotTransferError(
+                "paged delta over a contiguous base snapshot")
+        return SessionSnapshot(
+            session_id=header.session_id, stage=header.stage,
+            step=header.step, batch=header.batch,
+            cache=apply_paged_delta(base_paged, tree),
+            origin=getattr(header, "origin", None))
+    if as_paged_payload(base.cache) is not None:
+        raise SnapshotTransferError(
+            "contiguous delta over a paged base snapshot")
+
     def merge(b, d: _DeltaLeaf):
         if d.axis is None:
             return d.data
@@ -395,6 +539,8 @@ def quantization_noise(cache: Any) -> float:
     """Relative int8 quantization noise of a cache pytree: max over float
     leaves of (worst-case dequantization error / leaf RMS). The worst-case
     per-element error of per-last-axis absmax quantization is scale/2."""
+    if as_paged_payload(cache) is not None:
+        return 0.0               # paged payloads always ship fp (bit-exact)
     worst = 0.0
     for leaf in jax.tree.leaves(_host_cache(cache)):
         if not jnp.issubdtype(np.asarray(leaf).dtype, jnp.floating):
@@ -423,8 +569,10 @@ def encode_cache_checked(cache: Any, codec: str, *,
     """Like :func:`encode_cache`, but int8 demotes itself to fp when the
     argmax-gap-vs-quantization-noise margin is too thin. Returns
     ``(payload, codec_actually_used)``."""
-    if codec == INT8 and not int8_margin_ok(argmax_gap, cache,
-                                            margin_factor=margin_factor):
+    if as_paged_payload(cache) is not None:
+        codec = FP               # pages are fp-only (must splice bit-exactly)
+    elif codec == INT8 and not int8_margin_ok(argmax_gap, cache,
+                                              margin_factor=margin_factor):
         codec = FP
     return encode_cache(cache, codec), codec
 

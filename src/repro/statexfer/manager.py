@@ -310,6 +310,11 @@ class MigrationManager:
         server = self.server
         loop = asyncio.get_event_loop()
         t_begin = time.monotonic()
+        if hasattr(cache, "freeze"):
+            # paged handle: pin the pool arrays + page list NOW — the encode
+            # below runs on a worker thread while the serve loop keeps
+            # decoding other sessions (which swaps in new pool arrays)
+            cache = cache.freeze()
         snap = SessionSnapshot(session_id=sid, stage=rep.stage, step=step,
                                batch=batch, cache=cache,
                                origin=rep.worker_id)
@@ -397,9 +402,15 @@ class MigrationManager:
         sess = rep.sessions.get(sid)
         if sess is None:
             raise SnapshotTransferError(f"session {sid} vanished mid-freeze")
+        cache = sess.cache
+        if hasattr(cache, "freeze"):
+            # snapshot-stable capture for paged sessions: the view pins the
+            # pool arrays + page list so the worker-thread encode reads a
+            # consistent image while the serve loop keeps decoding
+            cache = cache.freeze()
         return SessionSnapshot(session_id=sid, stage=rep.stage,
                                step=sess.step, batch=sess.batch,
-                               cache=sess.cache, origin=rep.worker_id)
+                               cache=cache, origin=rep.worker_id)
 
     async def _transfer(self, rep, survivor,
                         snap: SessionSnapshot) -> tuple[SessionSnapshot, int]:
@@ -495,7 +506,7 @@ class MigrationManager:
             "pin_flip", session=sid, src=rep.worker_id,
             dst=survivor.worker_id, heal=heal,
             flips=len(flips) + (1 if new_down is not None else 0))
-        rep.sessions.pop(sid, None)
+        rep.drop_session(sid)      # paged pages return to the source pool
         rep.router.unpin(sid)
         # release: held steps first (FIFO), then any straggler that is still
         # in rep's channels/pumps gets forwarded via the migrated map

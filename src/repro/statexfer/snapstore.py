@@ -150,10 +150,15 @@ class SnapshotStore:
                     if self._last_step.get((sid, rep.stage)) == sess.step:
                         continue
                     # capture atomically (no await between reads): a decode
-                    # step swaps sess.cache/step as a pair
+                    # step swaps sess.cache/step as a pair; a paged handle
+                    # is frozen to a view for the same reason — the pool
+                    # arrays it pins are immutable, decode swaps in new ones
+                    cache = sess.cache
+                    if hasattr(cache, "freeze"):
+                        cache = cache.freeze()
                     snap = SessionSnapshot(
                         session_id=sid, stage=rep.stage, step=sess.step,
-                        batch=sess.batch, cache=sess.cache,
+                        batch=sess.batch, cache=cache,
                         origin=rep.worker_id)
                     await self._write_one(loop, snap,
                                           trace=getattr(sess, "trace", None))

@@ -1,0 +1,414 @@
+"""Paged KV cache: pool mechanics, kernel parity, page-granular state
+transfer, and the paged serving path end to end.
+
+The acceptance bar (ISSUE 7): the Pallas paged decode-attention kernel
+matches the gather-then-contiguous oracle across page sizes and
+occupancies; the PagePool shares prompt-prefix pages across sessions with
+refcount/COW discipline and degrades (never crashes) on exhaustion; paged
+handoffs and snapshots move strictly fewer bytes than contiguous ones; and
+the paged pipeline keeps exact greedy parity with the single engine across
+prefill, fused decode, prefill->decode handoff, and kill + page-granular
+snapshot restore.
+"""
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.control import MetricsHub
+from repro.core import Cluster, FailureKind
+from repro.kernels import ops, ref
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import (
+    PagedCacheHandle,
+    PagePool,
+    PipelineServer,
+    ServeEngine,
+    StageExecutor,
+    prefix_chunk_keys,
+)
+from repro.serving.partition import (
+    split_stages,
+    stage_init_cache,
+    stage_params,
+)
+from repro.statexfer import (
+    apply_paged_delta,
+    as_paged_payload,
+    materialize_paged,
+    paged_payload_delta,
+)
+
+CFG = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                     groups=(BlockGroup(DENSE, 2),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+ENGINE = ServeEngine(MODEL, PARAMS, max_len=64)
+SPEC = split_stages(CFG, 1)[0]
+SPARAMS = stage_params(CFG, PARAMS, SPEC)
+
+
+def _shared_prompts(n, *, system=8, tail=4, seed=0):
+    rng = np.random.default_rng(seed)
+    sys_ids = rng.integers(0, CFG.vocab_size, (1, system))
+    return [np.concatenate(
+        [sys_ids, rng.integers(0, CFG.vocab_size, (1, tail))], axis=1)
+        for _ in range(n)]
+
+
+async def _wait_open(server, stage, n, timeout=20.0):
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        assert time.monotonic() < deadline, "sessions never all opened"
+        await asyncio.sleep(0.005)
+
+
+async def _wait_drained(executors, timeout=10.0):
+    """FINISH envelopes are fire-and-forget: poll for page release."""
+    deadline = time.monotonic() + timeout
+    while True:
+        used = sum(ex.pool_stats().get("kv_pages_used", 0)
+                   for ex in executors)
+        if used == 0:
+            return
+        assert time.monotonic() < deadline, "pool never drained"
+        await asyncio.sleep(0.01)
+
+
+# ------------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("page,h,kv,hd", [
+    (8, 4, 4, 32),       # MHA
+    (16, 8, 2, 64),      # GQA 4:1
+    (8, 4, 1, 64),       # MQA
+])
+def test_paged_decode_attention_parity(page, h, kv, hd, dtype):
+    """Kernel vs gather-to-contiguous oracle, with rows at mixed
+    occupancies: partial last page, page-exact, single-page, pool-shared
+    pages between rows, and pad table slots pointing at scratch page 0."""
+    bsz, n_pages, pool_pages = 4, 4, 10
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (bsz, 1, h, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (pool_pages, page, kv, hd),
+                           jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (pool_pages, page, kv, hd),
+                           jnp.float32).astype(dtype)
+    table = np.zeros((bsz, n_pages), np.int32)
+    table[0] = [1, 2, 3, 4]          # partial last page
+    table[1] = [1, 2, 5, 6]          # shares pages 1,2 with row 0
+    table[2, :2] = [7, 8]            # page-exact, rest scratch
+    table[3, :1] = [9]               # single partial page
+    lengths = jnp.asarray([4 * page - 3, 4 * page - 3, 2 * page, page // 2],
+                          jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, jnp.asarray(table), lengths)
+    want = ref.paged_decode_attention_ref(q, kp, vp, jnp.asarray(table),
+                                          lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_decode_attention_softcap():
+    bsz, n_pages, pool_pages, page, h, kv, hd = 2, 2, 6, 8, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (bsz, 1, h, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (pool_pages, page, kv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (pool_pages, page, kv, hd), jnp.float32)
+    table = jnp.asarray([[1, 2], [3, 0]], jnp.int32)
+    lengths = jnp.asarray([11, 5], jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, table, lengths, softcap=30.0)
+    want = ref.paged_decode_attention_ref(q, kp, vp, table, lengths,
+                                          softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- prefix keys
+
+def test_prefix_chunk_keys_chain_diverges_at_edit():
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, CFG.vocab_size, (1, 24))
+    a = prefix_chunk_keys(x, 24, 8)
+    assert len(a) == 3 and a == prefix_chunk_keys(x.copy(), 24, 8)
+    y = x.copy()
+    y[0, 9] = (y[0, 9] + 1) % CFG.vocab_size   # edit inside page 1
+    b = prefix_chunk_keys(y, 24, 8)
+    assert b[0] == a[0]
+    # the chain digest poisons everything downstream of the edit
+    assert b[1] != a[1] and b[2] != a[2]
+    # page 2's *content* beyond the edit is identical, but its chain differs
+    assert b[2][0] == a[2][0] and b[2][1] != a[2][1]
+
+
+# ------------------------------------------------------------- pool lifecycle
+
+def _rand_cache(seed, max_len=32):
+    cache = stage_init_cache(CFG, SPEC, 1, max_len)
+    leaves, treedef = jax.tree.flatten(cache)
+    rng = np.random.default_rng(seed)
+    leaves = [jnp.asarray(rng.normal(size=leaf.shape), leaf.dtype)
+              for leaf in leaves]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _pool(num_pages=16, max_len=32, page_size=8, **kw):
+    return PagePool(CFG, SPEC, max_len=max_len, page_size=page_size,
+                    num_pages=num_pages, **kw)
+
+
+def _seq_take(tree, axes, lo, hi):
+    return [np.take(np.asarray(leaf), np.arange(lo, hi), axis=ax)
+            for leaf, ax in zip(jax.tree.leaves(tree), axes)]
+
+
+def test_pool_prefix_sharing_refcount_lifecycle():
+    pool = _pool()
+    x = _shared_prompts(2, system=16, tail=4, seed=3)
+    keys = [prefix_chunk_keys(p, 20, 8) for p in x]
+    h1 = pool.install_prefill(_rand_cache(1), 20, keys[0])
+    h2 = pool.install_prefill(_rand_cache(2), 20, keys[1])
+    s = pool.stats()
+    # 2 shared full prefix pages + each session's private partial tail
+    assert s["prefix_pages_reused"] == 2
+    assert s["kv_pages_used"] == 4 and s["kv_pages_shared"] == 2
+    assert h1.pages[:2] == h2.pages[:2] and h1.pages[2] != h2.pages[2]
+    # the shared prefix reads back identically through either table
+    np.testing.assert_array_equal(
+        np.concatenate([leaf.ravel() for leaf in
+                        _seq_take(pool.materialize(h1), pool.axes, 0, 16)]),
+        np.concatenate([leaf.ravel() for leaf in
+                        _seq_take(pool.materialize(h2), pool.axes, 0, 16)]))
+    pool.release(h1)
+    assert pool.stats()["kv_pages_used"] == 3   # shared pages survive h1
+    pool.release(h2)
+    s = pool.stats()
+    assert s["kv_pages_used"] == 0 and s["paged_sessions"] == 0
+    # trie fully pruned: a fresh same-prefix install re-stores the pages
+    h3 = pool.install_prefill(_rand_cache(3), 20, keys[0])
+    assert pool.stats()["prefix_pages_reused"] == 2    # unchanged counter
+    pool.release(h3)
+
+
+def test_pool_fork_copy_on_write_isolation():
+    pool = _pool()
+    x = _shared_prompts(1, system=16, tail=4, seed=4)[0]
+    h1 = pool.install_prefill(_rand_cache(5), 20, prefix_chunk_keys(x, 20, 8))
+    h2 = pool.fork(h1)
+    assert h2.pages == h1.pages
+    before = _seq_take(pool.materialize(h1), pool.axes, 16, 20)
+    assert pool.prepare_write(h2, 20)      # first diverging write on h2
+    assert pool.cow_splits == 1
+    assert h2.pages[2] != h1.pages[2] and h2.pages[:2] == h1.pages[:2]
+    # scribble over h2's private copy; h1 must not see it
+    idx = jnp.asarray([h2.pages[2]])
+    pool.leaves[0] = pool.leaves[0].at[idx].set(1.0)
+    after = _seq_take(pool.materialize(h1), pool.axes, 16, 20)
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
+    pool.release(h1)
+    pool.release(h2)
+    assert pool.stats()["kv_pages_used"] == 0
+
+
+def test_pool_exhaustion_degrades_with_flight_event():
+    events = []
+    # minimum clamp: pages_per_seq + 2 physical = 5 usable
+    pool = _pool(num_pages=0, on_event=lambda k, **f: events.append((k, f)))
+    rng = np.random.default_rng(6)
+    xs = [rng.integers(0, CFG.vocab_size, (1, 32)) for _ in range(2)]
+    h1 = pool.install_prefill(_rand_cache(7), 32, prefix_chunk_keys(xs[0], 32, 8))
+    assert h1 is not None and len(h1.pages) == 4
+    h2 = pool.install_prefill(_rand_cache(8), 32, prefix_chunk_keys(xs[1], 32, 8))
+    assert h2 is None                     # 1 page free < 4 needed: degrade
+    assert pool.stats()["page_alloc_failures"] == 1
+    assert [k for k, _ in events] == ["page_alloc_failure"]
+    assert events[0][1]["where"] == "prefill"
+    # the failed install must have rolled its partial allocation back
+    assert pool.stats()["kv_pages_used"] == 4
+    pool.release(h1)
+    assert pool.stats()["kv_pages_free"] == pool.stats()["kv_pages_total"]
+
+
+# ---------------------------------------------------- page-granular transfer
+
+def test_paged_payload_roundtrip_and_delta_merge():
+    pool = _pool()
+    x = _shared_prompts(1, system=16, tail=4, seed=9)[0]
+    h = pool.install_prefill(_rand_cache(10), 20, prefix_chunk_keys(x, 20, 8))
+    base = as_paged_payload(h.freeze())
+    assert base.nbytes < pool.pages_per_seq * pool.page_nbytes  # < max_len
+    # materialized payload == pool view on every written position
+    mat = materialize_paged(base)
+    for got, want in zip(_seq_take(mat, pool.axes, 0, 20),
+                         _seq_take(pool.materialize(h), pool.axes, 0, 20)):
+        np.testing.assert_array_equal(got, want)
+    # simulate decode dirtying the tail page + one fresh page
+    assert pool.prepare_write(h, 20) and pool.prepare_write(h, 24)
+    h.length = 25
+    full = as_paged_payload(h.freeze())
+    delta = paged_payload_delta(full, base_step=19, step=24)
+    assert delta.logical == [2, 3]        # dirty pages only
+    assert delta.nbytes < full.nbytes
+    merged = apply_paged_delta(base, delta)
+    assert merged.logical == full.logical and merged.length == full.length
+    for a, b in zip(merged.pages, full.pages):
+        np.testing.assert_array_equal(a, b)
+    pool.release(h)
+
+
+def test_install_payload_reshares_prefix_across_pools():
+    src = _pool()
+    xs = _shared_prompts(2, system=16, tail=4, seed=11)
+    hs = [src.install_prefill(_rand_cache(12 + i), 20,
+                              prefix_chunk_keys(x, 20, 8))
+          for i, x in enumerate(xs)]
+    dst = _pool()
+    d1 = dst.install_payload(as_paged_payload(hs[0].freeze()))
+    d2 = dst.install_payload(as_paged_payload(hs[1].freeze()))
+    assert d1 is not None and d2 is not None
+    # the handed-off sessions share the prefix in the *destination* pool too
+    assert d1.pages[:2] == d2.pages[:2]
+    assert dst.stats()["prefix_pages_reused"] == 2
+    for got, want in zip(_seq_take(dst.materialize(d2), dst.axes, 0, 20),
+                         _seq_take(src.materialize(hs[1]), src.axes, 0, 20)):
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------- executor paging
+
+def test_executor_paged_greedy_parity_with_engine():
+    """Paged prefill + fused paged decode == single-engine greedy tokens,
+    across sessions sharing a prompt prefix (width>1 convoy)."""
+    ex = StageExecutor(CFG, SPEC, SPARAMS, max_len=64, paged=True,
+                       page_size=8)
+    ps = _shared_prompts(3, system=8, tail=4, seed=13)
+    wants = [np.asarray(ENGINE.generate(p, 5)).ravel() for p in ps]
+    handles, toks, ts = [], [], []
+    for p in ps:
+        out, cache = ex.prefill(jnp.asarray(p))
+        assert isinstance(cache, PagedCacheHandle)
+        handles.append(cache)
+        toks.append(np.asarray(out)[:, -1].argmax(-1)
+                    .astype(np.int32).reshape(1, 1))
+        ts.append(p.shape[1])
+    got = [[int(t[0, 0])] for t in toks]
+    for _ in range(4):
+        res = ex.decode_many(handles, [jnp.asarray(t) for t in toks], ts)
+        for i, (out, cache) in enumerate(res):
+            handles[i] = cache
+            toks[i] = np.asarray(out).argmax(-1) \
+                .astype(np.int32).reshape(1, 1)
+            ts[i] += 1
+            got[i].append(int(toks[i][0, 0]))
+    for want, g in zip(wants, got):
+        np.testing.assert_array_equal(want, np.asarray(g))
+    assert ex.stats["paged_decode_batches"] > 0
+    assert ex.stats["paged_degrades"] == 0
+    assert ex.pool_stats()["prefix_pages_reused"] == 2   # 8-token prefix
+    for h in handles:
+        ex.release_cache(h)
+    assert ex.pool_stats()["kv_pages_used"] == 0
+
+
+def test_pad_slot_donor_is_zeros_and_cached():
+    """Convoy pad lanes ride an all-zeros donor cache, built once per leaf
+    signature — not a replicated copy of session 0's cache."""
+    ex = StageExecutor(CFG, SPEC, SPARAMS, max_len=64)
+    like = _rand_cache(14, max_len=64)
+    donor = ex._pad_cache(like)
+    for leaf in jax.tree.leaves(donor):
+        assert not np.any(np.asarray(leaf))
+    assert ex._pad_cache(_rand_cache(15, max_len=64)) is donor
+
+
+# ------------------------------------------------------------- paged pipeline
+
+def test_pipeline_paged_colocated_parity_and_metrics(arun):
+    """Greedy parity through the paged pipeline, pool drain after FINISH,
+    and the kvpool group in the Prometheus export."""
+    async def scenario():
+        cluster = Cluster()
+        server = PipelineServer(cluster, MODEL, PARAMS, [1, 2], max_len=64,
+                                paged=True, page_size=8)
+        await server.start()
+        ps = _shared_prompts(3, system=8, tail=4, seed=16)
+        wants = [ENGINE.generate(p, 6) for p in ps]
+        outs = await asyncio.gather(
+            *(server.generate(p, 6, step_timeout=120.0) for p in ps))
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(want, got)
+        execs = {id(r.executor): r.executor
+                 for stage in server.replicas for r in stage}
+        assert any(ex.stats["paged_decode_batches"] > 0
+                   for ex in execs.values())
+        assert all(ex.stats["paged_degrades"] == 0 for ex in execs.values())
+        text = MetricsHub(server).export_prometheus()
+        assert "kv_pages_total" in text and "cow_splits_total" in text
+        await _wait_drained(execs.values())
+        cluster.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_pipeline_paged_handoff_smaller_and_parity(arun):
+    """Split prefill/decode pools in both modes: exact parity across the
+    handoff, and the paged handoff moves strictly fewer bytes."""
+    async def one(paged):
+        cluster = Cluster()
+        server = PipelineServer(cluster, MODEL, PARAMS,
+                                [{"prefill": 1, "decode": 1}], max_len=64,
+                                paged=paged, page_size=8)
+        await server.start()
+        ps = _shared_prompts(2, system=8, tail=4, seed=17)
+        wants = [ENGINE.generate(p, 4) for p in ps]
+        outs = await asyncio.gather(
+            *(server.generate(p, 4, step_timeout=120.0) for p in ps))
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(want, got)
+        m = server.migrations.stats()
+        assert m["handoffs_total"] >= 2 and m["handoff_failures"] == 0
+        cluster.shutdown()
+        return m["handoff_bytes_total"] / m["handoffs_total"]
+
+    async def scenario():
+        paged_bytes = await one(True)
+        contig_bytes = await one(False)
+        assert paged_bytes < contig_bytes, (paged_bytes, contig_bytes)
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_pipeline_paged_kill_restores_from_page_snapshots(arun):
+    """Unplanned kill in paged mode: sessions restore from page-granular
+    snapshots into the survivor's pool and finish token-exact."""
+    async def scenario():
+        cluster = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(cluster, MODEL, PARAMS, [1, 2], max_len=64,
+                                paged=True, page_size=8,
+                                snapshot_interval_s=0.05)
+        await server.start()
+        ps = _shared_prompts(3, system=8, tail=4, seed=18)
+        for _ in range(2):      # warm both compile paths off-clock
+            await asyncio.gather(*(server.generate(p, 3, step_timeout=120.0)
+                                   for p in ps))
+        wants = [ENGINE.generate(p, 16) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 16, step_timeout=3.0)) for p in ps]
+        await _wait_open(server, 1, len(ps))
+        await server.snapshots.sweep()
+        victim = max((r for r in server.replicas[1] if r.worker.alive),
+                     key=lambda r: r.open_sessions())
+        cluster.kill(victim.worker_id, FailureKind.SILENT_HANG)
+        outs = await asyncio.gather(*tasks)
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(want, got)
+        assert server.migrations.stats()["restores_total"] >= 1
+        cluster.shutdown()
+
+    arun(scenario(), timeout=300.0)
