@@ -1,0 +1,455 @@
+"""Fleet-scale observability benchmark: the telemetry plane under 10k
+concurrent sessions.
+
+The tentpole claim of the fleet-observability layer is that the telemetry
+plane itself scales: sketches summarize tails without shipping samples,
+digests aggregate hierarchically without changing decisions, sampling
+bounds tracing cost, and burn-rate alerting pages on real regressions
+only. Four gates, one per claim:
+
+(a) **sketch accuracy** — LogSketch p95/p99 over the run's replayed TTFT
+    stream are within the sketch's guaranteed relative error of the exact
+    (sorted-list) percentiles, and merge order (flat vs shard-tree) cannot
+    change an estimate;
+(b) **digest/raw decision parity** — replaying the identical per-replica
+    sample stream through the scaling policies via the flat fold
+    (``shard=None``, the raw reference) and the hierarchical fold
+    (``shard=N``, the fleet path) yields byte-identical decision records
+    on every tick;
+(c) **telemetry overhead** — an open-loop diurnal run over a stub
+    executor fleet (10k+ concurrent stub sessions at peak in full mode),
+    A/B with the full telemetry stack (sketch inserts, sampled tracing,
+    SLO observation) vs telemetry-off, costs <= 5% tokens/s;
+(d) **burn-rate alerting** — on a virtual-time request stream, an
+    injected latency regression trips the multi-window burn-rate alert
+    (and clears after recovery) while the steady baseline stays quiet.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet [--tiny] [--json OUT]
+
+``--tiny`` shrinks session counts/durations for CI smoke; gate (c) is
+report-only there (an overhead *ratio* needs a run long enough to sit
+above scheduler noise) and the concurrency floor drops accordingly.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import random
+import time
+
+from repro.control import (
+    DiurnalProfile,
+    OpenLoopGenerator,
+    ReplicaSample,
+    StageSnapshot,
+    TailLatencySLOPolicy,
+    TargetQueueDepthPolicy,
+    TokenRatePolicy,
+    TTFTSLOPolicy,
+    percentile,
+)
+from repro.obs import LogSketch, SLOMonitor, SLOSpec, Tracer
+from repro.obs.digest import fold_samples
+
+from .common import (run_async, trace_path_for, write_bench_json,
+                     write_trace_json)
+
+FULL = {
+    "duration_s": 6.0,
+    "rate_mean": 5000.0,
+    "rate_amp": 2500.0,
+    "period_s": 6.0,
+    "max_inflight": 20000,
+    "chunk_s": 0.5,
+    "chunks": 4,
+    "concurrency_floor": 10_000,
+    "replay_replicas": 96,
+    "replay_ticks": 60,
+    "shard": 8,
+}
+TINY = {
+    "duration_s": 1.5,
+    "rate_mean": 400.0,
+    "rate_amp": 200.0,
+    "period_s": 2.0,
+    "max_inflight": 2000,
+    "chunk_s": 0.25,
+    "chunks": 3,
+    "concurrency_floor": 100,
+    "replay_replicas": 24,
+    "replay_ticks": 20,
+    "shard": 8,
+}
+
+TOKENS_PER_CHUNK = 8
+TTFT_SLO_S = 0.02
+DECODE_SLO_S = 1.5
+
+
+# --------------------------------------------------------------------------
+# gates (a) + (b): replayed sample stream -> sketch accuracy + fold parity
+# --------------------------------------------------------------------------
+def _replay_samples(seed: int, n_replicas: int, n_ticks: int):
+    """Deterministic per-tick ReplicaSample streams for a synthetic stage:
+    load swings diurnally, a few replicas fail mid-run, latencies are
+    log-normal with a heavy decode tail. Returns (ticks, exact_ttfts):
+    one (samples, failed) pair per tick plus the exact TTFT stream the
+    sketch gate compares against."""
+    import math
+    rng = random.Random(seed)
+    sketches = [(LogSketch(), LogSketch()) for _ in range(n_replicas)]
+    exact_ttfts: list[float] = []
+    ticks = []
+    for tick in range(n_ticks):
+        load = 1.0 + 0.8 * math.sin(2 * math.pi * tick / n_ticks)
+        failed = set()
+        if n_ticks // 3 <= tick < n_ticks // 2:
+            failed = {f"w{i}" for i in range(0, n_replicas, 17)}
+        samples = []
+        for i in range(n_replicas):
+            tsk, dsk = sketches[i]
+            # every replica serves a few prefills/decodes per tick; the
+            # per-replica sketches accumulate across ticks like live ones
+            for _ in range(4):
+                ttft = rng.lognormvariate(-4.5, 0.6) * load
+                tsk.insert(ttft)
+                exact_ttfts.append(ttft)
+                dsk.insert(rng.lognormvariate(-5.5, 0.9) * load)
+            # one replica drains for a mid-run window (and is excluded
+            # from those ticks' digests) but is healthy again by the final
+            # tick, so the last digest folds every cumulative sketch and
+            # the exact-stream comparison in gate (a) is apples-to-apples
+            draining = (i == n_replicas - 1
+                        and n_ticks * 2 // 3 <= tick < n_ticks * 5 // 6)
+            samples.append(ReplicaSample(
+                worker_id=f"w{i}", stage=0, alive=True,
+                draining=draining,
+                queue_depth=max(0, int(rng.gauss(3.0 * load, 1.5))),
+                inflight=rng.randrange(4),
+                processed=100 * tick + i,
+                throughput=max(0.0, rng.gauss(8.0, 1.0)),
+                latency_s=max(1e-4, rng.gauss(0.02, 0.004) * load),
+                tokens_per_s=max(0.0, rng.gauss(300.0 * load, 40.0)),
+                open_sessions=rng.randrange(6),
+                expired=rng.randrange(2),
+                role="both",
+                ttft_s=tsk.mean(), decode_lat_s=dsk.mean(),
+                ttft_sketch=tsk, decode_sketch=dsk))
+        ticks.append((samples, failed))
+    return ticks, exact_ttfts
+
+
+def _snap_from_digest(d) -> StageSnapshot:
+    """The digest -> policy-view conversion, shared verbatim by both fold
+    modes so the parity gate isolates the *aggregation*, not the view."""
+    return StageSnapshot(
+        stage=d.stage, t=d.t, n_replicas=d.n_replicas,
+        n_failed=d.n_failed, queue_total=d.queue_total,
+        queue_per_replica=d.queue_per_replica,
+        throughput=d.throughput, latency_s=d.latency_s,
+        tokens_per_s=d.tokens_per_s, open_sessions=d.open_sessions,
+        expired=d.expired, ttft_s=d.ttft_s,
+        decode_latency_s=d.decode_latency_s,
+        p95_ttft_s=d.p95_ttft_s, p99_ttft_s=d.p99_ttft_s,
+        p95_decode_s=d.p95_decode_s, p99_decode_s=d.p99_decode_s,
+        digest=d)
+
+
+def _policies():
+    """Stateless policy set (no hysteresis: its wall-clock cooldown would
+    add a timing dependence the replay must not have)."""
+    return [
+        TargetQueueDepthPolicy(target=4.0, max_replicas=256),
+        TTFTSLOPolicy(slo_s=TTFT_SLO_S, max_replicas=256),
+        TokenRatePolicy(target_tokens_per_s=400.0, max_replicas=256),
+        TailLatencySLOPolicy(ttft_slo_s=TTFT_SLO_S * 2,
+                             decode_slo_s=DECODE_SLO_S, max_replicas=256),
+    ]
+
+
+def run_replay(p: dict) -> dict:
+    ticks, exact_ttfts = _replay_samples(
+        seed=11, n_replicas=p["replay_replicas"], n_ticks=p["replay_ticks"])
+    raw_pols, dig_pols = _policies(), _policies()
+    mismatches = 0
+    decisions = 0
+    fleet_sketch = LogSketch()
+    for t, (samples, failed) in enumerate(ticks):
+        flat = fold_samples(samples, failed, stage=0, t=float(t),
+                            shard=None)
+        sharded = fold_samples(samples, failed, stage=0, t=float(t),
+                               shard=p["shard"])
+        raw_records = [pol.decide(_snap_from_digest(flat)).as_record()
+                       for pol in raw_pols]
+        dig_records = [pol.decide(_snap_from_digest(sharded)).as_record()
+                       for pol in dig_pols]
+        decisions += len(raw_records)
+        mismatches += sum(1 for a, b in zip(raw_records, dig_records)
+                          if a != b)
+        if t == len(ticks) - 1:
+            fleet_sketch = sharded.ttft_sketch
+    # gate (a): the fleet-level merged sketch vs the exact stream. The
+    # last tick's digest folded every replica's cumulative sketch, so it
+    # covers the full TTFT stream.
+    exact_ttfts.sort()
+    ra = fleet_sketch.relative_accuracy
+    errs = {}
+    for q in (0.95, 0.99):
+        exact = percentile(exact_ttfts, q * 100)
+        est = fleet_sketch.quantile(q)
+        errs[q] = abs(est - exact) / exact
+    # merge-order invariance: radically different shard widths, same result
+    alt = fold_samples(ticks[-1][0], ticks[-1][1], stage=0,
+                       t=float(len(ticks) - 1), shard=3)
+    return {
+        "n_samples": fleet_sketch.count,
+        "rel_err_p95": errs[0.95],
+        "rel_err_p99": errs[0.99],
+        "guaranteed_ra": ra,
+        "decisions": decisions,
+        "mismatches": mismatches,
+        "merge_invariant": (
+            alt.ttft_sketch.quantile(0.99) == fleet_sketch.quantile(0.99)
+            and alt.ttft_sketch.quantile(0.95)
+            == fleet_sketch.quantile(0.95)
+            and alt.ttft_sketch.count == fleet_sketch.count),
+    }
+
+
+# --------------------------------------------------------------------------
+# gate (c): stub-executor fleet under open-loop diurnal traffic, A/B
+# --------------------------------------------------------------------------
+class _StubFleet:
+    """A fleet of stub replicas serving stub sessions: every latency is a
+    deterministic function of the session index (same in both A/B arms),
+    so the tokens/s delta isolates the telemetry stack's own cost."""
+
+    def __init__(self, p: dict, *, telemetry: bool, seed: int = 0) -> None:
+        self.p = p
+        self.telemetry = telemetry
+        self.seed = seed
+        self.tokens = 0
+        self.sessions_done = 0
+        self.inflight = 0
+        self.peak_inflight = 0
+        self.next_idx = 0
+        if telemetry:
+            self.ttft_sketch = LogSketch()
+            self.decode_sketch = LogSketch()
+            # slow_keep sits above the worst-case *healthy* session span
+            # (chunks * chunk_s * 1.2 + ttft), so only the injected slow
+            # outliers trip the tail-keep rule
+            self.tracer = Tracer(
+                16384, sample_rate=0.05,
+                slow_keep_s=self.p["chunks"] * self.p["chunk_s"] * 1.5,
+                seed=seed)
+            self.slo = SLOMonitor(
+                (SLOSpec("ttft_p99", "ttft", TTFT_SLO_S, 0.99),
+                 SLOSpec("decode_p99", "decode", DECODE_SLO_S, 0.99)),
+                bucket_s=0.5)
+        else:
+            self.ttft_sketch = self.decode_sketch = None
+            self.tracer = Tracer(enabled=False)
+            self.slo = None
+
+    async def session(self) -> None:
+        idx = self.next_idx
+        self.next_idx += 1
+        self.inflight += 1
+        self.peak_inflight = max(self.peak_inflight, self.inflight)
+        rng = random.Random((self.seed << 20) ^ idx)
+        p = self.p
+        try:
+            root = self.tracer.begin()
+            t0 = time.monotonic()
+            ttft = rng.lognormvariate(-6.0, 0.5)
+            await asyncio.sleep(ttft)
+            if self.telemetry:
+                now = time.monotonic()
+                self.ttft_sketch.insert(ttft)
+                self.slo.observe("ttft", ttft, now)
+                self.tracer.span(root, "ttft", now - ttft)
+            # inject a rare slow outlier (~0.1% of sessions, identically
+            # in both A/B arms): the traces sampling must tail-keep
+            slow = (idx % 997 == 0)
+            for chunk in range(p["chunks"]):
+                dt = p["chunk_s"] * rng.uniform(0.8, 1.2)
+                if slow and chunk == 0:
+                    dt *= 6.0
+                await asyncio.sleep(dt)
+                self.tokens += TOKENS_PER_CHUNK
+                if self.telemetry:
+                    now = time.monotonic()
+                    self.decode_sketch.insert(dt)
+                    self.slo.observe("decode", dt, now)
+                    self.tracer.span(root, "decode_step", now - dt)
+            self.tracer.record(root, "session", t0,
+                               time.monotonic() - t0, "",
+                               f"tokens={p['chunks'] * TOKENS_PER_CHUNK}")
+            self.sessions_done += 1
+        finally:
+            self.inflight -= 1
+
+
+async def _fleet_run(p: dict, *, telemetry: bool) -> dict:
+    fleet = _StubFleet(p, telemetry=telemetry, seed=3)
+    gen = OpenLoopGenerator(
+        fleet.session,
+        DiurnalProfile(mean=p["rate_mean"], amplitude=p["rate_amp"],
+                       period_s=p["period_s"]),
+        seed=5, max_inflight=p["max_inflight"])
+    t0 = time.monotonic()
+    summary = await gen.run(p["duration_s"])
+    wall = time.monotonic() - t0
+    out = {
+        "telemetry": telemetry,
+        "wall_s": wall,
+        "tokens": fleet.tokens,
+        "tokens_per_s": fleet.tokens / wall,
+        "sessions": fleet.sessions_done,
+        "peak_sessions": fleet.peak_inflight,
+        "gen": summary,
+    }
+    if telemetry:
+        out["spans_recorded"] = fleet.tracer.recorded
+        out["traces_sampled_out"] = fleet.tracer.sampled_out
+        out["traces_tail_kept"] = fleet.tracer.tail_kept
+        out["sketch_p99_ttft_s"] = fleet.ttft_sketch.p99()
+        out["slo_firing"] = fleet.slo.firing()
+        out["span_summary"] = fleet.tracer.summary()
+    return out
+
+
+# --------------------------------------------------------------------------
+# gate (d): burn-rate alerting on a virtual-time stream
+# --------------------------------------------------------------------------
+def _burn_scenario(*, regression: bool, seed: int = 7) -> dict:
+    """120 virtual seconds of request traffic at ~50 req/s against a 1%
+    error budget: steady traffic runs 0.2% bad (burn 0.2 — quiet);
+    the regression arm turns 50% of requests bad for t in [40, 70)
+    (burn 50 — both windows blow through the 14.4 page threshold), then
+    recovers (the short window clears the alert)."""
+    mon = SLOMonitor((SLOSpec("ttft_p99", "ttft", 0.2, objective=0.99),),
+                     bucket_s=1.0)
+    rng = random.Random(seed)
+    events = []
+    for tick in range(120):
+        now = float(tick)
+        bad_frac = 0.5 if (regression and 40 <= tick < 70) else 0.002
+        for _ in range(50):
+            v = 0.5 if rng.random() < bad_frac else 0.05
+            mon.observe("ttft", v, now)
+        events.extend(mon.evaluate(now))
+    fired = [e for e in events if e["kind"] == "slo_alert"]
+    cleared = [e for e in events if e["kind"] == "slo_clear"]
+    return {"fired": len(fired), "cleared": len(cleared),
+            "firing_after": mon.firing(), "events": events}
+
+
+# --------------------------------------------------------------------------
+def run(tiny: bool = False, json_path=None) -> list[tuple[str, float, str]]:
+    p = TINY if tiny else FULL
+
+    replay = run_replay(p)
+    on = run_async(_fleet_run(p, telemetry=True))
+    off = run_async(_fleet_run(p, telemetry=False))
+    steady = _burn_scenario(regression=False)
+    regress = _burn_scenario(regression=True)
+
+    overhead = 1.0 - on["tokens_per_s"] / off["tokens_per_s"]
+
+    rows = [
+        ("fleet_sketch_rel_err_p95", replay["rel_err_p95"],
+         f"vs exact over {replay['n_samples']} TTFTs; bound "
+         f"{replay['guaranteed_ra']:g}"),
+        ("fleet_sketch_rel_err_p99", replay["rel_err_p99"],
+         "merged across replica sketches, shard-tree fold"),
+        ("fleet_parity_decisions", float(replay["decisions"]),
+         "policy votes compared raw-fold vs sharded-fold"),
+        ("fleet_parity_mismatches", float(replay["mismatches"]),
+         "must be 0 — hierarchy cannot change a decision"),
+        ("fleet_tokens_per_s/telemetry_on", on["tokens_per_s"],
+         "sketches + sampled tracing + SLO observation"),
+        ("fleet_tokens_per_s/telemetry_off", off["tokens_per_s"],
+         "same seeded workload, telemetry disabled"),
+        ("fleet_telemetry_overhead_ratio", overhead,
+         "<= 0.05 gate (full mode)"),
+        ("fleet_peak_sessions", float(on["peak_sessions"]),
+         f"concurrent stub sessions (floor {p['concurrency_floor']})"),
+        ("fleet_sessions_total", float(on["sessions"]),
+         "completed stub sessions, telemetry arm"),
+        ("fleet_traces_sampled_out", float(on["traces_sampled_out"]),
+         "boring unsampled traces dropped wholesale"),
+        ("fleet_traces_tail_kept", float(on["traces_tail_kept"]),
+         "unsampled traces promoted by tail keep rules"),
+        ("fleet_spans_recorded", float(on["spans_recorded"]),
+         "ring writes after sampling"),
+        ("fleet_alerts_steady", float(steady["fired"]),
+         "must be 0 — no false pages on healthy traffic"),
+        ("fleet_alerts_regression", float(regress["fired"]),
+         "must fire on the injected latency regression"),
+        ("fleet_alert_clears_regression", float(regress["cleared"]),
+         "short-window recovery clears the alert"),
+    ]
+
+    # ---- gate (a): sketch accuracy within the guaranteed bound ----------
+    ra = replay["guaranteed_ra"]
+    assert replay["rel_err_p95"] <= ra + 1e-9, replay
+    assert replay["rel_err_p99"] <= ra + 1e-9, replay
+    assert replay["merge_invariant"], "shard width changed a quantile"
+    # ---- gate (b): digest-mode decisions identical to raw-mode ----------
+    assert replay["mismatches"] == 0, \
+        f"{replay['mismatches']}/{replay['decisions']} decisions diverged"
+    # ---- gate (c): telemetry overhead <= 5% tokens/s (full runs only —
+    # a tiny run is too short for the ratio to sit above scheduler noise,
+    # where it is reported but not enforced) ------------------------------
+    if on["gen"]["shed"] == 0 and off["gen"]["shed"] == 0:
+        assert on["tokens"] == off["tokens"], \
+            "A/B arms served different work — overhead ratio is meaningless"
+    if not tiny:
+        assert overhead <= 0.05, \
+            f"telemetry overhead {overhead:.1%} > 5% tokens/s"
+        assert on["traces_tail_kept"] >= 1, \
+            "no injected slow outlier survived head sampling"
+    assert on["peak_sessions"] >= p["concurrency_floor"], \
+        (f"peak concurrency {on['peak_sessions']} under the "
+         f"{p['concurrency_floor']} floor — the run never reached scale")
+    # sampling must actually bound the ring: most healthy traces dropped
+    assert on["traces_sampled_out"] > 0, on
+    # ---- gate (d): regression pages, steady stays quiet ------------------
+    assert steady["fired"] == 0, steady
+    assert regress["fired"] >= 1, regress
+    assert regress["cleared"] >= 1, regress
+    assert not regress["firing_after"], "alert never cleared post-recovery"
+
+    raw = {"replay": {k: v for k, v in replay.items()},
+           "telemetry_on": {k: v for k, v in on.items()
+                            if k != "span_summary"},
+           "telemetry_off": off,
+           "steady": {k: v for k, v in steady.items() if k != "events"},
+           "regression": {k: v for k, v in regress.items()
+                          if k != "events"},
+           "regression_events": regress["events"],
+           }
+    if json_path:
+        write_bench_json(json_path, suite="fleet", rows=rows, raw=raw,
+                         tiny=tiny)
+        write_trace_json(
+            trace_path_for(json_path, "fleet"), suite="fleet",
+            phases={"fleet": {
+                "span_summary": on.get("span_summary", {}),
+                "spans_recorded": on.get("spans_recorded"),
+                "spans_dropped": 0,
+            }})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: few sessions, short run")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write rows + raw results as JSON artifact")
+    args = ap.parse_args()
+    for name, value, derived in run(tiny=args.tiny, json_path=args.json):
+        print(f"{name},{value:.4f},{derived}")

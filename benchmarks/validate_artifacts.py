@@ -1,0 +1,202 @@
+"""Schema + regression gate for committed bench/trace artifacts.
+
+Every suite commits a ``BENCH_*.json`` (``bench/v1``) and ``TRACE_*.json``
+(``trace/v1``) snapshot of its last full run. Those artifacts are the
+repo's performance record — and nothing guarded them: a suite could start
+writing malformed documents, or a refactor could silently halve a headline
+metric, and the diff would scroll past review. This tool is the CI
+tripwire:
+
+1. **schema check** — every committed artifact must carry the right
+   schema tag and the structural fields its readers (CI trend tooling,
+   the README tables) rely on;
+2. **regression diff** — headline metrics are compared against the same
+   artifact at a base git revision (default: the previous commit).
+   A *watched* metric (suffix-classified: throughput-like higher-better,
+   latency-like lower-better) that moved more than ``--threshold``
+   (default 20%) in the bad direction fails the run, unless the commit
+   touched that suite's bench (an *explained* regression — the bench
+   itself changed, so the comparison is void).
+
+  PYTHONPATH=src python -m benchmarks.validate_artifacts [--base REV]
+      [--threshold 0.2] [--no-diff]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import subprocess
+import sys
+
+BENCH_SCHEMA = "bench/v1"
+TRACE_SCHEMA = "trace/v1"
+
+#: metric-name suffixes where bigger is better
+_HIGHER_BETTER = ("_per_s", "_tokens_per_s", "_speedup", "_ok",
+                  "_sessions", "_reused")
+#: suffixes where smaller is better
+_LOWER_BETTER = ("_ms", "_s", "_bytes", "_bytes_total", "_failed",
+                 "_failures", "_overhead_ratio", "_rel_err_p95",
+                 "_rel_err_p99", "_mismatches")
+
+
+def _direction(name: str):
+    """+1 higher-better, -1 lower-better, 0 unwatched."""
+    base = name.split("/", 1)[0]
+    for suf in _HIGHER_BETTER:
+        if base.endswith(suf):
+            return 1
+    for suf in _LOWER_BETTER:
+        if base.endswith(suf):
+            return -1
+    return 0
+
+
+# ------------------------------------------------------------------ schema
+def check_bench(doc: dict, path: str) -> list[str]:
+    errs = []
+    if doc.get("schema") != BENCH_SCHEMA:
+        errs.append(f"{path}: schema {doc.get('schema')!r} != "
+                    f"{BENCH_SCHEMA!r}")
+        return errs
+    for field in ("suite", "git_rev", "wall_clock", "metrics"):
+        if field not in doc:
+            errs.append(f"{path}: missing field {field!r}")
+    metrics = doc.get("metrics", {})
+    if not isinstance(metrics, dict) or not metrics:
+        errs.append(f"{path}: metrics must be a non-empty dict")
+        return errs
+    for name, rec in metrics.items():
+        if not isinstance(rec, dict) or "value" not in rec \
+                or "unit" not in rec:
+            errs.append(f"{path}: metric {name!r} lacks value/unit")
+    return errs
+
+
+def check_trace(doc: dict, path: str) -> list[str]:
+    errs = []
+    if doc.get("schema") != TRACE_SCHEMA:
+        errs.append(f"{path}: schema {doc.get('schema')!r} != "
+                    f"{TRACE_SCHEMA!r}")
+        return errs
+    for field in ("suite", "wall_clock", "span_summary"):
+        if field not in doc:
+            errs.append(f"{path}: missing field {field!r}")
+    if not isinstance(doc.get("span_summary", None), dict):
+        errs.append(f"{path}: span_summary must be a dict")
+    return errs
+
+
+# ------------------------------------------------------------------- diff
+def _git_show(rev: str, path: str):
+    """The file's JSON at ``rev``, or None if it did not exist there."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{rev}:{path}"],
+            capture_output=True, text=True, timeout=30, check=True).stdout
+        return json.loads(out)
+    except Exception:  # noqa: BLE001 — new artifact / no git / bad JSON
+        return None
+
+
+def _changed_files(rev: str) -> set:
+    try:
+        out = subprocess.run(
+            ["git", "diff", "--name-only", rev, "HEAD"],
+            capture_output=True, text=True, timeout=30, check=True).stdout
+        return set(out.split())
+    except Exception:  # noqa: BLE001
+        return set()
+
+
+def diff_bench(doc: dict, base_doc: dict, path: str,
+               threshold: float, explained: bool) -> tuple[list, list]:
+    """(regressions, notes) for one artifact vs its base revision."""
+    regressions, notes = [], []
+    base_metrics = base_doc.get("metrics", {})
+    for name, rec in doc.get("metrics", {}).items():
+        d = _direction(name)
+        if d == 0 or name not in base_metrics:
+            continue
+        new = rec.get("value")
+        old = base_metrics[name].get("value")
+        if not (isinstance(new, (int, float))
+                and isinstance(old, (int, float))):
+            continue
+        if (isinstance(new, float) and math.isnan(new)) \
+                or (isinstance(old, float) and math.isnan(old)):
+            continue
+        if old == 0:
+            continue  # ratio undefined; absolute-zero baselines stay soft
+        change = (new - old) / abs(old)
+        bad = (d > 0 and change < -threshold) \
+            or (d < 0 and change > threshold)
+        if bad:
+            line = (f"{path}: {name} {old:g} -> {new:g} "
+                    f"({change:+.1%}, threshold {threshold:.0%})")
+            if explained:
+                notes.append(line + "  [explained: bench changed]")
+            else:
+                regressions.append(line)
+    return regressions, notes
+
+
+# ------------------------------------------------------------------- main
+def run(base: str = "HEAD~1", threshold: float = 0.2,
+        diff: bool = True, root: str = ".") -> int:
+    errs: list[str] = []
+    regressions: list[str] = []
+    notes: list[str] = []
+    bench_paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    trace_paths = sorted(glob.glob(os.path.join(root, "TRACE_*.json")))
+    if not bench_paths and not trace_paths:
+        print("validate_artifacts: no committed artifacts found")
+        return 0
+    changed = _changed_files(base) if diff else set()
+    for path in bench_paths:
+        with open(path) as f:
+            doc = json.load(f)
+        errs.extend(check_bench(doc, path))
+        if diff:
+            rel = os.path.relpath(path, root)
+            base_doc = _git_show(base, rel)
+            if base_doc is None:
+                notes.append(f"{path}: no base at {base} (new artifact)")
+                continue
+            suite = doc.get("suite", "")
+            explained = any(
+                c == rel or c.endswith(f"bench_{suite}.py")
+                for c in changed)
+            r, n = diff_bench(doc, base_doc, path, threshold, explained)
+            regressions.extend(r)
+            notes.extend(n)
+    for path in trace_paths:
+        with open(path) as f:
+            doc = json.load(f)
+        errs.extend(check_trace(doc, path))
+    for line in notes:
+        print(f"note: {line}")
+    for line in errs:
+        print(f"SCHEMA: {line}", file=sys.stderr)
+    for line in regressions:
+        print(f"REGRESSION: {line}", file=sys.stderr)
+    print(f"validate_artifacts: {len(bench_paths)} bench + "
+          f"{len(trace_paths)} trace artifacts, {len(errs)} schema "
+          f"errors, {len(regressions)} unexplained regressions")
+    return 1 if (errs or regressions) else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="HEAD~1",
+                    help="git rev to diff headline metrics against")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="fractional regression that fails the run")
+    ap.add_argument("--no-diff", action="store_true",
+                    help="schema checks only (no git comparison)")
+    args = ap.parse_args()
+    sys.exit(run(base=args.base, threshold=args.threshold,
+                 diff=not args.no_diff))

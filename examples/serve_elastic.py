@@ -30,11 +30,13 @@ from repro.control import (
     BurstProfile,
     ElasticController,
     HysteresisPolicy,
+    MetricsHub,
     OpenLoopGenerator,
     TargetQueueDepthPolicy,
 )
 from repro.core import Cluster, FailureKind
 from repro.models import DENSE, BlockGroup, build_model
+from repro.obs import SLOMonitor, SLOSpec
 from repro.obs.export import write_trace_artifact
 from repro.serving import PipelineServer
 
@@ -46,10 +48,15 @@ async def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
 
     cluster = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.1)
+    # fleet-scale telemetry knobs: head-sample half the session trees (tail
+    # keep rules still promote every heal/migrate/slow-outlier trace), and
+    # keep anything slower than 2 s regardless of the sampling verdict
     server = PipelineServer(cluster, model, params, replicas=[1, 1],
-                            least_loaded=True, snapshot_interval_s=0.1)
+                            least_loaded=True, snapshot_interval_s=0.1,
+                            trace_sample_rate=0.5, trace_slow_keep_s=2.0)
     await server.start()
-    print("pipeline up: stage0 x1 -> stage1 x1 (floor), snapshots on")
+    print("pipeline up: stage0 x1 -> stage1 x1 (floor), snapshots on, "
+          "tracing head-sampled at 50%")
 
     rng = np.random.default_rng(0)
     toks = rng.integers(0, cfg.vocab_size, (8, 64))
@@ -60,12 +67,19 @@ async def main() -> None:
     capacity = 10 / (time.monotonic() - t0)
     print(f"single-replica capacity ~{capacity:.0f} req/s")
 
+    # SLO burn-rate alerting rides on the hub: a steady run stays quiet,
+    # a real regression lands slo_alert events in the flight recorder and
+    # the control timeline next to the scale decisions they explain
+    slo = SLOMonitor((SLOSpec("ttft_p99", "ttft", threshold_s=2.0),
+                      SLOSpec("decode_p99", "decode", threshold_s=2.0)),
+                     pipeline="serve_elastic", bucket_s=0.25)
     ctrl = ElasticController(
         server,
         HysteresisPolicy(
             TargetQueueDepthPolicy(target=3.0, scale_down_at=0.3,
                                    min_replicas=1, max_replicas=4),
             confirm=2, cooldown_s=0.8),
+        hub=MetricsHub(server, slo=slo),
         interval=0.05)
     ctrl.start()
     print("controller on: observe -> decide -> act every 50 ms\n")
@@ -165,6 +179,21 @@ async def main() -> None:
         print("recovery spans: " + "; ".join(
             f"{k} n={v['count']} p50 {v['p50_s'] * 1e3:.1f} ms"
             for k, v in sorted(recov.items())))
+    # the fleet digest: the bounded mergeable rollup the policies read —
+    # tail percentiles come from merged sketches, not averaged averages
+    fd = ctrl.hub.fleet_digest()
+    print(f"fleet digest: {fd.n_replicas} healthy replicas, queue "
+          f"{fd.queue_total}, p95 TTFT {fd.p95_ttft_s * 1e3:.1f} ms, "
+          f"p99 decode {fd.p99_decode_s * 1e3:.1f} ms (merged sketches, "
+          f"{fd.ttft_sketch.count + fd.decode_sketch.count} samples)")
+    sm = slo.metrics(time.monotonic())
+    print(f"slo: ttft_p99 burn long/short "
+          f"{sm['ttft_p99_burn_long']:.2f}/{sm['ttft_p99_burn_short']:.2f}, "
+          f"{ctrl.slo_alerts} alerts fired (steady run should stay quiet)")
+    tr = server.tracer
+    print(f"sampling: {tr.recorded} spans in ring, "
+          f"{tr.sampled_out} boring traces dropped, "
+          f"{tr.tail_kept} promoted by tail-keep rules")
     pm = ctrl.hub.placement_metrics()
     print(f"placement: {mm['heal_migrations_total']} heal handoffs; "
           f"{pm['cross_host_bytes'] / 1e3:.0f} KB of "

@@ -15,6 +15,7 @@ from .policy import (
     LatencySLOPolicy,
     ScaleDecision,
     ScalingPolicy,
+    TailLatencySLOPolicy,
     TargetQueueDepthPolicy,
     TokenRatePolicy,
     TTFTSLOPolicy,
@@ -27,14 +28,16 @@ from .workload import (
     RampProfile,
     RateProfile,
     RequestRecord,
+    percentile,
 )
 
 __all__ = [
     "ControlEvent", "ElasticController",
     "Ewma", "MetricsHub", "ReplicaSample", "StageSnapshot",
     "DisaggregatedStagePolicy", "HysteresisPolicy", "LatencySLOPolicy",
-    "ScaleDecision", "ScalingPolicy", "TargetQueueDepthPolicy",
-    "TokenRatePolicy", "TTFTSLOPolicy",
+    "ScaleDecision", "ScalingPolicy", "TailLatencySLOPolicy",
+    "TargetQueueDepthPolicy", "TokenRatePolicy", "TTFTSLOPolicy",
     "BurstProfile", "ConstantProfile", "DiurnalProfile",
     "OpenLoopGenerator", "RampProfile", "RateProfile", "RequestRecord",
+    "percentile",
 ]

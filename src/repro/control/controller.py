@@ -123,6 +123,7 @@ class ElasticController:
         self.heals = 0
         self.scale_ups = 0
         self.scale_downs = 0
+        self.slo_alerts = 0
         self._task: Optional[asyncio.Task] = None
         self._stop = asyncio.Event()
 
@@ -166,6 +167,7 @@ class ElasticController:
     async def step(self) -> list[StageSnapshot]:
         self.ticks += 1
         snaps = self.hub.poll()
+        self._evaluate_slos()
         if self.heal:
             await self._heal_failed()
         for snap in snaps:
@@ -182,6 +184,25 @@ class ElasticController:
                     continue
                 await self._apply(decision)
         return snaps
+
+    def _evaluate_slos(self) -> None:
+        """Advance the hub's SLO burn-rate state machine once per tick.
+        Alert transitions are control-plane incidents: they land in the
+        flight recorder next to the scale decisions they should explain,
+        and in the timeline for Fig. 5-style reporting."""
+        mon = getattr(self.hub, "slo", None)
+        if mon is None:
+            return
+        for ev in mon.evaluate(time.monotonic()):
+            if ev["kind"] == "slo_alert":
+                self.slo_alerts += 1
+            self.server.recorder.record(ev["kind"], **{
+                k: v for k, v in ev.items() if k != "kind"})
+            self._record(ev["kind"], -1,
+                         f"{ev['slo']} [{ev['severity']}] burn "
+                         f"long={ev['burn_long']:.1f} "
+                         f"short={ev['burn_short']:.1f} "
+                         f"(threshold {ev['threshold']:g})")
 
     async def _heal_failed(self) -> None:
         """Schedule one bounded background heal task per fenced replica.

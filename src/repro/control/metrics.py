@@ -18,12 +18,24 @@ Design notes:
   managers on every poll (idempotent).
 * The hub never *acts* — it is a pure observer, so it can also back
   dashboards/benchmark timelines without dragging in controller state.
+* Aggregation is *hierarchical and merge-closed* (fleet scale): per-stage
+  rollups are :class:`~repro.obs.digest.StageDigest`s built by
+  ``fold_samples`` — replica samples fold into shard digests fold into the
+  stage digest, and stage digests merge into one fleet digest. Every
+  aggregate a policy reads (sums, means-as-(sum,n), sketch percentiles)
+  merges associatively, so a sharded fold over 40k replicas answers the
+  same questions as the flat fold, in bounded space. The tail signals
+  (``p95_ttft_s``, ``p99_decode_s``) come from the digests' mergeable
+  LogSketches, never from averaging per-replica percentiles.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Optional
+
+from repro.obs.digest import StageDigest, fold_samples, merge_digests
+from repro.obs.slo import SLOMonitor
 
 
 class Ewma:
@@ -62,6 +74,11 @@ class ReplicaSample:
     ttft_s: float = 0.0         # per-prefill service time (incl. handoff),
     #                             EWMA — the stage's TTFT contribution
     decode_lat_s: float = 0.0   # per fused decode dispatch (~per token), EWMA
+    #: mergeable per-replica latency distributions (LogSketch), populated
+    #: when the replica keeps sketches; fold into the stage digest so the
+    #: stage/fleet p95/p99 are computed from merged buckets, not means
+    ttft_sketch: object = None
+    decode_sketch: object = None
 
 
 @dataclasses.dataclass
@@ -95,12 +112,33 @@ class StageSnapshot:
     decode_latency_s: float = 0.0   # mean per-dispatch decode EWMA (healthy)
     role: str = "all"               # "all" for the stage view, else the pool
     role_slices: dict = dataclasses.field(default_factory=dict)
+    # tail percentiles from the stage digest's merged latency sketches —
+    # 0.0 when the replicas keep no sketches (EWMA-only deployments)
+    p95_ttft_s: float = 0.0
+    p99_ttft_s: float = 0.0
+    p95_decode_s: float = 0.0
+    p99_decode_s: float = 0.0
+    #: the StageDigest this snapshot was derived from (None for snapshots
+    #: constructed directly, e.g. in tests)
+    digest: Optional[StageDigest] = None
 
 
 class MetricsHub:
-    def __init__(self, server, *, alpha: float = 0.3) -> None:
+    def __init__(self, server, *, alpha: float = 0.3,
+                 digest_shard: int = 64,
+                 slo: Optional[SLOMonitor] = None) -> None:
         self.server = server
         self.alpha = alpha
+        #: shard width for the hierarchical fold: stages with more replicas
+        #: than this aggregate via shard digests that merge upward (the
+        #: fleet-scale path); smaller stages fold flat — both are the same
+        #: merge-closed arithmetic, so the choice never changes a decision
+        self.digest_shard = digest_shard
+        #: per-pipeline SLO burn-rate monitor; observed from the client
+        #: latency logs each poll, evaluated by the controller each tick
+        self.slo = slo
+        #: stage digests from the most recent poll (stage order)
+        self.stage_digests: list[StageDigest] = []
         #: (t, kind, world) world-lifecycle events from every manager
         self.world_events: list[tuple[float, str, str]] = []
         self.breaks_seen = 0
@@ -183,7 +221,9 @@ class MetricsHub:
             throughput=tput.get(), latency_s=lat.get(),
             tokens_per_s=toks.get(), open_sessions=open_sessions,
             expired=rep.expired, role=getattr(rep, "role", "both"),
-            ttft_s=ttft.get(), decode_lat_s=declat.get())
+            ttft_s=ttft.get(), decode_lat_s=declat.get(),
+            ttft_sketch=getattr(rep, "ttft_sketch", None),
+            decode_sketch=getattr(rep, "decode_sketch", None))
 
     def _prune_retired(self) -> None:
         """Worker ids are never reused, so per-replica state for retired
@@ -199,15 +239,20 @@ class MetricsHub:
         self._subscribed &= set(self.server.cluster.workers)
 
     def poll(self) -> list[StageSnapshot]:
-        """One observation pass: returns a snapshot per pipeline stage."""
+        """One observation pass: returns a snapshot per pipeline stage.
+        Aggregation runs replicas -> (shard digests ->) stage digest; the
+        per-poll stage digests are kept on ``stage_digests`` and merge
+        into the cross-stage rollup via :meth:`fleet_digest`."""
         self._subscribe_new_managers()
         self._prune_retired()
         now = time.monotonic()
         snaps: list[StageSnapshot] = []
+        self.stage_digests = []
         for stage, reps in enumerate(self.server.replicas):
             samples = [self._replica_sample(r, now) for r in reps]
             failed = set(self.server.failed_replicas(stage))
             snap = self._aggregate(stage, now, samples, failed)
+            self.stage_digests.append(snap.digest)
             for role in sorted({s.role for s in samples}):
                 snap.role_slices[role] = self._aggregate(
                     stage, now, [s for s in samples if s.role == role],
@@ -216,44 +261,50 @@ class MetricsHub:
         self._update_migration_ewmas()
         return snaps
 
+    def fleet_digest(self) -> StageDigest:
+        """Cross-stage rollup of the latest poll (stage == -1): the whole
+        fleet's load and latency distributions in one bounded digest.
+        Merges into a fresh digest so the per-stage rollups stay intact."""
+        return merge_digests(
+            [StageDigest().merge(d) for d in self.stage_digests if d])
+
     def _aggregate(self, stage: int, now: float,
                    samples: list[ReplicaSample], failed: set,
                    role: str = "all") -> StageSnapshot:
-        """Fold replica samples into one StageSnapshot. The whole-stage
-        view (role="all") owns the smoothed queue_per_replica EWMA; role
-        slices re-aggregate instantaneously over the pool's samples."""
-        healthy = [s for s in samples
-                   if s.alive and not s.draining
-                   and s.worker_id not in failed]
-        n = len(healthy)
-        queue_total = sum(s.queue_depth for s in healthy)
+        """Fold replica samples into one StageSnapshot, via the mergeable
+        StageDigest (sharded hierarchically when the replica set exceeds
+        ``digest_shard``). The whole-stage view (role="all") owns the
+        smoothed queue_per_replica EWMA; role slices re-aggregate
+        instantaneously over the pool's samples."""
+        digest = fold_samples(
+            samples, failed, stage=stage, t=now, role=role,
+            shard=self.digest_shard)
+        n = digest.n_replicas
         if role == "all":
             qd = self._qdepth.setdefault(stage, Ewma(self.alpha))
-            qd.update(queue_total / max(n, 1))
+            qd.update(digest.queue_total / max(n, 1))
             queue_per = qd.get()
         else:
-            queue_per = queue_total / max(n, 1)
-        # per-kind means over the replicas that actually serve the kind —
-        # a decode pool's TTFT (0, it never prefills) must not dilute the
-        # stage's prefill signal
-        ttft_src = [s.ttft_s for s in healthy if s.ttft_s > 0]
-        declat_src = [s.decode_lat_s for s in healthy if s.decode_lat_s > 0]
+            queue_per = digest.queue_per_replica
         return StageSnapshot(
             stage=stage, t=now, n_replicas=n,
-            n_failed=len({s.worker_id for s in samples} & failed),
-            queue_total=queue_total,
+            n_failed=digest.n_failed,
+            queue_total=digest.queue_total,
             queue_per_replica=queue_per,
-            throughput=sum(s.throughput for s in healthy),
-            latency_s=(sum(s.latency_s for s in healthy) / n
-                       if n else 0.0),
+            throughput=digest.throughput,
+            latency_s=digest.latency_s,
             replicas=samples,
-            tokens_per_s=sum(s.tokens_per_s for s in healthy),
-            open_sessions=sum(s.open_sessions for s in healthy),
-            expired=sum(s.expired for s in samples),
-            ttft_s=(sum(ttft_src) / len(ttft_src) if ttft_src else 0.0),
-            decode_latency_s=(sum(declat_src) / len(declat_src)
-                              if declat_src else 0.0),
-            role=role)
+            tokens_per_s=digest.tokens_per_s,
+            open_sessions=digest.open_sessions,
+            expired=digest.expired,
+            ttft_s=digest.ttft_s,
+            decode_latency_s=digest.decode_latency_s,
+            role=role,
+            p95_ttft_s=digest.p95_ttft_s,
+            p99_ttft_s=digest.p99_ttft_s,
+            p95_decode_s=digest.p95_decode_s,
+            p99_decode_s=digest.p99_decode_s,
+            digest=digest)
 
     # ------------------------------------------------------- state transfer
     def _update_migration_ewmas(self) -> None:
@@ -266,13 +317,19 @@ class MetricsHub:
             snaps.bytes_log.clear()
         # client-observed per-kind latency: the server logs one sample per
         # prefill round-trip (TTFT) and per decode step; drain into EWMAs
-        for log, ewma in ((getattr(self.server, "ttft_log", None),
-                           self._client_ttft),
-                          (getattr(self.server, "decode_lat_log", None),
-                           self._client_declat)):
+        # and fan each sample into the SLO burn-rate monitor (good/bad
+        # bucketing wants per-request samples, not the smoothed mean)
+        now = time.monotonic()
+        for log, ewma, metric in (
+                (getattr(self.server, "ttft_log", None),
+                 self._client_ttft, "ttft"),
+                (getattr(self.server, "decode_lat_log", None),
+                 self._client_declat, "decode")):
             if log:
                 for dt in log:
                     ewma.update(dt)
+                    if self.slo is not None:
+                        self.slo.observe(metric, dt, now)
                 log.clear()
 
     def latency_metrics(self) -> dict:
@@ -389,11 +446,23 @@ class MetricsHub:
                 span_flat[f"{kind}_{stat}"] = v
         if span_flat:
             groups["span"] = span_flat
+        # fleet digest rollup: the bounded cross-stage view, including the
+        # sketch-backed tail percentiles policies decide on
+        if self.stage_digests:
+            fleet = self.fleet_digest()
+            groups["digest"] = {
+                k: v for k, v in fleet.summary().items()
+                if k not in ("stage", "role")}
+        # SLO burn rates + firing state, when a monitor is attached
+        if self.slo is not None:
+            groups["slo"] = self.slo.metrics(time.monotonic())
         obs: dict[str, float] = {"world_breaks": self.breaks_seen}
         tracer = getattr(self.server, "tracer", None)
         if tracer is not None:
             obs["spans_recorded"] = tracer.recorded
             obs["spans_dropped"] = tracer.dropped
+            obs["traces_sampled_out"] = getattr(tracer, "sampled_out", 0)
+            obs["traces_tail_kept"] = getattr(tracer, "tail_kept", 0)
         rec = getattr(self.server, "recorder", None)
         if rec is not None:
             obs["flight_events"] = len(rec)

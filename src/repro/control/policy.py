@@ -19,6 +19,11 @@ Provided policies:
 * :class:`TTFTSLOPolicy` — the prefill-pool signal: grow on TTFT (per-
   prefill service EWMA, handoff included) breaching its SLO or on queue
   backlog; shrink only when both are comfortably low.
+* :class:`TailLatencySLOPolicy` — the fleet-scale signal: decide on the
+  stage digest's *tail* percentiles (``p95_ttft_s`` / ``p99_decode_s``,
+  computed from merged LogSketches — see obs/digest.py) instead of means.
+  Means hide exactly the incidents SLOs are written about: one slow
+  replica in fifty barely moves the stage mean but owns the p99.
 * :class:`HysteresisPolicy` — a wrapper adding the stability knobs every
   real autoscaler needs: K-consecutive-votes confirmation, post-action
   cooldown, and ±1 step clamping. Wrap any policy above with it to stop
@@ -228,6 +233,54 @@ class TTFTSLOPolicy:
             return ScaleDecision(
                 snap.stage, -1,
                 f"TTFT {ttft * 1e3:.0f}ms well under SLO, queue idle")
+        return hold(snap.stage)
+
+
+@dataclasses.dataclass
+class TailLatencySLOPolicy:
+    """Tail-percentile sizing over digest summaries.
+
+    Grows when the stage's sketch-backed tail breaches the objective:
+    ``p95_ttft_s > ttft_slo_s`` (prefill tail) or ``p99_decode_s >
+    decode_slo_s`` (decode tail). Shrinks only when both watched tails sit
+    under ``shrink_frac`` of their SLOs *and* the queue is near-empty.
+    Either SLO may be None to watch a single tail. Snapshots from replicas
+    that keep no sketches report 0.0 tails — the policy holds rather than
+    shrink on a signal that is absent (``require_signal``)."""
+
+    ttft_slo_s: Optional[float] = None
+    decode_slo_s: Optional[float] = None
+    shrink_frac: float = 0.3
+    idle_queue: float = 0.5
+    min_replicas: int = 1
+    max_replicas: int = 8
+    require_signal: bool = True
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        n = max(snap.n_replicas, 1)
+        p95_ttft = getattr(snap, "p95_ttft_s", 0.0)
+        p99_dec = getattr(snap, "p99_decode_s", 0.0)
+        if (self.ttft_slo_s is not None and p95_ttft > self.ttft_slo_s
+                and n < self.max_replicas):
+            return ScaleDecision(
+                snap.stage, 1,
+                f"p95 TTFT {p95_ttft * 1e3:.0f}ms > SLO "
+                f"{self.ttft_slo_s * 1e3:.0f}ms")
+        if (self.decode_slo_s is not None and p99_dec > self.decode_slo_s
+                and n < self.max_replicas):
+            return ScaleDecision(
+                snap.stage, 1,
+                f"p99 decode {p99_dec * 1e3:.0f}ms > SLO "
+                f"{self.decode_slo_s * 1e3:.0f}ms")
+        watched = [(p95_ttft, self.ttft_slo_s), (p99_dec, self.decode_slo_s)]
+        watched = [(v, slo) for v, slo in watched if slo is not None]
+        if self.require_signal and not any(v > 0 for v, _ in watched):
+            return hold(snap.stage, "no tail signal yet")
+        if (all(v < self.shrink_frac * slo for v, slo in watched)
+                and snap.queue_per_replica < self.idle_queue
+                and n > self.min_replicas):
+            return ScaleDecision(
+                snap.stage, -1, "tails well under SLO, queue idle")
         return hold(snap.stage)
 
 

@@ -94,6 +94,9 @@ class OpenLoopGenerator:
                  max_inflight: int = 256) -> None:
         self.submit = submit
         self.profile = profile
+        #: kept on the instance so a bench artifact can record the exact
+        #: arrival stream it measured (reproducibility)
+        self.seed = seed
         self.rng = random.Random(seed)
         self.max_inflight = max_inflight
         self.records: list[RequestRecord] = []
@@ -153,15 +156,31 @@ class OpenLoopGenerator:
 
     def summary(self) -> dict:
         lats = sorted(r.latency_s for r in self.records if r.ok)
-
-        def pct(p: float) -> float:
-            if not lats:
-                return float("nan")
-            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
-
         return {
             "sent": self.sent, "ok": self.ok, "failed": self.failed,
-            "shed": self.shed,
-            "p50_s": pct(50), "p95_s": pct(95), "p99_s": pct(99),
+            "shed": self.shed, "seed": self.seed,
+            "p50_s": percentile(lats, 50), "p95_s": percentile(lats, 95),
+            "p99_s": percentile(lats, 99),
             "mean_s": (sum(lats) / len(lats)) if lats else float("nan"),
         }
+
+
+def percentile(sorted_xs: list, p: float) -> float:
+    """Linear-interpolated percentile over a pre-sorted list.
+
+    Total over the edge cases a live summary hits: NaN on empty (a run
+    where nothing succeeded must not raise mid-report), the sole element
+    on a singleton, exact endpoints at p=0/p=100, and interpolation in
+    between — never an out-of-range index for any (len, p) pair.
+    """
+    n = len(sorted_xs)
+    if n == 0:
+        return float("nan")
+    if n == 1:
+        return float(sorted_xs[0])
+    p = min(max(p, 0.0), 100.0)
+    rank = p / 100.0 * (n - 1)
+    lo = int(rank)
+    hi = min(lo + 1, n - 1)
+    frac = rank - lo
+    return float(sorted_xs[lo] + (sorted_xs[hi] - sorted_xs[lo]) * frac)

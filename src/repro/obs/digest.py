@@ -1,0 +1,264 @@
+"""Hierarchical metric digests: bounded, mergeable rollups of load samples.
+
+The flat telemetry plane (MetricsHub iterating every replica's sample each
+poll) is per-replica-granular: O(fleet) work and O(fleet) state at the
+single controller process. This module is the mergeable middle layer that
+makes the plane hierarchical:
+
+    replica samples --fold--> shard digests --merge--> stage digest
+                                    stage digests --merge--> fleet digest
+
+A :class:`StageDigest` is a *bounded-size* rollup — a fixed set of partial
+sums/counts plus two :class:`~repro.obs.sketch.LogSketch` latency sketches
+(TTFT, per-dispatch decode) — so a digest of 4 replicas and a digest of
+40k replicas are the same number of bytes. Every aggregate a scaling
+policy reads is kept in a merge-closed form:
+
+* sums (queue, throughput, tokens/s, open sessions, expired) — additive;
+* means (stage latency, TTFT, decode latency) — kept as (sum, n) pairs;
+* tail quantiles (p95 TTFT, p99 decode) — mergeable sketches, so the
+  fleet p99 is computed from the fleet-level merged sketch, not from an
+  unsound average-of-percentiles.
+
+``fold_samples`` is the one aggregation implementation: MetricsHub drives
+it per stage (sharded when the replica set is large), benches drive it
+directly to prove that sharded hierarchical aggregation produces the same
+policy decisions as a flat fold over the identical samples.
+
+This package stays dependency-free within the repo: samples are
+duck-typed (any object with the ``ReplicaSample`` load fields), and the
+control layer converts digests into its own ``StageSnapshot`` view.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+from .sketch import LogSketch
+
+__all__ = ["StageDigest", "fold_samples", "merge_digests"]
+
+#: wire-form schema tag for digest rollups
+WIRE_SCHEMA = "digest/v1"
+
+#: relative accuracy of the digest latency sketches — 1% keeps p99
+#: estimates honest while a replica's sketch stays well under a KB
+DEFAULT_ACCURACY = 0.01
+
+
+def _sketch() -> LogSketch:
+    return LogSketch(DEFAULT_ACCURACY)
+
+
+@dataclasses.dataclass
+class StageDigest:
+    """Bounded mergeable rollup of one replica group's load samples.
+
+    ``stage`` is the pipeline stage (-1 for the cross-stage fleet rollup),
+    ``role`` the pool slice ("all" = whole stage). All scalar fields are
+    merge-closed partial aggregates; derived views (means, percentiles)
+    are properties so a merged digest never carries stale derivations.
+    """
+
+    stage: int = -1
+    t: float = 0.0
+    role: str = "all"
+    # -- counts --------------------------------------------------------
+    n_samples: int = 0           # samples folded in (healthy or not)
+    n_replicas: int = 0          # healthy (alive, not draining, not failed)
+    n_failed: int = 0            # watchdog-fenced heal candidates
+    # -- additive sums over healthy replicas ---------------------------
+    queue_total: int = 0
+    throughput: float = 0.0
+    tokens_per_s: float = 0.0
+    open_sessions: int = 0
+    latency_sum: float = 0.0     # sum of per-replica sojourn EWMAs
+    # -- additive over ALL samples (cumulative counters survive fencing)
+    expired: int = 0
+    processed: int = 0
+    # -- (sum, n) pairs over replicas that serve the kind --------------
+    ttft_sum: float = 0.0
+    ttft_n: int = 0
+    declat_sum: float = 0.0
+    declat_n: int = 0
+    # -- mergeable latency distributions -------------------------------
+    ttft_sketch: LogSketch = dataclasses.field(default_factory=_sketch)
+    decode_sketch: LogSketch = dataclasses.field(default_factory=_sketch)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def latency_s(self) -> float:
+        return self.latency_sum / self.n_replicas if self.n_replicas else 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.ttft_sum / self.ttft_n if self.ttft_n else 0.0
+
+    @property
+    def decode_latency_s(self) -> float:
+        return self.declat_sum / self.declat_n if self.declat_n else 0.0
+
+    @property
+    def queue_per_replica(self) -> float:
+        return self.queue_total / max(self.n_replicas, 1)
+
+    @property
+    def p95_ttft_s(self) -> float:
+        return self.ttft_sketch.p95()
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return self.ttft_sketch.p99()
+
+    @property
+    def p95_decode_s(self) -> float:
+        return self.decode_sketch.p95()
+
+    @property
+    def p99_decode_s(self) -> float:
+        return self.decode_sketch.p99()
+
+    # --------------------------------------------------------------- fold
+    def add_sample(self, s, failed: bool = False) -> None:
+        """Fold one replica load sample (duck-typed ``ReplicaSample``)."""
+        self.n_samples += 1
+        self.expired += s.expired
+        self.processed += getattr(s, "processed", 0)
+        if failed:
+            self.n_failed += 1
+        healthy = s.alive and not s.draining and not failed
+        if not healthy:
+            return
+        self.n_replicas += 1
+        self.queue_total += s.queue_depth
+        self.throughput += s.throughput
+        self.tokens_per_s += s.tokens_per_s
+        self.open_sessions += s.open_sessions
+        self.latency_sum += s.latency_s
+        # per-kind means count only replicas that actually serve the kind:
+        # a decode pool's zero TTFT must not dilute the prefill signal
+        if s.ttft_s > 0:
+            self.ttft_sum += s.ttft_s
+            self.ttft_n += 1
+        if s.decode_lat_s > 0:
+            self.declat_sum += s.decode_lat_s
+            self.declat_n += 1
+        tsk = getattr(s, "ttft_sketch", None)
+        if tsk is not None and tsk.count:
+            self.ttft_sketch.merge(tsk)
+        dsk = getattr(s, "decode_sketch", None)
+        if dsk is not None and dsk.count:
+            self.decode_sketch.merge(dsk)
+
+    def merge(self, other: "StageDigest") -> "StageDigest":
+        """Lossless rollup merge: sums add, (sum, n) pairs add, sketches
+        merge bucket-wise — associative and commutative, so any shard
+        tree over the same samples yields the same digest."""
+        if other.t > self.t:
+            self.t = other.t
+        if self.stage != other.stage:
+            self.stage = -1          # cross-stage rollup = fleet view
+        if self.role != other.role:
+            self.role = "all"
+        self.n_samples += other.n_samples
+        self.n_replicas += other.n_replicas
+        self.n_failed += other.n_failed
+        self.queue_total += other.queue_total
+        self.throughput += other.throughput
+        self.tokens_per_s += other.tokens_per_s
+        self.open_sessions += other.open_sessions
+        self.latency_sum += other.latency_sum
+        self.expired += other.expired
+        self.processed += other.processed
+        self.ttft_sum += other.ttft_sum
+        self.ttft_n += other.ttft_n
+        self.declat_sum += other.declat_sum
+        self.declat_n += other.declat_n
+        self.ttft_sketch.merge(other.ttft_sketch)
+        self.decode_sketch.merge(other.decode_sketch)
+        return self
+
+    # ----------------------------------------------------------- wire form
+    def summary(self) -> dict:
+        """Flat scalar view for exporters/artifacts (no sketches)."""
+        return {
+            "stage": self.stage,
+            "role": self.role,
+            "n_replicas": self.n_replicas,
+            "n_failed": self.n_failed,
+            "queue_total": self.queue_total,
+            "throughput": self.throughput,
+            "tokens_per_s": self.tokens_per_s,
+            "open_sessions": self.open_sessions,
+            "expired": self.expired,
+            "latency_s": self.latency_s,
+            "ttft_s": self.ttft_s,
+            "decode_latency_s": self.decode_latency_s,
+            "p95_ttft_s": self.p95_ttft_s,
+            "p99_ttft_s": self.p99_ttft_s,
+            "p95_decode_s": self.p95_decode_s,
+            "p99_decode_s": self.p99_decode_s,
+        }
+
+    def to_wire(self) -> dict:
+        """Compact JSON-able form — what a sharded aggregator would ship
+        upward instead of raw samples."""
+        return {
+            "schema": WIRE_SCHEMA,
+            "t": self.t,
+            "scalars": {
+                f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if f.name not in ("ttft_sketch", "decode_sketch")
+            },
+            "ttft_sketch": self.ttft_sketch.to_wire(),
+            "decode_sketch": self.decode_sketch.to_wire(),
+        }
+
+    @classmethod
+    def from_wire(cls, wire: dict) -> "StageDigest":
+        if wire.get("schema") != WIRE_SCHEMA:
+            raise ValueError(f"not a {WIRE_SCHEMA} wire form: "
+                             f"{wire.get('schema')!r}")
+        out = cls(**wire["scalars"])
+        out.ttft_sketch = LogSketch.from_wire(wire["ttft_sketch"])
+        out.decode_sketch = LogSketch.from_wire(wire["decode_sketch"])
+        return out
+
+
+def fold_samples(samples: Sequence, failed: Iterable[str] = (), *,
+                 stage: int = 0, t: float = 0.0, role: str = "all",
+                 shard: Optional[int] = None) -> StageDigest:
+    """Fold replica samples into one :class:`StageDigest`.
+
+    ``shard=None`` folds flat, in sample order — the reference ("raw")
+    aggregation. ``shard=N`` folds hierarchically: consecutive groups of N
+    samples become partial digests that are then merged — the fleet-scale
+    path, where each group models one sharded aggregator. Both paths fold
+    the identical samples into merge-closed aggregates, so the resulting
+    policy decisions must agree (``bench_fleet`` gates exactly that).
+    """
+    failed = set(failed)
+    if shard is None or shard <= 0 or len(samples) <= shard:
+        d = StageDigest(stage=stage, t=t, role=role)
+        for s in samples:
+            d.add_sample(s, failed=s.worker_id in failed)
+        return d
+    parts = []
+    for i in range(0, len(samples), shard):
+        part = StageDigest(stage=stage, t=t, role=role)
+        for s in samples[i:i + shard]:
+            part.add_sample(s, failed=s.worker_id in failed)
+        parts.append(part)
+    return merge_digests(parts)
+
+
+def merge_digests(digests: Sequence[StageDigest]) -> StageDigest:
+    """Merge a non-empty sequence of digests left-to-right (the fleet
+    rollup used for stage -> fleet folding too)."""
+    if not digests:
+        return StageDigest()
+    out = digests[0]
+    for d in digests[1:]:
+        out.merge(d)
+    return out

@@ -26,10 +26,20 @@ def _metric_name(*parts: str) -> str:
     return _NAME_BAD.sub("_", "_".join(p for p in parts if p))
 
 
+def _escape_label(v) -> str:
+    """Prometheus label-value escaping: backslash, double quote, newline.
+    Arbitrary pipeline/model names (quotes, paths, unicode) must not break
+    the scrape — the exposition format spec is explicit about these three.
+    """
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _labels(labels: dict) -> str:
     if not labels:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    body = ",".join(f'{k}="{_escape_label(v)}"'
+                    for k, v in sorted(labels.items()))
     return "{" + body + "}"
 
 
@@ -37,7 +47,10 @@ def render_prometheus(groups: dict, *, prefix: str = "repro") -> str:
     """Render ``{group: {metric: value | {label: value}}}`` as Prometheus
     text. Scalar values become plain gauges; a dict value becomes one
     sample per label (e.g. per-replica throughput). Non-numeric values are
-    skipped — the endpoint never raises on a weird counter."""
+    skipped — the endpoint never raises on a weird counter. Every metric
+    gets ``# HELP`` and ``# TYPE`` headers and label values are escaped,
+    so the output is scrape-compliant for arbitrary pipeline/model names.
+    """
     lines: list[str] = []
     for group, metrics in sorted(groups.items()):
         if not isinstance(metrics, dict):
@@ -47,6 +60,7 @@ def render_prometheus(groups: dict, *, prefix: str = "repro") -> str:
             if isinstance(value, bool):
                 value = int(value)
             if isinstance(value, (int, float)):
+                lines.append(f"# HELP {name} {group} {metric}")
                 lines.append(f"# TYPE {name} gauge")
                 lines.append(f"{name} {value}")
             elif isinstance(value, dict):
@@ -55,6 +69,7 @@ def render_prometheus(groups: dict, *, prefix: str = "repro") -> str:
                            and not isinstance(v, bool)]
                 if not samples:
                     continue
+                lines.append(f"# HELP {name} {group} {metric} (per id)")
                 lines.append(f"# TYPE {name} gauge")
                 for k, v in samples:
                     lines.append(f"{name}{_labels({'id': k})} {v}")

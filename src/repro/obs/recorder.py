@@ -29,19 +29,27 @@ SCHEMA = "flightrec/v1"
 class FlightRecorder:
     def __init__(self, capacity: int = 4096, *,
                  dump_dir: Optional[str] = None,
-                 name: str = "pipe") -> None:
+                 name: str = "pipe",
+                 max_dumps: int = 32) -> None:
         self.capacity = capacity
         self.name = name
         #: where :meth:`dump` also writes a file; None = in-memory only
         self.dump_dir = dump_dir
+        #: on-disk bound: only the newest ``max_dumps`` dump files are kept
+        #: (a long elastic run heals — and dumps — indefinitely; the disk
+        #: must not grow with uptime). <= 0 disables rotation.
+        self.max_dumps = max_dumps
         self._events: deque = deque(maxlen=capacity)
         self.recorded = 0
         self.dumps_total = 0
+        self.dumps_rotated = 0
         #: the most recent dump dict (tests and artifact writers read this)
         self.last_dump: Optional[dict] = None
         #: the most recent dumps in order — the benches schema-validate one
         #: entry per heal, so the window must cover a whole scenario's heals
         self.dump_log: deque = deque(maxlen=64)
+        #: paths written by this recorder, oldest first (rotation set)
+        self._dump_paths: deque = deque()
         self._uid = 0
 
     # ------------------------------------------------------------ recording
@@ -87,9 +95,23 @@ class FlightRecorder:
                 with open(path, "w") as f:
                     json.dump(d, f, indent=2)
                 d["path"] = path
+                self._dump_paths.append(path)
+                self._rotate()
             except OSError:
                 pass  # a full disk must not turn a dump into a crash
         return d
+
+    def _rotate(self) -> None:
+        """Keep only the newest ``max_dumps`` files this recorder wrote."""
+        if self.max_dumps <= 0:
+            return
+        while len(self._dump_paths) > self.max_dumps:
+            old = self._dump_paths.popleft()
+            try:
+                os.remove(old)
+                self.dumps_rotated += 1
+            except OSError:
+                pass  # already gone / permissions: rotation is best-effort
 
     @classmethod
     def _jsonable(cls, ev: dict) -> dict:

@@ -1,0 +1,252 @@
+"""Mergeable quantile sketch with guaranteed relative error (DDSketch-style).
+
+At fleet scale the telemetry plane cannot ship raw latency samples upward:
+a 100k-worker fleet at thousands of requests/s per worker produces more
+samples than the controller can even *iterate*, and EWMAs collapse the
+distribution to a mean — useless for the p99-tail questions (TTFT SLOs,
+burn rates) that actually drive serving decisions. What the hierarchy
+needs is a summary that is
+
+* **O(1) insert** on the replica hot path (one log, one dict bump),
+* **bounded** in size regardless of stream length (log-bucket collapse),
+* **losslessly mergeable** — ``merge(a, b)`` over disjoint streams equals
+  the sketch of the concatenated stream, in any association order, so
+  replica sketches fold into stage digests fold into a fleet digest with
+  no accuracy cliff at any level,
+* **relative-error bounded**: every quantile estimate ``q̂`` satisfies
+  ``|q̂ - q| <= relative_accuracy * q`` (for values above ``min_value``).
+
+The construction is the DDSketch log-bucket scheme (Masson et al., VLDB
+2019): bucket ``i`` covers ``(gamma^(i-1), gamma^i]`` with
+``gamma = (1 + a) / (1 - a)``; reporting the geometric mid-point of the
+bucket containing the target rank keeps the relative error within ``a``.
+Values in ``[0, min_value]`` land in an exact zero-bucket (latencies of
+0.0 from unstarted counters must not poison the log). Negative values are
+clamped to the zero bucket — every stream this repo folds is a latency or
+a byte count.
+
+Size bound: at most ``max_bins`` log buckets are kept; on overflow the
+*lowest* buckets collapse into one (tail quantiles — the ones decisions
+read — stay exact-to-``a``; only the extreme low quantiles degrade).
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Optional
+
+__all__ = ["LogSketch"]
+
+#: wire-form schema tag (bumped if the bucket encoding ever changes)
+WIRE_SCHEMA = "ddsketch/v1"
+
+
+class LogSketch:
+    """DDSketch-style quantile sketch over non-negative values."""
+
+    __slots__ = ("relative_accuracy", "min_value", "max_bins", "_gamma",
+                 "_log_gamma", "_buckets", "_zero", "count", "sum",
+                 "_min", "_max", "collapsed")
+
+    def __init__(self, relative_accuracy: float = 0.01, *,
+                 min_value: float = 1e-9, max_bins: int = 2048) -> None:
+        if not 0.0 < relative_accuracy < 1.0:
+            raise ValueError(f"relative_accuracy must be in (0, 1): "
+                             f"{relative_accuracy}")
+        self.relative_accuracy = relative_accuracy
+        self.min_value = min_value
+        self.max_bins = max_bins
+        self._gamma = (1.0 + relative_accuracy) / (1.0 - relative_accuracy)
+        self._log_gamma = math.log(self._gamma)
+        self._buckets: dict[int, int] = {}
+        self._zero = 0               # exact count of values <= min_value
+        self.count = 0
+        self.sum = 0.0
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+        self.collapsed = 0           # low-bucket collapse events (size bound)
+
+    # -------------------------------------------------------------- insert
+    def _key(self, x: float) -> int:
+        return math.ceil(math.log(x) / self._log_gamma)
+
+    def insert(self, x: float, n: int = 1) -> None:
+        """O(1): one log, one dict bump. ``n`` inserts ``x`` with weight."""
+        if n <= 0:
+            return
+        x = float(x)
+        self.count += n
+        self.sum += x * n
+        if self._min is None or x < self._min:
+            self._min = x
+        if self._max is None or x > self._max:
+            self._max = x
+        if x <= self.min_value:
+            self._zero += n
+            return
+        key = self._key(x)
+        b = self._buckets
+        b[key] = b.get(key, 0) + n
+        if len(b) > self.max_bins:
+            self._collapse()
+
+    def _collapse(self) -> None:
+        """Fold the lowest buckets together until within ``max_bins``.
+        Collapsing low keys keeps the upper quantiles — the operating
+        signals — at full accuracy."""
+        keys = sorted(self._buckets)
+        while len(self._buckets) > self.max_bins and len(keys) > 1:
+            lo = keys.pop(0)
+            self._buckets[keys[0]] += self._buckets.pop(lo)
+            self.collapsed += 1
+
+    def extend(self, xs: Iterable[float]) -> None:
+        for x in xs:
+            self.insert(x)
+
+    # --------------------------------------------------------------- merge
+    def mergeable(self, other: "LogSketch") -> bool:
+        return (abs(other.relative_accuracy - self.relative_accuracy)
+                < 1e-12 and abs(other.min_value - self.min_value) < 1e-18)
+
+    def merge(self, other: "LogSketch") -> "LogSketch":
+        """Fold ``other`` in, losslessly: the merged sketch is bucket-for-
+        bucket identical to one built from the concatenated stream (same
+        gamma required), so merge order can never change a quantile."""
+        if not self.mergeable(other):
+            raise ValueError(
+                f"cannot merge sketches with different resolution: "
+                f"{self.relative_accuracy} vs {other.relative_accuracy}")
+        b = self._buckets
+        for key, n in other._buckets.items():
+            b[key] = b.get(key, 0) + n
+        self._zero += other._zero
+        self.count += other.count
+        self.sum += other.sum
+        self.collapsed += other.collapsed
+        if other._min is not None and (self._min is None
+                                       or other._min < self._min):
+            self._min = other._min
+        if other._max is not None and (self._max is None
+                                       or other._max > self._max):
+            self._max = other._max
+        if len(b) > self.max_bins:
+            self._collapse()
+        return self
+
+    def copy(self) -> "LogSketch":
+        out = LogSketch(self.relative_accuracy, min_value=self.min_value,
+                        max_bins=self.max_bins)
+        out._buckets = dict(self._buckets)
+        out._zero = self._zero
+        out.count = self.count
+        out.sum = self.sum
+        out._min = self._min
+        out._max = self._max
+        out.collapsed = self.collapsed
+        return out
+
+    # ------------------------------------------------------------ quantiles
+    def quantile(self, q: float) -> float:
+        """Value at quantile ``q`` in [0, 1]; 0.0 on an empty sketch.
+        Guaranteed within ``relative_accuracy`` of the exact stream
+        quantile (for values above ``min_value``)."""
+        if self.count == 0:
+            return 0.0
+        q = min(max(q, 0.0), 1.0)
+        # nearest-rank over the ordered buckets: zero bucket first, then
+        # log buckets ascending
+        rank = q * (self.count - 1)
+        if rank < self._zero:
+            return 0.0
+        seen = self._zero
+        for key in sorted(self._buckets):
+            seen += self._buckets[key]
+            if rank < seen:
+                # geometric mid-point of (gamma^(key-1), gamma^key]
+                est = (2.0 * self._gamma ** key) / (1.0 + self._gamma)
+                # clamp into the observed range: the bucket bound can
+                # overshoot the true max by up to the relative error
+                if self._max is not None:
+                    est = min(est, self._max)
+                if self._min is not None:
+                    est = max(est, self._min)
+                return est
+        return self._max if self._max is not None else 0.0
+
+    def p50(self) -> float:
+        return self.quantile(0.50)
+
+    def p95(self) -> float:
+        return self.quantile(0.95)
+
+    def p99(self) -> float:
+        return self.quantile(0.99)
+
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def max(self) -> float:
+        return self._max if self._max is not None else 0.0
+
+    def min(self) -> float:
+        return self._min if self._min is not None else 0.0
+
+    def summary(self) -> dict:
+        """The per-kind digest shape the trace summary already uses."""
+        return {
+            "count": self.count,
+            "mean_s": self.mean(),
+            "p50_s": self.p50(),
+            "p95_s": self.p95(),
+            "p99_s": self.p99(),
+            "max_s": self.max(),
+        }
+
+    # ------------------------------------------------------------ wire form
+    def to_wire(self) -> dict:
+        """Compact JSON-able form: contiguous runs of bucket counts are the
+        common case (latency streams are unimodal), so ship
+        ``[start_key, [counts...]]`` runs instead of a key->count map."""
+        runs: list[list] = []
+        cur_start: Optional[int] = None
+        cur: list[int] = []
+        for key in sorted(self._buckets):
+            if cur_start is not None and key == cur_start + len(cur):
+                cur.append(self._buckets[key])
+            else:
+                if cur:
+                    runs.append([cur_start, cur])
+                cur_start, cur = key, [self._buckets[key]]
+        if cur:
+            runs.append([cur_start, cur])
+        return {
+            "schema": WIRE_SCHEMA,
+            "ra": self.relative_accuracy,
+            "min_value": self.min_value,
+            "zero": self._zero,
+            "count": self.count,
+            "sum": self.sum,
+            "min": self._min,
+            "max": self._max,
+            "runs": runs,
+        }
+
+    @classmethod
+    def from_wire(cls, wire: dict) -> "LogSketch":
+        if wire.get("schema") != WIRE_SCHEMA:
+            raise ValueError(f"not a {WIRE_SCHEMA} wire form: "
+                             f"{wire.get('schema')!r}")
+        out = cls(wire["ra"], min_value=wire["min_value"])
+        out._zero = int(wire["zero"])
+        out.count = int(wire["count"])
+        out.sum = float(wire["sum"])
+        out._min = wire["min"]
+        out._max = wire["max"]
+        for start, counts in wire["runs"]:
+            for i, n in enumerate(counts):
+                out._buckets[start + i] = int(n)
+        return out
+
+    def __repr__(self) -> str:
+        return (f"LogSketch(n={self.count}, bins={len(self._buckets)}, "
+                f"p50={self.p50():.4g}, p99={self.p99():.4g})")

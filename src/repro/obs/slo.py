@@ -1,0 +1,251 @@
+"""SLO specs and multi-window burn-rate alerting over latency streams.
+
+EWMAs and even tail percentiles answer "how slow is it *now*"; an operator
+pages on a different question — "at the current error rate, how fast is
+this window burning through the SLO's error budget?" (the SRE-workbook
+multi-window multi-burn-rate discipline). This module evaluates exactly
+that, per pipeline:
+
+* an :class:`SLOSpec` declares the objective: a latency metric ("ttft" /
+  "decode" / any stream name), a per-request threshold (a request slower
+  than ``threshold_s`` is *bad*), and a target good fraction
+  (``objective``, e.g. 0.99 -> 1% error budget);
+* an :class:`SLOTracker` buckets good/bad counts on a coarse time grid
+  (bounded ring — O(windows/bucket) state regardless of traffic), computes
+  ``burn_rate(window) = bad_fraction(window) / error_budget``, and holds
+  the alert state machine: an alert **fires** when the burn rate exceeds
+  ``burn_threshold`` in BOTH the long window and the short window (the
+  short window gates stale alerts: once the regression stops, the short
+  window recovers first and the alert clears without waiting out the long
+  window), and **clears** when the short window drops back under;
+* an :class:`SLOMonitor` owns the trackers for one pipeline, fans one
+  observed latency into every spec on that metric, and renders the
+  ``slo`` Prometheus group. Alert transitions are returned as structured
+  events so the caller (ElasticController) can put them in the flight
+  recorder next to the scale decisions they should explain.
+
+All evaluation takes an explicit ``now`` so tests and replay benches run
+on virtual time; live callers pass ``time.monotonic()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+__all__ = ["SLOSpec", "BurnRatePolicy", "SLOTracker", "SLOMonitor",
+           "DEFAULT_BURN_POLICIES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """One latency objective: requests under ``threshold_s`` are good;
+    ``objective`` of them must be (error budget = 1 - objective)."""
+
+    name: str                    # e.g. "ttft_p99"
+    metric: str                  # latency stream: "ttft" | "decode" | ...
+    threshold_s: float           # per-request good/bad cut
+    objective: float = 0.99      # target good fraction
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.objective < 1.0:
+            raise ValueError(f"objective must be in (0, 1): "
+                             f"{self.objective}")
+
+    @property
+    def error_budget(self) -> float:
+        return 1.0 - self.objective
+
+
+@dataclasses.dataclass(frozen=True)
+class BurnRatePolicy:
+    """One multi-window burn rule: fire when burn >= ``burn_threshold`` in
+    both windows. ``severity`` labels the emitted events ("page"/"ticket").
+    """
+
+    long_window_s: float
+    short_window_s: float
+    burn_threshold: float
+    severity: str = "page"
+
+
+#: the classic SRE-workbook pairing, time-compressed for serving loops
+#: (production would use 1h/5m and 6h/30m): a fast-burn page and a
+#: slow-burn ticket
+DEFAULT_BURN_POLICIES = (
+    BurnRatePolicy(long_window_s=60.0, short_window_s=5.0,
+                   burn_threshold=14.4, severity="page"),
+    BurnRatePolicy(long_window_s=300.0, short_window_s=30.0,
+                   burn_threshold=6.0, severity="ticket"),
+)
+
+
+class _WindowCounts:
+    """Good/bad counts on a coarse time grid: a bounded ring of
+    ``(bucket_index, good, bad)`` triples covering the longest window.
+    O(1) observe, O(buckets) window query — buckets, not requests."""
+
+    def __init__(self, horizon_s: float, bucket_s: float) -> None:
+        self.bucket_s = bucket_s
+        self.n_buckets = max(2, int(math.ceil(horizon_s / bucket_s)) + 1)
+        self._idx = [0] * self.n_buckets      # absolute bucket index
+        self._good = [0] * self.n_buckets
+        self._bad = [0] * self.n_buckets
+
+    def observe(self, now: float, good: bool, n: int = 1) -> None:
+        b = int(now / self.bucket_s)
+        slot = b % self.n_buckets
+        if self._idx[slot] != b:
+            self._idx[slot] = b
+            self._good[slot] = 0
+            self._bad[slot] = 0
+        if good:
+            self._good[slot] += n
+        else:
+            self._bad[slot] += n
+
+    def window(self, now: float, window_s: float) -> tuple[int, int]:
+        """(good, bad) over the trailing ``window_s``."""
+        b_now = int(now / self.bucket_s)
+        b_min = int((now - window_s) / self.bucket_s)
+        good = bad = 0
+        for slot in range(self.n_buckets):
+            b = self._idx[slot]
+            if b_min < b <= b_now:
+                good += self._good[slot]
+                bad += self._bad[slot]
+        return good, bad
+
+
+class SLOTracker:
+    """Burn-rate evaluation + alert state machine for one spec."""
+
+    def __init__(self, spec: SLOSpec,
+                 policies: tuple[BurnRatePolicy, ...] = DEFAULT_BURN_POLICIES,
+                 *, bucket_s: Optional[float] = None) -> None:
+        self.spec = spec
+        self.policies = tuple(policies)
+        horizon = max(p.long_window_s for p in self.policies)
+        if bucket_s is None:
+            # resolve the shortest window into >= 4 buckets
+            bucket_s = max(min(p.short_window_s
+                               for p in self.policies) / 4.0, 1e-3)
+        self._counts = _WindowCounts(horizon, bucket_s)
+        self.good_total = 0
+        self.bad_total = 0
+        #: firing state per policy index
+        self._firing = [False] * len(self.policies)
+        self.alerts_fired = 0
+        self.alerts_cleared = 0
+
+    # ------------------------------------------------------------- observe
+    def observe(self, value_s: float, now: float) -> None:
+        good = value_s <= self.spec.threshold_s
+        if good:
+            self.good_total += 1
+        else:
+            self.bad_total += 1
+        self._counts.observe(now, good)
+
+    # ------------------------------------------------------------ evaluate
+    def burn_rate(self, window_s: float, now: float) -> float:
+        """bad_fraction(window) / error_budget; 0.0 on an empty window.
+        Burn 1.0 = exactly consuming the budget over the SLO period;
+        14.4 = the classic "2% of a 30-day budget in one hour" page."""
+        good, bad = self._counts.window(now, window_s)
+        total = good + bad
+        if total == 0:
+            return 0.0
+        return (bad / total) / self.spec.error_budget
+
+    def firing(self) -> bool:
+        return any(self._firing)
+
+    def evaluate(self, now: float) -> list[dict]:
+        """Advance the alert state machine; returns one structured event
+        per transition (kind ``slo_alert`` on fire, ``slo_clear`` on
+        clear) — the caller records them in its flight recorder."""
+        events: list[dict] = []
+        for i, pol in enumerate(self.policies):
+            long_burn = self.burn_rate(pol.long_window_s, now)
+            short_burn = self.burn_rate(pol.short_window_s, now)
+            if not self._firing[i]:
+                if (long_burn >= pol.burn_threshold
+                        and short_burn >= pol.burn_threshold):
+                    self._firing[i] = True
+                    self.alerts_fired += 1
+                    events.append({
+                        "kind": "slo_alert", "slo": self.spec.name,
+                        "metric": self.spec.metric,
+                        "severity": pol.severity,
+                        "burn_long": long_burn, "burn_short": short_burn,
+                        "threshold": pol.burn_threshold,
+                        "window_s": pol.long_window_s,
+                    })
+            else:
+                # the short window recovering is the all-clear: the long
+                # window still carries the incident's debris, but no new
+                # budget is burning
+                if short_burn < pol.burn_threshold:
+                    self._firing[i] = False
+                    self.alerts_cleared += 1
+                    events.append({
+                        "kind": "slo_clear", "slo": self.spec.name,
+                        "metric": self.spec.metric,
+                        "severity": pol.severity,
+                        "burn_long": long_burn, "burn_short": short_burn,
+                        "threshold": pol.burn_threshold,
+                        "window_s": pol.long_window_s,
+                    })
+        return events
+
+
+class SLOMonitor:
+    """Per-pipeline SLO evaluation: trackers keyed by spec name, one
+    observation fan-out per metric stream, one Prometheus group out."""
+
+    def __init__(self, specs: tuple[SLOSpec, ...] = (), *,
+                 pipeline: str = "pipe",
+                 policies: tuple[BurnRatePolicy, ...] = DEFAULT_BURN_POLICIES,
+                 bucket_s: Optional[float] = None) -> None:
+        self.pipeline = pipeline
+        self.policies = tuple(policies)
+        self._bucket_s = bucket_s
+        self.trackers: dict[str, SLOTracker] = {}
+        for spec in specs:
+            self.add_spec(spec)
+
+    def add_spec(self, spec: SLOSpec) -> SLOTracker:
+        if spec.name in self.trackers:
+            raise ValueError(f"duplicate SLO spec {spec.name!r}")
+        tr = SLOTracker(spec, self.policies, bucket_s=self._bucket_s)
+        self.trackers[spec.name] = tr
+        return tr
+
+    def observe(self, metric: str, value_s: float, now: float) -> None:
+        for tr in self.trackers.values():
+            if tr.spec.metric == metric:
+                tr.observe(value_s, now)
+
+    def evaluate(self, now: float) -> list[dict]:
+        events: list[dict] = []
+        for tr in self.trackers.values():
+            events.extend(tr.evaluate(now))
+        return events
+
+    def firing(self) -> list[str]:
+        return [name for name, tr in self.trackers.items() if tr.firing()]
+
+    def metrics(self, now: float) -> dict:
+        """The ``slo`` Prometheus group: per-spec burn rates (labelled by
+        window), firing state, and cumulative good/bad counts."""
+        out: dict = {}
+        for name, tr in self.trackers.items():
+            pol = tr.policies[0]
+            out[f"{name}_burn_long"] = tr.burn_rate(pol.long_window_s, now)
+            out[f"{name}_burn_short"] = tr.burn_rate(pol.short_window_s, now)
+            out[f"{name}_firing"] = int(tr.firing())
+            out[f"{name}_good_total"] = tr.good_total
+            out[f"{name}_bad_total"] = tr.bad_total
+            out[f"{name}_alerts_fired_total"] = tr.alerts_fired
+        return out

@@ -16,6 +16,22 @@ re-prefill causes: PREFILL on the original replica, the RETRY bounce, the
 re-prefill under a fresh session id, and the resumed decode all parent back
 to the same root.
 
+Sampling (fleet scale): default-on full tracing is the right debugging
+default at smoke scale, but at 10k+ concurrent sessions every session
+tree churns the ring and the interesting traces (failures, heals, tail
+outliers) are overwritten by thousands of boring ones. ``sample_rate``
+adds *head sampling with tail-based keep rules*: the keep/drop decision
+is minted once at the session root (children inherit it through the
+context, across worlds), but an unsampled trace is not discarded
+outright — its spans buffer in a small bounded staging area and the trace
+is promoted to the ring anyway if it turns out interesting: any span of a
+``keep_kinds`` kind (heal/migrate/restore/reprefill by default), any span
+whose detail marks an error or RETRY bounce, or any span slower than
+``slow_keep_s``. Boring unsampled traces are dropped wholesale when their
+root span closes. Tracing cost therefore stays ~flat as sessions grow:
+the ring holds every anomalous trace plus a ``sample_rate`` slice of the
+healthy ones.
+
 Span taxonomy (the ``kind`` strings the summary aggregates over):
 
 ======================  ====================================================
@@ -37,10 +53,19 @@ Span taxonomy (the ``kind`` strings the summary aggregates over):
 from __future__ import annotations
 
 import itertools
+import random
 import time
+from collections import OrderedDict, deque
 from typing import Iterable, Optional
 
-__all__ = ["SpanKind", "TraceContext", "Tracer", "connected_tree"]
+__all__ = ["SpanKind", "TraceContext", "Tracer", "connected_tree",
+           "DEFAULT_KEEP_KINDS"]
+
+#: span kinds that always promote an unsampled trace to the ring — the
+#: control-plane incidents an operator reconstructs after the fact
+DEFAULT_KEEP_KINDS = frozenset({
+    "heal", "migrate", "restore", "restore_replay", "reprefill",
+})
 
 
 class SpanKind:
@@ -65,20 +90,26 @@ class TraceContext:
     """Identity of one span: which tree, which node, which parent.
 
     Immutable by convention; 0 is the nil parent (roots). Rides on
-    ``Envelope.trace`` and crosses worlds by value — three ints, no
-    references into the emitting process.
+    ``Envelope.trace`` and crosses worlds by value — three ints and the
+    head-sampling verdict, no references into the emitting process.
+    ``sampled=False`` marks a trace whose spans stage in the tail-keep
+    buffer instead of the ring (children inherit the verdict, so one
+    decision at the session root governs the whole tree fleet-wide).
     """
 
-    __slots__ = ("trace_id", "span_id", "parent_id")
+    __slots__ = ("trace_id", "span_id", "parent_id", "sampled")
 
-    def __init__(self, trace_id: int, span_id: int, parent_id: int = 0):
+    def __init__(self, trace_id: int, span_id: int, parent_id: int = 0,
+                 sampled: bool = True):
         self.trace_id = trace_id
         self.span_id = span_id
         self.parent_id = parent_id
+        self.sampled = sampled
 
     def __repr__(self) -> str:  # debugging only — never on the hot path
         return (f"TraceContext(trace={self.trace_id}, span={self.span_id}, "
-                f"parent={self.parent_id})")
+                f"parent={self.parent_id}"
+                + ("" if self.sampled else ", unsampled") + ")")
 
 
 # ring slot field offsets (one preallocated list per slot, mutated in place)
@@ -88,9 +119,17 @@ _TRACE, _SPAN, _PARENT, _KIND, _WORKER, _T0, _DT, _DETAIL = range(8)
 class Tracer:
     """Preallocated span ring. Default-on; ``enabled=False`` turns every
     emission into a cheap early-return so the overhead A/B has a true
-    baseline."""
+    baseline. ``sample_rate < 1.0`` head-samples session roots, with
+    tail-based keep rules promoting anomalous unsampled traces (see the
+    module docstring)."""
 
-    def __init__(self, capacity: int = 32768, *, enabled: bool = True):
+    def __init__(self, capacity: int = 32768, *, enabled: bool = True,
+                 sample_rate: float = 1.0,
+                 keep_kinds: frozenset = DEFAULT_KEEP_KINDS,
+                 slow_keep_s: Optional[float] = None,
+                 max_pending_traces: int = 4096,
+                 pending_cap: int = 256,
+                 seed: int = 0):
         self.enabled = enabled
         self.capacity = capacity
         # one reusable 8-field slot per ring position; item stores only
@@ -98,33 +137,63 @@ class Tracer:
                       for _ in range(capacity)]
         self._head = 0          # next slot to overwrite
         self._count = 0         # slots holding live data (<= capacity)
-        self.recorded = 0       # spans ever recorded
+        self.recorded = 0       # spans ever recorded into the ring
         self.dropped = 0        # spans overwritten before being read
         self._ids = itertools.count(1)
+        # -- head sampling + tail keep ----------------------------------
+        self.sample_rate = sample_rate
+        self.keep_kinds = frozenset(keep_kinds)
+        self.slow_keep_s = slow_keep_s
+        self.max_pending_traces = max_pending_traces
+        self.pending_cap = pending_cap
+        self._rng = random.Random(seed)
+        #: undecided unsampled traces: trace_id -> [keep_flag, spans]
+        self._pending: OrderedDict[int, list] = OrderedDict()
+        #: recent verdicts for traces whose root already closed, so late
+        #: spans (background snapshots, stragglers) of a kept trace still
+        #: reach the ring; bounded FIFO
+        self._resolved: dict[int, bool] = {}
+        self._resolved_order: deque = deque()
+        self.sampled_out = 0    # boring unsampled traces discarded
+        self.tail_kept = 0      # unsampled traces promoted by a keep rule
 
     # ------------------------------------------------------------ contexts
     def begin(self, parent: Optional[TraceContext] = None
               ) -> Optional[TraceContext]:
         """Mint a child context (or a root when ``parent`` is None).
-        Returns None when disabled so call sites pay one attribute load."""
+        Returns None when disabled so call sites pay one attribute load.
+        The head-sampling verdict is decided here, once per root."""
         if not self.enabled:
             return None
         sid = next(self._ids)
         if parent is None:
-            return TraceContext(sid, sid, 0)
-        return TraceContext(parent.trace_id, sid, parent.span_id)
+            sampled = (self.sample_rate >= 1.0
+                       or self._rng.random() < self.sample_rate)
+            return TraceContext(sid, sid, 0, sampled)
+        return TraceContext(parent.trace_id, sid, parent.span_id,
+                            parent.sampled)
 
     # ------------------------------------------------------------ emission
     def record(self, ctx: Optional[TraceContext], kind: str, t0: float,
                dt: float, worker: str = "", detail: str = "") -> None:
         """Store one completed span. No-op on a None context (disabled
-        tracer, or an envelope minted before tracing was on)."""
+        tracer, or an envelope minted before tracing was on). Spans of an
+        unsampled trace stage in the tail-keep buffer instead."""
         if ctx is None or not self.enabled:
             return
+        if not ctx.sampled:
+            self._record_unsampled(ctx, kind, t0, dt, worker, detail)
+            return
+        self._store(ctx.trace_id, ctx.span_id, ctx.parent_id, kind,
+                    worker, t0, dt, detail)
+
+    def _store(self, trace_id: int, span_id: int, parent_id: int,
+               kind: str, worker: str, t0: float, dt: float,
+               detail: str) -> None:
         slot = self._ring[self._head]
-        slot[_TRACE] = ctx.trace_id
-        slot[_SPAN] = ctx.span_id
-        slot[_PARENT] = ctx.parent_id
+        slot[_TRACE] = trace_id
+        slot[_SPAN] = span_id
+        slot[_PARENT] = parent_id
         slot[_KIND] = kind
         slot[_WORKER] = worker
         slot[_T0] = t0
@@ -136,6 +205,56 @@ class Tracer:
         else:
             self.dropped += 1
         self.recorded += 1
+
+    # ------------------------------------------------- tail-based sampling
+    def _keep_worthy(self, kind: str, dt: float, detail: str) -> bool:
+        """Tail keep rules: incident span kinds, error/RETRY details, and
+        slow outliers always survive head sampling."""
+        if kind in self.keep_kinds:
+            return True
+        if self.slow_keep_s is not None and dt >= self.slow_keep_s:
+            return True
+        return "error" in detail or "retry" in detail
+
+    def _record_unsampled(self, ctx: TraceContext, kind: str, t0: float,
+                          dt: float, worker: str, detail: str) -> None:
+        tid = ctx.trace_id
+        verdict = self._resolved.get(tid)
+        if verdict is not None:
+            if verdict:     # late span of a tail-kept trace: straight in
+                self._store(tid, ctx.span_id, ctx.parent_id, kind,
+                            worker, t0, dt, detail)
+            return
+        ent = self._pending.get(tid)
+        if ent is None:
+            if len(self._pending) >= self.max_pending_traces:
+                # decide the oldest undecided trace with what it has —
+                # the staging area is bounded, never a leak
+                old_tid, old = self._pending.popitem(last=False)
+                self._finish_pending(old_tid, old)
+            ent = [False, []]           # [keep_flag, spans]
+            self._pending[tid] = ent
+        if len(ent[1]) < self.pending_cap:
+            ent[1].append((tid, ctx.span_id, ctx.parent_id, kind,
+                           worker, t0, dt, detail))
+        if not ent[0] and self._keep_worthy(kind, dt, detail):
+            ent[0] = True
+        if ctx.parent_id == 0:          # root closed: decide the tree
+            self._pending.pop(tid, None)
+            self._finish_pending(tid, ent)
+
+    def _finish_pending(self, tid: int, ent: list) -> None:
+        keep, spans = ent
+        if keep:
+            self.tail_kept += 1
+            for s in spans:
+                self._store(*s)
+        else:
+            self.sampled_out += 1
+        self._resolved[tid] = keep
+        self._resolved_order.append(tid)
+        while len(self._resolved_order) > 4096:
+            self._resolved.pop(self._resolved_order.popleft(), None)
 
     def span(self, parent: Optional[TraceContext], kind: str, t0: float,
              worker: str = "", detail: str = "") -> Optional[TraceContext]:
@@ -199,6 +318,9 @@ class Tracer:
     def clear(self) -> None:
         self._head = 0
         self._count = 0
+        self._pending.clear()
+        self._resolved.clear()
+        self._resolved_order.clear()
 
 
 def connected_tree(spans: Iterable[dict]) -> bool:

@@ -84,7 +84,7 @@ from repro.core import (
     WorldSpec,
 )
 from repro.core.online import OnlineInstantiator
-from repro.obs import FlightRecorder, Tracer
+from repro.obs import FlightRecorder, LogSketch, Tracer
 from repro.statexfer import (
     INT8,
     MigrationManager,
@@ -193,6 +193,11 @@ class _Replica:
         self.prefill_s_sum = 0.0     # wall time of served prefills
         self.decode_s_sum = 0.0      # wall time of fused decode dispatches
         self.handoffs_out = 0        # prefills handed to the decode pool
+        # -- mergeable latency distributions: one O(1) sketch insert per
+        #    dispatch; MetricsHub folds these into the stage/fleet digests
+        #    so p95 TTFT / p99 decode survive aggregation (means cannot) --
+        self.ttft_sketch = LogSketch()
+        self.decode_sketch = LogSketch()
 
     def queue_depth(self) -> int:
         return (self.inbox.qsize() + len(self._stash) + self.inflight
@@ -387,6 +392,7 @@ class _Replica:
         self.service_s_sum += dt
         self.prefill_s_sum += dt
         self.prefills += 1
+        self.ttft_sketch.insert(dt)
         server.tracer.span(env.trace, "prefill", t0, self.worker_id)
 
     async def _handle_decode(self, ex: StageExecutor, loop, env: Envelope,
@@ -453,6 +459,7 @@ class _Replica:
             dt = time.monotonic() - t0
             self.service_s_sum += dt
             self.decode_s_sum += dt
+            self.decode_sketch.insert(dt)
         finally:
             # coalesced extras were pulled out of the inbox by this handler;
             # the run loop only balances the first envelope's inflight count
@@ -657,6 +664,8 @@ class PipelineServer:
                  restore_grace_s: float = 0.5,
                  tracing: bool = True,
                  trace_capacity: int = 32768,
+                 trace_sample_rate: float = 1.0,
+                 trace_slow_keep_s: Optional[float] = None,
                  flightrec_capacity: int = 4096,
                  dump_dir: Optional[str] = None) -> None:
         self.cluster = cluster
@@ -745,8 +754,13 @@ class PipelineServer:
         #: (t, kind, detail) scale/heal/drain timeline for Fig.5-style plots
         self.events: list[tuple[float, str, str]] = []
         #: causal span tracer — default-ON; ``tracing=False`` is the A/B
-        #: baseline the generate bench's overhead gate measures against
-        self.tracer = Tracer(trace_capacity, enabled=tracing)
+        #: baseline the generate bench's overhead gate measures against.
+        #: ``trace_sample_rate < 1`` head-samples session roots with
+        #: tail-based keep rules (errors/heals/retries/slow outliers always
+        #: survive) so tracing cost stays flat at fleet session counts
+        self.tracer = Tracer(trace_capacity, enabled=tracing,
+                             sample_rate=trace_sample_rate,
+                             slow_keep_s=trace_slow_keep_s)
         #: flight recorder: bounded ring of structured control-plane events,
         #: dumped to JSON (under ``dump_dir`` when set) on any unhandled
         #: failure, every heal, or an explicit ``recorder.dump()``

@@ -1,0 +1,398 @@
+"""Fleet-scale observability: sketches, digests, SLO burn rates, sampling.
+
+The acceptance bar (ISSUE 8): LogSketch quantiles stay within the
+guaranteed relative error on adversarial streams and merging is
+order-invariant; StageDigest folding is hierarchical without changing
+policy decisions (digest-vs-raw parity); SLO burn-rate alerts fire on
+regressions and clear on recovery, never on steady traffic; head sampling
+drops boring traces wholesale while tail-keep rules promote every
+error/incident/slow-outlier trace; flight-recorder dumps rotate on disk;
+Prometheus output is scrape-compliant; workload percentiles never index
+out of range.
+"""
+import math
+import os
+import random
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.control import (
+    ReplicaSample,
+    StageSnapshot,
+    TailLatencySLOPolicy,
+    TargetQueueDepthPolicy,
+    TokenRatePolicy,
+    TTFTSLOPolicy,
+    percentile,
+)
+from repro.obs import (
+    FlightRecorder,
+    LogSketch,
+    SLOMonitor,
+    SLOSpec,
+    StageDigest,
+    Tracer,
+    fold_samples,
+)
+from repro.obs.export import render_prometheus
+
+
+# --------------------------------------------------------------- streams
+def _streams():
+    rng = random.Random(42)
+    uniform = [rng.uniform(1e-4, 10.0) for _ in range(5000)]
+    lognormal = [rng.lognormvariate(-3.0, 1.2) for _ in range(5000)]
+    # adversarial: many duplicates, huge dynamic range, exact-boundary
+    # values, a zero-bucket cluster, and a few extreme outliers
+    adversarial = ([1e-12] * 50 + [0.001] * 500 + [0.001000001] * 500
+                   + [1.0] * 100 + [5e3] * 5
+                   + [rng.choice([2e-9, 0.25, 0.5, 123.0])
+                      for _ in range(1000)])
+    rng.shuffle(adversarial)
+    return {"uniform": uniform, "lognormal": lognormal,
+            "adversarial": adversarial}
+
+
+@pytest.mark.parametrize("name", ["uniform", "lognormal", "adversarial"])
+def test_sketch_relative_error_bound(name):
+    xs = _streams()[name]
+    sk = LogSketch(0.01)
+    sk.extend(xs)
+    xs = sorted(xs)
+    for q in (0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999):
+        # the sketch reports the bucket holding the element at rank
+        # floor(q*(n-1)) — compare against that same exact convention,
+        # not an interpolated percentile (interpolation invents values
+        # between stream points, where no relative-error bound holds)
+        exact = xs[int(q * (len(xs) - 1))]
+        est = sk.quantile(q)
+        if exact <= sk.min_value:
+            assert est <= sk.min_value
+            continue
+        assert abs(est - exact) <= 0.01 * exact + 1e-12, \
+            (name, q, est, exact)
+
+
+@pytest.mark.parametrize("name", ["uniform", "lognormal", "adversarial"])
+def test_sketch_merge_order_invariance(name):
+    """merge(a, b) over disjoint shards equals the sketch of the whole
+    stream, for ANY association order — bucket counts are integers, so
+    the equality is exact, not approximate."""
+    xs = _streams()[name]
+    whole = LogSketch(0.01)
+    whole.extend(xs)
+    # three different shard trees over the same stream
+    for n_shards in (2, 7, 64):
+        shards = [LogSketch(0.01) for _ in range(n_shards)]
+        for i, x in enumerate(xs):
+            shards[i % n_shards].insert(x)
+        left = shards[0].copy()
+        for s in shards[1:]:
+            left.merge(s)
+        right = shards[-1].copy()
+        for s in reversed(shards[:-1]):
+            right.merge(s)
+        for q in (0.5, 0.95, 0.99):
+            assert left.quantile(q) == whole.quantile(q) \
+                == right.quantile(q), (name, n_shards, q)
+        assert left.count == whole.count == len(xs)
+
+
+def test_sketch_wire_roundtrip_and_merge_guard():
+    sk = LogSketch(0.02)
+    sk.extend([0.001, 0.5, 2.0, 2.0, 1e4])
+    back = LogSketch.from_wire(sk.to_wire())
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert back.quantile(q) == sk.quantile(q)
+    assert back.count == sk.count and back.sum == sk.sum
+    with pytest.raises(ValueError):
+        sk.merge(LogSketch(0.01))        # mismatched resolution
+    with pytest.raises(ValueError):
+        LogSketch(0.0)                    # accuracy out of range
+
+
+def test_sketch_size_bound_collapses_low_buckets():
+    sk = LogSketch(0.001, max_bins=64)
+    for i in range(5000):
+        sk.insert(1e-6 * (1.01 ** i))
+    assert len(sk._buckets) <= 64
+    assert sk.collapsed > 0
+    # tail quantiles survive the low-bucket collapse at full accuracy
+    assert sk.quantile(0.99) > sk.quantile(0.5)
+
+
+def test_sketch_empty_and_singleton():
+    sk = LogSketch()
+    assert sk.quantile(0.99) == 0.0 and sk.mean() == 0.0
+    sk.insert(0.25)
+    assert abs(sk.quantile(0.5) - 0.25) <= 0.01 * 0.25 + 1e-12
+
+
+# --------------------------------------------------------------- digests
+def _mk_samples(n, seed=0, with_sketches=True):
+    rng = random.Random(seed)
+    out = []
+    for i in range(n):
+        tsk = dsk = None
+        if with_sketches:
+            tsk, dsk = LogSketch(), LogSketch()
+            for _ in range(8):
+                tsk.insert(rng.lognormvariate(-4.0, 0.7))
+                dsk.insert(rng.lognormvariate(-5.0, 0.7))
+        out.append(ReplicaSample(
+            worker_id=f"w{i}", stage=0, alive=True, draining=(i == n - 1),
+            queue_depth=rng.randrange(8), inflight=rng.randrange(3),
+            processed=rng.randrange(1000),
+            throughput=rng.uniform(1, 10), latency_s=rng.uniform(0.01, 0.1),
+            tokens_per_s=rng.uniform(50, 500),
+            open_sessions=rng.randrange(5), expired=rng.randrange(3),
+            role="both", ttft_s=rng.uniform(0.005, 0.05),
+            decode_lat_s=rng.uniform(0.001, 0.02),
+            ttft_sketch=tsk, decode_sketch=dsk))
+    return out
+
+
+def test_digest_flat_vs_sharded_fold_identical_quantiles():
+    samples = _mk_samples(50, seed=3)
+    failed = {"w3", "w17"}
+    flat = fold_samples(samples, failed, stage=2, t=1.0)
+    for shard in (1, 4, 7, 50, 200):
+        hier = fold_samples(samples, failed, stage=2, t=1.0, shard=shard)
+        assert hier.n_replicas == flat.n_replicas
+        assert hier.n_failed == flat.n_failed == 2
+        assert hier.queue_total == flat.queue_total
+        assert hier.expired == flat.expired
+        # sketch quantiles are exactly equal (integer bucket counts);
+        # float sums agree to ulp-level tolerance
+        assert hier.p95_ttft_s == flat.p95_ttft_s
+        assert hier.p99_decode_s == flat.p99_decode_s
+        assert hier.throughput == pytest.approx(flat.throughput, rel=1e-12)
+        assert hier.ttft_s == pytest.approx(flat.ttft_s, rel=1e-12)
+
+
+def test_digest_vs_raw_policy_decision_parity():
+    """The tentpole invariant: replaying identical samples through the
+    flat (raw) fold and the sharded hierarchical fold yields identical
+    scaling-decision records on every tick."""
+    def snap(d):
+        return StageSnapshot(
+            stage=d.stage, t=d.t, n_replicas=d.n_replicas,
+            n_failed=d.n_failed, queue_total=d.queue_total,
+            queue_per_replica=d.queue_per_replica,
+            throughput=d.throughput, latency_s=d.latency_s,
+            tokens_per_s=d.tokens_per_s, open_sessions=d.open_sessions,
+            expired=d.expired, ttft_s=d.ttft_s,
+            decode_latency_s=d.decode_latency_s,
+            p95_ttft_s=d.p95_ttft_s, p99_decode_s=d.p99_decode_s)
+
+    policies = [TargetQueueDepthPolicy(target=3.0),
+                TTFTSLOPolicy(slo_s=0.03),
+                TokenRatePolicy(target_tokens_per_s=300.0),
+                TailLatencySLOPolicy(ttft_slo_s=0.04, decode_slo_s=0.03)]
+    for tick in range(25):
+        samples = _mk_samples(40, seed=100 + tick)
+        failed = {f"w{i}" for i in range(tick % 5)}
+        flat = fold_samples(samples, failed, stage=0, t=float(tick))
+        hier = fold_samples(samples, failed, stage=0, t=float(tick),
+                            shard=8)
+        for pol in policies:
+            assert pol.decide(snap(flat)).as_record() \
+                == pol.decide(snap(hier)).as_record(), (tick, pol)
+
+
+def test_digest_wire_roundtrip_and_merge_semantics():
+    a = fold_samples(_mk_samples(10, seed=1), stage=0, t=1.0)
+    b = fold_samples(_mk_samples(10, seed=2), stage=1, t=2.0)
+    back = StageDigest.from_wire(a.to_wire())
+    assert back.summary() == a.summary()
+    merged = StageDigest().merge(a).merge(b)
+    assert merged.stage == -1                 # cross-stage = fleet view
+    assert merged.n_samples == a.n_samples + b.n_samples
+    assert merged.t == 2.0
+    assert merged.ttft_sketch.count == (a.ttft_sketch.count
+                                        + b.ttft_sketch.count)
+
+
+def test_digest_handles_sketchless_samples():
+    """obs/ duck-types samples; EWMA-only deployments carry no sketches
+    and the digest must degrade to zero tails, not crash."""
+    d = fold_samples(_mk_samples(5, with_sketches=False), stage=0, t=0.0)
+    assert d.p95_ttft_s == 0.0 and d.p99_decode_s == 0.0
+    assert d.n_replicas == 4                  # one sample was draining
+    pol = TailLatencySLOPolicy(ttft_slo_s=0.01, decode_slo_s=0.01,
+                               min_replicas=1)
+    # no tail signal: the policy must hold, not shrink on absent data
+    assert pol.decide(StageSnapshot(
+        stage=0, t=0.0, n_replicas=4, n_failed=0, queue_total=0,
+        queue_per_replica=0.0, throughput=1.0, latency_s=0.01)).hold
+
+
+# ------------------------------------------------------------------- SLO
+def test_slo_burn_rate_fires_and_clears():
+    mon = SLOMonitor((SLOSpec("ttft_p99", "ttft", 0.1, objective=0.99),),
+                     bucket_s=1.0)
+    events = []
+    # steady: 0.2% bad -> burn 0.2, quiet
+    rng = random.Random(1)
+    for t in range(40):
+        for _ in range(50):
+            mon.observe("ttft", 0.5 if rng.random() < 0.002 else 0.02,
+                        float(t))
+        events += mon.evaluate(float(t))
+    assert not [e for e in events if e["kind"] == "slo_alert"]
+    # regression: 60% bad -> burn 60 >> 14.4, both windows
+    for t in range(40, 60):
+        for _ in range(50):
+            mon.observe("ttft", 0.5 if rng.random() < 0.6 else 0.02,
+                        float(t))
+        events += mon.evaluate(float(t))
+    fired = [e for e in events if e["kind"] == "slo_alert"]
+    assert fired and mon.firing()
+    assert {"slo", "severity", "burn_long", "burn_short"} \
+        <= set(fired[0])
+    # recovery: the short window clears the alert (run past the ticket
+    # policy's 30s short window so every short window is regression-free)
+    for t in range(60, 95):
+        for _ in range(50):
+            mon.observe("ttft", 0.02, float(t))
+        events += mon.evaluate(float(t))
+    assert [e for e in events if e["kind"] == "slo_clear"]
+    assert not mon.firing()
+    m = mon.metrics(95.0)
+    assert m["ttft_p99_alerts_fired_total"] >= 1
+    assert m["ttft_p99_firing"] == 0
+
+
+def test_slo_spec_validation_and_empty_window():
+    with pytest.raises(ValueError):
+        SLOSpec("bad", "ttft", 0.1, objective=1.0)
+    mon = SLOMonitor((SLOSpec("a", "ttft", 0.1),))
+    assert mon.evaluate(0.0) == []            # empty windows: burn 0
+    with pytest.raises(ValueError):
+        mon.add_spec(SLOSpec("a", "decode", 0.1))   # duplicate name
+
+
+# -------------------------------------------------------------- sampling
+def _close_trace(tr, root, kinds_details):
+    for kind, dt, detail in kinds_details:
+        ch = tr.begin(root)
+        tr.record(ch, kind, 0.0, dt, "", detail)
+    tr.record(root, "session", 0.0, 0.1)
+
+
+def test_head_sampling_drops_boring_traces():
+    tr = Tracer(1024, sample_rate=0.0, seed=0)
+    for _ in range(20):
+        root = tr.begin()
+        assert not root.sampled
+        _close_trace(tr, root, [("ttft", 0.01, ""),
+                                ("decode_step", 0.005, "")])
+    assert tr.recorded == 0
+    assert tr.sampled_out == 20
+    assert len(tr._pending) == 0              # nothing leaks after close
+
+
+@pytest.mark.parametrize("trigger", [
+    ("heal", 0.01, ""),                       # keep-kind span
+    ("decode_step", 0.01, "error=boom"),      # error detail
+    ("ttft", 0.01, "retry"),                  # RETRY bounce
+    ("decode_step", 5.0, ""),                 # slow outlier
+])
+def test_tail_keep_promotes_interesting_traces(trigger):
+    tr = Tracer(1024, sample_rate=0.0, slow_keep_s=1.0, seed=0)
+    root = tr.begin()
+    _close_trace(tr, root, [("ttft", 0.01, ""), trigger])
+    assert tr.tail_kept == 1, trigger
+    # the WHOLE tree is promoted, not just the triggering span
+    kinds = {s["kind"] for s in tr.spans(root.trace_id)}
+    assert "session" in kinds and "ttft" in kinds
+    # a late span of the kept trace (post root close) still lands
+    late = tr.begin(root)
+    tr.record(late, "snapshot", 0.0, 0.01)
+    assert "snapshot" in {s["kind"] for s in tr.spans(root.trace_id)}
+
+
+def test_sampling_rate_and_inheritance():
+    tr = Tracer(1 << 14, sample_rate=0.25, seed=7)
+    sampled = 0
+    for _ in range(2000):
+        root = tr.begin()
+        child = tr.begin(root)
+        assert child.sampled == root.sampled      # verdict inherited
+        sampled += root.sampled
+    assert 0.18 < sampled / 2000 < 0.32
+    # full-rate tracer never consults the rng (hot-path invariant)
+    tr2 = Tracer(16, sample_rate=1.0)
+    assert all(tr2.begin().sampled for _ in range(10))
+
+
+def test_pending_buffer_is_bounded():
+    tr = Tracer(64, sample_rate=0.0, max_pending_traces=8, pending_cap=4)
+    roots = [tr.begin() for _ in range(30)]
+    for r in roots:                    # open spans, roots never close
+        for _ in range(10):
+            ch = tr.begin(r)
+            tr.record(ch, "decode_step", 0.0, 0.01)
+    assert len(tr._pending) <= 8
+    assert all(len(ent[1]) <= 4 for ent in tr._pending.values())
+    tr.clear()
+    assert not tr._pending and not tr._resolved
+
+
+# ------------------------------------------------- recorder + exporter
+def test_flight_recorder_dump_rotation(tmp_path):
+    rec = FlightRecorder(16, dump_dir=str(tmp_path), name="rot",
+                         max_dumps=3)
+    for i in range(8):
+        rec.record("tick", i=i)
+        rec.dump(f"reason{i}")
+    files = sorted(tmp_path.glob("flightrec_rot_*.json"))
+    assert len(files) == 3
+    # newest survive: uids 6, 7, 8
+    assert [f.name for f in files] == [
+        "flightrec_rot_6.json", "flightrec_rot_7.json",
+        "flightrec_rot_8.json"]
+    assert rec.dumps_rotated == 5
+    assert rec.dumps_total == 8
+
+
+def test_render_prometheus_help_type_and_escaping():
+    out = render_prometheus({
+        "stage": {"throughput": {'pipe"1\n\\x': 2.5}},
+        "obs": {"breaks": 1, "flag": True, "skip": "str"},
+    })
+    lines = out.splitlines()
+    # every emitted metric has HELP before TYPE before samples
+    for i, line in enumerate(lines):
+        if line.startswith("# TYPE"):
+            assert lines[i - 1].startswith("# HELP")
+    assert '# HELP repro_stage_throughput' in out
+    assert 'id="pipe\\"1\\n\\\\x"' in out
+    assert "repro_obs_flag 1" in out           # bools become ints
+    assert "skip" not in out                   # non-numerics skipped
+
+
+# ------------------------------------------------------------ workload
+def test_percentile_edge_cases():
+    assert math.isnan(percentile([], 50))
+    assert percentile([7.0], 0) == percentile([7.0], 100) == 7.0
+    assert percentile([1.0, 3.0], 50) == 2.0
+    xs = sorted(random.Random(0).uniform(0, 1) for _ in range(101))
+    assert percentile(xs, 0) == xs[0]
+    assert percentile(xs, 100) == xs[-1]
+    assert percentile(xs, 150) == xs[-1]       # clamped, never IndexError
+    assert percentile(xs, -5) == xs[0]
+
+
+def test_openloop_summary_never_raises_on_empty_or_singleton():
+    from repro.control import ConstantProfile, OpenLoopGenerator
+
+    gen = OpenLoopGenerator(lambda: None, ConstantProfile(1.0), seed=9)
+    s = gen.summary()                          # zero records
+    assert math.isnan(s["p99_s"]) and s["seed"] == 9
+    gen.records.append(type("R", (), {"latency_s": 0.5, "ok": True})())
+    s = gen.summary()                          # singleton
+    assert s["p50_s"] == s["p99_s"] == 0.5
