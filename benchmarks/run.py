@@ -20,6 +20,9 @@ Prints ``name,value,derived`` CSV rows:
 * paged — paged KV pool vs contiguous caches: session capacity at equal
   cache memory (shared-prefix reuse), page-granular handoff/snapshot
   bytes, greedy parity incl. kill + page-granular restore
+* multimodel — multi-model multi-tenant pool: shared vs dedicated
+  consolidation A/B, in-rotation residency swap under traffic, and
+  per-tenant SLO tails under a skewed two-tenant mix
 """
 from __future__ import annotations
 
@@ -112,6 +115,8 @@ SUITES = {
                                  fromlist=["run"]).run(),
     "paged": lambda: __import__("benchmarks.bench_paged",
                                 fromlist=["run"]).run(),
+    "multimodel": lambda: __import__("benchmarks.bench_multimodel",
+                                     fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -4,6 +4,7 @@ serving-pipeline scenario config.
 Usage: ``get_config("qwen3-8b")``, ``get_smoke("qwen3-8b")``,
 ``--arch <id>`` in launch scripts.
 """
+import difflib
 from importlib import import_module
 
 from repro.models import ModelConfig
@@ -26,7 +27,10 @@ ARCH_IDS = tuple(_MODULES)
 
 def _module(arch_id: str):
     if arch_id not in _MODULES:
-        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+        hint = difflib.get_close_matches(arch_id, _MODULES, n=1)
+        raise KeyError(
+            f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}"
+            + (f" — did you mean '{hint[0]}'?" if hint else ""))
     return import_module(f"repro.configs.{_MODULES[arch_id]}")
 
 

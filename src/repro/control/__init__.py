@@ -13,10 +13,12 @@ from .policy import (
     DisaggregatedStagePolicy,
     HysteresisPolicy,
     LatencySLOPolicy,
+    PerTenantSLOPolicy,
     ScaleDecision,
     ScalingPolicy,
     TailLatencySLOPolicy,
     TargetQueueDepthPolicy,
+    TenantSpec,
     TokenRatePolicy,
     TTFTSLOPolicy,
 )
@@ -24,10 +26,12 @@ from .workload import (
     BurstProfile,
     ConstantProfile,
     DiurnalProfile,
+    MultiTenantGenerator,
     OpenLoopGenerator,
     RampProfile,
     RateProfile,
     RequestRecord,
+    TenantProfile,
     percentile,
 )
 
@@ -35,9 +39,10 @@ __all__ = [
     "ControlEvent", "ElasticController",
     "Ewma", "MetricsHub", "ReplicaSample", "StageSnapshot",
     "DisaggregatedStagePolicy", "HysteresisPolicy", "LatencySLOPolicy",
-    "ScaleDecision", "ScalingPolicy", "TailLatencySLOPolicy",
-    "TargetQueueDepthPolicy", "TokenRatePolicy", "TTFTSLOPolicy",
+    "PerTenantSLOPolicy", "ScaleDecision", "ScalingPolicy",
+    "TailLatencySLOPolicy", "TargetQueueDepthPolicy", "TenantSpec",
+    "TokenRatePolicy", "TTFTSLOPolicy",
     "BurstProfile", "ConstantProfile", "DiurnalProfile",
-    "OpenLoopGenerator", "RampProfile", "RateProfile", "RequestRecord",
-    "percentile",
+    "MultiTenantGenerator", "OpenLoopGenerator", "RampProfile",
+    "RateProfile", "RequestRecord", "TenantProfile", "percentile",
 ]

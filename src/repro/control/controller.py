@@ -31,6 +31,15 @@ Replacements and scale-ups are **warm** whenever a same-stage peer exists
 (weight fetch + compiled-shape warmup before entering rotation), with an
 automatic cold fallback.
 
+Multi-model pools add a third lever between "grow" and "shrink": a policy
+vote carrying ``swap_to`` directs one stage replica to retarget its
+resident model (``PipelineServer.swap_model`` — hot, in rotation), so a
+starved model gains capacity at constant fleet size. The controller picks
+the hosting replica with the fewest incumbent sessions (cheapest migration
+bill), treats a refused swap as a hold, heals a swapped replica back to
+the victim's full residency set, and honors ``model``-tagged scale-ups by
+bringing the new replica up with that model already loaded.
+
 Heals run as *bounded concurrent tasks* (``max_concurrent_heals``) off the
 control loop: one slow drain (``heal_drain_timeout_s``) can no longer
 freeze scaling decisions for every other stage. ``wait_heals`` joins them
@@ -123,6 +132,7 @@ class ElasticController:
         self.heals = 0
         self.scale_ups = 0
         self.scale_downs = 0
+        self.swaps = 0
         self.slo_alerts = 0
         self._task: Optional[asyncio.Task] = None
         self._stop = asyncio.Event()
@@ -222,22 +232,26 @@ class ElasticController:
     async def _add_replica(self, stage: int, *,
                            role: str = "both",
                            near: Optional[str] = None,
-                           host: Optional[str] = None) -> str:
+                           host: Optional[str] = None,
+                           models: Optional[list] = None) -> str:
         """Warm scale-up/heal with automatic cold fallback: warm bootstrap
         needs a same-stage peer to stream weights/shapes from, and a torn
         warm path must degrade to the plain cold add, never fail the
-        action. The replica joins the requested role pool either way."""
+        action. The replica joins the requested role pool either way.
+        ``models`` brings the new replica up hosting those models beyond
+        the default (model-tagged scale-up, and heals that restore the
+        victim's residency set)."""
         if self.warm_replicas and self.server.healthy_replicas(stage):
             try:
                 return await self.server.add_replica(
                     stage, role=role, warm=True,
                     fresh_executor=self.fresh_executors,
-                    near=near, host=host)
+                    near=near, host=host, models=models)
             except Exception as e:  # noqa: BLE001 — warm is an optimization
                 self._record("error", stage,
                              f"warm bootstrap failed, going cold: {e!r}")
         return await self.server.add_replica(stage, role=role, near=near,
-                                             host=host)
+                                             host=host, models=models)
 
     async def _heal_one(self, stage: int, worker_id: str) -> None:
         """Replace one fenced replica, moving its state instead of
@@ -265,10 +279,17 @@ class ElasticController:
             #: decode replica with a 'both' one would silently erode the
             #: split the operator asked for
             role = getattr(victim, "role", "both")
+            #: ...and restores the victim's model residency set — healing a
+            #: swapped replica back to default-only would silently shrink
+            #: the starved model's capacity the swap existed to grow
+            default = getattr(server, "default_model", "default")
+            models = [m for m in getattr(victim, "resident", ()) or ()
+                      if m != default]
             try:
                 if alive:
                     new_id = await self._add_replica(stage, role=role,
-                                                     host=host)
+                                                     host=host,
+                                                     models=models)
                     rep = victim
                     if self.live_heal and rep is not None and rep.sessions:
                         moved = await server.migrations \
@@ -295,7 +316,8 @@ class ElasticController:
                     await server.remove_replica(
                         stage, worker_id, drain=False)
                     new_id = await self._add_replica(stage, role=role,
-                                                     host=host)
+                                                     host=host,
+                                                     models=models)
             except Exception as e:  # noqa: BLE001 — keep the loop alive
                 self._record("error", stage, f"heal failed: {e!r}")
                 server.recorder.record("heal_failed", stage=stage,
@@ -326,19 +348,23 @@ class ElasticController:
     async def _apply(self, decision) -> None:
         stage, delta = decision.stage, decision.delta
         role = getattr(decision, "role", None)
+        model = getattr(decision, "model", None)
         # every acted-on policy vote lands in the flight recorder — a crash
         # dump must show *why* the fleet was the size it was
         self.server.recorder.record("scale_decision",
                                     **decision.as_record())
         try:
+            if getattr(decision, "swap_to", None) is not None:
+                await self._apply_swap(decision)
             if delta > 0:
                 for _ in range(delta):
-                    new_id = await self._add_replica(stage,
-                                                     role=role or "both")
+                    new_id = await self._add_replica(
+                        stage, role=role or "both",
+                        models=[model] if model else None)
                     self.scale_ups += 1
                     self._record("scale_up", stage,
                                  f"+{new_id} ({decision.reason})")
-            else:
+            elif delta < 0:
                 for _ in range(-delta):
                     gone = await self.server.remove_replica(
                         stage, role=role, drain=True,
@@ -349,6 +375,47 @@ class ElasticController:
         except Exception as e:  # noqa: BLE001 — a failed action must not
             # kill the control loop; next tick re-observes and retries
             self._record("error", stage, f"{decision.reason}: {e!r}")
+
+    async def _apply_swap(self, decision) -> None:
+        """Execute a residency rebalance vote: pick the stage replica that
+        hosts ``swap_from`` with the fewest open sessions running it (the
+        cheapest migration bill) and direct it to swap to ``swap_to``. A
+        refused swap (``ResidencyError`` — e.g. nowhere to migrate the
+        incumbent sessions) is a hold, not a failure: the next tick
+        re-observes, and a heal or scale-up may have changed the answer."""
+        from repro.serving.registry import ResidencyError
+
+        server = self.server
+        stage = decision.stage
+        src, dst = decision.swap_from, decision.swap_to
+        default = getattr(server, "default_model", "default")
+        src = src or default
+        candidates = [
+            r for r in server.replicas[stage]
+            if r.worker.alive and not r.draining
+            and src in getattr(r, "resident", ())
+            and dst not in getattr(r, "resident", ())]
+        if not candidates:
+            self._record("swap_hold", stage,
+                         f"no replica hosts {src!r} without {dst!r}")
+            return
+
+        def _src_sessions(r):
+            return sum(1 for s in r.sessions.values()
+                       if (getattr(s, "model", None) or default) == src)
+
+        victim = min(candidates, key=_src_sessions)
+        try:
+            report = await server.swap_model(victim.worker_id, src, dst)
+        except ResidencyError as e:
+            self._record("swap_hold", stage, f"swap refused: {e}")
+            return
+        self.swaps += 1
+        self._record(
+            "swap", stage,
+            f"{victim.worker_id}: {src!r} -> {dst!r} "
+            f"[{report.get('source')}, {report.get('bytes', 0)}B] "
+            f"({decision.reason})")
 
     #: soft cap on the retained action timeline — a days-long elastic run
     #: appends one event per action forever otherwise; oldest half dropped

@@ -79,6 +79,10 @@ class ReplicaSample:
     #: stage/fleet p95/p99 are computed from merged buckets, not means
     ttft_sketch: object = None
     decode_sketch: object = None
+    #: models resident on the replica (multi-model pools); () = default only
+    models: tuple = ()
+    #: decode batch slots served per tenant by the WDRR fair scheduler
+    tenant_served: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -118,6 +122,14 @@ class StageSnapshot:
     p99_ttft_s: float = 0.0
     p95_decode_s: float = 0.0
     p99_decode_s: float = 0.0
+    #: multi-model pool view: model -> healthy replicas hosting it at this
+    #: stage, and model -> open sessions running it here — the signals a
+    #: swap policy weighs ("B is starved, A has idle residency")
+    model_replicas: dict = dataclasses.field(default_factory=dict)
+    model_sessions: dict = dataclasses.field(default_factory=dict)
+    #: client-observed per-tenant latency tails (pipeline-wide, attached to
+    #: every stage snapshot): tenant -> {p50/p95_ttft_s, p95_decode_s, n}
+    tenant_tails: dict = dataclasses.field(default_factory=dict)
     #: the StageDigest this snapshot was derived from (None for snapshots
     #: constructed directly, e.g. in tests)
     digest: Optional[StageDigest] = None
@@ -223,7 +235,9 @@ class MetricsHub:
             expired=rep.expired, role=getattr(rep, "role", "both"),
             ttft_s=ttft.get(), decode_lat_s=declat.get(),
             ttft_sketch=getattr(rep, "ttft_sketch", None),
-            decode_sketch=getattr(rep, "decode_sketch", None))
+            decode_sketch=getattr(rep, "decode_sketch", None),
+            models=tuple(sorted(getattr(rep, "resident", ()) or ())),
+            tenant_served=dict(getattr(rep, "tenant_served", {}) or {}))
 
     def _prune_retired(self) -> None:
         """Worker ids are never reused, so per-replica state for retired
@@ -248,6 +262,8 @@ class MetricsHub:
         now = time.monotonic()
         snaps: list[StageSnapshot] = []
         self.stage_digests = []
+        tails = self.tenant_tails()
+        default = getattr(self.server, "default_model", "default")
         for stage, reps in enumerate(self.server.replicas):
             samples = [self._replica_sample(r, now) for r in reps]
             failed = set(self.server.failed_replicas(stage))
@@ -257,9 +273,39 @@ class MetricsHub:
                 snap.role_slices[role] = self._aggregate(
                     stage, now, [s for s in samples if s.role == role],
                     failed, role=role)
+            # multi-model dimensions: where each model is resident and how
+            # many open sessions run it at this stage (the swap policy's
+            # supply-vs-demand view); single-model pools see {default: ...}
+            for r in reps:
+                if r.worker.alive and not r.draining:
+                    for m in getattr(r, "resident", ()) or ():
+                        snap.model_replicas[m] = (
+                            snap.model_replicas.get(m, 0) + 1)
+                for sess in getattr(r, "sessions", {}).values():
+                    m = getattr(sess, "model", None) or default
+                    snap.model_sessions[m] = (
+                        snap.model_sessions.get(m, 0) + 1)
+            snap.tenant_tails = tails
             snaps.append(snap)
         self._update_migration_ewmas()
         return snaps
+
+    def tenant_tails(self) -> dict:
+        """Client-observed per-tenant latency tails from the server's
+        tenant sketches: ``tenant -> {p50_ttft_s, p95_ttft_s, p95_decode_s,
+        n}``. Empty for untagged (single-tenant) pipelines — the per-tenant
+        SLO policy treats a missing tenant as 'no signal yet'."""
+        out: dict[str, dict] = {}
+        for tenant, sk in getattr(self.server, "tenant_sketches",
+                                  {}).items():
+            ttft, dec = sk.get("ttft"), sk.get("decode")
+            out[tenant] = {
+                "p50_ttft_s": ttft.quantile(0.5) if ttft is not None else 0.0,
+                "p95_ttft_s": ttft.quantile(0.95) if ttft is not None else 0.0,
+                "p95_decode_s": dec.quantile(0.95) if dec is not None else 0.0,
+                "n": float(getattr(ttft, "count", 0) or 0),
+            }
+        return out
 
     def fleet_digest(self) -> StageDigest:
         """Cross-stage rollup of the latest poll (stage == -1): the whole
@@ -426,6 +472,14 @@ class MetricsHub:
             "migration": self.migration_metrics(),
             "placement": self.placement_metrics(),
         }
+        # multi-tenant / multi-model label dimensions — omitted entirely
+        # for untagged single-model pipelines (no empty metric families)
+        tenant = self.tenant_metrics()
+        if tenant:
+            groups["tenant"] = tenant
+        model = self.model_metrics()
+        if model:
+            groups["model"] = model
         # executor dispatch/compile counters, summed over the distinct
         # executors behind the fleet (replicas may share one per stage)
         execs = {id(r.executor): r.executor
@@ -469,6 +523,67 @@ class MetricsHub:
             obs["flight_dumps"] = rec.dumps_total
         groups["obs"] = obs
         return render_prometheus(groups)
+
+    def tenant_metrics(self) -> dict:
+        """Per-tenant label dimension for the exporter: client-observed
+        latency tails, token/session totals, and WDRR decode slots served
+        (summed over replicas). Empty when no traffic ever carried a tenant
+        tag, so single-tenant deployments export nothing extra."""
+        tails = self.tenant_tails()
+        out: dict[str, dict] = {}
+        if tails:
+            out["p95_ttft_s"] = {t: v["p95_ttft_s"] for t, v in tails.items()}
+            out["p95_decode_s"] = {t: v["p95_decode_s"]
+                                   for t, v in tails.items()}
+        tokens = dict(getattr(self.server, "tenant_tokens", {}) or {})
+        if tokens:
+            out["tokens_total"] = tokens
+        sessions = dict(getattr(self.server, "tenant_sessions", {}) or {})
+        if sessions:
+            out["sessions_total"] = sessions
+        served: dict[str, int] = {}
+        for reps in self.server.replicas:
+            for r in reps:
+                for t, n in (getattr(r, "tenant_served", {}) or {}).items():
+                    served[t] = served.get(t, 0) + n
+        if served:
+            out["slots_served"] = served
+        return out
+
+    def model_metrics(self) -> dict:
+        """Per-model label dimension: residency spread (replicas hosting
+        each model), open sessions per model, and the registry/protocol
+        lifetime counters. Empty when only the default model is registered
+        and no residency protocol traffic ever ran."""
+        registry = getattr(self.server, "registry", None)
+        if registry is None:
+            return {}
+        boot = getattr(self.server, "bootstrap", None)
+        counters = registry.stats()
+        if (len(registry.entries) <= 1
+                and not getattr(boot, "model_loads_total", 0)
+                and not getattr(self.server, "swaps_total", 0)):
+            return {}
+        default = getattr(self.server, "default_model", "default")
+        sessions: dict[str, int] = {}
+        for reps in self.server.replicas:
+            for r in reps:
+                for sess in getattr(r, "sessions", {}).values():
+                    m = getattr(sess, "model", None) or default
+                    sessions[m] = sessions.get(m, 0) + 1
+        out = {
+            "replicas": registry.resident_counts(),
+            "swaps_total": getattr(self.server, "swaps_total", 0),
+            **counters,
+        }
+        if sessions:
+            out["sessions"] = sessions
+        if boot is not None:
+            out["wire_loads_total"] = boot.model_loads_total
+            out["wire_loads_cold"] = boot.model_loads_cold
+            out["wire_swaps_total"] = boot.model_swaps_total
+            out["wire_load_bytes_total"] = sum(boot.load_bytes)
+        return out
 
     def kvpool_metrics(self, executors=None) -> dict:
         """Paged KV pool pressure/sharing view, summed over the distinct

@@ -24,6 +24,13 @@ Provided policies:
   computed from merged LogSketches — see obs/digest.py) instead of means.
   Means hide exactly the incidents SLOs are written about: one slow
   replica in fifty barely moves the stage mean but owns the p99.
+* :class:`PerTenantSLOPolicy` — the multi-tenant, multi-model signal: hold
+  every tenant's client-observed p95 TTFT under that tenant's own SLO
+  (:class:`TenantSpec`), preferring a *residency swap* (retarget one
+  replica from an over-provisioned model to the starved one — zero fleet
+  growth) over scale-up. Swap votes ride the same :class:`ScaleDecision`
+  (``swap_from``/``swap_to`` at delta=0), so hysteresis/cooldown wrap them
+  like any other action.
 * :class:`HysteresisPolicy` — a wrapper adding the stability knobs every
   real autoscaler needs: K-consecutive-votes confirmation, post-action
   cooldown, and ±1 step clamping. Wrap any policy above with it to stop
@@ -60,17 +67,33 @@ class ScaleDecision:
     reason: str
     #: pool the action targets (None = the colocated 'both' pool)
     role: Optional[str] = None
+    #: scale-up only: model the new replica(s) should come up hosting
+    #: (None = the pipeline's default model, legacy behavior)
+    model: Optional[str] = None
+    #: residency action instead of (or alongside) a size change: direct
+    #: one stage replica to swap ``swap_from`` -> ``swap_to``. delta=0 with
+    #: swap_to set is a *swap vote*, not a hold — capacity is rebalanced
+    #: across models at constant fleet size, the cheapest lever a
+    #: multi-model controller has.
+    swap_from: Optional[str] = None
+    swap_to: Optional[str] = None
 
     @property
     def hold(self) -> bool:
-        return self.delta == 0
+        return self.delta == 0 and self.swap_to is None
 
     def as_record(self) -> dict:
         """Flight-recorder / JSON form of the vote (the ``reason`` string
         is the policy's own explanation — the 'vote' a crash dump needs to
         show why the fleet was the size it was)."""
-        return {"stage": self.stage, "delta": self.delta,
-                "reason": self.reason, "role": self.role or "both"}
+        rec = {"stage": self.stage, "delta": self.delta,
+               "reason": self.reason, "role": self.role or "both"}
+        if self.model is not None:
+            rec["model"] = self.model
+        if self.swap_to is not None:
+            rec["swap_from"] = self.swap_from
+            rec["swap_to"] = self.swap_to
+        return rec
 
 
 def hold(stage: int, reason: str = HOLD_REASON,
@@ -282,6 +305,118 @@ class TailLatencySLOPolicy:
             return ScaleDecision(
                 snap.stage, -1, "tails well under SLO, queue idle")
         return hold(snap.stage)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's contract with the pool: which model its traffic runs,
+    what TTFT tail it was promised, and its weight in the replica-side
+    WDRR fair scheduler (informational here — the policy reads latency,
+    the scheduler enforces the weight)."""
+
+    name: str
+    model: Optional[str] = None    # None = the pipeline's default model
+    ttft_slo_s: float = 1.0
+    weight: float = 1.0
+
+
+@dataclasses.dataclass
+class PerTenantSLOPolicy:
+    """Multi-tenant, multi-model sizing: keep every tenant's client-observed
+    p95 TTFT under its own SLO, preferring *residency rebalancing* (swap a
+    replica from an over-provisioned model to the starved one — zero fleet
+    growth) over scale-up.
+
+    Per tick, the policy finds the worst-breached tenant (largest
+    ``p95/slo`` ratio over tenants with ≥ ``min_samples`` observations).
+    If a *donor* model exists — one no breached tenant runs, with more
+    resident replicas than the starved model and either spare residency
+    (≥2 replicas) or zero open sessions — it votes ``swap_from=donor,
+    swap_to=starved`` at delta=0. Otherwise it votes a model-tagged
+    scale-up, so the healed capacity comes up already hosting the starved
+    model. With every observed tenant comfortably under (``shrink_frac``)
+    and the queue idle, it votes shrink; anything else holds.
+
+    Reads the snapshot's multi-model dimensions (``tenant_tails``,
+    ``model_replicas``, ``model_sessions`` — see control/metrics.py);
+    absent dimensions (single-tenant pipeline) make it a pure hold policy.
+    """
+
+    tenants: list
+    shrink_frac: float = 0.3
+    idle_queue: float = 0.5
+    min_samples: int = 8
+    min_replicas: int = 1
+    max_replicas: int = 8
+
+    def _spec(self, name: str) -> Optional[TenantSpec]:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        return None
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        tails = getattr(snap, "tenant_tails", {}) or {}
+        n = max(snap.n_replicas, 1)
+        worst: Optional[tuple[float, TenantSpec, float]] = None
+        observed = 0
+        for name, tail in tails.items():
+            spec = self._spec(name)
+            if spec is None or tail.get("n", 0) < self.min_samples:
+                continue
+            observed += 1
+            ratio = tail["p95_ttft_s"] / spec.ttft_slo_s
+            if ratio > 1.0 and (worst is None or ratio > worst[0]):
+                worst = (ratio, spec, tail["p95_ttft_s"])
+        if worst is not None:
+            ratio, spec, p95 = worst
+            target = spec.model or "default"
+            donor = self._donor(snap, target)
+            breach = (f"tenant {spec.name!r} p95 TTFT {p95 * 1e3:.0f}ms > "
+                      f"SLO {spec.ttft_slo_s * 1e3:.0f}ms")
+            if donor is not None:
+                return ScaleDecision(
+                    snap.stage, 0,
+                    f"{breach}: swap a {donor!r} replica to {target!r}",
+                    swap_from=donor, swap_to=target)
+            if n < self.max_replicas:
+                return ScaleDecision(
+                    snap.stage, 1, f"{breach}: no donor model, grow",
+                    model=spec.model)
+            return hold(snap.stage, f"{breach}: at max_replicas, no donor")
+        if (observed and n > self.min_replicas
+                and snap.queue_per_replica < self.idle_queue
+                and all(
+                    tails[name]["p95_ttft_s"]
+                    < self.shrink_frac * spec.ttft_slo_s
+                    for name in tails
+                    if (spec := self._spec(name)) is not None
+                    and tails[name].get("n", 0) >= self.min_samples)):
+            return ScaleDecision(
+                snap.stage, -1, "every tenant well under SLO, queue idle")
+        return hold(snap.stage,
+                    "no tenant signal" if not observed else HOLD_REASON)
+
+    def _donor(self, snap: StageSnapshot, target: str) -> Optional[str]:
+        """A model that can give up one residency for ``target``: not run
+        by any breached tenant's spec... more precisely, any model with
+        more resident replicas than the starved one and spare capacity
+        (≥2 replicas, or zero open sessions at this stage). Prefers the
+        most over-provisioned, least-loaded donor."""
+        reps = getattr(snap, "model_replicas", {}) or {}
+        sessions = getattr(snap, "model_sessions", {}) or {}
+        starved = reps.get(target, 0)
+        best: Optional[tuple[tuple, str]] = None
+        for name, count in reps.items():
+            if name == target or count <= starved:
+                continue
+            open_here = sessions.get(name, 0)
+            if count < 2 and open_here > 0:
+                continue
+            key = (count, -open_here)
+            if best is None or key > best[0]:
+                best = (key, name)
+        return best[1] if best is not None else None
 
 
 @dataclasses.dataclass

@@ -7,6 +7,15 @@ profile and fires each request as its own task, exactly like independent
 users: when the pipeline falls behind, queues grow and the controller must
 react. Profiles cover the canonical elasticity shapes: constant, burst
 (flash crowd), ramp, and diurnal (sinusoidal day/night).
+
+Multi-tenant mixes (:class:`MultiTenantGenerator`): each tenant brings its
+own rate profile, prompt-length distribution, and target model
+(:class:`TenantProfile`); the generator superposes the per-tenant Poisson
+streams on one absolute clock — the skewed 80/20 mix the fair-scheduler
+and per-tenant-SLO scenarios need is just two profiles with a 4:1 rate
+ratio. Every record carries its tenant tag, and ``summary()`` reports the
+overall stats plus a per-tenant breakdown, so a bench can gate each
+tenant's p95 against that tenant's own SLO.
 """
 from __future__ import annotations
 
@@ -79,6 +88,23 @@ class RequestRecord:
     latency_s: float     # -1.0 on failure
     ok: bool
     error: str = ""
+    tenant: str = ""     # "" = untagged (single-tenant generator)
+
+
+@dataclasses.dataclass
+class TenantProfile:
+    """One tenant's traffic contract for the multi-tenant generator: its
+    arrival-rate profile, the prompt-length range its requests draw from
+    (uniform, inclusive), and the registered model its traffic targets
+    (None = the pipeline's default model). ``weight`` is carried through
+    to the summary so artifacts record the fairness configuration the run
+    measured under."""
+
+    name: str
+    profile: RateProfile
+    prompt_len: tuple = (4, 12)
+    model: Optional[str] = None
+    weight: float = 1.0
 
 
 class OpenLoopGenerator:
@@ -163,6 +189,114 @@ class OpenLoopGenerator:
             "p99_s": percentile(lats, 99),
             "mean_s": (sum(lats) / len(lats)) if lats else float("nan"),
         }
+
+
+class MultiTenantGenerator:
+    """Superposed per-tenant Poisson streams against one async ``submit``.
+
+    ``submit`` is a coroutine function ``submit(tenant, prompt_len)``
+    receiving the firing :class:`TenantProfile` and a prompt length drawn
+    from its range; it returns when the request completes. Each tenant's
+    arrival stream is sampled from its own seeded RNG (reproducible per
+    tenant, independent of the others), and the streams are merged on one
+    absolute clock with the same catch-up discipline as
+    :class:`OpenLoopGenerator` — a stalled event loop dispatches every
+    due arrival immediately instead of silently rate-limiting.
+    """
+
+    def __init__(self, submit: Callable[..., Awaitable],
+                 tenants: list, *, seed: int = 0,
+                 max_inflight: int = 256) -> None:
+        self.submit = submit
+        self.tenants = list(tenants)
+        self.seed = seed
+        #: per-tenant RNGs: tenant i's arrivals/prompt draws are a pure
+        #: function of (seed, i), unchanged by reordering other tenants
+        self._rngs = [random.Random(f"{seed}:{t.name}")
+                      for t in self.tenants]
+        self.max_inflight = max_inflight
+        self.records: list[RequestRecord] = []
+        self.sent = 0
+        self.ok = 0
+        self.failed = 0
+        self.shed = 0
+        self._inflight = 0
+
+    async def _one(self, t_rel: float, tenant: TenantProfile,
+                   prompt_len: int) -> None:
+        t0 = time.monotonic()
+        try:
+            await self.submit(tenant, prompt_len)
+            self.ok += 1
+            self.records.append(RequestRecord(
+                t_rel, time.monotonic() - t0, True, tenant=tenant.name))
+        except Exception as e:  # noqa: BLE001 — record, don't crash the run
+            self.failed += 1
+            self.records.append(RequestRecord(
+                t_rel, -1.0, False, f"{type(e).__name__}: {e}",
+                tenant=tenant.name))
+        finally:
+            self._inflight -= 1
+
+    async def run(self, duration_s: float) -> dict:
+        start = time.monotonic()
+        tasks: list[asyncio.Task] = []
+        t_next = [rng.expovariate(max(t.profile.rate(0.0), 1e-3))
+                  for t, rng in zip(self.tenants, self._rngs)]
+        while True:
+            due = [tn for tn in t_next if tn < duration_s]
+            if not due:
+                break
+            t_min = min(due)
+            now = time.monotonic() - start
+            if now < t_min:
+                await asyncio.sleep(t_min - now)
+                now = time.monotonic() - start
+            # catch-up: fire every tenant's arrivals that came due during
+            # the sleep (or an event-loop stall), earliest first
+            for i, tenant in enumerate(self.tenants):
+                rng = self._rngs[i]
+                while t_next[i] <= now and t_next[i] < duration_s:
+                    if self._inflight >= self.max_inflight:
+                        self.shed += 1
+                    else:
+                        self.sent += 1
+                        self._inflight += 1
+                        lo, hi = tenant.prompt_len
+                        tasks.append(asyncio.ensure_future(self._one(
+                            t_next[i], tenant, rng.randint(lo, hi))))
+                    t_next[i] += rng.expovariate(
+                        max(tenant.profile.rate(t_next[i]), 1e-3))
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)
+        return self.summary()
+
+    def summary(self) -> dict:
+        """Overall stats plus a per-tenant breakdown keyed by tenant name
+        — each tenant's latency percentiles come from its own records, so
+        a heavy tenant's tail can't hide a light tenant's starvation."""
+        lats = sorted(r.latency_s for r in self.records if r.ok)
+        out = {
+            "sent": self.sent, "ok": self.ok, "failed": self.failed,
+            "shed": self.shed, "seed": self.seed,
+            "p50_s": percentile(lats, 50), "p95_s": percentile(lats, 95),
+            "p99_s": percentile(lats, 99),
+            "mean_s": (sum(lats) / len(lats)) if lats else float("nan"),
+            "tenants": {},
+        }
+        for tenant in self.tenants:
+            recs = [r for r in self.records if r.tenant == tenant.name]
+            tl = sorted(r.latency_s for r in recs if r.ok)
+            out["tenants"][tenant.name] = {
+                "sent": len(recs),
+                "ok": sum(1 for r in recs if r.ok),
+                "failed": sum(1 for r in recs if not r.ok),
+                "weight": tenant.weight,
+                "model": tenant.model,
+                "p50_s": percentile(tl, 50), "p95_s": percentile(tl, 95),
+                "mean_s": (sum(tl) / len(tl)) if tl else float("nan"),
+            }
+        return out
 
 
 def percentile(sorted_xs: list, p: float) -> float:

@@ -25,6 +25,7 @@ from .partition import (
     stage_prefill,
 )
 from .pipeline import CLIENT, PipelineServer
+from .registry import ModelEntry, ModelRegistry, ResidencyError
 from .router import ReplicaRouter
 
 __all__ = [
@@ -37,4 +38,5 @@ __all__ = [
     "StageSpec", "split_stages", "stage_decode", "stage_forward",
     "stage_init_cache", "stage_params", "stage_prefill",
     "CLIENT", "PipelineServer", "ReplicaRouter",
+    "ModelEntry", "ModelRegistry", "ResidencyError",
 ]

@@ -30,6 +30,20 @@ replicas into a ``prefill`` pool (long, compute-bound dispatches) and a
 ``HANDOFF`` kind is the wire form of the freshly built KV cache streaming
 from a prefill replica to its session's decode home — typed like all other
 pipeline traffic, so byte accounting and dashboards see the transfer.
+
+Multi-model, multi-tenant serving: one elastic pool can host several
+registered models (see ``serving/registry.py``), so every envelope carries
+the ``model`` its work belongs to (routers restrict rotation to replicas
+with that model resident) and the ``tenant`` whose traffic it is (the
+replica-side weighted-deficit fair scheduler and the per-tenant latency
+sketches key on it). ``None`` for both preserves single-model single-tenant
+behavior bit-for-bit. The model-residency control plane speaks three more
+wire kinds: ``LOAD`` envelopes wrap a model's stage-weight chunks streaming
+from a resident peer to a loading replica; a ``SWAP`` envelope heads that
+stream when the load is one leg of an A→B swap; an ``UNLOAD`` envelope
+trails it, directing the receiver to retire the outgoing model once the
+incoming one is installed — so the whole residency change is typed,
+self-describing traffic on the same accounted wire as everything else.
 """
 from __future__ import annotations
 
@@ -65,6 +79,12 @@ class Kind(enum.IntEnum):
     RETRY = 4     # session state lost; client must re-prefill on a survivor
     HANDOFF = 5   # one chunk of a freshly prefilled KV cache streaming from
     #               a prefill replica to the session's decode-pool home
+    LOAD = 6      # one chunk of a model's stage weights streaming from a
+    #               resident peer (or the registry store) to a loading replica
+    UNLOAD = 7    # residency-change trailer: retire ``model`` on the receiver
+    #               once the accompanying LOAD stream is installed
+    SWAP = 8      # residency-change header: the LOAD stream that follows is
+    #               one leg of an atomic swap ``model`` -> stream's model
 
 
 @dataclasses.dataclass
@@ -95,6 +115,16 @@ class Envelope:
     #: this session — the receiving stage repins that home's route onto the
     #: decode home it chooses, stitching the decode path pool-to-pool
     home: Optional[str] = None
+    #: which registered model this work belongs to; routers restrict the
+    #: rotation to replicas with the model resident, and replicas resolve
+    #: the per-model executor from it. None = the pipeline's default model
+    #: (exact pre-multi-model behavior).
+    model: Optional[str] = None
+    #: whose traffic this is: the replica-side weighted-deficit fair
+    #: scheduler arbitrates decode batch slots across tenants, and the
+    #: client keys per-tenant latency sketches on it. None = untagged
+    #: (single implicit tenant).
+    tenant: Optional[str] = None
     #: causal span context (trace_id, span_id, parent_id): every stage that
     #: does work on this envelope parents its span here, so the session's
     #: whole lifecycle — including RETRY bounces and re-prefills — rebuilds

@@ -54,6 +54,23 @@ for int counts) keeps the colocated behavior bit-identical: caches install
 locally and no handoff ever runs. A failed handoff unwinds to RETRY + full
 re-prefill on the prefill pool — never a new failure mode.
 
+Multi-model, multi-tenant pool (the consolidation refactor): the pipeline
+can host several registered models on one elastic replica set instead of
+one-model-one-server. A :class:`~repro.serving.registry.ModelRegistry`
+tracks which models exist and where they are resident (refcounted by open
+sessions, LRU-evictable); ``load_model``/``unload_model``/``swap_model``
+drive the LOAD/UNLOAD/SWAP envelope protocol (statexfer.bootstrap) that
+streams a model's stage weights from a resident peer — or cold from the
+registry store — *without the replica ever leaving rotation*. Every
+envelope carries its model tag; routers restrict rotation to replicas with
+the model resident; executors are keyed per (model, stage, role) so compile
+caches and KV pools never mix models. Tenancy rides the same envelopes: the
+decode micro-scheduler arbitrates batch slots across tenants by weighted
+deficit round-robin (``tenant_weights``), and the client keys TTFT/decode
+latency sketches per tenant so per-tenant SLO policies have real signals.
+Defaults (no registry, no tags, one implicit tenant) preserve single-model
+behavior bit-for-bit.
+
 Elastic control hooks (consumed by repro.control):
 
 * ``remove_replica`` — scale-down: stop routing to the replica, *unpin* its
@@ -103,6 +120,7 @@ from .envelope import (
 )
 from .executor import StageExecutor
 from .partition import split_stages, stage_params
+from .registry import ModelRegistry, ResidencyError
 from .router import ReplicaRouter
 
 CLIENT = "client"
@@ -124,6 +142,11 @@ class _Session:
     #: snapshot, and heal spans for the session parent here, keeping the
     #: control-plane work inside the session's causal tree
     trace: Any = None
+    #: registered model this session runs (None = the pipeline default);
+    #: decode steps resolve their executor — and batch-mates — through it
+    model: Optional[str] = None
+    #: tenant whose traffic this session is (fair-scheduler accounting)
+    tenant: Optional[str] = None
 
 
 class _SessionLost(Exception):
@@ -140,9 +163,17 @@ class _Replica:
         #: ``prefill`` (builds caches, hands them off, never decodes), or
         #: ``decode`` (receives caches over the handoff, serves every step)
         self.role = role
+        #: models resident on this replica — the routing tag its upstream
+        #: edges carry and the unit load_model/unload_model/swap_model
+        #: mutate. Always contains at least the pipeline's default model;
+        #: further models join via the LOAD protocol after wiring.
+        self.resident: set[str] = {server.default_model}
         self.worker = server.cluster.worker(worker_id)
-        #: compute executor — shared per (stage, role) unless WarmBootstrap
-        #: installed a fresh per-replica executor (new-process simulation)
+        #: compute executor for the *default* model — shared per
+        #: (stage, role) unless WarmBootstrap installed a fresh per-replica
+        #: executor (new-process simulation). Non-default models resolve
+        #: through :meth:`executor_for` to per-(model, stage, role)
+        #: executors shared at the server.
         self.executor = server.role_executor(stage, role)
         self.upstream: list[str] = []          # world names we recv on
         #: (world, upstream router that routes onto it) — scale-down needs to
@@ -198,23 +229,49 @@ class _Replica:
         #    so p95 TTFT / p99 decode survive aggregation (means cannot) --
         self.ttft_sketch = LogSketch()
         self.decode_sketch = LogSketch()
+        # -- weighted-deficit fair scheduler state (multi-tenant decode) --
+        #: tenant -> remaining deficit credits for batch-slot arbitration
+        self._credits: dict[str, float] = {}
+        #: tenant -> decode steps served (the fairness test's ground truth)
+        self.tenant_served: dict[str, int] = {}
 
     def queue_depth(self) -> int:
         return (self.inbox.qsize() + len(self._stash) + self.inflight
                 + sum(len(h) for h in self.held.values()))
 
+    def executor_for(self, model: Optional[str]) -> StageExecutor:
+        """The compute executor for ``model`` at this replica's stage/role.
+        None or the default model hit ``self.executor`` (which may be a
+        replica-private warm-bootstrap executor); other resident models
+        share the server's per-(model, stage, role) executor — a session's
+        cache must only ever meet the executor that owns its weights."""
+        server = self.server
+        if model is None or model == server.default_model:
+            return self.executor
+        return server.model_executor(model, self.stage, self.role)
+
     def install_session(self, sid: int, cache: Any, batch: int,
-                        step: int, trace: Any = None) -> None:
+                        step: int, trace: Any = None,
+                        model: Optional[str] = None,
+                        tenant: Optional[str] = None) -> None:
         """Adopt migrated/restored decode state at a step boundary. A paged
         wire payload is installed page-by-page into this executor's pool
         (deduping against pages it already holds); anything else passes
         through unchanged."""
-        cache = self.executor.adopt_cache(cache)
+        ex = self.executor_for(model)
+        cache = ex.adopt_cache(cache)
         old = self.sessions.pop(sid, None)
-        if old is not None and old.cache is not cache:
-            self.executor.release_cache(old.cache)
+        if old is not None:
+            if old.cache is not cache:
+                self.executor_for(old.model).release_cache(old.cache)
+            self.server.registry.release(
+                self.worker_id, old.model or self.server.default_model)
         self.sessions[sid] = _Session(cache=cache, batch=batch, step=step,
-                                      touched=time.monotonic(), trace=trace)
+                                      touched=time.monotonic(), trace=trace,
+                                      model=model, tenant=tenant)
+        # the session pins its model's residency here until dropped
+        self.server.registry.acquire(
+            self.worker_id, model or self.server.default_model)
 
     def drop_session(self, sid: int) -> None:
         """Forget a session AND return its stage cache to the executor —
@@ -223,7 +280,9 @@ class _Replica:
         just lose their last reference."""
         sess = self.sessions.pop(sid, None)
         if sess is not None:
-            self.executor.release_cache(sess.cache)
+            self.executor_for(sess.model).release_cache(sess.cache)
+            self.server.registry.release(
+                self.worker_id, sess.model or self.server.default_model)
 
     def open_sessions(self) -> int:
         return len(self.sessions)
@@ -305,11 +364,22 @@ class _Replica:
             await self._expire(env)
             return
         kind = env.kind
-        if kind is Kind.HANDOFF:
-            # handoff chunks travel dedicated pairwise worlds consumed by
-            # the MigrationManager's own receive loop; one in a serve inbox
-            # is a misroute — drop it rather than decode it
+        if kind in (Kind.HANDOFF, Kind.LOAD, Kind.UNLOAD, Kind.SWAP):
+            # handoff/residency chunks travel dedicated pairwise worlds
+            # consumed by their own receive loops (MigrationManager /
+            # WarmBootstrap); one in a serve inbox is a misroute — drop it
+            # rather than decode it
             return
+        if kind in (Kind.SCORE, Kind.PREFILL, Kind.DECODE):
+            name = env.model or self.server.default_model
+            if name not in self.resident:
+                # routed here before a swap/unload retagged the rotation —
+                # bounce rather than run foreign weights
+                if kind is Kind.DECODE or kind is Kind.PREFILL:
+                    await self._send_retry(env)
+                return
+            ex = self.executor_for(env.model)
+            self.server.registry.touch(self.worker_id, name)
         if kind is Kind.RETRY:
             # stateless pass-through toward the client — any healthy path
             await self._forward_routed(env)
@@ -347,11 +417,12 @@ class _Replica:
         home: "_Replica" = self
         if self.role == ROLE_PREFILL and sid >= 0:
             peer = server._pick_decode_peer(self.stage, exclude=self,
-                                            nbytes=cache_nbytes(cache))
+                                            nbytes=cache_nbytes(cache),
+                                            model=env.model)
             if peer is not None:
                 ok = await server.migrations.handoff_prefill(
                     self, peer, sid, cache, batch, env.step,
-                    trace=env.trace)
+                    trace=env.trace, model=env.model, tenant=env.tenant)
                 # either way the prefill side is done with this cache: the
                 # bytes are on the wire (or abandoned) — return its pages
                 # to the prefill pool instead of stranding them
@@ -367,7 +438,10 @@ class _Replica:
         if home is self:
             self.sessions[sid] = _Session(
                 cache=cache, batch=batch, step=env.step,
-                touched=time.monotonic(), trace=env.trace)
+                touched=time.monotonic(), trace=env.trace,
+                model=env.model, tenant=env.tenant)
+            server.registry.acquire(self.worker_id,
+                                    env.model or server.default_model)
         else:
             # a step routed at us before the pins stitched (or a straggler
             # in our channels) forwards in-process to the decode home
@@ -398,13 +472,19 @@ class _Replica:
     async def _handle_decode(self, ex: StageExecutor, loop, env: Envelope,
                              t0: float) -> None:
         """Continuous-batching micro-scheduler: serve this decode step fused
-        with every compatible queued step (same per-session shape, any
-        position), waiting up to ``microbatch_wait_s`` for stragglers when
-        more sessions are open than are in hand."""
-        if self.draining or env.session_id not in self.sessions:
+        with every compatible queued step (same per-session batch shape and
+        model, any position), waiting up to ``microbatch_wait_s`` for
+        stragglers when more sessions are open than are in hand. Batch
+        slots are arbitrated across tenants by weighted deficit round-robin
+        (see :meth:`_pull_compatible`)."""
+        sess0 = self.sessions.get(env.session_id)
+        if self.draining or sess0 is None:
             self.drop_session(env.session_id)
             await self._send_retry(env)
             return
+        # the session's own model is authoritative for the executor — a
+        # replayed or untagged step must never run foreign weights
+        ex = self.executor_for(sess0.model)
         batch: list[Envelope] = [env]
         self.active.add(env.session_id)
         max_n = self.server.microbatch_max
@@ -453,6 +533,9 @@ class _Replica:
                 sess.touched = now
                 self.decode_steps += 1
                 self.tokens_out += sess.batch
+                t_name = e.tenant or "default"
+                self.tenant_served[t_name] = (
+                    self.tenant_served.get(t_name, 0) + 1)
                 tr.span(e.trace, "decode", t0, self.worker_id)
                 await self._forward_pinned(dataclasses.replace(e, payload=y))
                 self.processed += 1
@@ -471,10 +554,26 @@ class _Replica:
                          batch: list[Envelope]) -> int:
         """Drain queued envelopes: coalesce compatible DECODEs into ``batch``
         (counting them in-flight so drain can't observe a false empty),
-        stash everything else in arrival order."""
-        pulled = 0
+        stash everything else in arrival order.
+
+        Multi-tenant arbitration (weighted deficit round-robin): when more
+        compatible steps are queued than batch slots remain, the slots are
+        not first-come-first-served — each backlogged tenant holds a credit
+        balance refilled in proportion to its weight
+        (``server.tenant_weights``, default 1.0), one credit buys one slot,
+        and the richest backlogged tenant is served first. Steps that lose
+        the arbitration go to the stash, where the serve loop picks them up
+        next round with their credits accrued — bounded latency for light
+        tenants under a heavy tenant's flood, full batches when only one
+        tenant is backlogged. A single-tenant pipeline always selects
+        everything, byte-identical to the pre-tenancy scheduler."""
         in_batch = {e.session_id for e in batch}
-        while pulled < n:
+        now = time.monotonic()
+        lead = self.sessions.get(proto.session_id)
+        lead_model = lead.model if lead is not None else proto.model
+        #: tenant -> compatible candidates, arrival order preserved
+        cands: dict[str, deque] = {}
+        while True:
             try:
                 item = self.inbox.get_nowait()
             except asyncio.QueueEmpty:
@@ -482,19 +581,47 @@ class _Replica:
             env, t_enq = item
             sess = self.sessions.get(env.session_id)
             if (env.kind is Kind.DECODE and sess is not None
-                    and env.session_id not in in_batch
                     and env.session_id not in self.held
                     and env.session_id not in self.migrated
+                    and sess.model == lead_model
                     and env.payload.shape == proto.payload.shape
-                    and not env.expired(time.monotonic())):
-                self.wait_s_sum += time.monotonic() - t_enq
-                self.inflight += 1
-                batch.append(env)
-                in_batch.add(env.session_id)
-                self.active.add(env.session_id)
-                pulled += 1
+                    and not env.expired(now)):
+                cands.setdefault(env.tenant or "default",
+                                 deque()).append(item)
             else:
                 self._stash.append(item)
+        pulled = 0
+        weights = self.server.tenant_weights
+        cap = float(self.server.microbatch_max)
+        while pulled < n and any(cands.values()):
+            backlogged = [t for t, q in cands.items() if q]
+            pick = max(backlogged, key=lambda t: self._credits.get(t, 0.0))
+            if self._credits.get(pick, 0.0) < 1.0:
+                # deficit round: every *backlogged* tenant earns its
+                # weight (idle tenants accrue nothing — no stale credit
+                # stockpiles), capped at one full batch worth
+                for t in backlogged:
+                    w = float(weights.get(t, 1.0))
+                    self._credits[t] = min(
+                        self._credits.get(t, 0.0) + w, w * cap)
+                pick = max(backlogged,
+                           key=lambda t: self._credits.get(t, 0.0))
+            env, t_enq = cands[pick].popleft()
+            if env.session_id in in_batch:
+                # a session already has a step in hand; its duplicate
+                # waits for the next round
+                self._stash.append((env, t_enq))
+                continue
+            self._credits[pick] = self._credits.get(pick, 0.0) - 1.0
+            self.wait_s_sum += time.monotonic() - t_enq
+            self.inflight += 1
+            batch.append(env)
+            in_batch.add(env.session_id)
+            self.active.add(env.session_id)
+            pulled += 1
+        # arbitration losers go back in front of future inbox work
+        for q in cands.values():
+            self._stash.extend(q)
         return pulled
 
     # ------------------------------------------------------------ forwarding
@@ -503,26 +630,32 @@ class _Replica:
         rotation until the controller heals a downstream replica; drops the
         envelope if its deadline passes while parked. PREFILL/SCORE honor
         the envelope's role tag, so a split downstream stage receives them
-        in its prefill pool. Returns the world used (None if dropped)."""
+        in its prefill pool — and its model tag, so a multi-model stage
+        receives them on a replica with the model resident. Returns the
+        world used (None if dropped)."""
         comm = self.worker.comm
-        role = (env.role if env.kind in (Kind.PREFILL, Kind.SCORE)
-                else None)
+        fwd = env.kind in (Kind.PREFILL, Kind.SCORE)
+        role = env.role if fwd else None
+        model = env.model if fwd else None
         while True:
             if env.expired(time.monotonic()):
                 self.expired += 1
                 return None
             world = self.router.try_pick(
-                least_loaded=self.server.least_loaded, role=role)
+                least_loaded=self.server.least_loaded, role=role,
+                model=model)
             if world is None:
                 # Every routable downstream world is gone. Dying here would
                 # drop the in-flight payload and kill this serve loop for
                 # good — park instead and retry once the controller
                 # adds/heals a downstream replica.
                 self.parked += 1
-                if role is not None and self.router.healthy():
-                    # worlds exist, just none role-capable: the controller
-                    # is growing that pool — the any-world event is already
-                    # set, so poll instead of waiting on it
+                if ((role is not None or model is not None)
+                        and self.router.healthy()):
+                    # worlds exist, just none role/model-capable: the
+                    # controller is growing that pool (or a load/swap is in
+                    # flight) — the any-world event is already set, so poll
+                    # instead of waiting on it
                     await asyncio.sleep(0.005)
                 else:
                     await self.router.wait_healthy()
@@ -667,11 +800,40 @@ class PipelineServer:
                  trace_sample_rate: float = 1.0,
                  trace_slow_keep_s: Optional[float] = None,
                  flightrec_capacity: int = 4096,
-                 dump_dir: Optional[str] = None) -> None:
+                 dump_dir: Optional[str] = None,
+                 registry: Optional[ModelRegistry] = None,
+                 default_model: str = "default",
+                 max_resident_models: Optional[int] = None,
+                 tenant_weights: Optional[dict] = None) -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
         self.name = name
+        #: which models this pool can serve and where they are resident —
+        #: the (model, params) passed above is registered as
+        #: ``default_model``; further models join via ``register_model`` +
+        #: ``load_model``/``swap_model``. A shared registry may be passed
+        #: in (several pipelines on one model store).
+        self.default_model = default_model
+        self.registry = registry or ModelRegistry(
+            max_resident=max_resident_models)
+        if default_model not in self.registry.entries:
+            self.registry.register(default_model, model, params)
+        #: tenant -> weight for the decode micro-scheduler's weighted
+        #: deficit round-robin; unlisted tenants weigh 1.0
+        self.tenant_weights: dict[str, float] = dict(tenant_weights or {})
+        #: sid -> model / tenant of every client-side open session (the
+        #: restore path and per-tenant accounting read these; single-model
+        #: untagged sessions never enter them)
+        self.session_models: dict[int, str] = {}
+        self.session_tenants: dict[int, str] = {}
+        #: client-observed per-tenant latency distributions + counters,
+        #: folded into MetricsHub tenant tails each poll
+        self.tenant_sketches: dict[str, dict[str, LogSketch]] = {}
+        self.tenant_tokens: dict[str, int] = {}
+        self.tenant_sessions: dict[str, int] = {}
+        #: completed residency swaps (controller-driven model A -> B)
+        self.swaps_total = 0
         # replica spec per stage: an int builds that many colocated
         # ('both') replicas — the pre-disaggregation behavior, unchanged —
         # while {"prefill": p, "decode": d} splits the stage into
@@ -728,6 +890,12 @@ class PipelineServer:
         #: executor's jit cache, or "prefill replicas skip decode-bucket
         #: compiles" would be vacuously true
         self._role_executors: dict[tuple[int, str], StageExecutor] = {}
+        #: non-default registered models: executors keyed per
+        #: (model, stage, role) — compile caches and KV pools must never
+        #: mix models — and per-model stage splits, both built lazily on
+        #: first load and shared by every replica hosting the model
+        self._model_executors: dict[tuple[str, int, str], StageExecutor] = {}
+        self._model_stages: dict[str, tuple[list, list]] = {}
         self.instantiator = OnlineInstantiator(cluster)
         #: state-transfer subsystem: live handoff + restore, background
         #: snapshots (opt-in via snapshot_interval_s), warm scale-up
@@ -817,6 +985,18 @@ class PipelineServer:
         if len(log) > 4096:
             del log[:2048]
 
+    def _note_tenant(self, tenant: Optional[str], kind: str,
+                     dt: float) -> None:
+        """Fold one client-observed latency into the tenant's mergeable
+        sketch (``kind`` is 'ttft' or 'decode') — the per-tenant SLO
+        policies read tails from these, and sketches survive aggregation
+        where means cannot. Untagged traffic records nothing."""
+        if tenant is None:
+            return
+        sk = self.tenant_sketches.setdefault(
+            tenant, {"ttft": LogSketch(), "decode": LogSketch()})
+        sk[kind].insert(dt)
+
     def role_executor(self, stage: int, role: str = ROLE_BOTH
                       ) -> StageExecutor:
         """The pool executor for (stage, role): the stage-shared one for
@@ -834,6 +1014,50 @@ class PipelineServer:
                                pool_pages=self.pool_pages)
             ex.on_event = self.recorder.record
             self._role_executors[key] = ex
+        return ex
+
+    # ------------------------------------------------------- model registry
+    def register_model(self, name: str, model, params) -> None:
+        """Make another model servable by this pool (registry store entry;
+        no replica hosts it until ``load_model``/``swap_model``)."""
+        self.registry.register(name, model, params)
+        self._model_stages.pop(name, None)
+
+    def model_stages(self, name: str) -> tuple[list, list]:
+        """(stage_specs, stage_param_sets) of a registered model under this
+        pipeline's stage split — each model partitions its own layer count
+        over the same number of stages the pool runs."""
+        cached = self._model_stages.get(name)
+        if cached is not None:
+            return cached
+        if name == self.default_model:
+            out = (self.stage_specs, self.stage_param_sets)
+        else:
+            entry = self.registry.get(name)
+            specs = split_stages(entry.cfg, self.n_stages)
+            out = (specs, [stage_params(entry.cfg, entry.params, s)
+                           for s in specs])
+        self._model_stages[name] = out
+        return out
+
+    def model_executor(self, name: str, stage: int,
+                       role: str = ROLE_BOTH) -> StageExecutor:
+        """The shared executor for a non-default model at (stage, role) —
+        its own jit cache and KV pool, lazily built from the registry
+        store's stage slice."""
+        if name == self.default_model:
+            return self.role_executor(stage, role)
+        key = (name, stage, role)
+        ex = self._model_executors.get(key)
+        if ex is None:
+            entry = self.registry.get(name)
+            specs, psets = self.model_stages(name)
+            ex = StageExecutor(entry.cfg, specs[stage], psets[stage],
+                               max_len=self.max_len, role=role,
+                               paged=self.paged, page_size=self.page_size,
+                               pool_pages=self.pool_pages)
+            ex.on_event = self.recorder.record
+            self._model_executors[key] = ex
         return ex
 
     def _edge_load(self, world: str) -> float:
@@ -855,18 +1079,24 @@ class PipelineServer:
         target outlives the retirement (the load-probe prune)."""
         self._world_to_replica.pop(world, None)
 
-    def decode_replicas(self, stage: int, exclude=None) -> list["_Replica"]:
-        """Replicas able to hold and serve decode state at ``stage``."""
+    def decode_replicas(self, stage: int, exclude=None,
+                        model: Optional[str] = None) -> list["_Replica"]:
+        """Replicas able to hold and serve decode state at ``stage`` —
+        with ``model=``, only those hosting that model's weights."""
+        name = model or None
         return [r for r in self.replicas[stage]
                 if r is not exclude and r.worker.alive and not r.draining
-                and r.role != ROLE_PREFILL]
+                and r.role != ROLE_PREFILL
+                and (name is None or name in r.resident)]
 
     def _pick_decode_peer(self, stage: int, exclude: "_Replica",
-                          nbytes: int) -> Optional["_Replica"]:
+                          nbytes: int,
+                          model: Optional[str] = None
+                          ) -> Optional["_Replica"]:
         """The decode-pool home for a freshly prefilled session: ranked by
         (queue load + placement cost of the KV bytes about to move), the
         same ranking every other state-moving chooser uses."""
-        peers = self.decode_replicas(stage, exclude=exclude)
+        peers = self.decode_replicas(stage, exclude=exclude, model=model)
         if not peers:
             return None
         return self.migrations._rank(exclude.worker_id, peers, nbytes)
@@ -954,7 +1184,8 @@ class PipelineServer:
                           warm: bool = False,
                           fresh_executor: bool = False,
                           near: Optional[str] = None,
-                          host: Optional[str] = None) -> str:
+                          host: Optional[str] = None,
+                          models: Optional[list] = None) -> str:
         """Online instantiation of one replica (paper Fig. 2c / §4.2).
 
         ``role`` selects the pool the replica joins: ``both`` (colocated
@@ -976,6 +1207,12 @@ class PipelineServer:
         on-host); otherwise the topology's placement policy decides. The
         worker is placed *before* the warm bootstrap so the peer choice can
         price the weight bytes it is about to move.
+
+        ``models=`` pre-loads registered non-default models onto the new
+        replica (the heal path passes the victim's resident set, so a
+        replacement hosts exactly what the dead replica did); each is
+        streamed over the LOAD protocol from a resident peer once the
+        replica is wired.
         """
         tag = "" if role == ROLE_BOTH else f"{role}-"
         worker_id = f"{self.name}-s{stage}-{tag}r{next(self._uid)}"
@@ -983,6 +1220,7 @@ class PipelineServer:
             self.cluster.topology.place_on(worker_id, host)
         self.cluster.worker(worker_id, near=near)
         rep = _Replica(self, worker_id, stage, role=role)
+        self.registry.load(worker_id, self.default_model)
         if warm:
             report = await self.bootstrap.bootstrap(
                 stage, worker_id, fresh_executor=fresh_executor, role=role)
@@ -1035,16 +1273,18 @@ class PipelineServer:
                 continue
             rep.watch_upstream(world, router)
             self._world_to_replica[world] = rep
-            # the rotation learns the receiver's role, so PREFILLs can be
-            # steered into the prefill pool
-            router.add(world, role=rep.role)
+            # the rotation learns the receiver's role and resident models,
+            # so PREFILLs can be steered into the prefill pool and onto a
+            # replica that hosts their model
+            router.add(world, role=rep.role, models=rep.resident)
         for world, down in down_watchers:
             if _gone(down, self.replicas[stage + 1]
                      if stage < self.n_stages - 1 else []):
                 self._remove_world_everywhere(world)
                 continue
             rep.router.add(world,
-                           role=ROLE_BOTH if down is None else down.role)
+                           role=ROLE_BOTH if down is None else down.role,
+                           models=None if down is None else down.resident)
             if down is None:
                 self._watch_client_world(world)
             else:
@@ -1057,8 +1297,140 @@ class PipelineServer:
         rep._run_task = rep.worker.spawn(rep.run())
         rep._reap_task = rep.worker.spawn(rep.reap_loop())
         self.replicas[stage].append(rep)
+        # non-default residency (the heal path restores the victim's set):
+        # streamed over the LOAD protocol now that the replica is wired
+        for m in dict.fromkeys(models or ()):
+            if m != self.default_model:
+                await self.load_model(worker_id, m, warm=warm)
         self._event("add_replica", worker_id)
         return worker_id
+
+    # ----------------------------------------------------- model residency
+    def _retag_replica(self, rep: _Replica) -> None:
+        """Push a replica's current resident set onto every upstream
+        rotation edge — the routing side of a residency change, applied
+        the instant the registry flips so no pick can land a model on a
+        replica that no longer (or does not yet) host it."""
+        for world, router in rep.upstream_edges:
+            router.set_models(world, rep.resident)
+
+    async def load_model(self, worker_id: str, name: str, *,
+                         warm: bool = True) -> dict:
+        """Hot-load a registered model onto a live replica without it ever
+        leaving rotation: stage weights stream from a same-stage resident
+        peer as LOAD envelopes (cold from the registry store when no peer
+        hosts the model), the registry marks residency (LRU-evicting
+        refcount-zero models past ``max_resident_models``), and every
+        upstream rotation retags. Returns the bootstrap report."""
+        rep = self._replica_by_id(worker_id)
+        if rep is None:
+            raise KeyError(f"no replica {worker_id}")
+        self.registry.get(name)
+        if name in rep.resident:
+            return {"source": "resident", "bytes": 0, "peer": None}
+        report = await self.bootstrap.load_model(rep, name, warm=warm)
+        evicted = self.registry.load(worker_id, name)
+        for m in evicted:
+            rep.resident.discard(m)
+            self._event("model_evict", f"{worker_id} -= {m} (LRU)")
+        rep.resident.add(name)
+        self._retag_replica(rep)
+        self._event("model_load",
+                    f"{worker_id} += {name} [{report['source']}] "
+                    f"({report['bytes']}B)")
+        return report
+
+    async def unload_model(self, worker_id: str, name: str, *,
+                           force: bool = False,
+                           migrate: bool = True) -> None:
+        """Retire a model's residency on one replica. Open sessions of that
+        model are first live-migrated to another resident replica
+        (``migrate=True``); whatever cannot move is dropped so its client
+        re-prefills on a capable survivor — unless the registry refuses
+        (sessions still pinned and ``force=False``). The default model
+        cannot be unloaded (it is the pipeline's identity)."""
+        if name == self.default_model:
+            raise ResidencyError(
+                f"cannot unload the pipeline's default model {name!r}")
+        rep = self._replica_by_id(worker_id)
+        if rep is None:
+            raise KeyError(f"no replica {worker_id}")
+        if name not in rep.resident:
+            return
+        sids = [sid for sid, sess in rep.sessions.items()
+                if (sess.model or self.default_model) == name]
+        if sids and migrate:
+            for sid in sids:
+                await self.migrations.migrate_session(rep, sid)
+        # stragglers (migration failed / raced in): bounce to re-prefill —
+        # client-invisible at-least-once recovery, not a failure
+        for sid in [s for s in sids if s in rep.sessions]:
+            rep.drop_session(sid)
+        self.registry.unload(worker_id, name, force=force)
+        rep.resident.discard(name)
+        self._retag_replica(rep)
+        self._event("model_unload", f"{worker_id} -= {name}")
+
+    async def swap_model(self, worker_id: str, from_name: str,
+                         to_name: str, *, warm: bool = True) -> dict:
+        """Swap one replica's residency ``from_name`` -> ``to_name`` under
+        traffic: stream the incoming model in (SWAP-headed LOAD stream with
+        an UNLOAD trailer on the wire), migrate the incumbent model's open
+        sessions to other resident replicas, then retire the outgoing
+        residency. Refuses up front when the swap would strand open
+        sessions with nowhere to go (no other replica at this stage hosts
+        ``from_name``) — the controller treats that as "hold"."""
+        rep = self._replica_by_id(worker_id)
+        if rep is None:
+            raise KeyError(f"no replica {worker_id}")
+        if from_name not in rep.resident:
+            raise ResidencyError(
+                f"{worker_id} does not host {from_name!r}")
+        retiring = from_name != self.default_model
+        incumbent = [sid for sid, sess in rep.sessions.items()
+                     if (sess.model or self.default_model) == from_name]
+        if retiring and incumbent and not self.decode_replicas(
+                rep.stage, exclude=rep, model=from_name):
+            raise ResidencyError(
+                f"swap {from_name!r}->{to_name!r} on {worker_id} would "
+                f"strand {len(incumbent)} open session(s): no other "
+                f"replica at stage {rep.stage} hosts {from_name!r}")
+        report = await self.bootstrap.load_model(
+            rep, to_name, warm=warm, swap_from=from_name)
+        evicted = self.registry.load(worker_id, to_name)
+        for m in evicted:
+            rep.resident.discard(m)
+        rep.resident.add(to_name)
+        if not retiring:
+            # the default model can never retire (untagged traffic must
+            # stay routable) — swapping "from" it just adds the target;
+            # incumbent sessions stay put and keep serving
+            self._retag_replica(rep)
+        else:
+            # advertise the incoming model at once, but stop NEW sessions
+            # of the outgoing one from landing while incumbents migrate
+            # off (pinned decode steps bypass rotation picks, so open
+            # sessions keep flowing through the whole window)
+            advertise = set(rep.resident) - {from_name}
+            for world, router in rep.upstream_edges:
+                router.set_models(world, advertise)
+            for sid in incumbent:
+                if sid in rep.sessions:
+                    await self.migrations.migrate_session(rep, sid)
+            # sweep stragglers — failed migrations and prefills that raced
+            # the retag: bounce to re-prefill (at-least-once recovery,
+            # client-invisible), so the registry sees zero refs below
+            for sid, sess in list(rep.sessions.items()):
+                if (sess.model or self.default_model) == from_name:
+                    rep.drop_session(sid)
+            self.registry.unload(worker_id, from_name)
+            rep.resident.discard(from_name)
+            self._retag_replica(rep)
+        self.swaps_total += 1
+        self._event("model_swap",
+                    f"{worker_id}: {from_name} -> {to_name} "
+                    f"[{report['source']}]")
+        return report
 
     # ------------------------------------------------------------- scale-down
     async def remove_replica(self, stage: int,
@@ -1213,6 +1585,8 @@ class PipelineServer:
             worker.kill()
             worker.manager.shutdown()
         self.cluster.topology.forget(rep.worker_id)
+        # its residencies and session refcounts die with it
+        self.registry.drop_worker(rep.worker_id)
         # its worlds and channels are gone with it — drop the transport's
         # death record too, or the map grows one entry per heal forever
         self.cluster.transport.forget_dead(rep.worker_id)
@@ -1295,7 +1669,8 @@ class PipelineServer:
                     next(self._req_ids), sid, Kind.DECODE, step=s0 + k,
                     deadline=time.monotonic() + step_timeout,
                     payload=out[k][:, None], role=ROLE_DECODE,
-                    trace=rctx)
+                    trace=rctx, model=self.session_models.get(sid),
+                    tenant=self.session_tenants.get(sid))
                 resp = await self._roundtrip(env, world, step_timeout)
                 # the replay ctx rode an envelope a stage may have spanned
                 # under — record it even on a bad response so no stage span
@@ -1370,12 +1745,16 @@ class PipelineServer:
             except (WorldBrokenError, WorldNotFoundError):
                 pass
         self.session_margins.pop(sid, None)
+        self.session_models.pop(sid, None)
+        self.session_tenants.pop(sid, None)
 
     async def _pick_entry(self, timeout: float,
-                          role: Optional[str] = None) -> Optional[str]:
+                          role: Optional[str] = None,
+                          model: Optional[str] = None) -> Optional[str]:
         deadline = time.monotonic() + timeout
         while True:
-            world = self.client_router.try_pick(self.least_loaded, role=role)
+            world = self.client_router.try_pick(self.least_loaded, role=role,
+                                                model=model)
             if world is not None:
                 return world
             remaining = deadline - time.monotonic()
@@ -1391,23 +1770,29 @@ class PipelineServer:
                 pass
 
     async def submit(self, tokens: np.ndarray, *, timeout: float = 30.0,
-                     retries: int = 2) -> jax.Array:
+                     retries: int = 2,
+                     model: Optional[str] = None) -> jax.Array:
         """Score a token batch through the pipeline; returns logits (B,S,V).
 
         Beyond-paper nicety: at-least-once redispatch — if a replica dies
         with the request in flight, the client re-sends after ``timeout``.
         A fully-empty stage-0 rotation (every entry replica down) parks the
         attempt until the controller heals one, instead of failing fast.
+        ``model=`` scores under a non-default registered model (the route
+        restricts to replicas hosting it).
         """
         x = jnp.asarray(tokens, jnp.int32)
+        if model is not None:
+            self.registry.get(model)   # fail fast, with a suggestion
         last_err: Optional[Exception] = None
         for _ in range(retries + 1):
-            world = await self._pick_entry(timeout, role=ROLE_PREFILL)
+            world = await self._pick_entry(timeout, role=ROLE_PREFILL,
+                                           model=model)
             if world is None:
                 last_err = asyncio.TimeoutError("no healthy entry replica")
                 continue
             env = Envelope(next(self._req_ids), -1, Kind.SCORE, payload=x,
-                           role=ROLE_PREFILL)
+                           role=ROLE_PREFILL, model=model)
             try:
                 resp = await self._roundtrip(env, world, timeout)
                 return resp.payload
@@ -1419,7 +1804,9 @@ class PipelineServer:
 
     async def generate(self, prompts: np.ndarray, max_new_tokens: int, *,
                        step_timeout: float = 10.0, max_restarts: int = 32,
-                       token_times: Optional[list] = None) -> np.ndarray:
+                       token_times: Optional[list] = None,
+                       model: Optional[str] = None,
+                       tenant: Optional[str] = None) -> np.ndarray:
         """Greedy autoregressive generation through the pipeline.
 
         prompts (B, S) int32 -> (B, max_new_tokens) int32, token-identical
@@ -1431,11 +1818,23 @@ class PipelineServer:
         times out) and the client re-prefills prompt + everything generated
         so far on surviving replicas — at-least-once recovery with zero
         token loss, since generated tokens only ever live client-side.
+
+        ``model=`` generates under a non-default registered model: routing,
+        executors, and recovery all follow the tag, so parity holds against
+        that model's own single engine. ``tenant=`` attributes the session
+        to a tenant for fair scheduling and per-tenant latency sketches.
         """
         seq = jnp.asarray(prompts, jnp.int32)
         bsz, s0 = seq.shape
         assert s0 + max_new_tokens <= self.max_len, \
             f"{s0}+{max_new_tokens} exceeds pipeline max_len {self.max_len}"
+        if model is not None:
+            # unknown tags fail fast with a closest-match suggestion
+            # instead of parking on a rotation no replica will ever join
+            self.registry.get(model)
+        if tenant is not None:
+            self.tenant_sessions[tenant] = (
+                self.tenant_sessions.get(tenant, 0) + 1)
         out: list[np.ndarray] = []
         sid: Optional[int] = None
         hist_len = s0
@@ -1460,10 +1859,15 @@ class PipelineServer:
                     hist_len = hist.shape[1]
                     base = len(out)
                     world = await self._pick_entry(step_timeout,
-                                                   role=ROLE_PREFILL)
+                                                   role=ROLE_PREFILL,
+                                                   model=model)
                     if world is None:
                         raise _SessionLost("no healthy entry replica")
                     sid = next(self._session_ids)
+                    if model is not None:
+                        self.session_models[sid] = model
+                    if tenant is not None:
+                        self.session_tenants[sid] = tenant
                     t_send = time.monotonic()
                     ctx = tracer.begin(root)
                     pending = ("ttft", ctx, t_send)
@@ -1471,7 +1875,8 @@ class PipelineServer:
                         next(self._req_ids), sid, Kind.PREFILL,
                         step=hist_len - 1,
                         deadline=time.monotonic() + step_timeout,
-                        payload=hist, role=ROLE_PREFILL, trace=ctx)
+                        payload=hist, role=ROLE_PREFILL, trace=ctx,
+                        model=model, tenant=tenant)
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
                         tracer.record(ctx, "ttft", t_send,
@@ -1481,10 +1886,10 @@ class PipelineServer:
                         raise _SessionLost("prefill bounced")
                     if resp.kind is Kind.FINISH:
                         raise _SessionLost(resp.error or "server finished")
-                    self._note_latency(self.ttft_log,
-                                       time.monotonic() - t_send)
-                    tracer.record(ctx, "ttft", t_send,
-                                  time.monotonic() - t_send, CLIENT)
+                    dt = time.monotonic() - t_send
+                    self._note_latency(self.ttft_log, dt)
+                    self._note_tenant(tenant, "ttft", dt)
+                    tracer.record(ctx, "ttft", t_send, dt, CLIENT)
                     pending = None
                     if self.client_router.pinned(sid) is None:
                         # a split stage-0 already stitched the pin onto the
@@ -1505,7 +1910,7 @@ class PipelineServer:
                         step=hist_len + (len(out) - base) - 1,
                         deadline=time.monotonic() + step_timeout,
                         payload=out[-1][:, None], role=ROLE_DECODE,
-                        trace=ctx)
+                        trace=ctx, model=model, tenant=tenant)
                     resp = await self._roundtrip(env, world, step_timeout)
                     if resp.kind is Kind.RETRY:
                         tracer.record(ctx, "decode_step", t_send,
@@ -1515,10 +1920,10 @@ class PipelineServer:
                         raise _SessionLost("decode bounced")
                     if resp.kind is Kind.FINISH:
                         raise _SessionLost(resp.error or "server finished")
-                    self._note_latency(self.decode_lat_log,
-                                       time.monotonic() - t_send)
-                    tracer.record(ctx, "decode_step", t_send,
-                                  time.monotonic() - t_send, CLIENT)
+                    dt = time.monotonic() - t_send
+                    self._note_latency(self.decode_lat_log, dt)
+                    self._note_tenant(tenant, "decode", dt)
+                    tracer.record(ctx, "decode_step", t_send, dt, CLIENT)
                     pending = None
                 # greedy pick on the host: the logits are tiny (B,V) and a
                 # jax dispatch per token per session would dominate the
@@ -1527,6 +1932,9 @@ class PipelineServer:
                 self._note_margin(sid, logits)
                 tok = np.argmax(logits, axis=-1).astype(np.int32)
                 out.append(tok)
+                if tenant is not None:
+                    self.tenant_tokens[tenant] = (
+                        self.tenant_tokens.get(tenant, 0) + bsz)
                 if token_times is not None:
                     token_times.append(time.monotonic())
             except (_SessionLost, asyncio.TimeoutError,
@@ -1576,6 +1984,8 @@ class PipelineServer:
                 # eager snapshot GC; the background sweep + TTL are backstops
                 self.snapshots.drop_session(sid)
             self.session_margins.pop(sid, None)
+            self.session_models.pop(sid, None)
+            self.session_tenants.pop(sid, None)
         tracer.record(root, "session", t_root, time.monotonic() - t_root,
                       CLIENT, f"tokens={len(out)} restarts={restarts}")
         return np.stack([np.asarray(t) for t in out], axis=1)
@@ -1639,5 +2049,7 @@ class PipelineServer:
                     "migrated_away": len(rep.migrated),
                     "prefills": rep.prefills,
                     "handoffs_out": rep.handoffs_out,
+                    "models": sorted(rep.resident),
+                    "tenant_served": dict(rep.tenant_served),
                 }
         return out

@@ -1,0 +1,210 @@
+"""ModelRegistry: which models exist, and where they are resident.
+
+One elastic pool, many models — the sharpest form of the paper's "workloads
+shift while process groups cannot" premise is *which model* is hot.
+One-model-one-server strands replicas exactly the way fixed process groups
+strand workers (the kserve multi-model observation), so the registry turns
+model residency into a first-class, refcounted, evictable resource:
+
+* **entries** — ``register(name, model, params)`` records a servable model:
+  its config and full parameter pytree (the "store" a cold load reads when
+  no resident peer can stream the weights). ``get`` misses raise with the
+  known names and a closest-match suggestion, same discipline as
+  ``repro.configs.get_config``.
+* **residency** — a replica *hosts* a set of models. ``load``/``unload``
+  track which, in LRU order (``touch`` on every dispatch). Residency is
+  the unit the router routes on and the LOAD/UNLOAD/SWAP protocol moves.
+* **refcounts** — every open session holds a reference on its (replica,
+  model) residency (``acquire``/``release``). ``unload`` refuses while
+  sessions are open — evicting the weights under a live KV cache would
+  turn the next decode step into garbage — and LRU eviction (when a load
+  would exceed ``max_resident``) only ever considers refcount-zero
+  residencies, raising :class:`ResidencyError` when nothing is evictable.
+
+The registry is pure bookkeeping — no weights move here. The wire legs
+(streaming stage weights from a resident peer, swap choreography, router
+tag updates, session migration off an unloading replica) live in
+``statexfer/bootstrap.py`` and ``PipelineServer.load_model``/
+``unload_model``/``swap_model``; layering them over one bookkeeper keeps
+"who may evict what" decidable in one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import itertools
+from typing import Any, Optional
+
+
+class ResidencyError(RuntimeError):
+    """A load/unload/eviction that would violate residency invariants:
+    unloading (or LRU-evicting) a model that open sessions still pin, or
+    loading past ``max_resident`` with nothing evictable."""
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    """One servable model: config + the parameter store cold loads read."""
+
+    name: str
+    model: Any                 # built model (carries .cfg)
+    params: Any                # full parameter pytree ("the store")
+    #: lifetime counters (dashboards; the wire-leg counters live on the
+    #: bootstrap protocol driver)
+    loads_total: int = 0
+    unloads_total: int = 0
+
+    @property
+    def cfg(self):
+        return self.model.cfg
+
+
+class ModelRegistry:
+    def __init__(self, *, max_resident: Optional[int] = None) -> None:
+        #: max models resident per replica; None = unbounded (the
+        #: in-process simulation has no real HBM to run out of, but the
+        #: eviction discipline must exist for the real deployment)
+        self.max_resident = max_resident
+        self.entries: dict[str, ModelEntry] = {}
+        #: worker -> {model name -> LRU stamp}; insertion + touch order
+        self._resident: dict[str, dict[str, int]] = {}
+        #: (worker, model) -> open-session refcount
+        self._refs: dict[tuple[str, str], int] = {}
+        self._clock = itertools.count(1)
+        self.loads_total = 0
+        self.unloads_total = 0
+        self.evictions_total = 0
+        self.eviction_refusals = 0
+
+    # ------------------------------------------------------------- entries
+    def register(self, name: str, model: Any, params: Any) -> ModelEntry:
+        entry = ModelEntry(name=name, model=model, params=params)
+        self.entries[name] = entry
+        return entry
+
+    def get(self, name: str) -> ModelEntry:
+        entry = self.entries.get(name)
+        if entry is None:
+            known = sorted(self.entries)
+            hint = difflib.get_close_matches(name, known, n=1)
+            raise KeyError(
+                f"unknown model {name!r}; registered: {known}"
+                + (f" — did you mean {hint[0]!r}?" if hint else ""))
+        return entry
+
+    def names(self) -> list[str]:
+        return sorted(self.entries)
+
+    # ------------------------------------------------------------ residency
+    def resident(self, worker_id: str) -> list[str]:
+        """Models resident on ``worker_id``, least-recently-used first."""
+        r = self._resident.get(worker_id, {})
+        return [m for m, _ in sorted(r.items(), key=lambda kv: kv[1])]
+
+    def is_resident(self, worker_id: str, name: str) -> bool:
+        return name in self._resident.get(worker_id, {})
+
+    def refcount(self, worker_id: str, name: str) -> int:
+        return self._refs.get((worker_id, name), 0)
+
+    def touch(self, worker_id: str, name: str) -> None:
+        """LRU update: this residency just served traffic."""
+        r = self._resident.get(worker_id)
+        if r is not None and name in r:
+            r[name] = next(self._clock)
+
+    def load(self, worker_id: str, name: str) -> list[str]:
+        """Mark ``name`` resident on ``worker_id``; returns the models LRU-
+        evicted to make room (the caller must complete their unload —
+        router untag, executor release). Raises :class:`ResidencyError`
+        when over ``max_resident`` with nothing evictable: every other
+        residency is pinned by open sessions."""
+        self.get(name)                      # must be registered
+        r = self._resident.setdefault(worker_id, {})
+        if name in r:
+            r[name] = next(self._clock)
+            return []
+        evicted: list[str] = []
+        if self.max_resident is not None:
+            while len(r) >= self.max_resident:
+                victim = next(
+                    (m for m, _ in sorted(r.items(), key=lambda kv: kv[1])
+                     if self.refcount(worker_id, m) == 0), None)
+                if victim is None:
+                    self.eviction_refusals += 1
+                    raise ResidencyError(
+                        f"cannot load {name!r} on {worker_id}: "
+                        f"{len(r)}/{self.max_resident} resident models all "
+                        f"pinned by open sessions ({sorted(r)})")
+                del r[victim]
+                self._refs.pop((worker_id, victim), None)
+                self.evictions_total += 1
+                ent = self.entries.get(victim)
+                if ent is not None:
+                    ent.unloads_total += 1
+                evicted.append(victim)
+        r[name] = next(self._clock)
+        self.loads_total += 1
+        self.entries[name].loads_total += 1
+        return evicted
+
+    def unload(self, worker_id: str, name: str, *,
+               force: bool = False) -> None:
+        """Retire a residency. Refuses (``ResidencyError``) while open
+        sessions still reference it unless ``force`` — forced unload is
+        the teardown/kill path where the sessions are already lost."""
+        r = self._resident.get(worker_id, {})
+        if name not in r:
+            return
+        refs = self.refcount(worker_id, name)
+        if refs > 0 and not force:
+            self.eviction_refusals += 1
+            raise ResidencyError(
+                f"refusing to unload {name!r} from {worker_id}: "
+                f"{refs} open session(s) pin it")
+        del r[name]
+        self._refs.pop((worker_id, name), None)
+        self.unloads_total += 1
+        ent = self.entries.get(name)
+        if ent is not None:
+            ent.unloads_total += 1
+
+    def drop_worker(self, worker_id: str) -> None:
+        """Replica teardown: all its residencies and refs go with it."""
+        self._resident.pop(worker_id, None)
+        for key in [k for k in self._refs if k[0] == worker_id]:
+            del self._refs[key]
+
+    # ------------------------------------------------------------ refcounts
+    def acquire(self, worker_id: str, name: str) -> None:
+        """One open session now pins (worker, model)."""
+        self._refs[(worker_id, name)] = self.refcount(worker_id, name) + 1
+        self.touch(worker_id, name)
+
+    def release(self, worker_id: str, name: str) -> None:
+        key = (worker_id, name)
+        n = self._refs.get(key, 0)
+        if n <= 1:
+            self._refs.pop(key, None)
+        else:
+            self._refs[key] = n - 1
+
+    # ------------------------------------------------------------ reporting
+    def resident_counts(self) -> dict[str, int]:
+        """model -> number of replicas it is resident on (routing/metrics
+        view: a model with zero resident replicas cannot serve)."""
+        out = {name: 0 for name in self.entries}
+        for r in self._resident.values():
+            for m in r:
+                if m in out:
+                    out[m] += 1
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "models_registered": len(self.entries),
+            "loads_total": self.loads_total,
+            "unloads_total": self.unloads_total,
+            "evictions_total": self.evictions_total,
+            "eviction_refusals": self.eviction_refusals,
+        }

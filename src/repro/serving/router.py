@@ -23,6 +23,14 @@ whose replica can serve that role — PREFILLs land in the prefill pool,
 while ``both`` worlds (the colocated default) serve everything, so a
 pipeline with no split pools routes exactly as before.
 
+Model-tagged routing (multi-model pools): a world may additionally carry
+the set of models resident on the replica behind it (``add(models=...)``,
+updated live by :meth:`set_models` as the residency protocol loads/unloads
+weights). A pick with ``model=`` restricts the rotation to worlds whose
+replica hosts that model. Untagged worlds (``models=None``) serve any
+model — the single-model pipeline never tags, so it routes exactly as
+before — and ``model=None`` picks ignore tags entirely.
+
 Probe hygiene: ``remove``/``mark_broken`` prune the world's routed history,
 and ``remove`` additionally fires the drop listener
 (:meth:`set_drop_listener`) so the owner can forget its side of the load
@@ -62,6 +70,9 @@ class ReplicaRouter:
         self.routed: dict[str, int] = {}
         #: world -> role of the replica behind it (both = serves everything)
         self._roles: dict[str, str] = {}
+        #: world -> models resident on the replica behind it; None (or
+        #: absent) = untagged, serves any model
+        self._models: dict[str, Optional[frozenset]] = {}
         #: session id -> world holding that session's downstream state
         self._pins: dict[Hashable, str] = {}
         #: optional world -> load metric (lower is better); see set_load_probe
@@ -74,15 +85,32 @@ class ReplicaRouter:
             self._nonempty.set()
 
     # -- membership ----------------------------------------------------------
-    def add(self, world: str, role: str = ROLE_BOTH) -> None:
+    def add(self, world: str, role: str = ROLE_BOTH,
+            models=None) -> None:
         if world not in self._worlds:
             self._worlds.append(world)
         self._roles[world] = role
+        if models is not None:
+            self._models[world] = frozenset(models)
         self._dead.discard(world)
         self._nonempty.set()
 
     def role_of(self, world: str) -> str:
         return self._roles.get(world, ROLE_BOTH)
+
+    def set_models(self, world: str, models) -> None:
+        """Live residency update: the replica behind ``world`` now hosts
+        exactly ``models`` (None clears the tag — serves any model). The
+        LOAD/UNLOAD/SWAP protocol calls this on every upstream edge the
+        moment residency changes, so in-rotation swaps retarget routing
+        without the world ever leaving the healthy set."""
+        if models is None:
+            self._models.pop(world, None)
+        else:
+            self._models[world] = frozenset(models)
+
+    def models_of(self, world: str) -> Optional[frozenset]:
+        return self._models.get(world)
 
     def mark_broken(self, world: str) -> None:
         # routed history pruned too: the no-probe fallback of
@@ -100,6 +128,7 @@ class ReplicaRouter:
         self._dead.discard(world)
         self.routed.pop(world, None)
         self._roles.pop(world, None)
+        self._models.pop(world, None)
         self._drop_pins(world)
         self._notify_drop(world)
         if not self.healthy():
@@ -136,13 +165,17 @@ class ReplicaRouter:
         for sid in [s for s, w in self._pins.items() if w == world]:
             del self._pins[sid]
 
-    def healthy(self, role: Optional[str] = None) -> list[str]:
+    def healthy(self, role: Optional[str] = None,
+                model: Optional[str] = None) -> list[str]:
         live = [w for w in self._worlds if w not in self._dead]
-        if role is None:
-            return live
-        capable = ROLE_CAPABLE.get(role, (role, ROLE_BOTH))
-        return [w for w in live
-                if self._roles.get(w, ROLE_BOTH) in capable]
+        if role is not None:
+            capable = ROLE_CAPABLE.get(role, (role, ROLE_BOTH))
+            live = [w for w in live
+                    if self._roles.get(w, ROLE_BOTH) in capable]
+        if model is not None:
+            live = [w for w in live
+                    if (tags := self._models.get(w)) is None or model in tags]
+        return live
 
     @property
     def worlds(self) -> list[str]:
@@ -161,20 +194,24 @@ class ReplicaRouter:
         retired replica's counters through a stale mapping."""
         self._drop_listener = cb
 
-    def pick(self, role: Optional[str] = None) -> str:
-        live = self.healthy(role)
+    def pick(self, role: Optional[str] = None,
+             model: Optional[str] = None) -> str:
+        live = self.healthy(role, model)
         if not live:
             raise RuntimeError("no healthy replica worlds"
-                               + (f" for role {role!r}" if role else ""))
+                               + (f" for role {role!r}" if role else "")
+                               + (f" for model {model!r}" if model else ""))
         world = live[next(self._rr) % len(live)]
         self.routed[world] = self.routed.get(world, 0) + 1
         return world
 
-    def pick_least_loaded(self, role: Optional[str] = None) -> str:
-        live = self.healthy(role)
+    def pick_least_loaded(self, role: Optional[str] = None,
+                          model: Optional[str] = None) -> str:
+        live = self.healthy(role, model)
         if not live:
             raise RuntimeError("no healthy replica worlds"
-                               + (f" for role {role!r}" if role else ""))
+                               + (f" for role {role!r}" if role else "")
+                               + (f" for model {model!r}" if model else ""))
         if self._load_probe is not None:
             world = min(live, key=self._load_probe)
         else:
@@ -183,13 +220,14 @@ class ReplicaRouter:
         return world
 
     def try_pick(self, least_loaded: bool = False,
-                 role: Optional[str] = None) -> Optional[str]:
+                 role: Optional[str] = None,
+                 model: Optional[str] = None) -> Optional[str]:
         """Like pick()/pick_least_loaded() but returns None when rotation is
         empty, so callers can park instead of crash."""
-        if not self.healthy(role):
+        if not self.healthy(role, model):
             return None
-        return (self.pick_least_loaded(role) if least_loaded
-                else self.pick(role))
+        return (self.pick_least_loaded(role, model) if least_loaded
+                else self.pick(role, model))
 
     async def wait_healthy(self) -> None:
         """Park until at least one healthy world is in rotation."""

@@ -18,6 +18,19 @@ front-loads both, *before* the replica enters the routing rotation:
 With the default shared per-stage executor the compile warmup is a no-op by
 construction (replicas share one jit cache); ``fresh_executor=True`` models
 the real-deployment case of a new worker process with its own caches.
+
+The same machinery generalizes into the multi-model residency protocol
+(:meth:`WarmBootstrap.load_model`): when a replica is directed to host
+another registered model, the new model's *stage* weights stream from a
+same-stage peer that already hosts it — as typed ``LOAD`` envelopes over a
+fresh pairwise world, headed by a ``SWAP`` marker when the load is one leg
+of an A->B swap and trailed by an ``UNLOAD`` marker naming the outgoing
+model — or install cold from the registry store when no peer is resident
+(zero wire bytes; the first replica to host a model always loads cold).
+Either way the replica never leaves rotation: the serve loop keeps
+dispatching its resident models while the stream lands, and the caller
+(``PipelineServer.load_model``/``swap_model``) flips registry residency
+and router tags only after the weights are installed.
 """
 from __future__ import annotations
 
@@ -26,7 +39,12 @@ import functools
 import itertools
 import time
 
-from .codec import DEFAULT_CHUNK_BYTES, params_assemble, params_encode
+from .codec import (
+    DEFAULT_CHUNK_BYTES,
+    SnapshotTransferError,
+    params_assemble,
+    params_encode,
+)
 from .manager import cache_nbytes, stream_chunks
 
 
@@ -48,17 +66,32 @@ class WarmBootstrap:
         self.weight_bytes: list[int] = []
         self.transfer_s: list[float] = []
         self.warm_s: list[float] = []
+        # -- residency-protocol counters (registry tests / bench read) -----
+        self.model_loads_total = 0       # LOAD streams completed
+        self.model_loads_cold = 0        # installs from the registry store
+        self.model_swaps_total = 0       # SWAP-headed streams
+        self.load_bytes: list[int] = []
 
-    def _pick_peer(self, stage: int, worker_id: str, role: str = "both"):
+    def _pick_peer(self, stage: int, worker_id: str, role: str = "both",
+                   model=None):
         """Weight-source choice: a same-host peer saves a cross-host copy of
         the whole stage pytree, which dwarfs any queue-depth difference.
         A same-*role* peer is preferred over any other — its served shape
         profile is exactly the traffic the new replica's pool will see, so
         the compile warmup replays nothing the role can't use — but weights
-        are role-agnostic, so any peer works as the fallback."""
+        are role-agnostic, so any peer works as the fallback. ``model=``
+        restricts to peers with that model resident (the LOAD protocol's
+        weight source must actually hold the weights); None matches the
+        default-model behavior."""
         server = self.server
         peers = [r for r in server.replicas[stage]
-                 if r.worker.alive and not r.draining]
+                 if r.worker.alive and not r.draining
+                 and r.worker_id != worker_id]
+        if model is not None:
+            peers = [r for r in peers
+                     if model in getattr(r, "resident", ())]
+            if not peers:
+                return None
         if role != "both":
             same = [r for r in peers
                     if getattr(r, "role", "both") == role]
@@ -68,7 +101,9 @@ class WarmBootstrap:
         placement = getattr(server.cluster, "placement", None)
         if not self.placement_aware or placement is None:
             return min(peers, key=lambda r: r.queue_depth())
-        nbytes = cache_nbytes(server.stage_param_sets[stage])
+        psets = (server.stage_param_sets if model is None
+                 else server.model_stages(model)[1])
+        nbytes = cache_nbytes(psets[stage])
         return min(peers, key=lambda r: placement.score(
             r.queue_depth(), r.worker_id, worker_id, nbytes))
 
@@ -134,6 +169,113 @@ class WarmBootstrap:
             tracer.record(root, "bootstrap", t_begin,
                           time.monotonic() - t_begin, worker_id,
                           f"stage={stage} peer={report['peer']}")
+        return report
+
+    async def load_model(self, rep, name: str, *, warm: bool = True,
+                         swap_from: str = None) -> dict:
+        """The residency protocol's wire leg: bring model ``name``'s stage
+        weights to live replica ``rep`` without it leaving rotation.
+
+        With a same-stage peer hosting the model, the peer streams the
+        stage's parameter pytree as typed ``LOAD`` envelopes over a fresh
+        ``load:`` pairwise world — headed by a ``SWAP`` marker when
+        ``swap_from`` names the outgoing model of an A->B swap, trailed by
+        an ``UNLOAD`` marker directing the receiver to retire it. The
+        receiver validates the marker framing and the reassembled pytree is
+        checked bit-identical against the registry store (the store is the
+        source of truth; the stream is the transport). With no resident
+        peer the install is cold from the store: zero wire bytes.
+
+        ``warm=True`` replays the peer's model-executor shape profile on
+        the (possibly freshly built) model executor so the model's first
+        real request compiles nothing. Returns a report dict."""
+        from repro.serving.envelope import Envelope, Kind
+
+        server = self.server
+        t_begin = time.monotonic()
+        stage = rep.stage
+        server.registry.get(name)  # unknown names fail fast, with suggestions
+        psets = server.model_stages(name)[1]
+        peer = self._pick_peer(stage, rep.worker_id, rep.role, model=name)
+        report: dict = {"model": name, "stage": stage, "bytes": 0,
+                        "transfer_s": 0.0, "warm_s": 0.0,
+                        "swap_from": swap_from,
+                        "peer": peer.worker_id if peer else None,
+                        "source": "peer" if peer is not None else "store"}
+        loop = asyncio.get_event_loop()
+        if peer is not None:
+            sparams = psets[stage]
+            chunks = await loop.run_in_executor(
+                None, functools.partial(params_encode, sparams,
+                                        chunk_bytes=self.chunk_bytes))
+            envs = []
+            if swap_from is not None:
+                envs.append(Envelope(req_id=-1, session_id=-1,
+                                     kind=Kind.SWAP, model=swap_from))
+            envs.extend(Envelope(req_id=-1, session_id=-1, kind=Kind.LOAD,
+                                 payload=c, model=name) for c in chunks)
+            if swap_from is not None:
+                envs.append(Envelope(req_id=-1, session_id=-1,
+                                     kind=Kind.UNLOAD, model=swap_from))
+            world = f"load:{server.name}:{rep.worker_id}:{next(self._uid)}"
+            t0 = time.monotonic()
+            received = await stream_chunks(
+                server, peer.worker, rep.worker, world, envs,
+                backpressure_bytes=self.backpressure_bytes,
+                timeout_s=self.transfer_timeout_s)
+            report["transfer_s"] = time.monotonic() - t0
+            # marker framing: a swap stream must arrive exactly
+            # SWAP, LOAD..., UNLOAD(swap_from); a plain load all-LOAD —
+            # anything else means the worlds crossed streams
+            kinds = [e.kind for e in received]
+            loads = [e for e in received if e.kind is Kind.LOAD]
+            ok_frame = (
+                all(k is Kind.LOAD for k in kinds) if swap_from is None
+                else (kinds[0] is Kind.SWAP and kinds[-1] is Kind.UNLOAD
+                      and received[-1].model == swap_from
+                      and all(k is Kind.LOAD for k in kinds[1:-1])))
+            if not ok_frame or len(loads) != len(chunks):
+                raise SnapshotTransferError(
+                    f"torn LOAD stream for {name!r} on {world}: "
+                    f"{[int(k) for k in kinds]}")
+            nbytes = sum(e.nbytes for e in loads)
+            report["bytes"] = nbytes
+            self.load_bytes.append(nbytes)
+            if len(self.load_bytes) > 1024:
+                del self.load_bytes[:512]
+            # the stream is the transport, the store the source of truth —
+            # install the reassembled pytree only after it round-trips
+            await loop.run_in_executor(
+                None, params_assemble, [e.payload for e in loads])
+        # the model executor for this (stage, role) — built lazily from the
+        # registry store; shared with every other replica hosting the model
+        executor = server.model_executor(name, stage, rep.role)
+        if warm:
+            profile = None
+            if peer is not None:
+                profile = server.model_executor(
+                    name, stage, peer.role).warm_profile()
+            if not profile:
+                # cold load / cold peer: warm the canonical smoke shapes of
+                # the default executor's served profile instead
+                profile = rep.executor.warm_profile()
+            t0 = time.monotonic()
+            await loop.run_in_executor(None, executor.warm, profile)
+            report["warm_s"] = time.monotonic() - t0
+        self.model_loads_total += 1
+        if peer is None:
+            self.model_loads_cold += 1
+        if swap_from is not None:
+            self.model_swaps_total += 1
+        report["executor"] = executor
+        tracer = getattr(server, "tracer", None)
+        if tracer is not None:
+            root = tracer.begin()
+            tracer.record(root, "model_load", t_begin,
+                          time.monotonic() - t_begin, rep.worker_id,
+                          f"model={name} source={report['source']}"
+                          + (f" swap_from={swap_from}" if swap_from
+                             else ""))
         return report
 
     async def _fetch_weights(self, peer, worker_id: str, sparams):

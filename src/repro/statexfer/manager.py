@@ -172,13 +172,18 @@ class MigrationManager:
             r.open_sessions() + r.queue_depth(),
             src_worker_id, r.worker_id, nbytes))
 
-    def _decode_capable(self, stage: int, exclude=None) -> list:
+    def _decode_capable(self, stage: int, exclude=None,
+                        model: Optional[str] = None) -> list:
         """Replicas able to *hold and serve* a session's decode state: a
         prefill-pool replica is never a valid survivor/restore target — its
         executor has no decode executables and routing would send decode
-        convoys into the pool the split exists to protect. One predicate,
-        owned by the server, shared with handoff peer choice."""
-        return self.server.decode_replicas(stage, exclude=exclude)
+        convoys into the pool the split exists to protect. With ``model=``,
+        only replicas hosting that model's weights qualify — migrating a
+        session under a replica that cannot run it just converts a planned
+        handoff into a RETRY. One predicate, owned by the server, shared
+        with handoff peer choice."""
+        return self.server.decode_replicas(stage, exclude=exclude,
+                                           model=model)
 
     # ------------------------------------------------------------ reporting
     def migration_p50_s(self) -> float:
@@ -241,14 +246,16 @@ class MigrationManager:
         t_begin = time.monotonic()
         #: session's causal parent — the migration span joins the trace tree
         #: of the client call whose state is moving
-        parent = getattr(rep.sessions.get(sid), "trace", None)
+        sess = rep.sessions.get(sid)
+        parent = getattr(sess, "trace", None)
         if survivor is None:
-            peers = self._decode_capable(rep.stage, exclude=rep)
+            peers = self._decode_capable(
+                rep.stage, exclude=rep,
+                model=getattr(sess, "model", None))
             if not peers:
                 self.migration_failures += 1
                 self._release(rep, sid)
                 return False
-            sess = rep.sessions.get(sid)
             est = cache_nbytes(sess.cache) if sess is not None else 0
             survivor = self._rank(rep.worker_id, peers, est)
         rep.held.setdefault(sid, [])          # freeze: hold new steps
@@ -284,7 +291,9 @@ class MigrationManager:
 
     # ------------------------------------------------- prefill/decode handoff
     async def handoff_prefill(self, rep, peer, sid: int, cache,
-                              batch: int, step: int, trace=None) -> bool:
+                              batch: int, step: int, trace=None,
+                              model: Optional[str] = None,
+                              tenant: Optional[str] = None) -> bool:
         """Steady-state disaggregation path: stream a freshly prefilled KV
         cache from prefill-pool replica ``rep`` to decode-pool ``peer`` and
         install it there at the prefill step boundary. Each chunk crosses
@@ -350,7 +359,8 @@ class MigrationManager:
                 raise SnapshotTransferError(
                     "decode peer vanished mid-handoff")
             peer.install_session(sid, assembled.cache, assembled.batch,
-                                 assembled.step, trace=trace)
+                                 assembled.step, trace=trace,
+                                 model=model, tenant=tenant)
         except (SnapshotTransferError, WorldBrokenError, WorldNotFoundError,
                 asyncio.TimeoutError, TimeoutError) as e:
             self.handoff_failures += 1
@@ -497,7 +507,9 @@ class MigrationManager:
             raise SnapshotTransferError(f"session {sid} has no upstream pin")
 
         survivor.install_session(sid, snap.cache, snap.batch, snap.step,
-                                 trace=getattr(sess, "trace", None))
+                                 trace=getattr(sess, "trace", None),
+                                 model=getattr(sess, "model", None),
+                                 tenant=getattr(sess, "tenant", None))
         if new_down is not None:
             survivor.router.pin(sid, new_down)
         for router, new_up in flips:
@@ -544,6 +556,10 @@ class MigrationManager:
 
         server = self.server
         t_begin = time.monotonic()
+        # a tagged session must restore onto replicas hosting its model —
+        # the client records the tag because the dead replica can't tell us
+        model = getattr(server, "session_models", {}).get(sid)
+        tenant = getattr(server, "session_tenants", {}).get(sid)
         route, installs, steps = [], [], []
         for stage in range(server.n_stages):
             live = [r for r in server.replicas[stage]
@@ -557,7 +573,7 @@ class MigrationManager:
                 continue
             snap = (server.snapshots.latest(sid, stage)
                     if server.snapshots is not None else None)
-            healthy = self._decode_capable(stage)
+            healthy = self._decode_capable(stage, model=model)
             if snap is None or not healthy:
                 if count_failures:
                     self.restore_failures += 1
@@ -575,8 +591,13 @@ class MigrationManager:
         # overwrite for full attention caches, but a double-integration for
         # SSM/ring state. Restore therefore requires full caches throughout;
         # SSM/windowed pipelines take the re-prefill fallback.
-        if not all(server.stage_executors[i].full_cache
-                   for i in range(server.n_stages)):
+        if model is None or model == server.default_model:
+            full = all(server.stage_executors[i].full_cache
+                       for i in range(server.n_stages))
+        else:
+            full = all(server.model_executor(model, i).full_cache
+                       for i in range(server.n_stages))
+        if not full:
             if count_failures:
                 self.restore_failures += 1
             return None
@@ -596,7 +617,7 @@ class MigrationManager:
         for rep, snap in zip(route, installs):
             if snap is not None:
                 rep.install_session(sid, snap.cache, snap.batch, snap.step,
-                                    trace=parent)
+                                    trace=parent, model=model, tenant=tenant)
         for router, hop in zip(routers, hops):
             router.pin(sid, hop)
         self.restores_total += 1

@@ -1,0 +1,544 @@
+"""Multi-model, multi-tenant serving on one elastic pool.
+
+Covers the residency bookkeeper (refcounts, LRU eviction, refusal while
+sessions pin weights), model-tagged routing, hot load/swap over the
+LOAD/UNLOAD/SWAP wire protocol (greedy parity before/after, zero
+client-visible failures under traffic), heal-with-residency after a kill,
+the weighted-deficit fair scheduler's slot arithmetic, the per-tenant SLO
+policy's votes (swap > grow > shrink), and the multi-tenant traffic
+generator's per-tenant accounting.
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.control import (
+    ConstantProfile,
+    ElasticController,
+    MetricsHub,
+    MultiTenantGenerator,
+    PerTenantSLOPolicy,
+    ScaleDecision,
+    StageSnapshot,
+    TenantProfile,
+    TenantSpec,
+)
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import (
+    Envelope,
+    Kind,
+    ModelRegistry,
+    PipelineServer,
+    ReplicaRouter,
+    ResidencyError,
+    ServeEngine,
+)
+from repro.serving.pipeline import _Replica, _Session
+
+CFG_A = get_smoke("llama3.2-1b").with_(num_layers=4,
+                                       groups=(BlockGroup(DENSE, 4),))
+MODEL_A = build_model(CFG_A)
+PARAMS_A = MODEL_A.init(jax.random.PRNGKey(0))
+CFG_B = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                       groups=(BlockGroup(DENSE, 2),))
+MODEL_B = build_model(CFG_B)
+PARAMS_B = MODEL_B.init(jax.random.PRNGKey(1))
+
+ENG_A = ServeEngine(MODEL_A, PARAMS_A, max_len=64)
+ENG_B = ServeEngine(MODEL_B, PARAMS_B, max_len=64)
+
+
+def _prompts(n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG_A.vocab_size, (1, seq)) for _ in range(n)]
+
+
+# --------------------------------------------------------------- registry
+def test_registry_refcount_blocks_unload():
+    reg = ModelRegistry()
+    reg.register("a", MODEL_A, PARAMS_A)
+    reg.register("b", MODEL_B, PARAMS_B)
+    assert reg.load("w0", "a") == []
+    assert reg.load("w0", "b") == []
+    assert reg.resident_counts() == {"a": 1, "b": 1}
+
+    reg.acquire("w0", "b")
+    reg.acquire("w0", "b")
+    assert reg.refcount("w0", "b") == 2
+    with pytest.raises(ResidencyError):
+        reg.unload("w0", "b")
+    assert reg.is_resident("w0", "b")
+
+    reg.release("w0", "b")
+    with pytest.raises(ResidencyError):
+        reg.unload("w0", "b")        # one session still pins it
+    reg.release("w0", "b")
+    reg.unload("w0", "b")            # refcount hit zero: allowed
+    assert not reg.is_resident("w0", "b")
+    assert reg.unloads_total == 1
+
+    # forced unload is the kill/teardown path: refs are already lost
+    reg.load("w0", "b")
+    reg.acquire("w0", "b")
+    reg.unload("w0", "b", force=True)
+    assert not reg.is_resident("w0", "b")
+
+
+def test_registry_lru_eviction_order():
+    reg = ModelRegistry(max_resident=2)
+    for name in ("a", "b", "c"):
+        reg.register(name, MODEL_B, PARAMS_B)
+    reg.load("w0", "a")
+    reg.load("w0", "b")
+    reg.touch("w0", "a")             # "a" just served traffic: "b" is LRU
+    assert reg.load("w0", "c") == ["b"]
+    assert reg.resident("w0") == ["a", "c"]
+    assert reg.evictions_total == 1
+    # re-loading a resident model is a touch, never an eviction
+    assert reg.load("w0", "a") == []
+    assert reg.resident("w0") == ["c", "a"]
+
+
+def test_registry_eviction_refusal_when_all_pinned():
+    reg = ModelRegistry(max_resident=1)
+    reg.register("a", MODEL_B, PARAMS_B)
+    reg.register("b", MODEL_B, PARAMS_B)
+    reg.load("w0", "a")
+    reg.acquire("w0", "a")
+    with pytest.raises(ResidencyError):
+        reg.load("w0", "b")          # the only evictable slot is pinned
+    assert reg.eviction_refusals == 1
+    reg.release("w0", "a")
+    assert reg.load("w0", "b") == ["a"]
+
+    reg.load("w1", "a")
+    reg.drop_worker("w1")
+    assert reg.resident("w1") == []
+
+
+def test_registry_unknown_model_suggestion():
+    reg = ModelRegistry()
+    reg.register("summarizer", MODEL_B, PARAMS_B)
+    with pytest.raises(KeyError, match="did you mean 'summarizer'"):
+        reg.get("sumarizer")
+
+
+def test_config_unknown_arch_suggestion():
+    with pytest.raises(KeyError, match="did you mean 'qwen3-8b'"):
+        get_config("qwen-8b")
+
+
+# ----------------------------------------------------------------- router
+def test_router_model_tag_filtering():
+    r = ReplicaRouter()
+    r.add("w_ab", models={"a", "b"})
+    r.add("w_a", models={"a"})
+    r.add("w_any")                   # untagged: serves any model
+    assert set(r.healthy(model="a")) == {"w_ab", "w_a", "w_any"}
+    assert set(r.healthy(model="b")) == {"w_ab", "w_any"}
+    assert set(r.healthy(model=None)) == {"w_ab", "w_a", "w_any"}
+    for _ in range(6):
+        assert r.pick(model="b") in {"w_ab", "w_any"}
+    assert r.try_pick(model="zz") == "w_any"
+
+    # live residency update: the swap protocol retags without re-adding
+    r.set_models("w_a", {"b"})
+    assert set(r.healthy(model="a")) == {"w_ab", "w_any"}
+    assert set(r.healthy(model="b")) == {"w_ab", "w_a", "w_any"}
+    r.set_models("w_ab", None)       # clearing the tag = serves any model
+    assert set(r.healthy(model="zz")) == {"w_ab", "w_any"}
+    r.remove("w_any")
+    r.remove("w_ab")
+    assert r.try_pick(model="a") is None
+    with pytest.raises(RuntimeError, match="model 'a'"):
+        r.pick(model="a")
+
+
+# -------------------------------------------------- fair decode scheduler
+def test_wdrr_fair_scheduler_slot_shares(arun):
+    """Direct arbitration arithmetic of ``_Replica._pull_compatible``:
+    with 8 batch slots and both tenants backlogged, weights 3:1 must yield
+    exactly 6:2 slots; equal weights 4:4; a single tenant takes it all."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL_B, PARAMS_B, [1], max_len=64,
+                                microbatch_max=9,
+                                tenant_weights={"gold": 3.0, "bronze": 1.0})
+
+        def fill(rep, tenants):
+            now = time.monotonic()
+            sid = 100
+            for tenant, count in tenants:
+                for _ in range(count):
+                    sid += 1
+                    rep.sessions[sid] = _Session(
+                        cache=None, batch=1, step=0, touched=now,
+                        tenant=tenant)
+                    rep.inbox.put_nowait((Envelope(
+                        req_id=sid, session_id=sid, kind=Kind.DECODE,
+                        payload=np.zeros((1, 1), np.int32), tenant=tenant),
+                        now))
+            # arbitration lead: a step already in hand consumes no credit
+            rep.sessions[99] = _Session(cache=None, batch=1, step=0,
+                                        touched=now, tenant=tenants[0][0])
+            return Envelope(req_id=99, session_id=99, kind=Kind.DECODE,
+                            payload=np.zeros((1, 1), np.int32),
+                            tenant=tenants[0][0])
+
+        def shares(rep, lead, n):
+            batch = [lead]
+            pulled = rep._pull_compatible(lead, n, batch)
+            out: dict = {}
+            for env in batch[1:]:
+                out[env.tenant] = out.get(env.tenant, 0) + 1
+            return pulled, out
+
+        # 3:1 weights, both tenants flooded -> exact 6:2 slot split
+        rep = _Replica(server, "w_fair0", 0)
+        lead = fill(rep, [("gold", 8), ("bronze", 8)])
+        pulled, got = shares(rep, lead, 8)
+        assert pulled == 8
+        assert got == {"gold": 6, "bronze": 2}
+        # arbitration losers wait in the stash, none dropped
+        assert len(rep._stash) == 8
+
+        # unweighted tenants (not in tenant_weights) split evenly
+        rep2 = _Replica(server, "w_fair1", 0)
+        lead2 = fill(rep2, [("x", 8), ("y", 8)])
+        _, got2 = shares(rep2, lead2, 8)
+        assert got2 == {"x": 4, "y": 4}
+
+        # single (untagged) tenant: full batch, nothing withheld
+        rep3 = _Replica(server, "w_fair2", 0)
+        lead3 = fill(rep3, [(None, 8)])
+        pulled3, got3 = shares(rep3, lead3, 8)
+        assert pulled3 == 8 and got3 == {None: 8}
+        assert not rep3._stash
+        c.shutdown()
+
+    arun(scenario())
+
+
+# ------------------------------------------------- hot load + generation
+def test_multimodel_load_and_generate_parity(arun):
+    """Cold-load a second model from the registry store, generate against
+    it (greedy parity with a dedicated engine), then warm-load the same
+    model onto a peer replica over the LOAD wire, and serve both models'
+    traffic concurrently on the shared pool."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL_A, PARAMS_A, [2], max_len=64,
+                                default_model="A")
+        server.register_model("B", MODEL_B, PARAMS_B)
+        await server.start()
+
+        p = _prompts(1, seed=1)[0]
+        got = await server.generate(p, 5, step_timeout=30.0)
+        np.testing.assert_array_equal(got, ENG_A.generate(p, 5))
+
+        # unknown tags fail fast with the known names, not a routing stall
+        with pytest.raises(KeyError, match=r"registered: \['A', 'B'\]"):
+            await server.generate(p, 2, model="b")
+
+        # cold load: no peer hosts B yet, weights come from the store
+        rep0 = server.replicas[0][0]
+        r0 = await server.load_model(rep0.worker_id, "B")
+        assert r0["source"] == "store" and r0["bytes"] == 0
+        assert "B" in rep0.resident
+
+        p2 = _prompts(1, seed=2)[0]
+        got_b = await server.generate(p2, 5, step_timeout=30.0, model="B",
+                                      tenant="t1")
+        np.testing.assert_array_equal(got_b, ENG_B.generate(p2, 5))
+
+        # warm load: rep0 is now a resident peer, weights move as LOAD
+        # envelopes on the accounted wire
+        rep1 = server.replicas[0][1]
+        r1 = await server.load_model(rep1.worker_id, "B")
+        assert r1["source"] == "peer" and r1["bytes"] > 0
+        assert r1["peer"] == rep0.worker_id
+        assert server.bootstrap.model_loads_total == 2
+        assert server.bootstrap.model_loads_cold == 1
+        # idempotent: already-resident load moves nothing
+        again = await server.load_model(rep1.worker_id, "B")
+        assert again["source"] == "resident" and again["bytes"] == 0
+
+        # both models share the pool: concurrent tagged traffic, exact
+        # greedy parity for every client
+        ps = _prompts(4, seed=3)
+        wants = [ENG_A.generate(q, 4) for q in ps[:2]] + \
+                [ENG_B.generate(q, 4) for q in ps[2:]]
+        outs = await asyncio.gather(
+            server.generate(ps[0], 4, step_timeout=30.0, tenant="t0"),
+            server.generate(ps[1], 4, step_timeout=30.0, tenant="t0"),
+            server.generate(ps[2], 4, step_timeout=30.0, model="B",
+                            tenant="t1"),
+            server.generate(ps[3], 4, step_timeout=30.0, model="B",
+                            tenant="t1"),
+        )
+        for want, out in zip(wants, outs):
+            np.testing.assert_array_equal(out, want)
+        assert server.tenant_tokens["t0"] == 8
+        assert server.tenant_tokens["t1"] == 13   # 5 solo + 8 mixed
+
+        # metrics plumbing: model/tenant dimensions reach the exporter
+        hub = MetricsHub(server, alpha=1.0)
+        snaps = hub.poll()
+        assert snaps[0].model_replicas.get("B") == 2
+        assert set(snaps[0].tenant_tails) == {"t0", "t1"}
+        text = hub.export_prometheus(snaps)
+        assert "repro_tenant_p95_ttft_s" in text
+        assert "repro_model_replicas" in text
+        c.shutdown()
+
+    arun(scenario(), 300)
+
+
+def test_swap_under_traffic_zero_failures_and_parity(arun):
+    """Swap a replica's residency B -> A while B sessions are decoding on
+    it: incumbents live-migrate to the other B host, every client finishes
+    with exact greedy parity, and the registry retires the residency."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL_A, PARAMS_A, [2], max_len=64,
+                                default_model="A")
+        server.register_model("B", MODEL_B, PARAMS_B)
+        await server.start()
+        rep0, rep1 = server.replicas[0]
+        await server.load_model(rep0.worker_id, "B")
+        await server.load_model(rep1.worker_id, "B")
+
+        ps = _prompts(4, seed=7)
+        wants = [ENG_B.generate(q, 12) for q in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(q, 12, step_timeout=30.0, model="B",
+                            tenant="t"))
+                 for q in ps]
+        # wait until B sessions are actually open on the swap victim
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if any(s.model == "B" for s in rep1.sessions.values()):
+                break
+            await asyncio.sleep(0.01)
+        assert any(s.model == "B" for s in rep1.sessions.values())
+
+        report = await server.swap_model(rep1.worker_id, "B", "A")
+        assert report["swap_from"] == "B"
+        assert "B" not in rep1.resident and "A" in rep1.resident
+        assert not server.registry.is_resident(rep1.worker_id, "B")
+        assert server.swaps_total == 1
+        assert server.bootstrap.model_swaps_total == 1
+
+        outs = await asyncio.gather(*tasks)   # zero client-visible failures
+        for want, out in zip(wants, outs):
+            np.testing.assert_array_equal(out, want)
+        # and the swapped replica still serves the default model
+        p = _prompts(1, seed=8)[0]
+        np.testing.assert_array_equal(
+            await server.generate(p, 4, step_timeout=30.0),
+            ENG_A.generate(p, 4))
+        c.shutdown()
+
+    arun(scenario(), 300)
+
+
+def test_kill_after_load_heals_resident_models(arun):
+    """A replica dies while hosting a hot-loaded model: the controller's
+    heal restores the victim's full resident set on the replacement (cold
+    from the store when no peer survives), and tagged traffic serves with
+    exact parity afterwards."""
+    async def scenario():
+        c = Cluster(heartbeat_interval=0.01, heartbeat_timeout=0.08)
+        server = PipelineServer(c, MODEL_A, PARAMS_A, [1, 1], max_len=64,
+                                default_model="A")
+        server.register_model("B", MODEL_B, PARAMS_B)
+        await server.start()
+        for stage in range(2):
+            await server.load_model(
+                server.replicas[stage][0].worker_id, "B")
+        p = _prompts(1, seed=4)[0]
+        want = ENG_B.generate(p, 4)
+        np.testing.assert_array_equal(
+            await server.generate(p, 4, step_timeout=30.0, model="B"),
+            want)
+
+        ctrl = ElasticController(server, interval=0.05)
+        victim = server.replicas[1][0].worker_id
+        c.kill(victim, FailureKind.SILENT_HANG)
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            if victim in server.failed_replicas(1):
+                break
+            await asyncio.sleep(0.02)
+        assert victim in server.failed_replicas(1)
+
+        await ctrl.step()
+        await ctrl.wait_heals()
+        assert ctrl.heals == 1
+        healed = [r for r in server.replicas[1]
+                  if r.worker.alive and not r.draining]
+        assert healed and healed[0].worker_id != victim
+        # the heal restored the victim's residency, not just the default
+        assert "B" in healed[0].resident
+        assert server.registry.is_resident(healed[0].worker_id, "B")
+        assert not server.registry.resident(victim)
+
+        np.testing.assert_array_equal(
+            await server.generate(p, 4, step_timeout=30.0, model="B"),
+            want)
+        c.shutdown()
+
+    arun(scenario(), 300)
+
+
+def test_controller_applies_swap_vote(arun):
+    """A policy's ``swap_from``/``swap_to`` vote drives ``swap_model`` on
+    the least-loaded host of the donor model."""
+    class Scripted:
+        def __init__(self, src, dst):
+            self.src, self.dst = src, dst
+            self.fired = False
+
+        def decide(self, snap):
+            if self.fired:
+                return ScaleDecision(snap.stage, 0, "hold")
+            self.fired = True
+            return ScaleDecision(snap.stage, 0, "scripted swap",
+                                 swap_from=self.src, swap_to=self.dst)
+
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL_B, PARAMS_B, [2], max_len=64,
+                                default_model="base")
+        server.register_model(
+            "B", MODEL_B, MODEL_B.init(jax.random.PRNGKey(2)))
+        server.register_model(
+            "C", MODEL_B, MODEL_B.init(jax.random.PRNGKey(3)))
+        await server.start()
+        for rep in server.replicas[0]:
+            await server.load_model(rep.worker_id, "B")
+
+        ctrl = ElasticController(server, [Scripted("B", "C")],
+                                 interval=0.05)
+        await ctrl.step()
+        assert ctrl.swaps == 1
+        assert any(e.kind == "swap" for e in ctrl.timeline)
+        counts = server.registry.resident_counts()
+        assert counts == {"base": 2, "B": 1, "C": 1}
+        hosts_c = [r for r in server.replicas[0] if "C" in r.resident]
+        assert len(hosts_c) == 1 and "B" not in hosts_c[0].resident
+
+        # a vote naming a donor no replica hosts is recorded as a hold,
+        # never an exception out of the control loop
+        ctrl2 = ElasticController(server, [Scripted("missing", "C")],
+                                  interval=0.05)
+        await ctrl2.step()
+        assert ctrl2.swaps == 0
+        assert any(e.kind == "swap_hold" for e in ctrl2.timeline)
+        c.shutdown()
+
+    arun(scenario(), 300)
+
+
+# ------------------------------------------------------ per-tenant policy
+def _snap(**kw) -> StageSnapshot:
+    base = dict(stage=0, t=0.0, n_replicas=2, n_failed=0, queue_total=0,
+                queue_per_replica=0.0, throughput=1.0, latency_s=0.01)
+    base.update(kw)
+    return StageSnapshot(**base)
+
+
+def test_per_tenant_slo_policy_votes():
+    policy = PerTenantSLOPolicy(tenants=[
+        TenantSpec("gold", model="B", ttft_slo_s=0.5),
+        TenantSpec("bronze", model=None, ttft_slo_s=2.0),
+    ])
+    tails = {
+        "gold": {"p50_ttft_s": 1.0, "p95_ttft_s": 2.0,
+                 "p95_decode_s": 0.01, "n": 20},
+        "bronze": {"p50_ttft_s": 0.1, "p95_ttft_s": 0.2,
+                   "p95_decode_s": 0.01, "n": 20},
+    }
+
+    # breach + donor with spare residency -> swap vote at delta 0
+    d = policy.decide(_snap(n_replicas=4, tenant_tails=tails,
+                            model_replicas={"default": 3, "B": 1},
+                            model_sessions={"default": 0}))
+    assert d.delta == 0 and not d.hold
+    assert d.swap_from == "default" and d.swap_to == "B"
+
+    # breach, no donor (every other model is starved too) -> model-tagged
+    # grow, so healed capacity comes up hosting the starved model
+    d = policy.decide(_snap(n_replicas=2, tenant_tails=tails,
+                            model_replicas={"B": 1},
+                            model_sessions={}))
+    assert d.delta == 1 and d.model == "B"
+
+    # a single-replica donor pinned by open sessions cannot give up its
+    # only residency -> grow, not a stranding swap
+    d = policy.decide(_snap(n_replicas=2, tenant_tails=tails,
+                            model_replicas={"default": 2, "B": 1},
+                            model_sessions={"default": 5, "B": 1}))
+    assert d.swap_from == "default"   # 2 replicas: one is spare even loaded
+    d = policy.decide(_snap(n_replicas=2, tenant_tails=tails,
+                            model_replicas={"A": 1, "B": 1},
+                            model_sessions={"A": 5}))
+    assert d.delta == 1 and d.swap_to is None
+
+    # every observed tenant comfortably under SLO + idle queue -> shrink
+    cold = {
+        "gold": {"p50_ttft_s": 0.01, "p95_ttft_s": 0.05,
+                 "p95_decode_s": 0.01, "n": 20},
+        "bronze": {"p50_ttft_s": 0.01, "p95_ttft_s": 0.05,
+                   "p95_decode_s": 0.01, "n": 20},
+    }
+    d = policy.decide(_snap(n_replicas=2, tenant_tails=cold))
+    assert d.delta == -1
+
+    # no tenant dimensions (single-tenant pipeline) -> pure hold
+    d = policy.decide(_snap())
+    assert d.hold and d.delta == 0
+
+
+# ------------------------------------------------------ traffic generator
+def test_multitenant_generator_summary(arun):
+    async def scenario():
+        served: dict = {}
+
+        async def submit(tenant, prompt_len):
+            lo, hi = tenant.prompt_len
+            assert lo <= prompt_len <= hi
+            served[tenant.name] = served.get(tenant.name, 0) + 1
+            if tenant.name == "bronze":
+                raise RuntimeError("bronze shed")
+            await asyncio.sleep(0.001)
+
+        tenants = [
+            TenantProfile("gold", ConstantProfile(80.0),
+                          prompt_len=(4, 8), model="B", weight=3.0),
+            TenantProfile("bronze", ConstantProfile(20.0),
+                          prompt_len=(2, 4), weight=1.0),
+        ]
+        gen = MultiTenantGenerator(submit, tenants, seed=3)
+        out = await gen.run(0.5)
+        assert set(out["tenants"]) == {"gold", "bronze"}
+        gold, bronze = out["tenants"]["gold"], out["tenants"]["bronze"]
+        # 80 vs 20 rps: the heavy tenant dominates the arrival mix
+        assert gold["sent"] > bronze["sent"] > 0
+        assert gold["failed"] == 0 and bronze["ok"] == 0
+        assert gold["model"] == "B" and gold["weight"] == 3.0
+        assert out["sent"] == gold["sent"] + bronze["sent"]
+        assert out["ok"] == gold["ok"] and out["failed"] == bronze["failed"]
+        assert served["gold"] == gold["sent"]
+        # per-tenant RNG streams: same seed reproduces the arrival counts
+        gen2 = MultiTenantGenerator(submit, tenants, seed=3)
+        out2 = await gen2.run(0.5)
+        assert out2["tenants"]["gold"]["sent"] == gold["sent"]
+        assert out2["tenants"]["bronze"]["sent"] == bronze["sent"]
+
+    arun(scenario(), 60)
