@@ -1,0 +1,274 @@
+"""Speculative decoding on elastic role pools: the ISSUE 10 headline A/B.
+
+At *equal replica budget*, does a draft pool beat spending the same
+replica on plain target decode? Plain mode runs ``{both: 2}``; spec mode
+trades one of those replicas for a draft replica (``{both: 1, draft: 1}``)
+proposing ``k`` tokens per round, verified by the target in one fused
+dispatch. The uplift lever is per-session decode latency: each accepted
+round commits ``k+1`` tokens for one target dispatch instead of ``k+1``.
+
+The target model is built with an *identity tail*: every layer past the
+first has its attention/MLP output projections zeroed, so those layers are
+exact residual no-ops and the 4-layer target computes bit-for-bit the same
+function as its own first layer. The draft (that first layer, shared
+embeddings) therefore agrees with the target exactly — acceptance 1.0 at a
+quarter of the target's per-token cost — which makes the A/B a controlled
+measurement of the *serving mechanism* (propose/verify round structure,
+fused verification, commit bookkeeping) with the model-quality variable
+pinned, and makes greedy parity a hard bitwise gate in both modes.
+
+Second scenario (recovery-matrix row): kill the only draft replica mid-
+generation. Every session must finish with exact parity through the
+plain-decode fallback — zero client-visible failures, zero target-pool
+tokens recomputed (draft loss never invalidates target KV state).
+
+Gates (full mode; structural gates enforced in --tiny too):
+* exact greedy parity vs the single-engine oracle, both modes;
+* acceptance == 1.0 and zero fallbacks in the healthy A/B;
+* spec tokens/s > plain tokens/s at equal replica budget (full only);
+* draft-kill: all sessions complete, fallbacks > 0, zero re-prefills and
+  zero recomputed target tokens.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    collect_obs,
+    run_async,
+    trace_path_for,
+    write_bench_json,
+    write_trace_json,
+)
+from repro.configs import get_smoke
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import PipelineServer, ROLE_DRAFT, ServeEngine
+
+MAX_LEN = 64
+
+
+def _build(tiny: bool):
+    """Identity-tail target + its first-layer draft (shared embeddings)."""
+    layers = 2 if tiny else 4
+    cfg = get_smoke("llama3.2-1b").with_(num_layers=layers,
+                                         groups=(BlockGroup(DENSE, layers),))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # residual no-op tail: zero the output projections of layers 1..N-1 on
+    # the scan-stacked group params — the N-layer function becomes layer 0's
+    g = dict(params["groups"][0])
+    g["attn"] = dict(g["attn"], wo=g["attn"]["wo"].at[1:].set(0.0))
+    g["mlp"] = dict(g["mlp"], w_down=g["mlp"]["w_down"].at[1:].set(0.0))
+    params = dict(params, groups=[g])
+    draft_cfg = cfg.with_(num_layers=1, groups=(BlockGroup(DENSE, 1),))
+    draft_model = build_model(draft_cfg)
+    draft_params = {k: v for k, v in params.items() if k != "groups"}
+    draft_params["groups"] = [jax.tree.map(lambda a: a[:1],
+                                           params["groups"][0])]
+    return cfg, model, params, draft_model, draft_params
+
+
+def _prompts(cfg, n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (1, seq)) for _ in range(n)]
+
+
+async def _wait_open(server, stage, n, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        assert time.monotonic() < deadline, "sessions never all opened"
+        await asyncio.sleep(0.005)
+
+
+async def _ab_mode(build, *, spec: bool, sessions: int, new_tokens: int,
+                   k: int, wants) -> dict:
+    """One side of the equal-budget A/B: measure tokens/s over a fully
+    warmed round of ``sessions`` concurrent generations."""
+    cfg, model, params, draft_model, draft_params = build
+    c = Cluster()
+    if spec:
+        pools = {"both": 1, "draft": 1}
+        server = PipelineServer(c, model, params, [pools], max_len=MAX_LEN,
+                                draft_model=draft_model,
+                                draft_params=draft_params, spec_k=k)
+    else:
+        pools = {"both": 2}
+        server = PipelineServer(c, model, params, [pools], max_len=MAX_LEN)
+    await server.start()
+    prompts = _prompts(cfg, sessions)
+
+    async def one_round():
+        return await asyncio.gather(*(
+            server.generate(p, new_tokens, step_timeout=300.0)
+            for p in prompts))
+
+    # deterministic warm: two identical-traffic rounds compile every
+    # (coalescing width, K) bucket — including the shrinking tail k_round
+    # shapes — the measured round will hit; jit compiles mid-measurement
+    # would otherwise dominate the timing
+    for _ in range(2):
+        outs = await one_round()
+    prop0 = server.spec_proposed_total
+    acc0 = server.spec_accepted_total
+    fb0 = server.spec_fallbacks_total
+    t0 = time.monotonic()
+    outs = await one_round()
+    dt = time.monotonic() - t0
+    parity = all(np.array_equal(got, want)
+                 for got, want in zip(outs, wants))
+    proposed = server.spec_proposed_total - prop0
+    r = {
+        "pools": pools,
+        "tokens_per_s": sessions * new_tokens / dt,
+        "round_s": dt,
+        "parity": parity,
+        "fallbacks": server.spec_fallbacks_total - fb0,
+        "acceptance": ((server.spec_accepted_total - acc0) / proposed
+                       if proposed else 0.0),
+        "replica_stats": server.replica_stats(),
+        "obs": collect_obs(server),
+    }
+    c.shutdown()
+    return r
+
+
+async def _draft_kill(build, *, sessions: int, new_tokens: int,
+                      k: int, wants) -> dict:
+    """Recovery-matrix row: the only draft replica dies mid-generation;
+    sessions degrade to plain decode with zero client-visible failures and
+    zero target-pool recomputation."""
+    cfg, model, params, draft_model, draft_params = build
+    c = Cluster()
+    server = PipelineServer(c, model, params, [{"both": 1, "draft": 1}],
+                            max_len=MAX_LEN, draft_model=draft_model,
+                            draft_params=draft_params, spec_k=k)
+    await server.start()
+    prompts = _prompts(cfg, sessions)
+    # warm round so the kill lands mid-measurement, not mid-compile
+    await asyncio.gather(*(server.generate(p, new_tokens,
+                                           step_timeout=300.0)
+                           for p in prompts))
+    rounds0 = server.spec_rounds_total
+    tasks = [asyncio.ensure_future(
+        server.generate(p, new_tokens, step_timeout=60.0))
+        for p in prompts]
+    await _wait_open(server, 0, sessions)
+    # let at least one speculative round commit, then kill while most of
+    # the generation is still ahead — the remaining rounds must all hit
+    # the degrade path (killing later risks the sessions simply finishing
+    # speculatively and the scenario proving nothing)
+    deadline = time.monotonic() + 60.0
+    while server.spec_rounds_total - rounds0 < 1:
+        assert time.monotonic() < deadline, "no spec rounds before kill"
+        await asyncio.sleep(0.002)
+    draft = next(r for r in server.replicas[0] if r.role == ROLE_DRAFT)
+    c.kill(draft.worker_id, FailureKind.CRASH_DETECTABLE)
+    failures = 0
+    outs = []
+    for t in tasks:
+        try:
+            outs.append(await t)
+        except Exception:  # noqa: BLE001 — the gate counts these
+            failures += 1
+            outs.append(None)
+    parity = all(o is not None and np.array_equal(o, want)
+                 for o, want in zip(outs, wants))
+    m = server.migrations.stats()
+    r = {
+        "failures": failures,
+        "parity": parity,
+        "fallbacks": server.spec_fallbacks_total,
+        "reprefills": m["reprefills_total"],
+        "recomputed_tokens": m["recomputed_tokens"],
+        "obs": collect_obs(server),
+    }
+    c.shutdown()
+    return r
+
+
+def run(tiny: bool = False, json_path: str | None = None):
+    sessions = 2
+    new_tokens = 8 if tiny else 48
+    # the kill scenario needs enough generation left *after* the kill that
+    # the degrade path is actually exercised — give it its own budget
+    kill_tokens = 24 if tiny else 48
+    k = 3 if tiny else 4
+    build = _build(tiny)
+    cfg, model, params = build[:3]
+    engine = ServeEngine(model, params, max_len=MAX_LEN)
+    wants = [engine.generate(p, new_tokens)
+             for p in _prompts(cfg, sessions)]
+    wants_kill = [engine.generate(p, kill_tokens)
+                  for p in _prompts(cfg, sessions)]
+
+    plain = run_async(_ab_mode(build, spec=False, sessions=sessions,
+                               new_tokens=new_tokens, k=k, wants=wants))
+    spec = run_async(_ab_mode(build, spec=True, sessions=sessions,
+                              new_tokens=new_tokens, k=k, wants=wants))
+    kill = run_async(_draft_kill(build, sessions=sessions,
+                                 new_tokens=kill_tokens, k=k,
+                                 wants=wants_kill))
+
+    speedup = spec["tokens_per_s"] / max(plain["tokens_per_s"], 1e-9)
+    # hard gates — structural ones hold in tiny mode too
+    assert plain["parity"], "plain-mode greedy parity broke"
+    assert spec["parity"], "spec-mode greedy parity broke"
+    assert spec["fallbacks"] == 0, spec["fallbacks"]
+    assert spec["acceptance"] >= 0.999, spec["acceptance"]
+    assert kill["failures"] == 0, kill["failures"]
+    assert kill["parity"], "post-kill parity broke"
+    assert kill["fallbacks"] >= 1, "kill produced no degrade fallbacks"
+    assert kill["reprefills"] == 0, kill["reprefills"]
+    assert kill["recomputed_tokens"] == 0, kill["recomputed_tokens"]
+    if not tiny:
+        # the headline: draft replica beats the same replica spent on
+        # plain decode (tiny CI boxes are too noisy for a throughput gate)
+        assert speedup > 1.0, (spec["tokens_per_s"], plain["tokens_per_s"])
+
+    rows = [
+        ("spec_tokens_per_s", spec["tokens_per_s"],
+         f"{{both:1, draft:1}}, k={k}, {sessions}x{new_tokens} tokens"),
+        ("plain_tokens_per_s", plain["tokens_per_s"],
+         "{both:2}, same sessions/tokens — equal replica budget"),
+        ("spec_speedup", speedup,
+         "spec vs plain tokens/s at equal replica budget"),
+        ("spec_acceptance_rate", spec["acceptance"],
+         "accepted/proposed over the measured round (identity tail: 1.0)"),
+        ("spec_fallbacks", float(spec["fallbacks"]),
+         "healthy A/B: degrade rounds (must be 0)"),
+        ("spec_parity_ok", float(plain["parity"] and spec["parity"]),
+         "bitwise greedy parity vs single engine, both modes"),
+        ("draftkill_failures", float(kill["failures"]),
+         "client-visible failures after mid-generation draft kill"),
+        ("draftkill_fallbacks", float(kill["fallbacks"]),
+         "rounds degraded to plain decode after the kill"),
+        ("draftkill_recomputed_tokens", float(kill["recomputed_tokens"]),
+         "target-pool tokens recomputed because of draft loss (must be 0)"),
+        ("draftkill_parity_ok", float(kill["parity"]),
+         "bitwise greedy parity through the degrade"),
+    ]
+    r = {"plain": plain, "spec": spec, "draft_kill": kill}
+    if json_path:
+        phases = {name: scen.pop("obs", {}) for name, scen in r.items()}
+        write_bench_json(json_path, suite="spec", rows=rows, raw=r,
+                         tiny=tiny)
+        write_trace_json(trace_path_for(json_path, "spec"),
+                         suite="spec", phases=phases)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer layers/tokens, no throughput gate")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_spec.json (+ TRACE_spec.json) here")
+    args = ap.parse_args()
+    for name, value, derived in run(tiny=args.tiny, json_path=args.json):
+        print(f"{name},{value:.4f},{derived}")

@@ -23,6 +23,9 @@ Prints ``name,value,derived`` CSV rows:
 * multimodel — multi-model multi-tenant pool: shared vs dedicated
   consolidation A/B, in-rotation residency swap under traffic, and
   per-tenant SLO tails under a skewed two-tenant mix
+* spec — speculative decoding: draft pool vs plain decode at equal
+  replica budget (tokens/s + exact greedy parity), and mid-generation
+  draft-pool kill degrading to plain decode with zero recomputation
 """
 from __future__ import annotations
 
@@ -117,6 +120,8 @@ SUITES = {
                                 fromlist=["run"]).run(),
     "multimodel": lambda: __import__("benchmarks.bench_multimodel",
                                      fromlist=["run"]).run(),
+    "spec": lambda: __import__("benchmarks.bench_spec",
+                               fromlist=["run"]).run(),
     "roofline": _rows_roofline,
 }
 

@@ -36,11 +36,11 @@ TRACE_SCHEMA = "trace/v1"
 
 #: metric-name suffixes where bigger is better
 _HIGHER_BETTER = ("_per_s", "_tokens_per_s", "_speedup", "_ok",
-                  "_sessions", "_reused")
+                  "_sessions", "_reused", "_acceptance_rate")
 #: suffixes where smaller is better
 _LOWER_BETTER = ("_ms", "_s", "_bytes", "_bytes_total", "_failed",
                  "_failures", "_overhead_ratio", "_rel_err_p95",
-                 "_rel_err_p99", "_mismatches")
+                 "_rel_err_p99", "_mismatches", "_fallbacks")
 
 
 def _direction(name: str):

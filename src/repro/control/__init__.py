@@ -16,6 +16,7 @@ from .policy import (
     PerTenantSLOPolicy,
     ScaleDecision,
     ScalingPolicy,
+    SpecDecodePolicy,
     TailLatencySLOPolicy,
     TargetQueueDepthPolicy,
     TenantSpec,
@@ -40,6 +41,7 @@ __all__ = [
     "Ewma", "MetricsHub", "ReplicaSample", "StageSnapshot",
     "DisaggregatedStagePolicy", "HysteresisPolicy", "LatencySLOPolicy",
     "PerTenantSLOPolicy", "ScaleDecision", "ScalingPolicy",
+    "SpecDecodePolicy",
     "TailLatencySLOPolicy", "TargetQueueDepthPolicy", "TenantSpec",
     "TokenRatePolicy", "TTFTSLOPolicy",
     "BurstProfile", "ConstantProfile", "DiurnalProfile",

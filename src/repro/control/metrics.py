@@ -83,6 +83,13 @@ class ReplicaSample:
     models: tuple = ()
     #: decode batch slots served per tenant by the WDRR fair scheduler
     tenant_served: dict = dataclasses.field(default_factory=dict)
+    #: speculative decoding (decode-pool replicas judge acceptance, so the
+    #: counters live there): cumulative proposed/accepted draft tokens and
+    #: the per-replica acceptance-rate EWMA the SpecDecodePolicy trades
+    #: draft-vs-target capacity on
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    acceptance: float = 0.0
 
 
 @dataclasses.dataclass
@@ -130,6 +137,9 @@ class StageSnapshot:
     #: client-observed per-tenant latency tails (pipeline-wide, attached to
     #: every stage snapshot): tenant -> {p50/p95_ttft_s, p95_decode_s, n}
     tenant_tails: dict = dataclasses.field(default_factory=dict)
+    #: speculative decoding: mean of the per-replica acceptance EWMAs over
+    #: replicas that have judged draft proposals (0.0 = no spec traffic)
+    acceptance_rate: float = 0.0
     #: the StageDigest this snapshot was derived from (None for snapshots
     #: constructed directly, e.g. in tests)
     digest: Optional[StageDigest] = None
@@ -160,6 +170,7 @@ class MetricsHub:
         self._toks: dict[str, Ewma] = {}
         self._ttft: dict[str, Ewma] = {}
         self._declat: dict[str, Ewma] = {}
+        self._accept: dict[str, Ewma] = {}
         self._qdepth: dict[int, Ewma] = {}
         self._snap_bytes = Ewma(alpha)
         #: client-observed latency split, fed from the server's per-kind
@@ -204,13 +215,16 @@ class MetricsHub:
         prefill_s = rep.prefill_s_sum
         dbatches = rep.decode_batches
         decode_s = rep.decode_s_sum
+        sp_prop = getattr(rep, "spec_proposed", 0)
+        sp_acc = getattr(rep, "spec_accepted", 0)
         tput = self._tput.setdefault(wid, Ewma(self.alpha))
         lat = self._lat.setdefault(wid, Ewma(self.alpha))
         toks = self._toks.setdefault(wid, Ewma(self.alpha))
         ttft = self._ttft.setdefault(wid, Ewma(self.alpha))
         declat = self._declat.setdefault(wid, Ewma(self.alpha))
+        accept = self._accept.setdefault(wid, Ewma(self.alpha))
         if prev is not None:
-            t0, done0, lat0, tok0, pre0, pres0, db0, ds0 = prev
+            t0, done0, lat0, tok0, pre0, pres0, db0, ds0, sp0, sa0 = prev
             dt = max(now - t0, 1e-9)
             dn = processed - done0
             tput.update(dn / dt)
@@ -223,8 +237,13 @@ class MetricsHub:
                 ttft.update((prefill_s - pres0) / (prefills - pre0))
             if dbatches > db0:
                 declat.update((decode_s - ds0) / (dbatches - db0))
+            # acceptance EWMA over the poll window's verified proposals —
+            # the freshness the SpecDecodePolicy trades capacity on
+            if sp_prop > sp0:
+                accept.update((sp_acc - sa0) / (sp_prop - sp0))
         self._prev[wid] = (now, processed, lat_sum, tokens,
-                           prefills, prefill_s, dbatches, decode_s)
+                           prefills, prefill_s, dbatches, decode_s,
+                           sp_prop, sp_acc)
         open_sessions = rep.open_sessions()
         return ReplicaSample(
             worker_id=wid, stage=rep.stage, alive=rep.worker.alive,
@@ -237,7 +256,9 @@ class MetricsHub:
             ttft_sketch=getattr(rep, "ttft_sketch", None),
             decode_sketch=getattr(rep, "decode_sketch", None),
             models=tuple(sorted(getattr(rep, "resident", ()) or ())),
-            tenant_served=dict(getattr(rep, "tenant_served", {}) or {}))
+            tenant_served=dict(getattr(rep, "tenant_served", {}) or {}),
+            spec_proposed=sp_prop, spec_accepted=sp_acc,
+            acceptance=accept.get())
 
     def _prune_retired(self) -> None:
         """Worker ids are never reused, so per-replica state for retired
@@ -245,7 +266,7 @@ class MetricsHub:
         one entry set per scale/heal cycle."""
         live = {r.worker_id for reps in self.server.replicas for r in reps}
         for d in (self._prev, self._tput, self._lat, self._toks,
-                  self._ttft, self._declat):
+                  self._ttft, self._declat, self._accept):
             for wid in [w for w in d if w not in live]:
                 del d[wid]
         # retired workers leave the cluster registry too (teardown reclaims
@@ -332,6 +353,8 @@ class MetricsHub:
             queue_per = qd.get()
         else:
             queue_per = digest.queue_per_replica
+        accs = [s.acceptance for s in samples
+                if getattr(s, "spec_proposed", 0) > 0]
         return StageSnapshot(
             stage=stage, t=now, n_replicas=n,
             n_failed=digest.n_failed,
@@ -350,6 +373,7 @@ class MetricsHub:
             p99_ttft_s=digest.p99_ttft_s,
             p95_decode_s=digest.p95_decode_s,
             p99_decode_s=digest.p99_decode_s,
+            acceptance_rate=sum(accs) / len(accs) if accs else 0.0,
             digest=digest)
 
     # ------------------------------------------------------- state transfer
@@ -435,6 +459,34 @@ class MetricsHub:
             + (getattr(mig, "int8_fallbacks", 0) if mig else 0))
         return out
 
+    def spec_metrics(self) -> dict:
+        """Speculative-decoding counters: draft tokens proposed vs accepted
+        by the target pool (client-committed, so exact), graceful-degrade
+        fallbacks to plain decode, and dispatch counts on both sides of the
+        propose/verify split. Empty when the pipeline never ran a spec
+        round and has no draft pool, so non-speculative deployments export
+        nothing extra."""
+        rounds = getattr(self.server, "spec_rounds_total", 0)
+        proposed = getattr(self.server, "spec_proposed_total", 0)
+        accepted = getattr(self.server, "spec_accepted_total", 0)
+        fallbacks = getattr(self.server, "spec_fallbacks_total", 0)
+        verifies = proposals = 0
+        for reps in self.server.replicas:
+            for r in reps:
+                verifies += getattr(r, "spec_verifies", 0)
+                proposals += getattr(r, "spec_proposals", 0)
+        if not (rounds or fallbacks or proposals or verifies):
+            return {}
+        return {
+            "proposed_tokens_total": proposed,
+            "accepted_tokens_total": accepted,
+            "spec_rounds_total": rounds,
+            "spec_fallbacks_total": fallbacks,
+            "verify_dispatches_total": verifies,
+            "propose_dispatches_total": proposals,
+            "acceptance_rate": accepted / proposed if proposed else 0.0,
+        }
+
     # ---------------------------------------------------------- obs surface
     def trace_summary(self) -> dict:
         """Per-span-kind latency summary from the server's tracer:
@@ -480,6 +532,11 @@ class MetricsHub:
         model = self.model_metrics()
         if model:
             groups["model"] = model
+        # speculative decoding — only exported once a spec round (or a
+        # draft dispatch) actually happened
+        spec = self.spec_metrics()
+        if spec:
+            groups["spec"] = spec
         # executor dispatch/compile counters, summed over the distinct
         # executors behind the fleet (replicas may share one per stage)
         execs = {id(r.executor): r.executor

@@ -41,6 +41,11 @@ Provided policies:
   resulting decision carries its ``role`` so the controller scales the
   right pool. A stage without split pools falls back to the colocated
   policy over the whole snapshot.
+* :class:`SpecDecodePolicy` — the speculative-decoding signal: trade
+  capacity between the draft pool and the target pools on the measured
+  draft-token acceptance rate. High acceptance grows the draft pool
+  (optionally funded by draining a decode-capable replica — constant
+  fleet size); low acceptance drains it back into plain target decode.
 
 Generative serving makes scale-down stateful: draining a replica relocates
 every session pinned to it (each one re-prefills its full history on a
@@ -467,6 +472,103 @@ class DisaggregatedStagePolicy:
             if not d.hold:
                 return d
         return hold(snap.stage)
+
+
+@dataclasses.dataclass
+class SpecDecodePolicy:
+    """Acceptance-driven capacity trading between the draft pool and the
+    target (decode-capable) pools of one stage.
+
+    Speculative decoding only pays while the target pool keeps accepting
+    the draft's proposals: every accepted token is a target decode step
+    the fleet skipped, every rejected one is pure draft-side waste. The
+    per-replica acceptance EWMAs (judged on the decode side, where the
+    VERIFY dispatch compares draft tokens against target argmax) roll up
+    into ``StageSnapshot.acceptance_rate``; this policy votes on that
+    signal:
+
+    * acceptance >= ``grow_at`` and draft headroom -> grow the draft pool,
+      optionally *funded* by draining one decode-capable replica
+      (``trade=True``): constant fleet size, capacity shifted to where the
+      speedup lives. The drain-guard refuses to give up the last
+      decode-capable replica, so an over-eager trade degrades to a hold.
+    * acceptance <= ``shrink_at`` -> drain the draft pool (proposals are
+      mostly rejected; the capacity serves better as plain target decode),
+      optionally returning the replica to the decode pool.
+    * in between, or with fewer than ``min_tokens`` proposals ever judged
+      (cold EWMAs), hold.
+
+    Draft-pool votes carry ``role="draft"``; the paired trade vote carries
+    the donor/recipient pool's own role. Wrap with
+    :class:`HysteresisPolicy` per pool if the acceptance signal is noisy.
+    """
+
+    grow_at: float = 0.8
+    shrink_at: float = 0.3
+    #: total proposed tokens across the stage before any vote — the
+    #: acceptance EWMAs mean nothing until real proposals were judged
+    min_tokens: int = 16
+    min_draft: int = 0
+    max_draft: int = 4
+    #: pair every draft grow/shrink with the opposite action on a
+    #: decode-capable pool: trade capacity instead of changing fleet size
+    trade: bool = True
+    #: never drain a decode-capable pool below this many replicas
+    min_target: int = 1
+
+    def decide_many(self, snap: StageSnapshot) -> list[ScaleDecision]:
+        slices = getattr(snap, "role_slices", {}) or {}
+        draft = slices.get("draft")
+        n_draft = draft.n_replicas if draft is not None else 0
+        if n_draft == 0:
+            return [hold(snap.stage, "no draft pool", "draft")]
+        proposed = sum(getattr(r, "spec_proposed", 0)
+                       for r in snap.replicas)
+        if proposed < self.min_tokens:
+            return [hold(snap.stage,
+                         f"only {proposed} proposed tokens judged", "draft")]
+        # the donor/recipient of a trade: prefer the dedicated decode
+        # pool, fall back to colocated 'both' replicas
+        donor = None
+        for role in ("decode", "both"):
+            s = slices.get(role)
+            if s is not None and s.n_replicas > 0:
+                donor = role
+                n_target = s.n_replicas
+                break
+        acc = snap.acceptance_rate
+        if acc >= self.grow_at and n_draft < self.max_draft:
+            out = [ScaleDecision(
+                snap.stage, 1,
+                f"acceptance {acc:.2f} >= {self.grow_at:g}: "
+                f"draft capacity pays", role="draft")]
+            if self.trade and donor is not None \
+                    and n_target > self.min_target:
+                out.append(ScaleDecision(
+                    snap.stage, -1,
+                    f"traded to draft pool (acceptance {acc:.2f})",
+                    role=donor))
+            return out
+        if acc <= self.shrink_at and n_draft > self.min_draft:
+            out = [ScaleDecision(
+                snap.stage, -1,
+                f"acceptance {acc:.2f} <= {self.shrink_at:g}: "
+                f"proposals mostly rejected", role="draft")]
+            if self.trade and donor is not None:
+                out.append(ScaleDecision(
+                    snap.stage, 1,
+                    f"traded back to target pool (acceptance {acc:.2f})",
+                    role=donor))
+            return out
+        return [hold(snap.stage, f"acceptance {acc:.2f} in band", "draft")]
+
+    def decide(self, snap: StageSnapshot) -> ScaleDecision:
+        """Single-decision view (first non-hold vote) for callers that do
+        not speak ``decide_many``."""
+        for d in self.decide_many(snap):
+            if not d.hold:
+                return d
+        return hold(snap.stage, role="draft")
 
 
 @dataclasses.dataclass

@@ -262,6 +262,41 @@ def fill_kv_cache(cache: dict, k: jax.Array, v: jax.Array,
     return {"k": new_k, "v": new_v}
 
 
+def self_attention_verify(cfg: ModelConfig, p, x: jax.Array, cache: dict,
+                          t: jax.Array, *,
+                          use_rope: bool = True) -> tuple[jax.Array, dict]:
+    """K-token cache continuation: the speculative-verify hot path.
+
+    x (B,K,D) holds K known tokens for positions ``t .. t+K-1`` (the
+    session's current token plus its draft proposals). Their K/V land in
+    the cache with one slice update and all K queries attend the whole
+    cache under a per-row causal offset mask — one fused matmul sweep
+    with the same math as K sequential :func:`self_attention_decode`
+    calls, which would cost K full passes over the weights. Full
+    (non-ring, unwindowed) caches only: verification rollback relies on
+    slot j never being read by positions < j, which ring buffers break.
+    """
+    bsz, kk = x.shape[:2]
+    positions = jnp.broadcast_to(
+        t + jnp.arange(kk, dtype=jnp.int32)[None, :], (bsz, kk))
+    q, k_new, v_new = qkv_project(cfg, p, x, positions, None, use_rope)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, t, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, t, axis=1)
+    from repro.distributed import constrain as _c
+    k = _c(k, "batch", "cache_seq", "kv_heads", "head_dim")
+    v = _c(v, "batch", "cache_seq", "kv_heads", "head_dim")
+    new_cache = {"k": k, "v": v}
+
+    length = k.shape[1]
+    slots = jnp.arange(length, dtype=jnp.int32)
+    # query row i sits at position t+i: attend slots <= t+i
+    valid = slots[None, :] <= (t + jnp.arange(kk, dtype=jnp.int32))[:, None]
+    mask = jnp.broadcast_to(valid[None], (bsz, kk, length))
+    ctx = attend_reference(q, k, v, mask=mask, cap=cfg.attn_softcap,
+                           scale=cfg.hd ** -0.5)
+    return output_project(p, ctx), new_cache
+
+
 def cross_attention(cfg: ModelConfig, p, x: jax.Array,
                     enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
     """Decoder cross-attn; enc_k/enc_v are pre-projected encoder states."""

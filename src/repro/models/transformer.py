@@ -613,6 +613,44 @@ def _group_decode(cfg: ModelConfig, g: BlockGroup, gp, gcache, x, t, *,
     return x, new_cache
 
 
+def _dense_block_verify(cfg: ModelConfig, p, x, cache, t):
+    """K-position teacher-forced continuation of one dense/moe block: same
+    math as K sequential :func:`_dense_block_decode` calls, one weight
+    pass (the speculative-verify hot path). Full caches only."""
+    plus1 = cfg.gemma_norm_plus_one
+    h, new_cache = attn.self_attention_verify(
+        cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps, plus1), cache, t)
+    if "ln1_post" in p:
+        h = rms_norm(h, p["ln1_post"], cfg.norm_eps, plus1)
+    x = x + h
+    z = rms_norm(x, p["ln2"], cfg.norm_eps, plus1)
+    if "router" in p["mlp"]:
+        y, _ = moe_mod.moe_block(cfg, p["mlp"], z)
+    else:
+        y = swiglu(z, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    if "ln2_post" in p:
+        y = rms_norm(y, p["ln2_post"], cfg.norm_eps, plus1)
+    return x + y, new_cache
+
+
+def _group_verify(cfg: ModelConfig, g: BlockGroup, gp, gcache, x, t):
+    """Verify-sweep one group: x (B,K,D) known tokens at positions
+    t..t+K-1. Only full-cache attention groups qualify (dense/moe,
+    no window) — exactly the gate serving places on paged/speculative
+    executors via ``StageExecutor.full_cache``."""
+    if g.kind not in (DENSE, MOE) or g.window is not None:
+        raise ValueError(
+            f"verify sweep needs full-cache attention, got {g.kind}")
+
+    def step(x, layer):
+        layer_p, layer_c = layer
+        x, nc = _dense_block_verify(cfg, layer_p, x, layer_c, t)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(step, x, (gp, gcache))
+    return x, new_cache
+
+
 def _shared_attn_decode(cfg: ModelConfig, shared, lora, x, xn, cache, t):
     p_attn = _fold_lora(shared["attn"], lora)
     h, new_cache = attn.self_attention_decode(

@@ -4,6 +4,7 @@ from .envelope import (
     Kind,
     ROLE_BOTH,
     ROLE_DECODE,
+    ROLE_DRAFT,
     ROLE_PREFILL,
     payload_nbytes,
 )
@@ -23,6 +24,7 @@ from .partition import (
     stage_init_cache,
     stage_params,
     stage_prefill,
+    stage_verify,
 )
 from .pipeline import CLIENT, PipelineServer
 from .registry import ModelEntry, ModelRegistry, ResidencyError
@@ -31,12 +33,12 @@ from .router import ReplicaRouter
 __all__ = [
     "EngineSession", "ServeEngine", "sample_tokens",
     "Envelope", "Kind", "payload_nbytes",
-    "ROLE_BOTH", "ROLE_DECODE", "ROLE_PREFILL",
+    "ROLE_BOTH", "ROLE_DECODE", "ROLE_DRAFT", "ROLE_PREFILL",
     "StageExecutor",
     "PagePool", "PagedCacheHandle", "PagedView",
     "gather_pages", "prefix_chunk_keys",
     "StageSpec", "split_stages", "stage_decode", "stage_forward",
-    "stage_init_cache", "stage_params", "stage_prefill",
+    "stage_init_cache", "stage_params", "stage_prefill", "stage_verify",
     "CLIENT", "PipelineServer", "ReplicaRouter",
     "ModelEntry", "ModelRegistry", "ResidencyError",
 ]

@@ -60,16 +60,34 @@ from repro.obs.trace import TraceContext
 ROLE_BOTH = "both"
 ROLE_PREFILL = "prefill"
 ROLE_DECODE = "decode"
+#: speculative-decoding proposer pool: replicas running the *small* draft
+#: model that proposes k tokens per session (PROPOSE), verified in one
+#: batched target-model dispatch on the decode pool (VERIFY). Draft
+#: replicas hold no target-model state, so the pool is fully disposable —
+#: killing/draining it degrades sessions to plain decode, never fails them.
+ROLE_DRAFT = "draft"
 
-#: worlds/replicas able to serve work of a given role
+#: worlds/replicas able to serve work of a given role. ``draft`` work runs
+#: the draft model's weights, so only draft replicas qualify — a ``both``
+#: world must NOT appear here (it holds target-model state only).
 ROLE_CAPABLE = {
     ROLE_PREFILL: (ROLE_PREFILL, ROLE_BOTH),
     ROLE_DECODE: (ROLE_DECODE, ROLE_BOTH),
     ROLE_BOTH: (ROLE_BOTH,),
+    ROLE_DRAFT: (ROLE_DRAFT,),
 }
 
 
 class Kind(enum.IntEnum):
+    """Wire kinds.
+
+    Numbering contract: kind values are *frozen wire constants*. SCORE=0
+    through SWAP=8 shipped in earlier releases and snapshots/recorders
+    persist raw ints, so existing values must never be renumbered or
+    reused — new kinds append at the end (PROPOSE=9, VERIFY=10, next
+    free: 11). tests/test_envelope_kinds.py pins every value.
+    """
+
     SCORE = 0     # stateless teacher-forced batch (legacy submit() path)
     PREFILL = 1   # build a session's per-stage KV cache from token history
     DECODE = 2    # one autoregressive step against an open session
@@ -85,6 +103,11 @@ class Kind(enum.IntEnum):
     #               once the accompanying LOAD stream is installed
     SWAP = 8      # residency-change header: the LOAD stream that follows is
     #               one leg of an atomic swap ``model`` -> stream's model
+    PROPOSE = 9   # speculative decode, draft side: full committed history in,
+    #               k greedy draft-model proposals out (draft pool only)
+    VERIFY = 10   # speculative decode, target side: current token + k draft
+    #               proposals in one batched target dispatch; the accepted
+    #               prefix (plus the free bonus token) comes back as payload
 
 
 @dataclasses.dataclass
@@ -125,6 +148,13 @@ class Envelope:
     #: client keys per-tenant latency sketches on it. None = untagged
     #: (single implicit tenant).
     tenant: Optional[str] = None
+    #: speculative decoding: the k-token budget of a PROPOSE, or the number
+    #: of proposed tokens carried by a VERIFY. 0 = not speculative traffic.
+    spec_k: int = 0
+    #: VERIFY through a multi-stage pipeline only: the proposed token block
+    #: (B, k+1) riding beside the hidden-state payload, so the *last* stage
+    #: (the one producing logits) can judge acceptance. None elsewhere.
+    spec_tokens: Optional[Any] = None
     #: causal span context (trace_id, span_id, parent_id): every stage that
     #: does work on this envelope parents its span here, so the session's
     #: whole lifecycle — including RETRY bounces and re-prefills — rebuilds

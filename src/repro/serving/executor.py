@@ -48,6 +48,7 @@ from .partition import (
     stage_init_cache,
     stage_params,
     stage_prefill,
+    stage_verify,
     split_stages,
 )
 
@@ -124,12 +125,63 @@ class StageExecutor:
 
         self._decode_many = jax.jit(_many)
 
+        # Speculative verification: K stacked tokens per session (the
+        # current token plus k draft proposals) integrated in ONE dispatch.
+        # Same vmap-over-stacked-caches shape as ``_many``; the inner
+        # per-session body is a single teacher-forced K-position sweep
+        # (``stage_verify``) on full-cache stages — one weight pass where
+        # K sequential decode steps would cost K — with the sequential
+        # loop kept as the fallback for ring/SSM cache stages. K is
+        # static (read from the input shape), so each (width, K) pair is
+        # one fused executable. Last stage emits (B, K, V) logits; hidden
+        # stages emit (B, K, D).
+        full_cache = self.full_cache
+
+        def _vmany(sp, caches, xs, ts):
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+            x = jnp.stack(xs)
+            k = xs[0].shape[1]
+
+            def one(c, xi, ti):
+                if full_cache:
+                    return stage_verify(cfg, spec, sp, c, xi, ti,
+                                        tokens_in=tokens_in)
+                ys = []
+                for j in range(k):
+                    y, c = stage_decode(cfg, spec, sp, c, xi[:, j:j + 1],
+                                        ti + j, tokens_in=tokens_in)
+                    ys.append(y)
+                out = (jnp.stack(ys, axis=1) if ys[0].ndim == 2
+                       else jnp.concatenate(ys, axis=1))
+                return out, c
+
+            outs, new_stacked = jax.vmap(one, in_axes=(0, 0, 0))(
+                stacked, x, ts)
+            n = len(caches)
+            return (tuple(outs[i] for i in range(n)),
+                    tuple(jax.tree.map(lambda l: l[i], new_stacked)
+                          for i in range(n)))
+
+        self._verify_many_fn = jax.jit(_vmany)
+        self._paged_verify = None
+        #: jitted draft rollouts, one per proposal budget k (the greedy
+        #: argmax feedback loop makes k part of the program, not a shape)
+        self._propose_fns: dict = {}
+        self._propose_shapes_seen: set[tuple] = set()
+
         self.stats = {"score_calls": 0, "prefill_calls": 0,
                       "decode_batches": 0, "decode_steps": 0,
                       "first_call_compile_s": 0.0, "warmed_dispatches": 0,
-                      "paged_decode_batches": 0, "paged_degrades": 0}
+                      "paged_decode_batches": 0, "paged_degrades": 0,
+                      "verify_batches": 0, "verify_steps": 0,
+                      "verify_tokens": 0, "propose_calls": 0,
+                      "propose_tokens": 0}
         #: fused convoy widths already compiled (first-dispatch timing)
         self._widths_seen: set[int] = set()
+        #: fused verify (width, K) shapes already compiled — part of the
+        #: warm profile so bootstrap precompiles verify buckets too
+        self._verify_widths_seen: set[tuple] = set()
+        self._paged_verify_widths_seen: set[tuple] = set()
         #: post-bucketing prefill input shapes served so far — together with
         #: the widths this is the executor's *warm profile*: exactly the
         #: executables a same-role executor needs compiled (WarmBootstrap)
@@ -265,6 +317,69 @@ class StageExecutor:
         self.stats["decode_steps"] += n
         return list(zip(outs[:n], new_caches[:n]))
 
+    def _make_propose(self, k: int):
+        cfg, spec, tokens_in = self.cfg, self.spec, self.spec.first
+        full_cache = self.full_cache
+
+        def _roll(sp, cache, xs, t):
+            c = cache
+            p = xs.shape[1]
+            # integrate the P pending tokens in one teacher-forced sweep
+            # where the cache layout allows it; the k-1 proposal steps
+            # after it are inherently sequential (argmax feedback)
+            if full_cache:
+                y, c = stage_verify(cfg, spec, sp, c, xs, t,
+                                    tokens_in=tokens_in)
+                y = y[:, -1]
+            else:
+                y = None
+                for j in range(p):
+                    y, c = stage_decode(cfg, spec, sp, c, xs[:, j:j + 1],
+                                        t + j, tokens_in=tokens_in)
+            tok = jnp.argmax(y, axis=-1).astype(jnp.int32)[:, None]
+            props = [tok]
+            for i in range(1, k):
+                y, c = stage_decode(cfg, spec, sp, c, props[-1],
+                                    t + p + i - 1, tokens_in=tokens_in)
+                props.append(
+                    jnp.argmax(y, axis=-1).astype(jnp.int32)[:, None])
+            return jnp.concatenate(props, axis=1), c
+
+        return jax.jit(_roll)
+
+    def propose_rollout(self, cache: Any, xs: jax.Array, t, k: int
+                        ) -> tuple[jax.Array, Any]:
+        """Draft-side speculative proposal in ONE dispatch.
+
+        Integrates the P pending history tokens ``xs`` (B, P) at positions
+        ``t .. t+P-1``, then rolls out ``k`` greedy proposals with argmax
+        feedback — the whole integrate+propose loop is jit-fused (one
+        executable per (P, k), both small and bounded by the speculation
+        budget), so a proposal round costs one dispatch no matter how many
+        tokens the last verify committed. Sequential single-token decodes
+        here would cost P+k-1 dispatches per round and erase the
+        speculative win at small-model scale. Full-model (logits-emitting)
+        contiguous executors only — the draft pool never pages and never
+        splits across stages. Returns (proposals (B, k) int32, new cache).
+        """
+        k = int(k)
+        fn = self._propose_fns.get(k)
+        if fn is None:
+            fn = self._make_propose(k)
+            self._propose_fns[k] = fn
+        xs = jnp.asarray(xs, jnp.int32)
+        key = (int(xs.shape[0]), int(xs.shape[1]), k)
+        first = key not in self._propose_shapes_seen
+        self._propose_shapes_seen.add(key)
+        t0 = time.monotonic()
+        props, new_cache = fn(self.sparams, cache, xs, jnp.int32(t))
+        if first:
+            jax.block_until_ready(props)
+            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        self.stats["propose_calls"] += 1
+        self.stats["propose_tokens"] += k
+        return props, new_cache
+
     def _pad_cache(self, like: Any) -> Any:
         """All-zeros donor cache for convoy pad slots, cached per leaf
         signature: padding with ``caches[0]`` stacked a real session's
@@ -277,6 +392,204 @@ class StageExecutor:
             donor = jax.tree.map(jnp.zeros_like, like)
             self._pad_caches[key] = donor
         return donor
+
+    # -------------------------------------------------------- spec. verify
+    def verify_many(self, caches: list[Any], xs: list[jax.Array],
+                    ts: list[int]) -> list[tuple[jax.Array, Any]]:
+        """One fused *speculative verification* dispatch over N sessions.
+
+        Each ``xs[i]`` stacks K tokens (the session's current committed
+        token plus its k=K-1 draft proposals) — or K hidden-state columns
+        on downstream stages — integrated at positions ``ts[i]..ts[i]+K-1``
+        in one executable, exactly like ``decode_many`` but K-deep. The
+        last stage returns (B, K, V) logits so the caller can judge the
+        accepted prefix token-by-token (greedy parity is exact: position
+        j's logits saw precisely the tokens 0..ts[i]+j-1). Rejected-suffix
+        cache writes land in slots the decode validity mask never reads;
+        paged handles additionally roll trailing pages back via
+        :meth:`commit_verify`. Widths bucket to powers of two like decode
+        convoys; each (width, K) pair compiles once.
+        """
+        paged_idx = [i for i, c in enumerate(caches)
+                     if isinstance(c, PagedCacheHandle)]
+        if paged_idx:
+            results: list = [None] * len(caches)
+            contig_idx = [i for i in range(len(caches))
+                          if not isinstance(caches[i], PagedCacheHandle)]
+            paged_out = self._paged_verify_many(
+                [caches[i] for i in paged_idx],
+                [xs[i] for i in paged_idx], [ts[i] for i in paged_idx])
+            for i, r in zip(paged_idx, paged_out):
+                results[i] = r
+            if contig_idx:
+                contig_out = self.verify_many(
+                    [caches[i] for i in contig_idx],
+                    [xs[i] for i in contig_idx], [ts[i] for i in contig_idx])
+                for i, r in zip(contig_idx, contig_out):
+                    results[i] = r
+            return results
+        n = len(caches)
+        k = int(xs[0].shape[1])
+        width = n if n == 1 else self._width_bucket(n)
+        if width > n:
+            pad = width - n
+            caches = list(caches) + [self._pad_cache(caches[0])] * pad
+            xs = list(xs) + [xs[0]] * pad
+            ts = list(ts) + [0] * pad
+        t = jnp.asarray(ts, jnp.int32)
+        first = (width, k) not in self._verify_widths_seen
+        self._verify_widths_seen.add((width, k))
+        t0 = time.monotonic()
+        outs, new_caches = self._verify_many_fn(
+            self.sparams, tuple(caches), tuple(xs), t)
+        if first:
+            jax.block_until_ready(outs)
+            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        self.stats["verify_batches"] += 1
+        self.stats["verify_steps"] += n
+        self.stats["verify_tokens"] += n * k
+        return list(zip(outs[:n], new_caches[:n]))
+
+    def commit_verify(self, cache: Any, length: int) -> Any:
+        """Finalize a session's cache after verification accepted
+        ``length`` total tokens (slots ``0..length-1`` live). Contiguous
+        caches need nothing — rejected-suffix slots are overwritten before
+        any read. Paged handles pop the trailing pages the speculative
+        writes grew/COW'd past the accepted prefix (``PagePool.truncate``),
+        so a low-acceptance session cannot leak pool occupancy."""
+        if isinstance(cache, PagedCacheHandle):
+            cache.pool.truncate(cache, int(length))
+        return cache
+
+    def _paged_verify_many(self, handles: list, xs: list,
+                           ts: list) -> list[tuple[jax.Array, Any]]:
+        """Paged speculative verification: prepare all K write slots per
+        lane under the pool lock (growth + COW, so every written page is
+        lane-exclusive), then one jitted dispatch that gathers each lane's
+        cache, runs K decode steps, and scatters back the fixed-size page
+        window covering the written slots. Any lane whose upkeep fails
+        degrades to a contiguous cache and rides the contiguous verify."""
+        n = len(handles)
+        k = int(xs[0].shape[1])
+        results: list = [None] * n
+        caches = list(handles)
+        live = []
+        degraded = []
+        pool = self._ensure_pool()
+        # writes span at most W pages; a K too large for the per-seq table
+        # window cannot dispatch paged at all
+        w_need = (k + pool.page_size - 2) // pool.page_size + 1
+        with pool.lock:
+            for i, (h, t) in enumerate(zip(handles, ts)):
+                ok = (h.pool is self.pool and w_need <= pool.pages_per_seq
+                      and int(t) + k <= self.max_len)
+                if ok:
+                    for j in range(k):
+                        if not self.pool.prepare_write(h, int(t) + j):
+                            ok = False
+                            break
+                if ok:
+                    live.append(i)
+                else:
+                    caches[i] = h.pool.materialize(h)
+                    h.pool.release(h)
+                    self.stats["paged_degrades"] += 1
+                    degraded.append(i)
+            if live:
+                outs = self._dispatch_paged_verify(
+                    [caches[i] for i in live], [xs[i] for i in live],
+                    [ts[i] for i in live])
+                for i, r in zip(live, outs):
+                    results[i] = r
+        if degraded:
+            fallback = self.verify_many([caches[i] for i in degraded],
+                                        [xs[i] for i in degraded],
+                                        [ts[i] for i in degraded])
+            for i, r in zip(degraded, fallback):
+                results[i] = r
+        return results
+
+    def _dispatch_paged_verify(self, handles: list, xs: list,
+                               ts: list) -> list[tuple[jax.Array, Any]]:
+        pool = self.pool
+        n = len(handles)
+        k = int(xs[0].shape[1])
+        width = n if n == 1 else self._width_bucket(n)
+        tables = np.zeros((width, pool.pages_per_seq), np.int32)
+        for i, h in enumerate(handles):
+            tables[i, :len(h.pages)] = h.pages
+        xs_p = list(xs) + [xs[0]] * (width - n)
+        ts_p = list(ts) + [0] * (width - n)
+        fn = self._get_paged_verify()
+        first = (width, k) not in self._paged_verify_widths_seen
+        self._paged_verify_widths_seen.add((width, k))
+        t0 = time.monotonic()
+        outs, new_leaves = fn(self.sparams, tuple(pool.leaves),
+                              jnp.asarray(tables),
+                              tuple(xs_p), jnp.asarray(ts_p, jnp.int32))
+        if first:
+            jax.block_until_ready(outs)
+            self.stats["first_call_compile_s"] += time.monotonic() - t0
+        pool.leaves = list(new_leaves)
+        for h, t in zip(handles, ts):
+            h.length = max(h.length, int(t) + k)
+        self.stats["verify_batches"] += 1
+        self.stats["verify_steps"] += n
+        self.stats["verify_tokens"] += n * k
+        self.stats["paged_decode_batches"] += 1
+        return [(outs[i], handles[i]) for i in range(n)]
+
+    def _get_paged_verify(self):
+        if self._paged_verify is None:
+            cfg, spec, pool = self.cfg, self.spec, self.pool
+            tokens_in = spec.first
+            axes = tuple(pool.axes)
+            page = pool.page_size
+            pps = pool.pages_per_seq
+            structure = jax.tree.structure(pool.skeleton)
+
+            def _many_pv(sp, pool_leaves, tables, xs, ts):
+                def one(table, x, t):
+                    leaves = kvpool.gather_pages(pool_leaves, axes, table,
+                                                 page)
+                    cache = jax.tree.unflatten(structure, leaves)
+                    kk = x.shape[1]
+                    # paged executors are full-cache by construction, so
+                    # the K positions verify in one teacher-forced sweep
+                    out, cache = stage_verify(cfg, spec, sp, cache, x, t,
+                                              tokens_in=tokens_in)
+                    new_leaves = structure.flatten_up_to(cache)
+                    # fixed page window covering every written slot; when
+                    # the clamp pulls the window start below t//page the
+                    # extra leading pages scatter back bit-identical
+                    # gathered content (a value-level no-op even for
+                    # shared pages)
+                    w = (kk + page - 2) // page + 1
+                    li0 = jnp.minimum(t // page, pps - w)
+                    pgs = []
+                    for leaf, ax in zip(new_leaves, axes):
+                        pgs.append(jnp.stack([
+                            jax.lax.dynamic_slice_in_dim(
+                                leaf, (li0 + wi) * page, page, axis=ax)
+                            for wi in range(w)]))
+                    phys = jax.lax.dynamic_slice_in_dim(table, li0, w)
+                    return out, pgs, phys
+
+                x = jnp.stack(xs)
+                outs, pgs, phys = jax.vmap(one, in_axes=(0, 0, 0))(
+                    tables, x, ts)
+                # written pages are lane-exclusive (prepare_write COW'd
+                # them); unwritten window pages rewrite their own bytes;
+                # zero table entries and pad lanes land on scratch page 0
+                flat_phys = phys.reshape(-1)
+                new_pool = tuple(
+                    leaf.at[flat_phys].set(
+                        pg.reshape((-1,) + pg.shape[2:]))
+                    for leaf, pg in zip(pool_leaves, pgs))
+                return outs, new_pool
+
+            self._paged_verify = jax.jit(_many_pv)
+        return self._paged_verify
 
     # ------------------------------------------------------------ paged mode
     def _ensure_pool(self) -> PagePool:
@@ -425,7 +738,9 @@ class StageExecutor:
         convoy widths dispatched so far (WarmBootstrap ships this from a
         peer replica to a fresh one)."""
         return {"prefill": sorted(self._prefill_shapes_seen),
-                "widths": sorted(self._widths_seen)}
+                "widths": sorted(self._widths_seen),
+                "verify": sorted(self._verify_widths_seen),
+                "propose": sorted(self._propose_shapes_seen)}
 
     def obs_stats(self) -> dict:
         """Flat numeric view of the executor for the metrics export
@@ -435,6 +750,9 @@ class StageExecutor:
         out["prefill_shapes_compiled"] = len(self._prefill_shapes_seen)
         out["decode_widths_compiled"] = len(self._widths_seen)
         out["paged_widths_compiled"] = len(self._paged_widths_seen)
+        out["verify_widths_compiled"] = (len(self._verify_widths_seen)
+                                        + len(self._paged_verify_widths_seen))
+        out["propose_shapes_compiled"] = len(self._propose_shapes_seen)
         if self.pool is not None:
             out.update(self.pool.stats())
         return out
@@ -466,6 +784,10 @@ class StageExecutor:
         dispatches = 0
         widths = (list(profile.get("widths", []))
                   if self.role != ROLE_PREFILL else [])
+        verifies = (list(profile.get("verify", []))
+                    if self.role != ROLE_PREFILL else [])
+        proposes = (list(profile.get("propose", []))
+                    if self.role != ROLE_PREFILL else [])
         for shape, dtype in profile.get("prefill", []):
             x = jnp.zeros(shape, dtype=jnp.dtype(dtype))
             # go through the jitted callable directly: prefill() would
@@ -482,15 +804,43 @@ class StageExecutor:
             step_x = jnp.zeros((shape[0], 1) + tuple(shape[2:]),
                                dtype=jnp.dtype(dtype))
             t = min(shape[1], self.max_len - 1)
-            for w in widths:
-                outs = self.decode_many([cache] * w, [step_x] * w, [t] * w)
-                jax.block_until_ready(outs[0][0])
-                dispatches += 1
-            if not widths:
-                out2, _ = self.decode(cache, step_x, t)
-                jax.block_until_ready(out2)
-                dispatches += 1
+            dispatches += self._warm_widths(cache, step_x, t, widths,
+                                            verifies, proposes)
         self.stats["warmed_dispatches"] += dispatches
+        return dispatches
+
+    def _warm_widths(self, cache, step_x, t, widths, verifies=(),
+                     proposes=()) -> int:
+        """Replay the decode convoy widths (and the verify (width, K)
+        buckets) against one live cache — the shared tail of both warm
+        paths. Falls back to a single-step decode when the peer never
+        dispatched a fused convoy."""
+        dispatches = 0
+        for w in widths:
+            outs = self.decode_many([cache] * w, [step_x] * w, [t] * w)
+            jax.block_until_ready(outs[0][0])
+            dispatches += 1
+        if not widths:
+            out, _ = self.decode(cache, step_x, t)
+            jax.block_until_ready(out)
+            dispatches += 1
+        for w, k in verifies:
+            vt = min(t, self.max_len - k)
+            if vt < 0:
+                continue
+            vx = jnp.concatenate([step_x] * k, axis=1)
+            outs = self.verify_many([cache] * w, [vx] * w, [vt] * w)
+            jax.block_until_ready(outs[0][0])
+            dispatches += 1
+        for entry in proposes:
+            _, p, kk = entry     # (batch, pending, k) — replayed at the
+            pt = min(t, self.max_len - p - kk + 1)   # cache's own batch
+            if pt < 0:
+                continue
+            px = jnp.concatenate([step_x] * p, axis=1)
+            props, _ = self.propose_rollout(cache, px, pt, kk)
+            jax.block_until_ready(props)
+            dispatches += 1
         return dispatches
 
     def _warm_decode_only(self, profile: dict) -> int:
@@ -500,19 +850,14 @@ class StageExecutor:
         covers every decode executable the peer has served."""
         dispatches = 0
         widths = list(profile.get("widths", []))
+        verifies = list(profile.get("verify", []))
         batches = sorted({(shape[0], tuple(shape[2:]), dtype)
                           for shape, dtype in profile.get("prefill", [])})
         for bsz, tail, dtype in batches:
             cache = stage_init_cache(self.cfg, self.spec, bsz, self.max_len)
             step_x = jnp.zeros((bsz, 1) + tail, dtype=jnp.dtype(dtype))
             t = self.max_len - 1
-            for w in widths:
-                outs = self.decode_many([cache] * w, [step_x] * w, [t] * w)
-                jax.block_until_ready(outs[0][0])
-                dispatches += 1
-            if not widths:
-                out, _ = self.decode(cache, step_x, t)
-                jax.block_until_ready(out)
-                dispatches += 1
+            dispatches += self._warm_widths(cache, step_x, t, widths,
+                                            verifies)
         self.stats["warmed_dispatches"] += dispatches
         return dispatches

@@ -457,6 +457,23 @@ class PagePool:
         handle.keys = []
         self.installed_sessions -= 1
 
+    @_locked
+    def truncate(self, handle: PagedCacheHandle, length: int) -> None:
+        """Roll a session back to ``length`` committed tokens: pop and
+        unref every trailing page beyond the one holding the last kept
+        slot. The speculative-verify rollback path — rejected-suffix
+        writes may have grown/COW'd pages past the accepted prefix, and
+        without this those exclusively-owned pages would sit refcounted
+        until session end (an occupancy leak the pool's free list never
+        sees). Content of the kept tail page is NOT rewound: decode's
+        validity mask never reads slots ≥ ``length``, and the next write
+        overwrites them, so page-granular truncation is exact."""
+        keep = -(-max(int(length), 0) // self.page_size)
+        while len(handle.pages) > keep:
+            self._unref(handle.pages.pop())
+            handle.keys.pop()
+        handle.length = min(handle.length, int(length))
+
     # ------------------------------------------------------------------ view
     @_locked
     def materialize(self, handle: PagedCacheHandle):

@@ -138,6 +138,25 @@ def stage_decode(cfg: ModelConfig, spec: StageSpec, sparams: dict, cache,
     return x, new_cache
 
 
+def stage_verify(cfg: ModelConfig, spec: StageSpec, sparams: dict, cache,
+                 x: jax.Array, t: jax.Array, *, tokens_in: bool):
+    """K-token teacher-forced continuation for one stage (speculative
+    verification): x is (B,K) known tokens or (B,K,D) hidden for positions
+    ``t..t+K-1``. One fused weight pass with the same math as K sequential
+    :func:`stage_decode` calls. Last stage returns (B,K,V) logits — one row
+    per verified position. Full-cache (dense/moe, unwindowed) stages only.
+    """
+    if tokens_in:
+        x = tfm.embed_tokens(cfg, sparams, x)
+    new_cache = []
+    for g, gp, gc in zip(_stage_groups(cfg, spec), sparams["groups"], cache):
+        x, nc = tfm._group_verify(cfg, g, gp, gc, x, t)
+        new_cache.append(nc)
+    if spec.last:
+        return tfm.lm_logits(cfg, sparams, x), new_cache
+    return x, new_cache
+
+
 def stage_init_cache(cfg: ModelConfig, spec: StageSpec, batch: int,
                      max_len: int, dtype=None):
     sub = dataclasses.replace(cfg, groups=tuple(_stage_groups(cfg, spec)))

@@ -116,6 +116,7 @@ from .envelope import (
     ROLE_BOTH,
     ROLE_CAPABLE,
     ROLE_DECODE,
+    ROLE_DRAFT,
     ROLE_PREFILL,
 )
 from .executor import StageExecutor
@@ -229,6 +230,13 @@ class _Replica:
         #    so p95 TTFT / p99 decode survive aggregation (means cannot) --
         self.ttft_sketch = LogSketch()
         self.decode_sketch = LogSketch()
+        # -- speculative decoding counters (control-plane acceptance
+        #    signal: MetricsHub folds proposed/accepted deltas into the
+        #    per-replica acceptance EWMA that SpecDecodePolicy votes on) --
+        self.spec_verifies = 0       # fused VERIFY dispatches served here
+        self.spec_proposed = 0       # draft tokens offered to verification
+        self.spec_accepted = 0       # draft tokens verification accepted
+        self.spec_proposals = 0      # PROPOSE rounds served (draft pool)
         # -- weighted-deficit fair scheduler state (multi-tenant decode) --
         #: tenant -> remaining deficit credits for batch-slot arbitration
         self._credits: dict[str, float] = {}
@@ -339,7 +347,8 @@ class _Replica:
                            error=repr(e))
                 rec.dump("unhandled_failure", worker=self.worker_id)
                 self.drop_session(env.session_id)
-                if env.kind in (Kind.PREFILL, Kind.DECODE):
+                if env.kind in (Kind.PREFILL, Kind.DECODE, Kind.VERIFY,
+                                Kind.PROPOSE):
                     await self._send_retry(env)
             finally:
                 self.inflight -= 1
@@ -348,7 +357,7 @@ class _Replica:
     async def _dispatch(self, ex: StageExecutor, loop, env: Envelope,
                         t0: float) -> None:
         sid = env.session_id
-        if env.kind in (Kind.DECODE, Kind.FINISH):
+        if env.kind in (Kind.DECODE, Kind.FINISH, Kind.VERIFY):
             target = self.migrated.get(sid)
             if target is not None:
                 # session handed off after this envelope was already sent
@@ -370,12 +379,12 @@ class _Replica:
             # WarmBootstrap); one in a serve inbox is a misroute — drop it
             # rather than decode it
             return
-        if kind in (Kind.SCORE, Kind.PREFILL, Kind.DECODE):
+        if kind in (Kind.SCORE, Kind.PREFILL, Kind.DECODE, Kind.VERIFY):
             name = env.model or self.server.default_model
             if name not in self.resident:
                 # routed here before a swap/unload retagged the rotation —
                 # bounce rather than run foreign weights
-                if kind is Kind.DECODE or kind is Kind.PREFILL:
+                if kind in (Kind.DECODE, Kind.PREFILL, Kind.VERIFY):
                     await self._send_retry(env)
                 return
             ex = self.executor_for(env.model)
@@ -393,6 +402,10 @@ class _Replica:
                 self.service_s_sum += time.monotonic() - t0
         elif kind is Kind.PREFILL:
             await self._handle_prefill(ex, loop, env, t0)
+        elif kind is Kind.PROPOSE:
+            await self._handle_propose(loop, env, t0)
+        elif kind is Kind.VERIFY:
+            await self._handle_verify(ex, loop, env, t0)
         else:
             await self._handle_decode(ex, loop, env, t0)
 
@@ -550,6 +563,172 @@ class _Replica:
             for e in batch:
                 self.active.discard(e.session_id)
 
+    async def _handle_propose(self, loop, env: Envelope, t0: float) -> None:
+        """Draft side of speculative decoding. The payload is the session's
+        FULL committed history (B, S): draft state is disposable by
+        construction — a fresh, healed, or re-picked draft replica simply
+        re-prefills the history locally, so a draft-pool kill never costs
+        a single *target*-pool token. Known sessions integrate only the
+        tokens committed since the last round. Replies with ``spec_k``
+        greedy draft-model proposals (B, k) int32."""
+        if self.draining:
+            await self._send_retry(env)
+            return
+        ex = self.executor          # always the draft-model executor
+        sid = env.session_id
+        hist = jnp.asarray(env.payload, jnp.int32)
+        s = int(hist.shape[1])
+        bsz = int(hist.shape[0])
+        # proposal i is written at slot s+i-1; clamp k so the last write
+        # stays inside the draft cache (k=1 writes nothing beyond history)
+        k = max(1, min(int(env.spec_k) or 1, ex.max_len - s + 1))
+        sess = self.sessions.get(sid)
+
+        def _propose():
+            cache = sess.cache if sess is not None else None
+            done = sess.step if sess is not None else 0
+            if cache is None or done < 1 or done > s:
+                # unknown/stale session: rebuild the draft cache from the
+                # full history, then let the rollout re-feed the last
+                # token (an exact no-op rewrite for full caches) so the
+                # integrate+propose path below is the only compute shape
+                _, cache = ex.prefill(hist)
+                done = s - 1
+            elif done >= s:
+                done = s - 1    # replayed round: idempotent re-decode
+            # ONE fused dispatch: integrate hist[done:] and roll out k
+            # greedy proposals (see StageExecutor.propose_rollout)
+            props, cache = ex.propose_rollout(cache, hist[:, done:],
+                                              done, k)
+            return np.asarray(props), cache
+
+        try:
+            props, cache = await loop.run_in_executor(None, _propose)
+        except Exception:  # noqa: BLE001 — degrade, never fail the client
+            self.drop_session(sid)
+            await self._send_retry(env)
+            return
+        now = time.monotonic()
+        if sess is not None:
+            sess.cache, sess.step, sess.touched = cache, s, now
+        else:
+            self.sessions[sid] = _Session(
+                cache=cache, batch=bsz, step=s, touched=now,
+                trace=env.trace, tenant=env.tenant)
+            self.server.registry.acquire(self.worker_id,
+                                         self.server.default_model)
+        self.spec_proposals += 1
+        self.server.tracer.span(env.trace, "propose", t0, self.worker_id)
+        await self._forward_routed(
+            dataclasses.replace(env, payload=props, spec_k=k))
+        self.processed += 1
+        self.service_s_sum += time.monotonic() - t0
+
+    async def _handle_verify(self, ex: StageExecutor, loop, env: Envelope,
+                             t0: float) -> None:
+        """Target side of speculative decoding: integrate the session's
+        current token plus its k draft proposals in ONE fused dispatch
+        (``verify_many``), coalescing compatible queued VERIFYs exactly
+        like decode steps. The last stage judges the accepted prefix by
+        greedy argmax — token j's logits saw precisely the verified tokens
+        before it, so the committed block (accepted proposals + one bonus
+        target token) is bit-identical to plain decode. Intermediate
+        stages forward K hidden columns with the proposal block riding
+        ``spec_tokens``."""
+        sess0 = self.sessions.get(env.session_id)
+        if self.draining or sess0 is None:
+            self.drop_session(env.session_id)
+            await self._send_retry(env)
+            return
+        ex = self.executor_for(sess0.model)
+        batch: list[Envelope] = [env]
+        self.active.add(env.session_id)
+        max_n = self.server.microbatch_max
+        deadline = t0 + self.server.microbatch_wait_s
+        try:
+            while len(batch) < max_n:
+                pulled = self._pull_compatible(env, max_n - len(batch), batch)
+                if pulled:
+                    continue
+                if (len(self.sessions) <= len(batch)
+                        or time.monotonic() >= deadline):
+                    break
+                await asyncio.sleep(0)
+            live: list[tuple[Envelope, _Session]] = []
+            for e in batch:
+                sess = self.sessions.get(e.session_id)
+                if sess is None:
+                    await self._send_retry(e)
+                else:
+                    live.append((e, sess))
+            if not live:
+                return
+            try:
+                outs = await loop.run_in_executor(
+                    None, ex.verify_many,
+                    [s.cache for _, s in live],
+                    [e.payload for e, _ in live],
+                    [e.step for e, _ in live])
+            except Exception:  # noqa: BLE001 — bounce every coalesced
+                # session, same discipline as a failed fused decode
+                for e, _ in live:
+                    self.drop_session(e.session_id)
+                    await self._send_retry(e)
+                return
+            now = time.monotonic()
+            self.decode_batches += 1
+            last = self.server._is_last(self.stage)
+            tr = self.server.tracer
+            for (e, sess), (y, new_cache) in zip(live, outs):
+                if last:
+                    toks = np.asarray(e.spec_tokens
+                                      if e.spec_tokens is not None
+                                      else e.payload)
+                    props = toks[:, 1:]
+                    g = np.argmax(np.asarray(y), axis=-1)   # (B, K) greedy
+                    k = props.shape[1]
+                    m = 0
+                    while m < k and bool(np.all(props[:, m] == g[:, m])):
+                        m += 1
+                    committed = g[:, :m + 1].astype(np.int32)
+                    # roll rejected-suffix pages back before anything else
+                    # can observe the handle (paged mode; contiguous no-op)
+                    new_cache = ex.commit_verify(new_cache, e.step + m + 1)
+                    sess.step = e.step + m
+                    self.spec_verifies += 1
+                    self.spec_proposed += k * sess.batch
+                    self.spec_accepted += m * sess.batch
+                    self.decode_steps += m + 1
+                    self.tokens_out += sess.batch * (m + 1)
+                    reply = dataclasses.replace(e, payload=committed,
+                                                spec_tokens=None)
+                else:
+                    # acceptance is judged downstream; keep this stage's
+                    # cursor conservative (re-integration of the accepted
+                    # suffix is an idempotent rewrite for full caches)
+                    sess.step = e.step
+                    reply = dataclasses.replace(
+                        e, payload=y,
+                        spec_tokens=(e.spec_tokens
+                                     if e.spec_tokens is not None
+                                     else np.asarray(e.payload)))
+                sess.cache = new_cache
+                sess.touched = now
+                t_name = e.tenant or "default"
+                self.tenant_served[t_name] = (
+                    self.tenant_served.get(t_name, 0) + 1)
+                tr.span(e.trace, "verify", t0, self.worker_id)
+                await self._forward_pinned(reply)
+                self.processed += 1
+            dt = time.monotonic() - t0
+            self.service_s_sum += dt
+            self.decode_s_sum += dt
+            self.decode_sketch.insert(dt)
+        finally:
+            self.inflight -= len(batch) - 1
+            for e in batch:
+                self.active.discard(e.session_id)
+
     def _pull_compatible(self, proto: Envelope, n: int,
                          batch: list[Envelope]) -> int:
         """Drain queued envelopes: coalesce compatible DECODEs into ``batch``
@@ -580,7 +759,7 @@ class _Replica:
                 break
             env, t_enq = item
             sess = self.sessions.get(env.session_id)
-            if (env.kind is Kind.DECODE and sess is not None
+            if (env.kind is proto.kind and sess is not None
                     and env.session_id not in self.held
                     and env.session_id not in self.migrated
                     and sess.model == lead_model
@@ -699,7 +878,8 @@ class _Replica:
         self.server.recorder.record(
             "deadline_expired", worker=self.worker_id,
             session=env.session_id, step=env.step)
-        if env.kind not in (Kind.PREFILL, Kind.DECODE) or env.session_id < 0:
+        if (env.kind not in (Kind.PREFILL, Kind.DECODE, Kind.VERIFY)
+                or env.session_id < 0):
             return
         self.drop_session(env.session_id)
         fin = Envelope(req_id=env.req_id, session_id=env.session_id,
@@ -804,7 +984,9 @@ class PipelineServer:
                  registry: Optional[ModelRegistry] = None,
                  default_model: str = "default",
                  max_resident_models: Optional[int] = None,
-                 tenant_weights: Optional[dict] = None) -> None:
+                 tenant_weights: Optional[dict] = None,
+                 draft_model=None, draft_params=None,
+                 spec_k: int = 4) -> None:
         self.cluster = cluster
         self.model = model
         self.cfg = model.cfg
@@ -839,12 +1021,30 @@ class PipelineServer:
         # while {"prefill": p, "decode": d} splits the stage into
         # role-specialized pools
         self.replica_roles: list[dict[str, int]] = []
+        # -- speculative decoding (draft role) -----------------------------
+        #: the small proposer model served by ``draft``-role replicas, and
+        #: the default k-token proposal budget per round (``generate``'s
+        #: ``spec_k=`` overrides per call; 0 disables speculation). With no
+        #: draft model the pipeline never speculates, bit-identical to the
+        #: pre-draft behavior.
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self.spec_k = int(spec_k) if draft_model is not None else 0
+        #: client-side speculation totals (MetricsHub's ``spec`` group)
+        self.spec_fallbacks_total = 0   # rounds degraded to plain decode
+        self.spec_rounds_total = 0      # verify round-trips completed
+        self.spec_proposed_total = 0    # draft tokens sent to verification
+        self.spec_accepted_total = 0    # draft tokens verification accepted
         for spec in replicas:
             if isinstance(spec, dict):
                 roles = {r: int(n) for r, n in spec.items() if int(n) > 0}
-                bad = set(roles) - {ROLE_BOTH, ROLE_PREFILL, ROLE_DECODE}
+                bad = set(roles) - {ROLE_BOTH, ROLE_PREFILL, ROLE_DECODE,
+                                    ROLE_DRAFT}
                 if bad:
                     raise ValueError(f"unknown replica roles {sorted(bad)}")
+                if ROLE_DRAFT in roles and draft_model is None:
+                    raise ValueError(
+                        "draft replicas need draft_model/draft_params")
                 if not any(r in (ROLE_BOTH, ROLE_PREFILL) for r in roles):
                     # a decode-only stage could never serve a PREFILL: the
                     # role-aware rotation would park every new session
@@ -911,6 +1111,11 @@ class PipelineServer:
         self.client_router.set_load_probe(self._edge_load)
         self.client_router.set_drop_listener(self._forget_edge)
         self._responses: dict[int, asyncio.Future] = {}
+        #: req_id -> entry world an in-flight round-trip was sent on, so a
+        #: world-break fails the waiter immediately instead of letting it
+        #: sit out the full step timeout (during which an otherwise-healthy
+        #: session idles toward the TTL reap)
+        self._response_worlds: dict[int, str] = {}
         self._req_ids = itertools.count()
         self._session_ids = itertools.count(1)
         self._uid = itertools.count()
@@ -1007,11 +1212,24 @@ class PipelineServer:
         key = (stage, role)
         ex = self._role_executors.get(key)
         if ex is None:
-            ex = StageExecutor(self.cfg, self.stage_specs[stage],
-                               self.stage_param_sets[stage],
-                               max_len=self.max_len, role=role,
-                               paged=self.paged, page_size=self.page_size,
-                               pool_pages=self.pool_pages)
+            if role == ROLE_DRAFT:
+                # the whole draft model as one stage: draft replicas talk
+                # only to the client, never to pipeline peers, so there is
+                # no stage split to share — and no paged pool (draft
+                # caches are throwaway contiguous buffers)
+                if self.draft_model is None:
+                    raise ValueError(
+                        "draft role requires draft_model/draft_params")
+                ex = StageExecutor.for_model(
+                    self.draft_model, self.draft_params,
+                    max_len=self.max_len, role=ROLE_DRAFT)
+            else:
+                ex = StageExecutor(self.cfg, self.stage_specs[stage],
+                                   self.stage_param_sets[stage],
+                                   max_len=self.max_len, role=role,
+                                   paged=self.paged,
+                                   page_size=self.page_size,
+                                   pool_pages=self.pool_pages)
             ex.on_event = self.recorder.record
             self._role_executors[key] = ex
         return ex
@@ -1086,7 +1304,7 @@ class PipelineServer:
         name = model or None
         return [r for r in self.replicas[stage]
                 if r is not exclude and r.worker.alive and not r.draining
-                and r.role != ROLE_PREFILL
+                and r.role not in (ROLE_PREFILL, ROLE_DRAFT)
                 and (name is None or name in r.resident)]
 
     def _pick_decode_peer(self, stage: int, exclude: "_Replica",
@@ -1166,6 +1384,16 @@ class PipelineServer:
             if router is not None:
                 router.mark_broken(world)
             self.broken_worlds.add(world)
+            # poison in-flight client round-trips on the fenced world: the
+            # reply will never come, and waiting out the step timeout can
+            # cost more than the failure itself (the session's other state
+            # idles toward the TTL reap meanwhile)
+            for rid, sent in list(self._response_worlds.items()):
+                if sent != world:
+                    continue
+                fut = self._responses.get(rid)
+                if fut is not None and not fut.done():
+                    fut.set_exception(WorldBrokenError(world))
             self._event("world_broken", world)
 
         manager.on_world_broken(cb)
@@ -1221,6 +1449,31 @@ class PipelineServer:
         self.cluster.worker(worker_id, near=near)
         rep = _Replica(self, worker_id, stage, role=role)
         self.registry.load(worker_id, self.default_model)
+        if role == ROLE_DRAFT:
+            # Draft replicas are a client-facing proposer pool, not a
+            # pipeline stage: they run the whole draft model against the
+            # session's committed history, so they need exactly one
+            # client->replica edge (PROPOSE in) and one replica->client
+            # edge (proposals out) — no stage peers, no handoff, no warm
+            # bootstrap (there is no same-weights pipeline peer to fetch
+            # from, and the first prefill compiles the one shape needed).
+            w_in = _edge(self.name, CLIENT, worker_id)
+            w_out = _edge(self.name, worker_id, CLIENT)
+            await self.instantiator.instantiate([
+                WorldSpec.pair(w_in, CLIENT, worker_id),
+                WorldSpec.pair(w_out, worker_id, CLIENT)])
+            rep.watch_upstream(w_in, self.client_router)
+            self._world_to_replica[w_in] = rep
+            self.client_router.add(w_in, role=ROLE_DRAFT,
+                                   models=rep.resident)
+            rep.router.add(w_out, role=ROLE_BOTH)
+            self._watch_client_world(w_out)
+            self._wire_manager(rep.worker.manager, rep.router)
+            rep._run_task = rep.worker.spawn(rep.run())
+            rep._reap_task = rep.worker.spawn(rep.reap_loop())
+            self.replicas[stage].append(rep)
+            self._event("add_replica", worker_id)
+            return worker_id
         if warm:
             report = await self.bootstrap.bootstrap(
                 stage, worker_id, fresh_executor=fresh_executor, role=role)
@@ -1239,7 +1492,8 @@ class PipelineServer:
             upstream_edges.append((w, self.client_router, None))
         else:
             for up in self.replicas[stage - 1]:
-                if not up.worker.alive or up.draining:
+                if (not up.worker.alive or up.draining
+                        or up.role == ROLE_DRAFT):
                     continue
                 w = _edge(self.name, up.worker_id, worker_id)
                 specs.append(WorldSpec.pair(w, up.worker_id, worker_id))
@@ -1250,7 +1504,8 @@ class PipelineServer:
             down_watchers.append((w, None))
         else:
             for down in self.replicas[stage + 1]:
-                if not down.worker.alive or down.draining:
+                if (not down.worker.alive or down.draining
+                        or down.role == ROLE_DRAFT):
                     continue
                 w = _edge(self.name, worker_id, down.worker_id)
                 specs.append(WorldSpec.pair(w, worker_id, down.worker_id))
@@ -1492,7 +1747,11 @@ class PipelineServer:
         #    and flip its pins — the client never notices. Sessions that
         #    can't move (no survivor, transfer failure) fall through to the
         #    re-prefill path when their pins drop in step 2.
-        if drain and migrate and rep.sessions:
+        #    Draft sessions never migrate: their caches are draft-model
+        #    state no decode/prefill survivor could serve, and the client
+        #    rebuilds them from the committed history in one PROPOSE —
+        #    sessions degrade to plain decode, they do not relocate.
+        if drain and migrate and rep.sessions and rep.role != ROLE_DRAFT:
             await self.migrations.migrate_replica_sessions(rep)
         # 2. stop routing new work to it (no new picks can reach these
         #    worlds once removed; an already-picked send has already been
@@ -1625,6 +1884,7 @@ class PipelineServer:
         failure before re-raising."""
         fut: asyncio.Future = asyncio.get_event_loop().create_future()
         self._responses[env.req_id] = fut
+        self._response_worlds[env.req_id] = world
         try:
             await self.client.comm.send(env, 1, world)
             return await asyncio.wait_for(fut, timeout)
@@ -1636,6 +1896,12 @@ class PipelineServer:
             raise
         finally:
             self._responses.pop(env.req_id, None)
+            self._response_worlds.pop(env.req_id, None)
+            if fut.done() and not fut.cancelled():
+                # the break callback may poison the future while the send
+                # itself is raising — consume the exception so asyncio
+                # doesn't log it as never-retrieved
+                fut.exception()
 
     async def _restore_replay(self, sid: int, out: list, s0: int,
                               step_timeout: float, *,
@@ -1729,6 +1995,59 @@ class PipelineServer:
                 return False
             await asyncio.sleep(0.02)
 
+    async def _propose_draft(self, sid: int, hist: np.ndarray, k: int,
+                             step_timeout: float,
+                             tenant: Optional[str]) -> Optional[np.ndarray]:
+        """One PROPOSE round against the session's pinned draft replica
+        (picked from the draft pool and pinned on first use, so one
+        replica accumulates the session's draft cache). ANY failure — no
+        draft pool, a draining pool answering RETRY, a killed world, a
+        timeout — returns None and unpins, degrading this round to plain
+        decode with zero client-visible impact. Draft traffic rides the
+        negated session id so the statexfer restore/snapshot machinery
+        (keyed on the real sid) never confuses draft-model state with a
+        target-model stage slice."""
+        key = ("draft", sid)
+        world = self.client_router.pinned(key)
+        if world is None:
+            world = self.client_router.try_pick(self.least_loaded,
+                                                role=ROLE_DRAFT)
+            if world is None:
+                return None
+            self.client_router.pin(key, world)
+        env = Envelope(next(self._req_ids), -sid, Kind.PROPOSE,
+                       step=hist.shape[1] - 1,
+                       deadline=time.monotonic() + step_timeout,
+                       payload=jnp.asarray(hist, jnp.int32), spec_k=k,
+                       role=ROLE_DRAFT, tenant=tenant)
+        try:
+            resp = await self._roundtrip(env, world, step_timeout)
+        except (WorldBrokenError, WorldNotFoundError, asyncio.TimeoutError):
+            self.client_router.unpin(key)
+            return None
+        if resp.kind is not Kind.PROPOSE or resp.payload is None:
+            self.client_router.unpin(key)
+            return None
+        props = np.asarray(resp.payload)
+        if props.ndim != 2 or props.shape[1] < 1:
+            self.client_router.unpin(key)
+            return None
+        return props[:, :k].astype(np.int32)
+
+    async def _finish_draft(self, sid: int) -> None:
+        """Release the session's draft-side state (pin + draft replica's
+        cache); best-effort — the draft TTL reap is the backstop."""
+        key = ("draft", sid)
+        world = self.client_router.pinned(key)
+        self.client_router.unpin(key)
+        if world is not None:
+            try:
+                await self.client.comm.send(
+                    Envelope(next(self._req_ids), -sid, Kind.FINISH, step=0),
+                    1, world)
+            except (WorldBrokenError, WorldNotFoundError):
+                pass
+
     async def _abandon_session(self, sid: int) -> None:
         """The client is giving up on this session id for good (re-prefill
         under a fresh one follows). Surviving stages deliberately kept their
@@ -1744,6 +2063,7 @@ class PipelineServer:
                     1, world)
             except (WorldBrokenError, WorldNotFoundError):
                 pass
+        await self._finish_draft(sid)
         self.session_margins.pop(sid, None)
         self.session_models.pop(sid, None)
         self.session_tenants.pop(sid, None)
@@ -1806,7 +2126,8 @@ class PipelineServer:
                        step_timeout: float = 10.0, max_restarts: int = 32,
                        token_times: Optional[list] = None,
                        model: Optional[str] = None,
-                       tenant: Optional[str] = None) -> np.ndarray:
+                       tenant: Optional[str] = None,
+                       spec_k: Optional[int] = None) -> np.ndarray:
         """Greedy autoregressive generation through the pipeline.
 
         prompts (B, S) int32 -> (B, max_new_tokens) int32, token-identical
@@ -1823,7 +2144,16 @@ class PipelineServer:
         executors, and recovery all follow the tag, so parity holds against
         that model's own single engine. ``tenant=`` attributes the session
         to a tenant for fair scheduling and per-tenant latency sketches.
+
+        ``spec_k=`` overrides the pipeline's speculative-decoding budget
+        for this session (None = pipeline default; 0 = plain decode). With
+        a draft pool present, each decode round PROPOSEs k draft tokens
+        and VERIFYs them in one batched target dispatch — greedy argmax of
+        the target logits at every position, so the output stays token-
+        identical to plain decode. Any draft failure silently degrades the
+        round to plain decode.
         """
+        k_cfg = self.spec_k if spec_k is None else int(spec_k)
         seq = jnp.asarray(prompts, jnp.int32)
         bsz, s0 = seq.shape
         assert s0 + max_new_tokens <= self.max_len, \
@@ -1900,6 +2230,69 @@ class PipelineServer:
                     world = self.client_router.pinned(sid)
                     if world is None:
                         raise _SessionLost("entry replica gone")
+                    # speculative round: k bounded so even full acceptance
+                    # (k proposals + the bonus token) cannot overshoot the
+                    # requested generation length
+                    k_round = min(k_cfg, max_new_tokens - len(out) - 1)
+                    props = None
+                    if k_round >= 1:
+                        hist_now = np.concatenate(
+                            [np.asarray(seq)] +
+                            [np.asarray(t)[:, None] for t in out], axis=1)
+                        props = await self._propose_draft(
+                            sid, hist_now, k_round, step_timeout, tenant)
+                        if props is None:
+                            # degrade: this round rides the plain DECODE
+                            # path below; the next round re-picks a draft
+                            self.spec_fallbacks_total += 1
+                    if props is not None:
+                        t_send = time.monotonic()
+                        ctx = tracer.begin(root)
+                        pending = ("verify_step", ctx, t_send)
+                        payload = np.concatenate(
+                            [np.asarray(out[-1])[:, None], props],
+                            axis=1).astype(np.int32)
+                        env = Envelope(
+                            next(self._req_ids), sid, Kind.VERIFY,
+                            step=hist_len + (len(out) - base) - 1,
+                            deadline=time.monotonic() + step_timeout,
+                            payload=jnp.asarray(payload), spec_k=k_round,
+                            role=ROLE_DECODE, trace=ctx, model=model,
+                            tenant=tenant)
+                        resp = await self._roundtrip(env, world,
+                                                     step_timeout)
+                        if resp.kind is Kind.RETRY:
+                            tracer.record(ctx, "verify_step", t_send,
+                                          time.monotonic() - t_send,
+                                          CLIENT, "retry")
+                            pending = None
+                            raise _SessionLost("verify bounced")
+                        if resp.kind is Kind.FINISH:
+                            raise _SessionLost(
+                                resp.error or "server finished")
+                        dt = time.monotonic() - t_send
+                        self._note_latency(self.decode_lat_log, dt)
+                        self._note_tenant(tenant, "decode", dt)
+                        tracer.record(ctx, "verify_step", t_send, dt,
+                                      CLIENT)
+                        pending = None
+                        # (B, m+1) accepted prefix + bonus token — every
+                        # column is the target model's own greedy argmax,
+                        # so appending the whole block preserves parity
+                        committed = np.asarray(resp.payload)
+                        self.spec_rounds_total += 1
+                        self.spec_proposed_total += k_round
+                        self.spec_accepted_total += committed.shape[1] - 1
+                        t_now = time.monotonic()
+                        for j in range(committed.shape[1]):
+                            out.append(committed[:, j].astype(np.int32))
+                            if tenant is not None:
+                                self.tenant_tokens[tenant] = (
+                                    self.tenant_tokens.get(tenant, 0)
+                                    + bsz)
+                            if token_times is not None:
+                                token_times.append(t_now)
+                        continue
                     # position of the fed token: history end + tokens
                     # generated since that history was prefilled
                     t_send = time.monotonic()
@@ -1980,6 +2373,7 @@ class PipelineServer:
                     await self.client.comm.send(env, 1, world)
                 except (WorldBrokenError, WorldNotFoundError):
                     pass
+            await self._finish_draft(sid)
             if self.snapshots is not None:
                 # eager snapshot GC; the background sweep + TTL are backstops
                 self.snapshots.drop_session(sid)
@@ -2051,5 +2445,9 @@ class PipelineServer:
                     "handoffs_out": rep.handoffs_out,
                     "models": sorted(rep.resident),
                     "tenant_served": dict(rep.tenant_served),
+                    "spec_verifies": rep.spec_verifies,
+                    "spec_proposed": rep.spec_proposed,
+                    "spec_accepted": rep.spec_accepted,
+                    "spec_proposals": rep.spec_proposals,
                 }
         return out

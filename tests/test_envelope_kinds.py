@@ -1,0 +1,61 @@
+"""The Envelope.Kind numbering contract.
+
+Kind values are frozen wire constants: a rolling upgrade has old and new
+binaries decoding each other's envelopes, so renumbering an existing kind
+is a silent protocol break (a VERIFY parsed as a SWAP). New kinds append;
+nothing is ever renumbered or reused. This test is the contract's
+enforcement — it fails the moment someone reorders the enum, and the
+pinned table below must only ever *grow*.
+"""
+from repro.serving.envelope import (
+    Kind,
+    ROLE_BOTH,
+    ROLE_CAPABLE,
+    ROLE_DECODE,
+    ROLE_DRAFT,
+    ROLE_PREFILL,
+)
+
+#: append-only — a value in this table may never change
+PINNED = {
+    "SCORE": 0,
+    "PREFILL": 1,
+    "DECODE": 2,
+    "FINISH": 3,
+    "RETRY": 4,
+    "HANDOFF": 5,
+    "LOAD": 6,
+    "UNLOAD": 7,
+    "SWAP": 8,
+    "PROPOSE": 9,
+    "VERIFY": 10,
+}
+
+
+def test_kind_values_are_pinned():
+    for name, value in PINNED.items():
+        assert Kind[name].value == value, (
+            f"Kind.{name} moved from {value} to {Kind[name].value}: "
+            "kind values are frozen wire constants")
+
+
+def test_every_kind_is_in_the_pinned_table():
+    # a new kind must land here (appended) in the same change that adds it
+    assert {k.name for k in Kind} == set(PINNED), (
+        "new Kind member missing from the pinned table — append it, "
+        "never renumber")
+
+
+def test_kind_values_are_unique_and_dense():
+    values = sorted(k.value for k in Kind)
+    assert values == list(range(len(values))), values
+
+
+def test_role_capability_map():
+    # 'both' worlds hold target-model state: they serve prefill and decode
+    # but never draft proposals (draft replicas run the draft model)
+    assert ROLE_BOTH in ROLE_CAPABLE[ROLE_PREFILL]
+    assert ROLE_BOTH in ROLE_CAPABLE[ROLE_DECODE]
+    assert ROLE_CAPABLE[ROLE_DRAFT] == (ROLE_DRAFT,)
+    assert ROLE_DRAFT not in ROLE_CAPABLE[ROLE_PREFILL]
+    assert ROLE_DRAFT not in ROLE_CAPABLE[ROLE_DECODE]

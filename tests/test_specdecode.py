@@ -1,0 +1,260 @@
+"""Speculative decoding on elastic role pools (ISSUE 10).
+
+The acceptance bar: a pipeline with a draft pool keeps exact greedy parity
+with the single-engine oracle (verification re-derives every committed
+token from target-model argmax, so a bad draft can cost speed but never
+correctness); killing or draining the draft pool mid-generation degrades
+every open session to plain decode with zero client-visible failures and
+zero target-pool recomputation; the drain guard allows giving up the last
+draft replica (sessions degrade, nothing strands) while still refusing the
+last decode-capable one; and the acceptance-driven SpecDecodePolicy trades
+draft-vs-target capacity on the measured acceptance rate.
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.control import MetricsHub, ReplicaSample, SpecDecodePolicy, StageSnapshot
+from repro.core import Cluster, FailureKind
+from repro.models import DENSE, BlockGroup, build_model
+from repro.serving import (
+    PipelineServer,
+    ROLE_DECODE,
+    ROLE_DRAFT,
+    ServeEngine,
+)
+
+CFG = get_smoke("llama3.2-1b").with_(num_layers=2,
+                                     groups=(BlockGroup(DENSE, 2),))
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+ENGINE = ServeEngine(MODEL, PARAMS, max_len=64)
+
+# the draft: a 1-layer sibling sharing the embedding/head, its block being
+# the target's own first layer — agrees with the target often enough to
+# exercise non-trivial acceptance, disagrees enough to exercise rejection
+DRAFT_CFG = CFG.with_(num_layers=1, groups=(BlockGroup(DENSE, 1),))
+DRAFT_MODEL = build_model(DRAFT_CFG)
+DRAFT_PARAMS = {
+    k: v for k, v in PARAMS.items() if k != "groups"
+}
+DRAFT_PARAMS["groups"] = [jax.tree.map(lambda a: a[:1], PARAMS["groups"][0])]
+
+
+def _prompts(n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, (1, seq)) for _ in range(n)]
+
+
+async def _wait_open(server, stage, n, timeout=20.0):
+    deadline = time.monotonic() + timeout
+    while sum(r.open_sessions() for r in server.replicas[stage]) < n:
+        assert time.monotonic() < deadline, "sessions never all opened"
+        await asyncio.sleep(0.005)
+
+
+# ------------------------------------------------------------ parity + wiring
+
+def test_spec_generate_exact_parity(arun):
+    """Draft-pool pipeline == single engine, token for token. Also checks
+    the plumbing actually ran speculatively (rounds + both-side counters)
+    and that spec_k=0 opts a single call out."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [{"both": 1, "draft": 1}], max_len=64,
+                                draft_model=DRAFT_MODEL,
+                                draft_params=DRAFT_PARAMS, spec_k=3)
+        await server.start()
+        ps = _prompts(3, seed=1)
+        wants = [ENGINE.generate(p, 8) for p in ps]
+        outs = [await server.generate(p, 8, step_timeout=60.0) for p in ps]
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        # it really was speculative: verify rounds happened, both sides
+        # counted, and the target pool accepted at least one draft token
+        assert server.spec_rounds_total >= 1
+        assert server.spec_fallbacks_total == 0
+        assert server.spec_proposed_total >= server.spec_rounds_total
+        assert 0 <= server.spec_accepted_total <= server.spec_proposed_total
+        stats = {s["role"]: s for s in server.replica_stats().values()}
+        assert stats["draft"]["spec_proposals"] >= 1
+        assert stats["both"]["spec_verifies"] >= 1
+        assert stats["both"]["spec_proposed"] == server.spec_proposed_total
+        # per-call opt-out: spec_k=0 must not touch the draft pool
+        rounds0 = server.spec_rounds_total
+        got = await server.generate(ps[0], 8, step_timeout=60.0, spec_k=0)
+        np.testing.assert_array_equal(got, wants[0])
+        assert server.spec_rounds_total == rounds0
+        # observability rollup: acceptance EWMA + spec metric group
+        hub = MetricsHub(server)
+        hub.poll()
+        await asyncio.sleep(0.01)
+        snaps = hub.poll()
+        assert "draft" in snaps[0].role_slices
+        spec = hub.spec_metrics()
+        assert spec["spec_rounds_total"] == server.spec_rounds_total
+        assert spec["proposed_tokens_total"] == server.spec_proposed_total
+        assert spec["propose_dispatches_total"] >= 1
+        assert "repro_spec_proposed_tokens_total" in hub.export_prometheus()
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+# ------------------------------------------------------- degrade on draft loss
+
+def test_draft_kill_degrades_to_plain_decode(arun):
+    """Killing the only draft replica mid-generation: every open session
+    finishes with exact parity through the plain-decode fallback, the
+    target pool recomputes nothing, and the degrade is visible in the
+    fallback counter (a recovery-matrix row)."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [{"both": 1, "draft": 1}], max_len=64,
+                                draft_model=DRAFT_MODEL,
+                                draft_params=DRAFT_PARAMS, spec_k=3)
+        await server.start()
+        ps = _prompts(2, seed=2)
+        wants = [ENGINE.generate(p, 10) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 10, step_timeout=30.0)) for p in ps]
+        await _wait_open(server, 0, 2)
+        draft = next(r for r in server.replicas[0] if r.role == ROLE_DRAFT)
+        # detectable crash: the next PROPOSE errors instead of timing out
+        c.kill(draft.worker_id, FailureKind.CRASH_DETECTABLE)
+        outs = await asyncio.gather(*tasks)
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        assert server.spec_fallbacks_total >= 1
+        # target-pool sessions never moved or re-prefilled for this
+        m = server.migrations.stats()
+        assert m["reprefills_total"] == 0
+        assert m["recomputed_tokens"] == 0
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_draft_drain_under_traffic(arun):
+    """Draining the only draft replica (voluntary scale-down) under open
+    sessions: allowed by the drain guard — draft sessions degrade, they do
+    not strand — and generation completes with parity."""
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [{"both": 1, "draft": 1}], max_len=64,
+                                draft_model=DRAFT_MODEL,
+                                draft_params=DRAFT_PARAMS, spec_k=3)
+        await server.start()
+        ps = _prompts(2, seed=3)
+        wants = [ENGINE.generate(p, 10) for p in ps]
+        tasks = [asyncio.ensure_future(
+            server.generate(p, 10, step_timeout=30.0)) for p in ps]
+        await _wait_open(server, 0, 2)
+        gone = await server.remove_replica(0, role=ROLE_DRAFT, drain=True,
+                                           timeout=60.0)
+        assert gone
+        outs = await asyncio.gather(*tasks)
+        for want, got in zip(wants, outs):
+            np.testing.assert_array_equal(got, want)
+        # no draft replica left; sessions finished as plain decode
+        assert not any(r.role == ROLE_DRAFT and r.worker.alive
+                       and not r.draining for r in server.replicas[0])
+        m = server.migrations.stats()
+        assert m["reprefills_total"] == 0
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+def test_drain_guard_three_roles(arun):
+    """Three-pool stage: the guard still refuses to give up the last
+    decode-capable replica, but the last *draft* replica is removable —
+    losing it degrades sessions to plain decode instead of stranding them.
+    """
+    async def scenario():
+        c = Cluster()
+        server = PipelineServer(c, MODEL, PARAMS,
+                                [{"prefill": 1, "decode": 1, "draft": 1}],
+                                max_len=64,
+                                draft_model=DRAFT_MODEL,
+                                draft_params=DRAFT_PARAMS, spec_k=2)
+        await server.start()
+        victim = next(r for r in server.replicas[0]
+                      if r.role == ROLE_DECODE)
+        try:
+            await server.remove_replica(0, victim.worker_id, drain=True)
+            raise AssertionError("drained the last decode-capable replica")
+        except RuntimeError as e:
+            assert "decode-capable" in str(e)
+        gone = await server.remove_replica(0, role=ROLE_DRAFT, drain=True,
+                                           timeout=30.0)
+        assert gone
+        c.shutdown()
+
+    arun(scenario(), timeout=300.0)
+
+
+# ------------------------------------------------------------ policy (pure)
+
+def _spec_snap(acc, *, n_draft=1, n_decode=2, proposed=100,
+               donor="decode"):
+    def rep(i, role, spec_proposed=0):
+        return ReplicaSample(f"{role}{i}", 0, True, False, 0, 0, 0,
+                             0.0, 0.0, role=role,
+                             spec_proposed=spec_proposed)
+
+    reps = ([rep(i, "draft") for i in range(n_draft)]
+            + [rep(i, donor, spec_proposed=proposed)
+               for i in range(n_decode)])
+    snap = StageSnapshot(stage=0, t=0.0, n_replicas=len(reps), n_failed=0,
+                         queue_total=0, queue_per_replica=0.0,
+                         throughput=0.0, latency_s=0.0, replicas=reps,
+                         acceptance_rate=acc)
+    for role, n in (("draft", n_draft), (donor, n_decode)):
+        snap.role_slices[role] = StageSnapshot(
+            stage=0, t=0.0, n_replicas=n, n_failed=0, queue_total=0,
+            queue_per_replica=0.0, throughput=0.0, latency_s=0.0,
+            role=role)
+    return snap
+
+
+def test_spec_policy_trades_capacity_on_acceptance():
+    pol = SpecDecodePolicy(grow_at=0.8, shrink_at=0.3, min_tokens=16)
+    # high acceptance: grow draft, funded by draining a decode replica
+    out = pol.decide_many(_spec_snap(0.95))
+    assert [(d.delta, d.role) for d in out] == [(1, "draft"),
+                                                (-1, "decode")]
+    # low acceptance: drain draft, return the capacity to the target pool
+    out = pol.decide_many(_spec_snap(0.1))
+    assert [(d.delta, d.role) for d in out] == [(-1, "draft"),
+                                                (1, "decode")]
+    # in band: hold
+    assert all(d.hold for d in pol.decide_many(_spec_snap(0.5)))
+    # the trade donor falls back to the colocated pool
+    out = pol.decide_many(_spec_snap(0.95, donor="both"))
+    assert [(d.delta, d.role) for d in out] == [(1, "draft"), (-1, "both")]
+
+
+def test_spec_policy_guards():
+    pol = SpecDecodePolicy(min_tokens=16, max_draft=2, min_target=1)
+    # cold EWMAs: too few proposals ever judged -> hold
+    assert all(d.hold for d in pol.decide_many(_spec_snap(1.0, proposed=3)))
+    # no draft pool at all -> hold (the policy never bootstraps one)
+    snap = _spec_snap(1.0, n_draft=1)
+    del snap.role_slices["draft"]
+    assert all(d.hold for d in pol.decide_many(snap))
+    # draft pool at its cap -> no grow vote
+    assert all(d.hold
+               for d in pol.decide_many(_spec_snap(1.0, n_draft=2)))
+    # donor at min_target: grow stands alone, no trade drain
+    out = pol.decide_many(_spec_snap(1.0, n_decode=1))
+    assert [(d.delta, d.role) for d in out] == [(1, "draft")]
+    # never drain draft below min_draft
+    pol2 = SpecDecodePolicy(min_tokens=16, min_draft=1)
+    assert all(d.hold for d in pol2.decide_many(_spec_snap(0.0)))
